@@ -1,0 +1,73 @@
+//! Quickstart: load the AOT artifacts, start the serving stack, classify
+//! a handful of HAR windows, print what happened.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::time::Duration;
+
+use mobirnn::config::Manifest;
+use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::har;
+use mobirnn::runtime::Runtime;
+use mobirnn::simulator::DeviceProfile;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Artifacts: HLO text + MRNW weights + test data, built once by
+    //    `make artifacts` (python never runs again after this).
+    let manifest = Manifest::load_default()?;
+    println!(
+        "loaded {} variants; default model {} (test acc {:.1}%)",
+        manifest.variants.len(),
+        manifest.default_variant,
+        100.0 * manifest.train_report.test_accuracy
+    );
+
+    // 2. Serving stack: PJRT executor thread + router with the
+    //    utilization-aware cost-model policy on a simulated Nexus 5.
+    let runtime = Runtime::start(&manifest)?;
+    let device = DeviceState::new(DeviceProfile::nexus5());
+    let router = Router::start(
+        &manifest,
+        runtime,
+        device.clone(),
+        RouterConfig {
+            policy: OffloadPolicy::CostModel,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )?;
+
+    // 3. Classify: 8 windows from the artifact test set.
+    let ds = har::HarDataset::load(manifest.path(&manifest.har_test.file))?;
+    println!("\nidle device — the policy should offload to the GPU:");
+    for i in 0..4 {
+        let r = router.classify(ds.window(i).to_vec())?;
+        println!(
+            "  window {i}: {:<18} (gold {:<18}) on {:<9} sim {:.1} ms",
+            r.label,
+            har::CLASS_NAMES[ds.labels[i] as usize],
+            r.target,
+            r.sim_ns as f64 / 1e6
+        );
+    }
+
+    // 4. Load the GPU like a running game — the policy walks off it.
+    device.set_gpu_util(0.9);
+    device.set_cpu_util(0.9);
+    println!("\nGPU at 90% (and CPU at 90%) — §4.5 says: stay on the CPU:");
+    for i in 4..8 {
+        let r = router.classify(ds.window(i).to_vec())?;
+        println!(
+            "  window {i}: {:<18} (gold {:<18}) on {:<9} sim {:.1} ms",
+            r.label,
+            har::CLASS_NAMES[ds.labels[i] as usize],
+            r.target,
+            r.sim_ns as f64 / 1e6
+        );
+    }
+
+    println!("\nmetrics: {}", router.metrics.to_json().to_json());
+    Ok(())
+}

@@ -1,0 +1,279 @@
+"""AOT pipeline: train once, lower every model variant to HLO TEXT, export
+weights + golden I/O + the serialized test set, and write a manifest the
+Rust runtime consumes.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards — Python is never on the request path.
+
+Outputs under --out (default ../artifacts):
+  lstm_L{l}_H{h}_B{b}.hlo.txt   one per variant (weights are HLO params)
+  weights_L{l}_H{h}.mrnw        MRNW weight file per shape
+  golden_L2_H32.bin             MRNG golden inputs+logits (trained model)
+  har_test.bin                  MRNH serialized synthetic HAR test set
+  manifest.json                 index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import lstm_cell as kmod
+from .model import ModelConfig
+
+# Serving variants: the trained default model at the batch sizes the
+# dynamic batcher pads to (rust/src/coordinator/batcher.rs).
+SERVING_BATCHES = [1, 2, 4, 8]
+
+# Complexity variants (paper Fig 5 sweep) exported at batch 1 for the
+# real-latency benches. Seeded (untrained) weights — latency is
+# weight-independent; numerics are still golden-checked on the trained
+# default.
+COMPLEXITY_VARIANTS = [(1, 32), (3, 32), (2, 64), (2, 128)]
+FULL_EXTRA_VARIANTS = [(2, 256), (1, 64), (3, 64)]
+
+DEFAULT_CFG = ModelConfig()  # 2 layers x 32 hidden (paper §4.1 default)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: ModelConfig, batch: int) -> str:
+    """Lower logits = f(x, w0, b0, ..., w_out, b_out) for one variant."""
+    fn = model_mod.aot_fn(cfg, cell="pallas")
+    x_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len, cfg.input_dim), jnp.float32)
+    param_specs = [
+        jax.ShapeDtypeStruct(p.shape, p.dtype)
+        for p in model_mod.flat_param_list(
+            model_mod.init_params(cfg, jax.random.PRNGKey(0))
+        )
+    ]
+    lowered = jax.jit(fn).lower(x_spec, *param_specs)
+    return to_hlo_text(lowered)
+
+
+def write_mrnw(path: str, names: List[str], tensors: List[np.ndarray]) -> None:
+    """MRNW v1 weight container, little-endian:
+      magic[4] "MRNW" | u32 version | u32 n_tensors
+      per tensor: u16 name_len | name bytes | u8 ndim | u32 dims[ndim]
+                  | f32 data (C order)
+    """
+    assert len(names) == len(tensors)
+    with open(path, "wb") as f:
+        f.write(b"MRNW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, t in zip(names, tensors):
+            t = np.ascontiguousarray(t, dtype="<f4")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", t.ndim))
+            for d in t.shape:
+                f.write(struct.pack("<I", d))
+            f.write(t.tobytes())
+
+
+def read_mrnw(path: str) -> Dict[str, np.ndarray]:
+    """Inverse of write_mrnw (round-trip tested)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"MRNW"
+        ver, n = struct.unpack("<II", f.read(8))
+        assert ver == 1
+        for _ in range(n):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            count = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(f.read(4 * count), dtype="<f4").reshape(dims)
+    return out
+
+
+def write_golden(path: str, x: np.ndarray, logits: np.ndarray) -> None:
+    """MRNG v1 golden I/O, little-endian:
+      magic[4] "MRNG" | u32 version | u32 B | u32 T | u32 D | u32 C
+      | f32 x[B*T*D] | f32 logits[B*C]
+    """
+    b, t, d = x.shape
+    b2, c = logits.shape
+    assert b == b2
+    with open(path, "wb") as f:
+        f.write(b"MRNG")
+        f.write(struct.pack("<IIIII", 1, b, t, d, c))
+        f.write(np.ascontiguousarray(x, dtype="<f4").tobytes())
+        f.write(np.ascontiguousarray(logits, dtype="<f4").tobytes())
+
+
+def sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def export_variant(cfg: ModelConfig, batch: int, out_dir: str) -> Dict:
+    name = cfg.variant_name(batch)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = lower_variant(cfg, batch)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    flat = model_mod.flat_param_list(params)
+    return {
+        "name": name,
+        "num_layers": cfg.num_layers,
+        "hidden": cfg.hidden,
+        "batch": batch,
+        "seq_len": cfg.seq_len,
+        "input_dim": cfg.input_dim,
+        "num_classes": cfg.num_classes,
+        "hlo": f"{name}.hlo.txt",
+        "weights": f"{cfg.weights_name()}.mrnw",
+        "param_names": model_mod.flat_param_names(cfg),
+        "param_shapes": [list(p.shape) for p in flat],
+        "param_count": cfg.param_count(),
+        "block_h": kmod.pick_block_h(cfg.hidden),
+        "vmem_bytes": kmod.vmem_bytes(batch, cfg.input_dim, cfg.hidden),
+        "mxu_utilization": kmod.mxu_utilization_estimate(
+            batch, cfg.input_dim, cfg.hidden
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training + small test set (CI / pytest)")
+    ap.add_argument("--full", action="store_true",
+                    help="also export the large (H=256) complexity variants")
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    fast = args.fast
+    steps = args.train_steps or (40 if fast else 300)
+    test_size = 64 if fast else data_mod.TEST_SIZE
+    train_size = 256 if fast else 2048
+
+    # 1. Train the default model on synthetic HAR.
+    print(f"[aot] training default model ({DEFAULT_CFG.num_layers}l/"
+          f"{DEFAULT_CFG.hidden}h, {steps} steps)...")
+    trained_params, report = train_mod.train(
+        DEFAULT_CFG, steps=steps, seed=args.seed,
+        train_size=train_size, test_size=test_size,
+    )
+
+    manifest: Dict = {
+        "format": "mobirnn-artifacts",
+        "version": 1,
+        "default_variant": DEFAULT_CFG.variant_name(1),
+        "variants": [],
+        "train_report": {
+            k: v for k, v in report.items() if k != "loss_curve"
+        },
+        "loss_curve": report["loss_curve"],
+    }
+
+    # 2. Export serving variants (trained weights).
+    weights_written = set()
+    for b in SERVING_BATCHES:
+        print(f"[aot] lowering {DEFAULT_CFG.variant_name(b)}...")
+        entry = export_variant(DEFAULT_CFG, b, args.out)
+        entry["trained"] = True
+        manifest["variants"].append(entry)
+    wpath = os.path.join(args.out, f"{DEFAULT_CFG.weights_name()}.mrnw")
+    write_mrnw(
+        wpath,
+        model_mod.flat_param_names(DEFAULT_CFG),
+        [np.asarray(t) for t in model_mod.flat_param_list(trained_params)],
+    )
+    weights_written.add(DEFAULT_CFG.weights_name())
+
+    # 3. Export complexity variants (seeded weights) for latency benches.
+    extra = list(COMPLEXITY_VARIANTS) + (FULL_EXTRA_VARIANTS if args.full else [])
+    if fast:
+        extra = extra[:1]
+    for layers, hidden in extra:
+        cfg = ModelConfig(num_layers=layers, hidden=hidden)
+        print(f"[aot] lowering {cfg.variant_name(1)}...")
+        entry = export_variant(cfg, 1, args.out)
+        entry["trained"] = False
+        manifest["variants"].append(entry)
+        if cfg.weights_name() not in weights_written:
+            params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+            write_mrnw(
+                os.path.join(args.out, f"{cfg.weights_name()}.mrnw"),
+                model_mod.flat_param_names(cfg),
+                [np.asarray(t) for t in model_mod.flat_param_list(params)],
+            )
+            weights_written.add(cfg.weights_name())
+
+    # 4. Golden I/O for the trained default: 8 test windows through the
+    #    PALLAS-cell graph (the exact graph the artifact contains).
+    x_te, y_te = data_mod.generate(8, args.seed + 1)
+    logits = np.asarray(
+        model_mod.forward(trained_params, jnp.asarray(x_te), cell="pallas")
+    )
+    golden_path = os.path.join(args.out, "golden_L2_H32.bin")
+    write_golden(golden_path, x_te, logits)
+    manifest["golden"] = {
+        "file": "golden_L2_H32.bin",
+        "variant": DEFAULT_CFG.variant_name(8),
+        "batch": 8,
+        "labels": [int(v) for v in y_te],
+        "predictions": [int(v) for v in np.argmax(logits, axis=-1)],
+    }
+
+    # 5. Serialized synthetic HAR test set for serving (paper: 2947 windows).
+    x_full, y_full = data_mod.generate(test_size, args.seed + 1)
+    har_path = os.path.join(args.out, "har_test.bin")
+    data_mod.write_har_bin(har_path, x_full, y_full)
+    manifest["har_test"] = {
+        "file": "har_test.bin",
+        "n": int(test_size),
+        "seq_len": data_mod.SEQ_LEN,
+        "channels": data_mod.NUM_CHANNELS,
+        "classes": data_mod.NUM_CLASSES,
+    }
+
+    # 6. Content hashes (lets `make artifacts` stay a no-op when unchanged).
+    manifest["hashes"] = {
+        e["hlo"]: sha256_file(os.path.join(args.out, e["hlo"]))
+        for e in manifest["variants"]
+    }
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(manifest['variants'])} variants + weights + "
+          f"golden + har_test to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

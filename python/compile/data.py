@@ -1,0 +1,130 @@
+"""Synthetic HAR dataset substrate (paper §4.1 substitution, DESIGN.md §2).
+
+The paper evaluates on the UCI smartphone HAR dataset [4]: 7352 train /
+2947 test windows, each 128 timesteps x 9 sensor channels (body acc x/y/z,
+gyro x/y/z, total acc x/y/z), 6 activity classes (walking, walking-up,
+walking-down, sitting, standing, laying). We do not have the dataset in
+this image, so we generate a synthetic equivalent with the same shapes,
+split sizes and label space, designed so that per-class structure lives in
+exactly the places real HAR structure does: per-channel oscillation
+frequency, amplitude and DC offset.
+
+Class signatures (loosely mirroring the physical activities):
+  0 walking          medium freq, medium amplitude, all channels
+  1 walking_upstairs medium-high freq, higher gyro amplitude
+  2 walking_down     medium-high freq, higher acc amplitude
+  3 sitting          near-DC, tiny noise, distinct gravity split
+  4 standing         near-DC, tiny noise, different gravity split
+  5 laying           near-DC, gravity rotated onto a different axis
+
+Everything is deterministic in (seed, index) so Python and Rust can agree
+byte-for-byte on the serialized test set (artifacts/har_test.bin).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SEQ_LEN = 128
+NUM_CHANNELS = 9
+NUM_CLASSES = 6
+TRAIN_SIZE = 7352
+TEST_SIZE = 2947
+
+CLASS_NAMES = [
+    "walking",
+    "walking_upstairs",
+    "walking_downstairs",
+    "sitting",
+    "standing",
+    "laying",
+]
+
+# Per-class (base_freq_hz, acc_amp, gyro_amp, gravity_axis) at 50 Hz sampling.
+_SIGNATURES = [
+    (1.9, 0.9, 0.8, 2),   # walking
+    (2.4, 0.8, 1.3, 2),   # upstairs: more gyro
+    (2.6, 1.4, 0.8, 2),   # downstairs: more acc
+    (0.08, 0.05, 0.04, 1),  # sitting
+    (0.06, 0.04, 0.03, 2),  # standing
+    (0.05, 0.03, 0.03, 0),  # laying: gravity on x
+]
+
+_SAMPLE_HZ = 50.0
+# Dynamic activities (walking*) ride on real body motion -> noisy sensors;
+# static ones (sitting/standing/laying) are near-still, matching real HAR.
+_NOISE_STD_DYNAMIC = 0.12
+_NOISE_STD_STATIC = 0.03
+
+
+def make_window(label: int, rng: np.random.RandomState) -> np.ndarray:
+    """One [SEQ_LEN, NUM_CHANNELS] window for `label`."""
+    freq, acc_amp, gyro_amp, grav_axis = _SIGNATURES[label]
+    t = np.arange(SEQ_LEN, dtype=np.float64) / _SAMPLE_HZ
+    freq = freq * (1.0 + 0.15 * rng.randn())
+    phase = rng.uniform(0, 2 * np.pi, size=NUM_CHANNELS)
+    out = np.zeros((SEQ_LEN, NUM_CHANNELS), dtype=np.float64)
+    for ch in range(NUM_CHANNELS):
+        if ch < 3:  # body acceleration
+            amp = acc_amp * (0.7 + 0.3 * rng.rand())
+            harm = 0.3 * acc_amp * np.sin(2 * np.pi * 2 * freq * t + phase[(ch + 3) % 9])
+            out[:, ch] = amp * np.sin(2 * np.pi * freq * t + phase[ch]) + harm
+        elif ch < 6:  # gyroscope
+            amp = gyro_amp * (0.7 + 0.3 * rng.rand())
+            out[:, ch] = amp * np.sin(2 * np.pi * freq * t + phase[ch])
+        else:  # total acceleration = body + gravity projection
+            amp = acc_amp * (0.7 + 0.3 * rng.rand())
+            grav = 1.0 if (ch - 6) == grav_axis else 0.05
+            out[:, ch] = grav + amp * np.sin(2 * np.pi * freq * t + phase[ch])
+    noise = _NOISE_STD_DYNAMIC if label <= 2 else _NOISE_STD_STATIC
+    out += noise * rng.randn(SEQ_LEN, NUM_CHANNELS)
+    return out.astype(np.float32)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` windows: (x [n, SEQ_LEN, NUM_CHANNELS] f32, y [n] int32).
+
+    Labels cycle round-robin then get shuffled, so class balance matches
+    the (roughly balanced) UCI HAR dataset.
+    """
+    rng = np.random.RandomState(seed)
+    labels = np.arange(n, dtype=np.int32) % NUM_CLASSES
+    rng.shuffle(labels)
+    x = np.stack([make_window(int(lbl), rng) for lbl in labels])
+    return x, labels
+
+
+def train_test(seed: int = 7, train_size: int = TRAIN_SIZE,
+               test_size: int = TEST_SIZE):
+    """The paper's 7352/2947 split (sizes overridable for fast tests)."""
+    x_tr, y_tr = generate(train_size, seed)
+    x_te, y_te = generate(test_size, seed + 1)
+    return (x_tr, y_tr), (x_te, y_te)
+
+
+def write_har_bin(path: str, x: np.ndarray, y: np.ndarray) -> None:
+    """Serialize a dataset for the Rust loader (rust/src/har/).
+
+    Format "MRNH" v1, little-endian:
+      magic[4] "MRNH" | u32 version | u32 n | u32 seq_len | u32 channels
+      | u32 classes | f32 x[n*seq_len*channels] | u8 y[n]
+    """
+    n, t, d = x.shape
+    with open(path, "wb") as f:
+        f.write(b"MRNH")
+        for v in (1, n, t, d, NUM_CLASSES):
+            f.write(np.uint32(v).tobytes())
+        f.write(x.astype("<f4").tobytes())
+        f.write(y.astype(np.uint8).tobytes())
+
+
+def read_har_bin(path: str):
+    """Inverse of write_har_bin (round-trip tested)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == b"MRNH", magic
+        ver, n, t, d, c = np.frombuffer(f.read(20), dtype="<u4")
+        assert ver == 1 and c == NUM_CLASSES
+        x = np.frombuffer(f.read(4 * n * t * d), dtype="<f4").reshape(n, t, d)
+        y = np.frombuffer(f.read(n), dtype=np.uint8).astype(np.int32)
+    return x, y

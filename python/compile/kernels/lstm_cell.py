@@ -1,0 +1,188 @@
+"""L1: fused Pallas LSTM cell kernel.
+
+This kernel is the TPU re-expression of MobiRNN's §3.2/§3.3 GPU
+optimizations (see DESIGN.md §Hardware-Adaptation):
+
+- "combining inputs and weights"  -> a single [B, I+H] @ [I+H, 4, Ht] MXU
+  contraction per grid cell instead of separate x- and h- matmuls;
+- "pack vector products into few coarse work units" (RenderScript, Fig 2c)
+  -> the Pallas *grid* tiles the hidden dimension into `block_h`-wide
+  work units; one grid cell = one coarse unit; the grid IS the launch
+  schedule (contrast: the CUDA-style Fig 2b factorization is one unit per
+  output column);
+- "fuse point-wise operations"    -> sigmoid/tanh/*/+ all live in the same
+  kernel body; gates never round-trip through HBM;
+- "avoid divergence statements"   -> the body is straight-line vector code
+  (the numerically-stable sigmoid is a vectorized `where`, not a branch);
+- "preallocate and reuse c/h"     -> c/h tiles live in the kernel's output
+  refs; across timesteps they are the scan carry, never re-allocated.
+
+The kernel MUST be lowered with interpret=True on this image: real-TPU
+Pallas emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Correctness versus the pure-jnp oracle (`ref.py`) is asserted by
+python/tests/test_kernel.py (hypothesis sweeps shapes and dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FORGET_BIAS
+
+# Hidden-dimension tile width. 128 matches the TPU lane width so each
+# grid cell feeds the MXU a [B, I+H] x [I+H, 4*128] contraction; smaller
+# H uses a single tile. See DESIGN.md §Perf for the VMEM budget.
+MAX_BLOCK_H = 128
+
+
+def pick_block_h(hidden: int) -> int:
+    """Largest divisor of `hidden` that is <= MAX_BLOCK_H.
+
+    The paper's coarse factorization packs work into `#slots` units;
+    here the analogous decision is the hidden-tile width. Every hidden
+    size used in the paper (32..256) is a power of two, so this returns
+    min(hidden, 128) for those; the general divisor walk keeps hypothesis
+    sweeps over odd sizes valid.
+    """
+    if hidden <= MAX_BLOCK_H:
+        return hidden
+    for cand in range(MAX_BLOCK_H, 0, -1):
+        if hidden % cand == 0:
+            return cand
+    return 1  # unreachable: 1 always divides
+
+
+def _cell_kernel(xh_ref, w_ref, b_ref, c_ref, h_out_ref, c_out_ref):
+    """Kernel body for one hidden tile.
+
+    Refs (shapes per grid cell):
+      xh_ref:    [B, I+H]      combined input||hidden (full row, every cell)
+      w_ref:     [I+H, 4, Ht]  gate-major weight tile
+      b_ref:     [4, Ht]       bias tile
+      c_ref:     [B, Ht]       previous cell-state tile
+      h_out_ref: [B, Ht]       next hidden tile
+      c_out_ref: [B, Ht]       next cell-state tile
+    """
+    xh = xh_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    c_prev = c_ref[...]
+
+    in_dim = xh.shape[-1]
+    block_h = w.shape[-1]
+
+    # Single fused contraction: [B, I+H] @ [I+H, 4*Ht] -> [B, 4, Ht].
+    gates = jax.lax.dot_general(
+        xh,
+        w.reshape(in_dim, 4 * block_h),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(xh.shape[0], 4, block_h) + b[None, :, :].astype(jnp.float32)
+
+    i_g = gates[:, 0, :]
+    g_g = gates[:, 1, :]
+    f_g = gates[:, 2, :]
+    o_g = gates[:, 3, :]
+
+    # Straight-line, divergence-free point-wise tail (stable sigmoid is a
+    # vector select, not a branch).
+    def sig(x):
+        return jnp.where(
+            x >= 0, 1.0 / (1.0 + jnp.exp(-x)), jnp.exp(x) / (1.0 + jnp.exp(x))
+        )
+
+    c_next = sig(f_g + FORGET_BIAS) * c_prev.astype(jnp.float32) + sig(i_g) * jnp.tanh(g_g)
+    h_next = sig(o_g) * jnp.tanh(c_next)
+
+    h_out_ref[...] = h_next.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_next.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h",))
+def lstm_cell(x, h, c, w, b, *, block_h: int | None = None):
+    """Fused Pallas LSTM cell step.
+
+    Args:
+      x: [B, I]      timestep input
+      h: [B, H]      previous hidden state
+      c: [B, H]      previous cell state
+      w: [I+H, 4H]   combined weights, gate order (i, g, f, o)
+      b: [4H]        bias
+      block_h: hidden tile width (None -> pick_block_h(H))
+    Returns:
+      (h_next, c_next), numerics identical to ref.lstm_cell_ref.
+    """
+    batch, hidden = h.shape
+    in_dim = x.shape[-1] + hidden
+    if block_h is None:
+        block_h = pick_block_h(hidden)
+    assert hidden % block_h == 0, (hidden, block_h)
+    grid = (hidden // block_h,)
+
+    # Gate-major layout so a hidden tile selects a contiguous block per gate:
+    # [I+H, 4H] -> [I+H, 4, H].
+    w_g = w.reshape(in_dim, 4, hidden)
+    b_g = b.reshape(4, hidden)
+    xh = jnp.concatenate([x, h], axis=-1)
+
+    h_next, c_next = pl.pallas_call(
+        _cell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, in_dim), lambda j: (0, 0)),
+            pl.BlockSpec((in_dim, 4, block_h), lambda j: (0, 0, j)),
+            pl.BlockSpec((4, block_h), lambda j: (0, j)),
+            pl.BlockSpec((batch, block_h), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((batch, block_h), lambda j: (0, j)),
+            pl.BlockSpec((batch, block_h), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), h.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), c.dtype),
+        ],
+        interpret=True,  # CPU image: Mosaic lowering is TPU-only
+    )(xh, w_g, b_g, c)
+    return h_next, c_next
+
+
+def vmem_bytes(batch: int, input_dim: int, hidden: int, block_h: int | None = None,
+               bytes_per_elem: int = 4) -> int:
+    """Estimated per-grid-cell VMEM footprint of the kernel (DESIGN.md §Perf).
+
+    Counts all resident blocks: xh row, weight tile, bias tile, c tile and
+    both output tiles, plus the [B, 4, Ht] gate accumulator.
+    """
+    if block_h is None:
+        block_h = pick_block_h(hidden)
+    in_dim = input_dim + hidden
+    blocks = (
+        batch * in_dim          # xh
+        + in_dim * 4 * block_h  # w tile
+        + 4 * block_h           # b tile
+        + batch * block_h       # c in
+        + 2 * batch * block_h   # h/c out
+        + batch * 4 * block_h   # gate accumulator
+    )
+    return blocks * bytes_per_elem
+
+
+def mxu_utilization_estimate(batch: int, input_dim: int, hidden: int,
+                             block_h: int | None = None) -> float:
+    """Fraction of MXU (128x128 systolic) lanes busy for the gate GEMM.
+
+    The contraction is [B, I+H] @ [I+H, 4*Ht]. Row occupancy is B/128
+    (serving batch), column occupancy min(1, 4*Ht/128). This is the
+    structural estimate recorded in EXPERIMENTS.md §Perf — interpret-mode
+    wallclock is NOT a TPU proxy.
+    """
+    if block_h is None:
+        block_h = pick_block_h(hidden)
+    rows = min(1.0, batch / 128.0)
+    cols = min(1.0, (4 * block_h) / 128.0)
+    return rows * cols

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for the fused LSTM cell and the stacked LSTM model.
+
+This module is the correctness ground truth (paper §2.1, basic LSTM of
+Zaremba et al. [18]). Everything here is straightforward, unfused jnp so
+that the optimized Pallas kernel (`lstm_cell.py`) and the Rust native
+engine can be validated against the same reference numerics.
+
+Gate layout convention (used EVERYWHERE in this repo — python, HLO
+artifacts, MRNW weight files and the Rust engine):
+
+    gates = [x ; h] @ W + b            # W: [input+hidden, 4*hidden]
+    i, g, f, o = split(gates, 4, axis=-1)   # input, candidate, forget, output
+    c' = sigmoid(f + forget_bias) * c + sigmoid(i) * tanh(g)
+    h' = sigmoid(o) * tanh(c')
+
+`forget_bias = 1.0` matches the TensorFlow BasicLSTMCell the paper trained
+with (§4.1, TF training on a server).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+FORGET_BIAS = 1.0
+
+
+def sigmoid(x):
+    """Numerically-stable logistic function."""
+    return jnp.where(
+        x >= 0, 1.0 / (1.0 + jnp.exp(-x)), jnp.exp(x) / (1.0 + jnp.exp(x))
+    )
+
+
+def lstm_cell_ref(x, h, c, w, b):
+    """One LSTM cell step, unfused reference.
+
+    Args:
+      x: [B, I]  input at this timestep
+      h: [B, H]  previous hidden state
+      c: [B, H]  previous cell state
+      w: [I+H, 4H] combined weight matrix (input rows first, hidden rows after)
+      b: [4H]    bias
+    Returns:
+      (h_next, c_next): each [B, H]
+    """
+    xh = jnp.concatenate([x, h], axis=-1)
+    gates = xh @ w + b
+    i, g, f, o = jnp.split(gates, 4, axis=-1)
+    c_next = sigmoid(f + FORGET_BIAS) * c + sigmoid(i) * jnp.tanh(g)
+    h_next = sigmoid(o) * jnp.tanh(c_next)
+    return h_next, c_next
+
+
+def lstm_cell_ref_split(x, h, c, w_x, w_h, b):
+    """Variant with SEPARATE input/hidden matmuls — the un-combined form that
+    the paper's §3.3 "combining inputs and weights" optimization replaces.
+    Used by the fusion ablation test to show numerical equivalence."""
+    gates = x @ w_x + h @ w_h + b
+    i, g, f, o = jnp.split(gates, 4, axis=-1)
+    c_next = sigmoid(f + FORGET_BIAS) * c + sigmoid(i) * jnp.tanh(g)
+    h_next = sigmoid(o) * jnp.tanh(c_next)
+    return h_next, c_next
+
+
+def stacked_lstm_ref(x_seq, params):
+    """Run a stacked LSTM over a full sequence, reference semantics.
+
+    Args:
+      x_seq: [B, T, D] input sequence
+      params: list over layers of dicts {"w": [I+H,4H], "b": [4H]}
+    Returns:
+      h_last: [B, H] final hidden state of the top layer
+    """
+    batch = x_seq.shape[0]
+    hidden = params[0]["b"].shape[0] // 4
+    hs = [jnp.zeros((batch, hidden), x_seq.dtype) for _ in params]
+    cs = [jnp.zeros((batch, hidden), x_seq.dtype) for _ in params]
+    for t in range(x_seq.shape[1]):
+        inp = x_seq[:, t, :]
+        for li, p in enumerate(params):
+            hs[li], cs[li] = lstm_cell_ref(inp, hs[li], cs[li], p["w"], p["b"])
+            inp = hs[li]
+    return hs[-1]
+
+
+def classifier_ref(x_seq, params, w_out, b_out):
+    """Full activity-recognition model: stacked LSTM -> linear head.
+
+    Returns logits [B, num_classes]."""
+    h_last = stacked_lstm_ref(x_seq, params)
+    return h_last @ w_out + b_out

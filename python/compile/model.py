@@ -1,0 +1,186 @@
+"""L2: the paper's activity-recognition model in JAX.
+
+A stacked LSTM (paper §2.1/§4.1: default 2 layers x 32 hidden units, input
+128 timesteps x 9 sensor channels, 6 activity classes) followed by a linear
+classifier head over the final hidden state. The per-timestep cell is the
+fused Pallas kernel (kernels.lstm_cell) so that the AOT artifact contains
+the L1 kernel's lowering; a `cell="ref"` path exists for training and for
+differential testing against the oracle.
+
+The time loop is a `lax.scan` (not an unroll): 128 steps x up to 3 layers
+unrolled would blow up the HLO and compile time, and scan keeps the c/h
+carry buffers donated/reused — the paper's §3.2 preallocation argument,
+expressed at the XLA level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lstm_cell as kmod
+from .kernels import ref as rmod
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one model variant (paper §4.1)."""
+
+    num_layers: int = 2
+    hidden: int = 32
+    input_dim: int = 9
+    seq_len: int = 128
+    num_classes: int = 6
+
+    def variant_name(self, batch: int) -> str:
+        return f"lstm_L{self.num_layers}_H{self.hidden}_B{batch}"
+
+    def weights_name(self) -> str:
+        return f"weights_L{self.num_layers}_H{self.hidden}"
+
+    def param_count(self) -> int:
+        """Exact trainable parameter count (paper quotes ~17k for 2l/32h
+        and ~1M for 2l/256h; this reproduces those)."""
+        n = 0
+        in_dim = self.input_dim
+        for _ in range(self.num_layers):
+            n += (in_dim + self.hidden) * 4 * self.hidden + 4 * self.hidden
+            in_dim = self.hidden
+        n += self.hidden * self.num_classes + self.num_classes
+        return n
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Glorot-uniform weights, zero biases. Layout documented in ref.py."""
+    layers: List[Dict[str, jax.Array]] = []
+    in_dim = cfg.input_dim
+    for _ in range(cfg.num_layers):
+        key, k1 = jax.random.split(key)
+        fan_in = in_dim + cfg.hidden
+        scale = jnp.sqrt(6.0 / (fan_in + 4 * cfg.hidden))
+        w = jax.random.uniform(
+            k1, (fan_in, 4 * cfg.hidden), jnp.float32, -scale, scale
+        )
+        b = jnp.zeros((4 * cfg.hidden,), jnp.float32)
+        layers.append({"w": w, "b": b})
+        in_dim = cfg.hidden
+    key, k2 = jax.random.split(key)
+    scale = jnp.sqrt(6.0 / (cfg.hidden + cfg.num_classes))
+    w_out = jax.random.uniform(
+        k2, (cfg.hidden, cfg.num_classes), jnp.float32, -scale, scale
+    )
+    b_out = jnp.zeros((cfg.num_classes,), jnp.float32)
+    return {"layers": layers, "w_out": w_out, "b_out": b_out}
+
+
+def _cell_fn(name: str):
+    if name == "pallas":
+        return lambda x, h, c, w, b: kmod.lstm_cell(x, h, c, w, b)
+    if name == "ref":
+        return rmod.lstm_cell_ref
+    raise ValueError(f"unknown cell impl {name!r}")
+
+
+def forward(params: Params, x_seq: jax.Array, *, cell: str = "pallas") -> jax.Array:
+    """Stacked-LSTM classifier forward pass.
+
+    Args:
+      params: as produced by init_params
+      x_seq: [B, T, D]
+      cell: "pallas" (fused L1 kernel) or "ref" (jnp oracle)
+    Returns:
+      logits [B, num_classes]
+    """
+    layers = params["layers"]
+    num_layers = len(layers)
+    batch = x_seq.shape[0]
+    hidden = layers[0]["b"].shape[0] // 4
+    step = _cell_fn(cell)
+
+    h0 = jnp.zeros((num_layers, batch, hidden), x_seq.dtype)
+    c0 = jnp.zeros((num_layers, batch, hidden), x_seq.dtype)
+
+    def scan_body(carry, x_t):
+        hs, cs = carry
+        inp = x_t
+        new_h, new_c = [], []
+        for li, p in enumerate(layers):
+            h_n, c_n = step(inp, hs[li], cs[li], p["w"], p["b"])
+            new_h.append(h_n)
+            new_c.append(c_n)
+            inp = h_n
+        return (jnp.stack(new_h), jnp.stack(new_c)), None
+
+    # scan over time: [B, T, D] -> [T, B, D]
+    xs = jnp.swapaxes(x_seq, 0, 1)
+    (hs, _cs), _ = jax.lax.scan(scan_body, (h0, c0), xs)
+    h_last = hs[-1]
+    return h_last @ params["w_out"] + params["b_out"]
+
+
+def loss_fn(params: Params, x_seq: jax.Array, labels: jax.Array,
+            *, cell: str = "ref") -> jax.Array:
+    """Mean softmax cross-entropy (training uses the ref cell: identical
+    numerics, cheaper trace)."""
+    logits = forward(params, x_seq, cell=cell)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(params: Params, x_seq: jax.Array, labels: jax.Array,
+             *, cell: str = "ref") -> jax.Array:
+    logits = forward(params, x_seq, cell=cell)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def flat_param_list(params: Params) -> List[jax.Array]:
+    """Deterministic flattening used by the AOT artifact signature and the
+    MRNW weight file: w0, b0, w1, b1, ..., w_out, b_out."""
+    out: List[jax.Array] = []
+    for p in params["layers"]:
+        out.append(p["w"])
+        out.append(p["b"])
+    out.append(params["w_out"])
+    out.append(params["b_out"])
+    return out
+
+
+def flat_param_names(cfg: ModelConfig) -> List[str]:
+    names: List[str] = []
+    for li in range(cfg.num_layers):
+        names.append(f"layer{li}.w")
+        names.append(f"layer{li}.b")
+    names.append("head.w")
+    names.append("head.b")
+    return names
+
+
+def unflatten_params(cfg: ModelConfig, flat: List[jax.Array]) -> Params:
+    """Inverse of flat_param_list for a given config."""
+    layers = []
+    idx = 0
+    for _ in range(cfg.num_layers):
+        layers.append({"w": flat[idx], "b": flat[idx + 1]})
+        idx += 2
+    return {"layers": layers, "w_out": flat[idx], "b_out": flat[idx + 1]}
+
+
+def aot_fn(cfg: ModelConfig, *, cell: str = "pallas"):
+    """The function that gets AOT-lowered: logits = f(x, w0, b0, ..., wo, bo).
+
+    Weights are HLO *parameters* (not baked constants) so one artifact per
+    (shape-variant) serves any weight values; Rust loads the MRNW file and
+    passes the tensors in the order of flat_param_names.
+    """
+
+    def fn(x_seq, *flat):
+        params = unflatten_params(cfg, list(flat))
+        return (forward(params, x_seq, cell=cell),)
+
+    return fn

@@ -1,0 +1,111 @@
+"""Trainer for the activity-recognition LSTM (paper §4.1 substitution:
+TensorFlow-on-a-server -> JAX-on-this-image; same model family, same
+parameter counts).
+
+Plain hand-rolled Adam (no optax dependency) over minibatches of the
+synthetic HAR training set. Training uses the `ref` cell (identical
+numerics to the Pallas kernel — asserted by tests — but much cheaper to
+trace/differentiate); the AOT export then wires the same weights into the
+Pallas-kernel graph.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .model import ModelConfig, Params
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-2, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(
+    cfg: ModelConfig,
+    *,
+    steps: int = 300,
+    batch_size: int = 64,
+    lr: float = 1e-2,
+    seed: int = 7,
+    train_size: int = 2048,
+    test_size: int = 512,
+    log_every: int = 25,
+    verbose: bool = True,
+) -> Tuple[Params, Dict[str, Any]]:
+    """Train and return (params, report).
+
+    `train_size`/`test_size` default well below the paper's 7352/2947 —
+    the synthetic task saturates quickly and artifact builds should be
+    fast; the full-size split is still what gets serialized for serving
+    (see aot.py).
+    """
+    (x_tr, y_tr), (x_te, y_te) = data_mod.train_test(
+        seed=seed, train_size=train_size, test_size=test_size
+    )
+    key = jax.random.PRNGKey(seed)
+    params = model_mod.init_params(cfg, key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(model_mod.loss_fn)(params, xb, yb)
+        params, opt = adam_step(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    rng = np.random.RandomState(seed)
+    losses = []
+    for step in range(steps):
+        idx = rng.randint(0, x_tr.shape[0], size=batch_size)
+        params, opt, loss = step_fn(params, opt, x_tr[idx], y_tr[idx])
+        losses.append(float(loss))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"  step {step:4d}  loss {float(loss):.4f}")
+
+    # Evaluate in chunks to bound memory.
+    def eval_acc(x, y, chunk=256):
+        correct = 0
+        for i in range(0, x.shape[0], chunk):
+            acc = model_mod.accuracy(params, x[i : i + chunk], y[i : i + chunk])
+            correct += float(acc) * min(chunk, x.shape[0] - i)
+        return correct / x.shape[0]
+
+    report = {
+        "steps": steps,
+        "batch_size": batch_size,
+        "lr": lr,
+        "final_loss": losses[-1],
+        "loss_curve": losses,
+        "train_accuracy": eval_acc(x_tr, y_tr),
+        "test_accuracy": eval_acc(x_te, y_te),
+        "param_count": cfg.param_count(),
+    }
+    if verbose:
+        print(
+            f"  trained {cfg.num_layers}l/{cfg.hidden}h: "
+            f"train_acc={report['train_accuracy']:.3f} "
+            f"test_acc={report['test_accuracy']:.3f} "
+            f"params={report['param_count']}"
+        )
+    return params, report

@@ -1,0 +1,120 @@
+"""AOT pipeline: MRNW/MRNG container round-trips, HLO text emission,
+variant naming — the contracts the Rust side (runtime/, lstm/weights.rs)
+parses byte-for-byte."""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model as m
+from compile.model import ModelConfig
+
+
+class TestMrnw:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5))
+    def test_roundtrip(self, seed, n):
+        rng = np.random.RandomState(seed)
+        names = [f"t{i}" for i in range(n)]
+        tensors = [
+            rng.randn(*rng.randint(1, 6, size=rng.randint(1, 4))).astype("f")
+            for _ in range(n)
+        ]
+        path = f"/tmp/mrnw_rt_{seed}_{n}.mrnw"
+        aot.write_mrnw(path, names, tensors)
+        back = aot.read_mrnw(path)
+        assert list(back.keys()) == names
+        for name, t in zip(names, tensors):
+            np.testing.assert_array_equal(back[name], t)
+        os.unlink(path)
+
+    def test_header_layout(self, tmp_path):
+        p = str(tmp_path / "w.mrnw")
+        aot.write_mrnw(p, ["ab"], [np.zeros((2, 3), "f")])
+        raw = open(p, "rb").read()
+        assert raw[:4] == b"MRNW"
+        ver, n = struct.unpack("<II", raw[4:12])
+        assert (ver, n) == (1, 1)
+        (nlen,) = struct.unpack("<H", raw[12:14])
+        assert raw[14:16] == b"ab" and nlen == 2
+        assert raw[16] == 2  # ndim
+        assert struct.unpack("<II", raw[17:25]) == (2, 3)
+        assert len(raw) == 25 + 4 * 6
+
+    def test_model_params_roundtrip(self, tmp_path):
+        cfg = ModelConfig()
+        params = m.init_params(cfg, __import__("jax").random.PRNGKey(0))
+        p = str(tmp_path / "w.mrnw")
+        names = m.flat_param_names(cfg)
+        aot.write_mrnw(p, names, [np.asarray(t) for t in m.flat_param_list(params)])
+        back = aot.read_mrnw(p)
+        assert back["layer0.w"].shape == (9 + 32, 128)
+        assert back["head.w"].shape == (32, 6)
+
+
+class TestGolden:
+    def test_golden_layout(self, tmp_path):
+        x = np.arange(2 * 4 * 3, dtype="f").reshape(2, 4, 3)
+        logits = np.arange(2 * 6, dtype="f").reshape(2, 6)
+        p = str(tmp_path / "g.bin")
+        aot.write_golden(p, x, logits)
+        raw = open(p, "rb").read()
+        assert raw[:4] == b"MRNG"
+        hdr = struct.unpack("<IIIII", raw[4:24])
+        assert hdr == (1, 2, 4, 3, 6)
+        body = np.frombuffer(raw[24:], dtype="<f4")
+        np.testing.assert_array_equal(body[: 2 * 4 * 3], x.ravel())
+        np.testing.assert_array_equal(body[2 * 4 * 3:], logits.ravel())
+
+
+class TestLowering:
+    def test_hlo_text_emitted(self):
+        cfg = ModelConfig(seq_len=4)
+        text = aot.lower_variant(cfg, 1)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_variant_param_arity(self):
+        """x + 2 tensors per layer + head (w, b)."""
+        cfg = ModelConfig(num_layers=2, seq_len=4)
+        text = aot.lower_variant(cfg, 1)
+        # 7 entry parameters: x, w0, b0, w1, b1, w_out, b_out
+        entry = text[text.index("ENTRY"):]
+        body = entry[: entry.index("ROOT")]
+        assert body.count("parameter(") == 7
+
+    def test_variant_names(self):
+        cfg = ModelConfig(num_layers=3, hidden=64)
+        assert cfg.variant_name(4) == "lstm_L3_H64_B4"
+        assert cfg.weights_name() == "weights_L3_H64"
+
+
+@pytest.mark.slow
+class TestEndToEndBuild:
+    def test_fast_build_produces_manifest(self, tmp_path):
+        """Run the full aot CLI in --fast mode into a temp dir and check
+        every promised artifact exists and the manifest indexes them."""
+        out = str(tmp_path / "artifacts")
+        env = dict(os.environ)
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", out, "--fast",
+             "--train-steps", "5"],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        assert r.returncode == 0, r.stderr[-2000:]
+        man = json.load(open(os.path.join(out, "manifest.json")))
+        assert man["format"] == "mobirnn-artifacts"
+        for v in man["variants"]:
+            assert os.path.exists(os.path.join(out, v["hlo"]))
+            assert os.path.exists(os.path.join(out, v["weights"]))
+        assert os.path.exists(os.path.join(out, man["golden"]["file"]))
+        assert os.path.exists(os.path.join(out, man["har_test"]["file"]))
+        golden = man["golden"]
+        assert len(golden["labels"]) == golden["batch"]

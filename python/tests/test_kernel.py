@@ -1,0 +1,175 @@
+"""L1 correctness: the fused Pallas LSTM cell vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the whole stack: the AOT artifact
+contains the Pallas kernel's lowering, the Rust native engine mirrors the
+oracle, and the golden file ties Rust execution back to these numerics.
+Hypothesis sweeps shapes and dtypes per the repro brief.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_cell as kmod
+from compile.kernels import ref as rmod
+
+
+def _mk(rng, *shape):
+    return jnp.asarray((rng.randn(*shape) * 0.5).astype(np.float32))
+
+
+def _cell_inputs(rng, batch, input_dim, hidden):
+    return (
+        _mk(rng, batch, input_dim),
+        _mk(rng, batch, hidden),
+        _mk(rng, batch, hidden),
+        _mk(rng, input_dim + hidden, 4 * hidden),
+        _mk(rng, 4 * hidden),
+    )
+
+
+class TestCellVsRef:
+    @pytest.mark.parametrize("batch", [1, 2, 8])
+    @pytest.mark.parametrize("hidden", [32, 64, 128, 256])
+    def test_paper_shapes(self, batch, hidden):
+        """Every (batch, hidden) combination the paper evaluates."""
+        rng = np.random.RandomState(batch * 1000 + hidden)
+        x, h, c, w, b = _cell_inputs(rng, batch, 9, hidden)
+        h_ref, c_ref = rmod.lstm_cell_ref(x, h, c, w, b)
+        h_k, c_k = kmod.lstm_cell(x, h, c, w, b)
+        np.testing.assert_allclose(h_k, h_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c_k, c_ref, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        batch=st.integers(1, 6),
+        input_dim=st.integers(1, 40),
+        hidden=st.sampled_from([1, 2, 3, 5, 8, 16, 24, 32, 48, 96, 160]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, batch, input_dim, hidden, seed):
+        """Arbitrary (including odd / non-power-of-two) shapes."""
+        rng = np.random.RandomState(seed)
+        x, h, c, w, b = _cell_inputs(rng, batch, input_dim, hidden)
+        h_ref, c_ref = rmod.lstm_cell_ref(x, h, c, w, b)
+        h_k, c_k = kmod.lstm_cell(x, h, c, w, b)
+        np.testing.assert_allclose(h_k, h_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(c_k, c_ref, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_bfloat16(self, seed):
+        """The kernel accumulates in f32 regardless of storage dtype."""
+        rng = np.random.RandomState(seed)
+        x, h, c, w, b = _cell_inputs(rng, 2, 9, 32)
+        cast = lambda t: t.astype(jnp.bfloat16)
+        h_ref, c_ref = rmod.lstm_cell_ref(
+            cast(x).astype(jnp.float32), cast(h).astype(jnp.float32),
+            cast(c).astype(jnp.float32), cast(w).astype(jnp.float32),
+            cast(b).astype(jnp.float32))
+        h_k, c_k = kmod.lstm_cell(cast(x), cast(h), cast(c), cast(w), cast(b))
+        assert h_k.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            h_k.astype(jnp.float32), h_ref, rtol=5e-2, atol=5e-2)
+        np.testing.assert_allclose(
+            c_k.astype(jnp.float32), c_ref, rtol=5e-2, atol=5e-2)
+
+    def test_explicit_block_h(self):
+        """Forcing a smaller tile (more grid cells) must not change numerics."""
+        rng = np.random.RandomState(3)
+        x, h, c, w, b = _cell_inputs(rng, 2, 9, 64)
+        h_ref, c_ref = rmod.lstm_cell_ref(x, h, c, w, b)
+        for bh in (8, 16, 32, 64):
+            h_k, c_k = kmod.lstm_cell(x, h, c, w, b, block_h=bh)
+            np.testing.assert_allclose(h_k, h_ref, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(c_k, c_ref, rtol=1e-5, atol=1e-5)
+
+    def test_zero_state(self):
+        """First timestep of every sequence starts from h=c=0."""
+        rng = np.random.RandomState(4)
+        x = _mk(rng, 3, 9)
+        h = jnp.zeros((3, 32))
+        c = jnp.zeros((3, 32))
+        w = _mk(rng, 41, 128)
+        b = _mk(rng, 128)
+        h_ref, c_ref = rmod.lstm_cell_ref(x, h, c, w, b)
+        h_k, c_k = kmod.lstm_cell(x, h, c, w, b)
+        np.testing.assert_allclose(h_k, h_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c_k, c_ref, rtol=1e-5, atol=1e-5)
+
+    def test_multi_step_composition(self):
+        """Chaining the kernel across 16 timesteps tracks the oracle —
+        errors do not compound beyond tolerance."""
+        rng = np.random.RandomState(5)
+        w = _mk(rng, 41, 128)
+        b = _mk(rng, 128)
+        h_r = h_k = jnp.zeros((2, 32))
+        c_r = c_k = jnp.zeros((2, 32))
+        for t in range(16):
+            x = _mk(rng, 2, 9)
+            h_r, c_r = rmod.lstm_cell_ref(x, h_r, c_r, w, b)
+            h_k, c_k = kmod.lstm_cell(x, h_k, c_k, w, b)
+        np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-4, atol=1e-4)
+
+
+class TestFusionAblation:
+    """Paper §3.3 'combining inputs and weights': the combined single-GEMM
+    form is numerically identical to the split two-GEMM form."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), hidden=st.sampled_from([8, 32, 64]))
+    def test_combined_equals_split(self, seed, hidden):
+        rng = np.random.RandomState(seed)
+        x, h, c, w, b = _cell_inputs(rng, 2, 9, hidden)
+        w_x, w_h = w[:9, :], w[9:, :]
+        h_s, c_s = rmod.lstm_cell_ref_split(x, h, c, w_x, w_h, b)
+        h_f, c_f = kmod.lstm_cell(x, h, c, w, b)
+        np.testing.assert_allclose(h_f, h_s, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c_f, c_s, rtol=1e-5, atol=1e-5)
+
+
+class TestKernelStructure:
+    def test_pick_block_h_divides(self):
+        for hdn in range(1, 300):
+            bh = kmod.pick_block_h(hdn)
+            assert hdn % bh == 0
+            assert bh <= kmod.MAX_BLOCK_H or hdn == bh
+
+    def test_pick_block_h_paper_sizes(self):
+        assert kmod.pick_block_h(32) == 32
+        assert kmod.pick_block_h(64) == 64
+        assert kmod.pick_block_h(128) == 128
+        assert kmod.pick_block_h(256) == 128  # tiled into 2 grid cells
+
+    def test_vmem_fits_budget(self):
+        """Every paper variant's per-cell working set fits a 16 MiB VMEM."""
+        for hidden in (32, 64, 128, 256):
+            for batch in (1, 8):
+                assert kmod.vmem_bytes(batch, 9, hidden) < 16 * 1024 * 1024
+
+    def test_vmem_monotonic_in_batch(self):
+        vals = [kmod.vmem_bytes(b, 9, 32) for b in (1, 2, 4, 8)]
+        assert vals == sorted(vals)
+
+    def test_mxu_utilization_bounds(self):
+        for hidden in (32, 64, 128, 256):
+            for batch in (1, 8, 128):
+                u = kmod.mxu_utilization_estimate(batch, 9, hidden)
+                assert 0.0 < u <= 1.0
+
+    def test_mxu_utilization_improves_with_batch(self):
+        """Serving batch is the row-occupancy lever (DESIGN.md §Perf)."""
+        assert kmod.mxu_utilization_estimate(8, 9, 32) > \
+            kmod.mxu_utilization_estimate(1, 9, 32)
+
+    def test_cell_is_jittable_and_stable_under_jit(self):
+        rng = np.random.RandomState(6)
+        x, h, c, w, b = _cell_inputs(rng, 2, 9, 32)
+        f = jax.jit(lambda *a: kmod.lstm_cell(*a))
+        h1, c1 = f(x, h, c, w, b)
+        h2, c2 = kmod.lstm_cell(x, h, c, w, b)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))

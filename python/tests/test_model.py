@@ -1,0 +1,130 @@
+"""L2 correctness: stacked model — pallas graph vs oracle, shapes,
+parameter bookkeeping, AOT signature stability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as m
+from compile.kernels import ref as rmod
+from compile.model import ModelConfig
+
+
+def _x(rng, batch, cfg):
+    return jnp.asarray(rng.randn(batch, cfg.seq_len, cfg.input_dim).astype("f"))
+
+
+class TestForward:
+    @pytest.mark.parametrize("layers,hidden", [(1, 32), (2, 32), (3, 32), (2, 64)])
+    def test_pallas_matches_ref(self, layers, hidden):
+        cfg = ModelConfig(num_layers=layers, hidden=hidden, seq_len=16)
+        params = m.init_params(cfg, jax.random.PRNGKey(layers * 100 + hidden))
+        x = _x(np.random.RandomState(0), 2, cfg)
+        lr = m.forward(params, x, cell="ref")
+        lp = m.forward(params, x, cell="pallas")
+        np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-4)
+
+    def test_ref_matches_loop_oracle(self):
+        """The scan-based forward equals the naive python-loop oracle."""
+        cfg = ModelConfig(seq_len=12)
+        params = m.init_params(cfg, jax.random.PRNGKey(1))
+        x = _x(np.random.RandomState(1), 3, cfg)
+        scan_logits = m.forward(params, x, cell="ref")
+        loop_logits = rmod.classifier_ref(
+            x, params["layers"], params["w_out"], params["b_out"]
+        )
+        np.testing.assert_allclose(scan_logits, loop_logits, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("batch", [1, 2, 8])
+    def test_output_shape(self, batch):
+        cfg = ModelConfig(seq_len=8)
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        logits = m.forward(params, _x(np.random.RandomState(0), batch, cfg))
+        assert logits.shape == (batch, cfg.num_classes)
+
+    def test_forward_deterministic(self):
+        cfg = ModelConfig(seq_len=8)
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        x = _x(np.random.RandomState(0), 2, cfg)
+        a = np.asarray(m.forward(params, x))
+        b = np.asarray(m.forward(params, x))
+        np.testing.assert_array_equal(a, b)
+
+    def test_unknown_cell_raises(self):
+        cfg = ModelConfig(seq_len=4)
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError):
+            m.forward(params, _x(np.random.RandomState(0), 1, cfg), cell="cuda")
+
+
+class TestParams:
+    def test_param_count_paper_default(self):
+        """Paper §4.1: default 2l/32h model is ~ seventeen-thousand-scale;
+        the exact TF BasicLSTMCell count with a 6-way head is 13894."""
+        assert ModelConfig().param_count() == 13894
+
+    def test_param_count_growth_ratio(self):
+        """Paper §4.3: 2l/128h has ~4x the parameters of 2l/64h."""
+        p64 = ModelConfig(hidden=64).param_count()
+        p128 = ModelConfig(hidden=128).param_count()
+        assert 3.5 < p128 / p64 < 4.5
+
+    def test_param_count_matches_init(self):
+        for cfg in [ModelConfig(), ModelConfig(num_layers=3, hidden=64)]:
+            params = m.init_params(cfg, jax.random.PRNGKey(0))
+            total = sum(int(np.prod(p.shape)) for p in m.flat_param_list(params))
+            assert total == cfg.param_count()
+
+    @settings(max_examples=10, deadline=None)
+    @given(layers=st.integers(1, 3), hidden=st.sampled_from([8, 32, 64]))
+    def test_flatten_roundtrip(self, layers, hidden):
+        cfg = ModelConfig(num_layers=layers, hidden=hidden)
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        flat = m.flat_param_list(params)
+        assert len(flat) == len(m.flat_param_names(cfg))
+        rt = m.unflatten_params(cfg, flat)
+        for a, b in zip(m.flat_param_list(rt), flat):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_flat_names_order(self):
+        names = m.flat_param_names(ModelConfig(num_layers=2))
+        assert names == ["layer0.w", "layer0.b", "layer1.w", "layer1.b",
+                         "head.w", "head.b"]
+
+
+class TestAotFn:
+    def test_aot_fn_signature(self):
+        """aot_fn(x, *flat) must equal forward(params, x) — this is the
+        exact function Rust executes via PJRT."""
+        cfg = ModelConfig(seq_len=8)
+        params = m.init_params(cfg, jax.random.PRNGKey(2))
+        x = _x(np.random.RandomState(2), 2, cfg)
+        (via_aot,) = m.aot_fn(cfg, cell="ref")(x, *m.flat_param_list(params))
+        direct = m.forward(params, x, cell="ref")
+        np.testing.assert_array_equal(np.asarray(via_aot), np.asarray(direct))
+
+    def test_loss_decreases_on_overfit_batch(self):
+        """Gradient sanity: 30 SGD steps on one batch reduce loss."""
+        from compile import train as tmod
+        cfg = ModelConfig(seq_len=16)
+        params = m.init_params(cfg, jax.random.PRNGKey(3))
+        rng = np.random.RandomState(3)
+        x = _x(rng, 8, cfg)
+        y = jnp.asarray(rng.randint(0, 6, size=8))
+        opt = tmod.adam_init(params)
+        l0 = float(m.loss_fn(params, x, y))
+        for _ in range(30):
+            loss, grads = jax.value_and_grad(m.loss_fn)(params, x, y)
+            params, opt = tmod.adam_step(params, grads, opt, lr=1e-2)
+        assert float(m.loss_fn(params, x, y)) < l0 * 0.5
+
+    def test_accuracy_range(self):
+        cfg = ModelConfig(seq_len=8)
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        x = _x(rng, 16, cfg)
+        y = jnp.asarray(rng.randint(0, 6, size=16))
+        acc = float(m.accuracy(params, x, y))
+        assert 0.0 <= acc <= 1.0

@@ -1,0 +1,39 @@
+//! Ablation benches (DESIGN.md A1–A3): each §3.2/§3.3 optimization
+//! toggled off, on the simulated Nexus 5 — quantifying what each buys.
+
+use mobirnn::bench::bench_auto;
+use mobirnn::config::ModelShape;
+use mobirnn::simulator::{simulate_gpu_with_opts, DeviceProfile, Factorization, TraceOpts};
+
+fn main() {
+    let p = DeviceProfile::nexus5();
+    let shape = ModelShape::default();
+    let base = TraceOpts::mobirnn();
+    let cases: Vec<(&str, TraceOpts)> = vec![
+        ("mobirnn_all_opts", base),
+        ("a2_split_gemm", TraceOpts { combined_gemm: false, ..base }),
+        ("a2_unfused_pointwise", TraceOpts { fused_pointwise: false, ..base }),
+        ("a1_no_memory_pool", TraceOpts { mem_pool: false, ..base }),
+        ("a3_divergent_kernels", TraceOpts { divergence_free: false, ..base }),
+        ("naive_port", TraceOpts::naive()),
+    ];
+
+    println!("== Ablations: simulated ms/inference (2l/32h, Nexus 5) ==");
+    let baseline = simulate_gpu_with_opts(&p, shape, 1, Factorization::Coarse, &base, 0.0);
+    for (name, opts) in &cases {
+        let ns = simulate_gpu_with_opts(&p, shape, 1, Factorization::Coarse, opts, 0.0);
+        println!(
+            "{name:<24} {:>8.1} ms   {:>5.2}x",
+            ns as f64 / 1e6,
+            ns as f64 / baseline as f64
+        );
+    }
+    println!("\n(simulator cost of each ablated configuration)");
+    for (name, opts) in &cases {
+        bench_auto(&format!("ablation/{name}"), 20.0, || {
+            std::hint::black_box(simulate_gpu_with_opts(
+                &p, shape, 1, Factorization::Coarse, opts, 0.0,
+            ));
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench E2 (paper Fig 2): fine vs coarse factorization of one gate GEMM.
+//! Prints the figure rows, then times the simulated execution of each
+//! strategy (the simulator itself is part of the measured hot path for
+//! the cost-model policy, so its speed matters).
+
+use mobirnn::bench::bench_auto;
+use mobirnn::config::ModelShape;
+use mobirnn::figures;
+use mobirnn::simulator::{build_trace_with_slots, gpu_run, DeviceProfile, Factorization, TraceOpts};
+
+fn main() {
+    let profile = DeviceProfile::nexus5();
+    figures::print_fig2(&figures::fig2(&profile));
+    println!();
+
+    let shape = ModelShape { num_layers: 1, hidden: 30, input_dim: 2, seq_len: 1, num_classes: 6 };
+    for (name, fact) in [("fine", Factorization::Fine), ("coarse", Factorization::Coarse)] {
+        let trace = build_trace_with_slots(shape, 1, fact, &TraceOpts::mobirnn(), profile.gpu_slots);
+        bench_auto(&format!("fig2/sim_gemm_{name}"), 20.0, || {
+            std::hint::black_box(gpu_run(&profile, &trace, 0.0, 0));
+        });
+        bench_auto(&format!("fig2/build_trace_{name}"), 20.0, || {
+            std::hint::black_box(build_trace_with_slots(
+                shape, 1, fact, &TraceOpts::mobirnn(), profile.gpu_slots,
+            ));
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench E3 (paper Fig 3): CUDA-style fine offload vs single-thread CPU
+//! across the complexity sweep. Prints the figure, times the full-sweep
+//! regeneration.
+
+use mobirnn::bench::bench_auto;
+use mobirnn::figures;
+use mobirnn::simulator::DeviceProfile;
+
+fn main() {
+    let n5 = DeviceProfile::nexus5();
+    figures::print_fig3(&figures::fig3(&n5));
+    println!();
+    bench_auto("fig3/regenerate_full_sweep", 50.0, || {
+        std::hint::black_box(figures::fig3(&n5));
+    });
+}

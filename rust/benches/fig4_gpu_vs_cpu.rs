@@ -1,0 +1,40 @@
+//! Bench E4 (paper Fig 4): MobiRNN GPU vs CPU on both phones — the
+//! headline 3.93x/2.83x. Prints the figure, then times BOTH the
+//! simulated path and the REAL serving numerics (PJRT execute of the
+//! trained artifact at batch 1 and 8) so the host-side cost of an
+//! "offloaded" inference is tracked per commit.
+
+use mobirnn::bench::bench_auto;
+use mobirnn::config::Manifest;
+use mobirnn::figures;
+use mobirnn::runtime::Runtime;
+use mobirnn::tensor::Tensor;
+
+fn main() {
+    figures::print_fig4(&figures::fig4());
+    println!();
+    bench_auto("fig4/regenerate", 50.0, || {
+        std::hint::black_box(figures::fig4());
+    });
+
+    // Real hot path, if artifacts exist.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(artifacts not built; skipping PJRT benches)");
+        return;
+    }
+    let man = Manifest::load(dir).unwrap();
+    let rt = Runtime::start(&man).unwrap();
+    for batch in [1usize, 8] {
+        let v = man.variant(&format!("lstm_L2_H32_B{batch}")).unwrap();
+        rt.preload(&v.name).unwrap();
+        let n = batch * v.seq_len * v.input_dim;
+        let x = Tensor::new(
+            vec![batch, v.seq_len, v.input_dim],
+            (0..n).map(|i| (i % 13) as f32 / 13.0).collect(),
+        );
+        bench_auto(&format!("fig4/pjrt_execute_b{batch}"), 100.0, || {
+            std::hint::black_box(rt.execute(&v.name, x.clone()).unwrap());
+        });
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench E5 (paper Fig 5): speedup vs model complexity. Prints the
+//! figure; times the sweep and the largest simulated configuration
+//! (H=256 is the most DES work: 512 launches with memory-roofline math).
+
+use mobirnn::bench::bench_auto;
+use mobirnn::config::ModelShape;
+use mobirnn::figures;
+use mobirnn::simulator::{simulate_inference, DeviceProfile, Factorization, Target};
+
+fn main() {
+    let n5 = DeviceProfile::nexus5();
+    figures::print_fig5(&figures::fig5(&n5));
+    println!();
+    bench_auto("fig5/regenerate_full_sweep", 50.0, || {
+        std::hint::black_box(figures::fig5(&n5));
+    });
+    bench_auto("fig5/sim_gpu_2l256h", 20.0, || {
+        std::hint::black_box(simulate_inference(
+            &n5,
+            ModelShape::new(2, 256),
+            1,
+            Target::Gpu(Factorization::Coarse),
+            0.0,
+        ));
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench E6 (paper Fig 6): multithreaded CPU vs GPU. Prints the figure;
+//! also times the REAL native engine single- vs pooled-threads on this
+//! host (batch of 8 windows) — the actual CPU serving path.
+
+use std::sync::Arc;
+
+use mobirnn::bench::bench_auto;
+use mobirnn::config::{Manifest, ModelShape};
+use mobirnn::figures;
+use mobirnn::lstm::model::InferenceState;
+use mobirnn::lstm::{LstmModel, ThreadedLstm, WeightFile};
+use mobirnn::simulator::DeviceProfile;
+use mobirnn::tensor::Tensor;
+
+fn main() {
+    let n5 = DeviceProfile::nexus5();
+    figures::print_fig6(&figures::fig6(&n5));
+    println!();
+    bench_auto("fig6/regenerate", 50.0, || {
+        std::hint::black_box(figures::fig6(&n5));
+    });
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(artifacts not built; skipping native-engine benches)");
+        return;
+    }
+    let man = Manifest::load(dir).unwrap();
+    let shape = ModelShape::default();
+    let wf = WeightFile::load(man.path("weights_L2_H32.mrnw")).unwrap();
+    let model = Arc::new(LstmModel::from_weight_file(shape, &wf).unwrap());
+    let ds = mobirnn::har::generate(8, 3);
+    let x = Tensor::new(
+        vec![8, shape.seq_len, shape.input_dim],
+        (0..8).flat_map(|i| ds.window(i).to_vec()).collect(),
+    );
+
+    let mut st = InferenceState::new(shape);
+    bench_auto("fig6/native_single_b8", 100.0, || {
+        std::hint::black_box(model.forward_batch(&x, &mut st));
+    });
+    for threads in [2usize, 4] {
+        let pool = ThreadedLstm::new(Arc::clone(&model), threads);
+        bench_auto(&format!("fig6/native_pool{threads}_b8"), 100.0, || {
+            std::hint::black_box(pool.forward_batch(&x));
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench E7 (paper Fig 7): latency under background GPU load, plus the
+//! policy-decision hot path (the router consults the cost model per
+//! batch, so `decide` must stay cheap).
+
+use mobirnn::bench::bench_auto;
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::policy::{LoadSnapshot, OffloadPolicy};
+use mobirnn::figures;
+use mobirnn::simulator::DeviceProfile;
+
+fn main() {
+    let n6p = DeviceProfile::nexus6p();
+    figures::print_fig7(&figures::fig7(&n6p, 30, 42));
+    println!();
+    bench_auto("fig7/regenerate_30_samples", 50.0, || {
+        std::hint::black_box(figures::fig7(&n6p, 30, 42));
+    });
+
+    let shape = ModelShape::default();
+    for (name, load) in [
+        ("idle", LoadSnapshot { gpu_util: 0.0, cpu_util: 0.0 }),
+        ("high", LoadSnapshot { gpu_util: 0.85, cpu_util: 0.85 }),
+    ] {
+        bench_auto(&format!("fig7/cost_model_decide_{name}"), 20.0, || {
+            std::hint::black_box(OffloadPolicy::CostModel.decide(&n6p, shape, 1, load));
+        });
+    }
+}

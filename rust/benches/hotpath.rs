@@ -1,0 +1,146 @@
+//! §Perf hot-path microbenches — the real serving-path components on
+//! this host. These are the numbers EXPERIMENTS.md §Perf tracks
+//! before/after optimization:
+//!
+//!   - native LSTM cell + full-window forward (CPU serving target)
+//!   - PJRT execute (GPU serving target) at batch 1 and 8
+//!   - batch planning, policy decision, JSON wire codec, histogram record
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mobirnn::bench::{bench, bench_auto};
+use mobirnn::config::{Manifest, ModelShape};
+use mobirnn::coordinator::metrics::Histogram;
+use mobirnn::coordinator::plan_batch;
+use mobirnn::coordinator::policy::{LoadSnapshot, OffloadPolicy};
+use mobirnn::har;
+use mobirnn::lstm::cell::{lstm_cell, CellScratch};
+use mobirnn::lstm::model::InferenceState;
+use mobirnn::lstm::{LstmModel, WeightFile};
+use mobirnn::runtime::Runtime;
+use mobirnn::simulator::DeviceProfile;
+use mobirnn::tensor::Tensor;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let man = if dir.join("manifest.json").exists() {
+        Some(Manifest::load(dir).unwrap())
+    } else {
+        eprintln!("(artifacts not built; native/PJRT benches use random weights only)");
+        None
+    };
+    let shape = ModelShape::default();
+    let ds = har::generate(8, 1);
+
+    // --- native engine ---
+    if let Some(man) = &man {
+        let wf = WeightFile::load(man.path("weights_L2_H32.mrnw")).unwrap();
+        let model = Arc::new(LstmModel::from_weight_file(shape, &wf).unwrap());
+        let mut st = InferenceState::new(shape);
+        let window = ds.window(0).to_vec();
+
+        // One cell step (the innermost kernel).
+        let layer0 = wf.to_model_weights(shape).unwrap().0.remove(0);
+        let mut h = vec![0.0f32; shape.hidden];
+        let mut c = vec![0.0f32; shape.hidden];
+        let mut scratch = CellScratch::new(shape.hidden);
+        bench("hotpath/native_cell_step", 100, 20, 10_000, || {
+            lstm_cell(&layer0, &window[..9], &mut h, &mut c, &mut scratch);
+        });
+
+        bench_auto("hotpath/native_forward_window", 100.0, || {
+            std::hint::black_box(model.forward_window(&window, &mut st));
+        });
+
+        // Allocation discipline check: forward_window must not allocate
+        // per call beyond the logits vec (ablation of §3.2 on CPU).
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            std::hint::black_box(model.forward_window(&window, &mut st));
+        }
+        println!(
+            "hotpath/native_throughput_1core: {:.0} windows/s",
+            1000.0 / t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // --- PJRT path ---
+    if let Some(man) = &man {
+        let rt = Runtime::start(man).unwrap();
+        for batch in [1usize, 8] {
+            let name = shape.variant_name(batch);
+            rt.preload(&name).unwrap();
+            let mut data = Vec::new();
+            for i in 0..batch {
+                data.extend_from_slice(ds.window(i));
+            }
+            let x = Tensor::new(vec![batch, shape.seq_len, shape.input_dim], data);
+            bench_auto(&format!("hotpath/pjrt_execute_b{batch}"), 150.0, || {
+                std::hint::black_box(rt.execute(&name, x.clone()).unwrap());
+            });
+        }
+        println!(
+            "hotpath/pjrt_mean_exec_reported: {:.1} µs",
+            rt.mean_exec_ns() / 1e3
+        );
+    }
+
+    // --- coordinator components ---
+    bench("hotpath/plan_batch", 100, 20, 100_000, || {
+        std::hint::black_box(plan_batch(5, &[1, 2, 4, 8]));
+    });
+    let profile = DeviceProfile::nexus5();
+    bench("hotpath/policy_threshold", 100, 20, 100_000, || {
+        std::hint::black_box(
+            OffloadPolicy::Threshold { gpu_threshold: 0.6 }.decide(
+                &profile,
+                shape,
+                1,
+                LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
+            ),
+        );
+    });
+    bench("hotpath/policy_cost_model", 10, 20, 100, || {
+        std::hint::black_box(OffloadPolicy::CostModel.decide(
+            &profile,
+            shape,
+            1,
+            LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
+        ));
+    });
+    let mut cache = mobirnn::coordinator::DecisionCache::new();
+    bench("hotpath/policy_cost_model_cached", 100, 20, 100_000, || {
+        std::hint::black_box(cache.decide(
+            &OffloadPolicy::CostModel,
+            &profile,
+            shape,
+            1,
+            LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
+        ));
+    });
+    let hist = Histogram::new();
+    bench("hotpath/histogram_record", 100, 20, 100_000, || {
+        hist.record(12_345);
+    });
+
+    // --- wire codec (1152-float classify line) ---
+    let window = ds.window(0);
+    let line = {
+        use mobirnn::json::{obj, Value};
+        obj([
+            ("type", Value::from("classify")),
+            ("id", Value::from(7usize)),
+            ("window", Value::Arr(window.iter().map(|&v| Value::Num(v as f64)).collect())),
+        ])
+        .to_json()
+    };
+    println!("hotpath/wire_line_bytes: {}", line.len());
+    bench_auto("hotpath/json_parse_classify", 50.0, || {
+        std::hint::black_box(mobirnn::json::parse(&line).unwrap());
+    });
+    let parsed = mobirnn::json::parse(&line).unwrap();
+    bench_auto("hotpath/json_serialize_classify", 50.0, || {
+        std::hint::black_box(parsed.to_json());
+    });
+}

@@ -1,0 +1,94 @@
+//! Tiny benchmark harness (the vendor set has no criterion).
+//!
+//! `cargo bench` targets are `harness = false` binaries; they use this
+//! module for warmup + repeated timing + summary statistics, printing
+//! one `name: mean ± std (min..max, N)` line per case and returning the
+//! samples for custom reporting.
+
+use std::time::Instant;
+
+use crate::util::Stats;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter ± {:>10} (n={} x {})",
+            self.name,
+            crate::util::fmt_ns(self.stats.mean()),
+            crate::util::fmt_ns(self.stats.stddev()),
+            self.stats.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured calls, then `samples` timed
+/// samples of `iters` calls each. Reports per-iteration nanoseconds.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        stats.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    let r = BenchResult { name: name.to_string(), stats, iters_per_sample: iters };
+    println!("{}", r.report());
+    r
+}
+
+/// Convenience: auto-tune iteration count so one sample takes ≥ `target_ms`.
+pub fn bench_auto<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> BenchResult {
+    // Estimate cost with one call.
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_ms * 1e6 / once_ns).ceil() as usize).clamp(1, 1_000_000);
+    bench(name, 2.min(iters), 10, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_samples() {
+        let mut calls = 0u64;
+        let r = bench("test", 1, 5, 3, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 1 + 5 * 3);
+        assert_eq!(r.stats.len(), 5);
+        assert!(r.mean_ns() >= 0.0);
+    }
+
+    #[test]
+    fn bench_auto_runs() {
+        let r = bench_auto("auto", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.stats.len() == 10);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let r = bench("xyz", 0, 2, 1, || {});
+        assert!(r.report().contains("xyz"));
+    }
+}

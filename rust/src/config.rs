@@ -1,0 +1,415 @@
+//! Configuration: model shapes, artifact manifest, serving options.
+//!
+//! The artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`) is the single source of truth about what was
+//! AOT-compiled: variant shapes, HLO/weight file names, parameter order.
+//! Rust never guesses shapes — it reads them from here (via the in-crate
+//! JSON parser, [`crate::json`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Static shape of one model (mirror of python ModelConfig, paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelShape {
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub input_dim: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+}
+
+impl Default for ModelShape {
+    /// Paper default: 2 layers x 32 hidden, 128x9 windows, 6 classes.
+    fn default() -> Self {
+        Self { num_layers: 2, hidden: 32, input_dim: 9, seq_len: 128, num_classes: 6 }
+    }
+}
+
+impl ModelShape {
+    pub fn new(num_layers: usize, hidden: usize) -> Self {
+        Self { num_layers, hidden, ..Self::default() }
+    }
+
+    pub fn variant_name(&self, batch: usize) -> String {
+        format!("lstm_L{}_H{}_B{batch}", self.num_layers, self.hidden)
+    }
+
+    /// Exact trainable parameter count; mirrors ModelConfig.param_count().
+    pub fn param_count(&self) -> usize {
+        let mut n = 0;
+        let mut in_dim = self.input_dim;
+        for _ in 0..self.num_layers {
+            n += (in_dim + self.hidden) * 4 * self.hidden + 4 * self.hidden;
+            in_dim = self.hidden;
+        }
+        n + self.hidden * self.num_classes + self.num_classes
+    }
+
+    /// FLOPs for one forward pass at batch 1 (2*M*N*K per GEMM + pointwise).
+    pub fn flops_per_inference(&self) -> u64 {
+        let mut total: u64 = 0;
+        let mut in_dim = self.input_dim as u64;
+        let h = self.hidden as u64;
+        for _ in 0..self.num_layers {
+            let gemm = 2 * (in_dim + h) * 4 * h; // [1, I+H] @ [I+H, 4H]
+            let pointwise = 9 * h; // 3 sigmoids + 2 tanh + mul/add, amortized
+            total += (gemm + pointwise) * self.seq_len as u64;
+            in_dim = h;
+        }
+        total + 2 * h * self.num_classes as u64
+    }
+
+    /// Weight bytes streamed per *timestep* (all layers, f32) — the memory
+    /// traffic term behind the paper's Fig 5 bandwidth saturation.
+    pub fn weight_bytes_per_step(&self) -> u64 {
+        let mut bytes: u64 = 0;
+        let mut in_dim = self.input_dim as u64;
+        let h = self.hidden as u64;
+        for _ in 0..self.num_layers {
+            bytes += ((in_dim + h) * 4 * h + 4 * h) * 4;
+            in_dim = h;
+        }
+        bytes
+    }
+}
+
+/// One AOT-compiled variant as recorded in the manifest.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub hlo: String,
+    pub weights: String,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_count: usize,
+    pub trained: bool,
+    pub block_h: usize,
+    pub vmem_bytes: u64,
+    pub mxu_utilization: f64,
+}
+
+impl VariantInfo {
+    pub fn shape(&self) -> ModelShape {
+        ModelShape {
+            num_layers: self.num_layers,
+            hidden: self.hidden,
+            input_dim: self.input_dim,
+            seq_len: self.seq_len,
+            num_classes: self.num_classes,
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let sfield = |k: &str| -> Result<String> {
+            Ok(v.req(k).map_err(|e| anyhow!(e))?.as_str().context(format!("{k} not a string"))?.to_string())
+        };
+        let ufield = |k: &str| -> Result<usize> {
+            v.req(k).map_err(|e| anyhow!(e))?.as_usize().context(format!("{k} not a usize"))
+        };
+        let param_names: Vec<String> = v
+            .get("param_names")
+            .as_arr()
+            .context("param_names")?
+            .iter()
+            .map(|p| p.as_str().map(str::to_string).context("param name"))
+            .collect::<Result<_>>()?;
+        let param_shapes: Vec<Vec<usize>> = v
+            .get("param_shapes")
+            .as_arr()
+            .context("param_shapes")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .context("shape not arr")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self {
+            name: sfield("name")?,
+            num_layers: ufield("num_layers")?,
+            hidden: ufield("hidden")?,
+            batch: ufield("batch")?,
+            seq_len: ufield("seq_len")?,
+            input_dim: ufield("input_dim")?,
+            num_classes: ufield("num_classes")?,
+            hlo: sfield("hlo")?,
+            weights: sfield("weights")?,
+            param_names,
+            param_shapes,
+            param_count: ufield("param_count")?,
+            trained: v.get("trained").as_bool().unwrap_or(false),
+            block_h: v.get("block_h").as_usize().unwrap_or(0),
+            vmem_bytes: v.get("vmem_bytes").as_f64().unwrap_or(0.0) as u64,
+            mxu_utilization: v.get("mxu_utilization").as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenInfo {
+    pub file: String,
+    pub variant: String,
+    pub batch: usize,
+    pub labels: Vec<u32>,
+    pub predictions: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct HarTestInfo {
+    pub file: String,
+    pub n: usize,
+    pub seq_len: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub final_loss: f64,
+    pub train_accuracy: f64,
+    pub test_accuracy: f64,
+    pub param_count: usize,
+}
+
+/// `artifacts/manifest.json` — index of everything `make artifacts` built.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub default_variant: String,
+    pub variants: Vec<VariantInfo>,
+    pub golden: GoldenInfo,
+    pub har_test: HarTestInfo,
+    pub train_report: TrainReport,
+    pub hashes: HashMap<String, String>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        if root.get("format").as_str() != Some("mobirnn-artifacts") {
+            return Err(anyhow!("unexpected manifest format {:?}", root.get("format")));
+        }
+
+        let variants: Vec<VariantInfo> = root
+            .get("variants")
+            .as_arr()
+            .context("variants")?
+            .iter()
+            .map(VariantInfo::from_json)
+            .collect::<Result<_>>()?;
+
+        let g = root.req("golden").map_err(|e| anyhow!(e))?;
+        let u32s = |v: &Value| -> Vec<u32> {
+            v.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize().map(|u| u as u32))
+                .collect()
+        };
+        let golden = GoldenInfo {
+            file: g.get("file").as_str().context("golden.file")?.to_string(),
+            variant: g.get("variant").as_str().context("golden.variant")?.to_string(),
+            batch: g.get("batch").as_usize().context("golden.batch")?,
+            labels: u32s(g.get("labels")),
+            predictions: u32s(g.get("predictions")),
+        };
+
+        let h = root.req("har_test").map_err(|e| anyhow!(e))?;
+        let har_test = HarTestInfo {
+            file: h.get("file").as_str().context("har_test.file")?.to_string(),
+            n: h.get("n").as_usize().context("har_test.n")?,
+            seq_len: h.get("seq_len").as_usize().context("har_test.seq_len")?,
+            channels: h.get("channels").as_usize().context("har_test.channels")?,
+            classes: h.get("classes").as_usize().context("har_test.classes")?,
+        };
+
+        let t = root.req("train_report").map_err(|e| anyhow!(e))?;
+        let train_report = TrainReport {
+            steps: t.get("steps").as_usize().unwrap_or(0),
+            final_loss: t.get("final_loss").as_f64().unwrap_or(f64::NAN),
+            train_accuracy: t.get("train_accuracy").as_f64().unwrap_or(0.0),
+            test_accuracy: t.get("test_accuracy").as_f64().unwrap_or(0.0),
+            param_count: t.get("param_count").as_usize().unwrap_or(0),
+        };
+
+        let hashes = root
+            .get("hashes")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let man = Manifest {
+            default_variant: root
+                .get("default_variant")
+                .as_str()
+                .context("default_variant")?
+                .to_string(),
+            variants,
+            golden,
+            har_test,
+            train_report,
+            hashes,
+            dir: dir.to_path_buf(),
+        };
+
+        // Every referenced file must exist; shapes must be coherent.
+        for v in &man.variants {
+            for f in [&v.hlo, &v.weights] {
+                let p = dir.join(f);
+                if !p.exists() {
+                    return Err(anyhow!("manifest references missing file {p:?}"));
+                }
+            }
+            if v.param_names.len() != v.param_shapes.len() {
+                return Err(anyhow!("variant {}: param names/shapes mismatch", v.name));
+            }
+        }
+        Ok(man)
+    }
+
+    /// Default artifact dir: $MOBIRNN_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("MOBIRNN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))
+    }
+
+    /// Find a variant by shape and exact batch.
+    pub fn variant_for(&self, shape: ModelShape, batch: usize) -> Option<&VariantInfo> {
+        self.variants.iter().find(|v| v.shape() == shape && v.batch == batch)
+    }
+
+    /// The compiled batch sizes available for a shape, ascending.
+    pub fn batches_for(&self, shape: ModelShape) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.shape() == shape)
+            .map(|v| v.batch)
+            .collect();
+        bs.sort_unstable();
+        bs
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_shape_matches_paper() {
+        let s = ModelShape::default();
+        assert_eq!((s.num_layers, s.hidden), (2, 32));
+        assert_eq!((s.seq_len, s.input_dim, s.num_classes), (128, 9, 6));
+    }
+
+    #[test]
+    fn param_count_matches_python() {
+        // Mirrors test_model.py::test_param_count_paper_default.
+        assert_eq!(ModelShape::default().param_count(), 13894);
+        // Paper §4.3: 2l/128h has ~4x the parameters of 2l/64h.
+        let p64 = ModelShape::new(2, 64).param_count() as f64;
+        let p128 = ModelShape::new(2, 128).param_count() as f64;
+        assert!(p128 / p64 > 3.5 && p128 / p64 < 4.5);
+    }
+
+    #[test]
+    fn flops_scale_with_layers() {
+        let f1 = ModelShape::new(1, 32).flops_per_inference();
+        let f3 = ModelShape::new(3, 32).flops_per_inference();
+        assert!(f3 > 2 * f1);
+    }
+
+    #[test]
+    fn weight_bytes_quadratic_in_hidden() {
+        let b32 = ModelShape::new(2, 32).weight_bytes_per_step() as f64;
+        let b128 = ModelShape::new(2, 128).weight_bytes_per_step() as f64;
+        assert!(b128 / b32 > 8.0, "expected superlinear growth: {}", b128 / b32);
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(ModelShape::new(2, 32).variant_name(4), "lstm_L2_H32_B4");
+    }
+
+    #[test]
+    fn manifest_loads_real_artifacts_if_present() {
+        // Integration-ish: when artifacts/ exists (after `make artifacts`),
+        // the manifest must parse and self-validate.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(!man.variants.is_empty());
+        let def = man.variant(&man.default_variant).unwrap();
+        assert_eq!(def.shape(), ModelShape::default());
+        assert!(!man.batches_for(ModelShape::default()).is_empty());
+        assert_eq!(man.golden.labels.len(), man.golden.batch);
+        assert!(man.train_report.test_accuracy > 0.3);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_files() {
+        let tmp = std::env::temp_dir().join(format!("mobirnn_man_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let manifest = r#"{
+            "format": "mobirnn-artifacts", "version": 1,
+            "default_variant": "v",
+            "variants": [{"name":"v","num_layers":1,"hidden":8,"batch":1,
+              "seq_len":4,"input_dim":2,"num_classes":3,
+              "hlo":"missing.hlo.txt","weights":"missing.mrnw",
+              "param_names":["a"],"param_shapes":[[1]],"param_count":1}],
+            "golden": {"file":"g","variant":"v","batch":1,"labels":[0],"predictions":[0]},
+            "har_test": {"file":"h","n":1,"seq_len":4,"channels":2,"classes":3},
+            "train_report": {"steps":1,"final_loss":0.1,"train_accuracy":1,"test_accuracy":1,"param_count":1}
+        }"#;
+        std::fs::write(tmp.join("manifest.json"), manifest).unwrap();
+        let err = Manifest::load(&tmp).unwrap_err().to_string();
+        assert!(err.contains("missing file"), "{err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_format() {
+        let tmp = std::env::temp_dir().join(format!("mobirnn_man2_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), r#"{"format": "other"}"#).unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,252 @@
+//! Dynamic batcher: group pending requests onto AOT-compiled batch sizes.
+//!
+//! AOT artifacts have static shapes, so the batcher can only dispatch the
+//! batch sizes that were compiled (manifest `batches_for`, typically
+//! {1, 2, 4, 8}). Policy:
+//!
+//! - dispatch when `pending ≥ max compiled batch` (take the max), or
+//! - when the oldest request has waited `max_wait`, take the smallest
+//!   compiled size ≥ pending and PAD with zero windows (padded outputs
+//!   are discarded; padded slots are accounted in metrics).
+//!
+//! [`plan_batch`] is pure and exhaustively property-tested; the
+//! [`BatchCollector`] adds the deadline mechanics.
+
+use std::time::{Duration, Instant};
+
+/// The batching decision for `pending` requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// How many real requests to take.
+    pub take: usize,
+    /// Compiled batch size to run (take ≤ padded_to).
+    pub padded_to: usize,
+}
+
+impl BatchPlan {
+    pub fn padding(&self) -> usize {
+        self.padded_to - self.take
+    }
+}
+
+/// Choose (take, padded_to) for `pending` requests given the sorted list
+/// of compiled batch sizes. Never returns take = 0 for pending > 0.
+pub fn plan_batch(pending: usize, compiled: &[usize]) -> Option<BatchPlan> {
+    if pending == 0 || compiled.is_empty() {
+        return None;
+    }
+    debug_assert!(compiled.windows(2).all(|w| w[0] < w[1]), "compiled sizes must be sorted");
+    let max = *compiled.last().unwrap();
+    if pending >= max {
+        return Some(BatchPlan { take: max, padded_to: max });
+    }
+    // Smallest compiled size that fits everything pending.
+    let fit = *compiled.iter().find(|&&b| b >= pending).unwrap_or(&max);
+    Some(BatchPlan { take: pending.min(fit), padded_to: fit })
+}
+
+/// Deadline-driven collector around [`plan_batch`].
+#[derive(Debug)]
+pub struct BatchCollector {
+    compiled: Vec<usize>,
+    max_wait: Duration,
+    oldest: Option<Instant>,
+    pending: usize,
+}
+
+impl BatchCollector {
+    pub fn new(mut compiled: Vec<usize>, max_wait: Duration) -> Self {
+        compiled.sort_unstable();
+        compiled.dedup();
+        assert!(!compiled.is_empty(), "need at least one compiled batch size");
+        Self { compiled, max_wait, oldest: None, pending: 0 }
+    }
+
+    pub fn compiled_sizes(&self) -> &[usize] {
+        &self.compiled
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// A request arrived at `now`.
+    pub fn push(&mut self, now: Instant) {
+        if self.pending == 0 {
+            self.oldest = Some(now);
+        }
+        self.pending += 1;
+    }
+
+    /// Should we dispatch at `now`? Returns the plan and resets state for
+    /// the taken requests.
+    pub fn poll(&mut self, now: Instant) -> Option<BatchPlan> {
+        if self.pending == 0 {
+            return None;
+        }
+        let max = *self.compiled.last().unwrap();
+        let deadline_hit = self
+            .oldest
+            .map(|t| now.duration_since(t) >= self.max_wait)
+            .unwrap_or(false);
+        if self.pending >= max || deadline_hit {
+            let plan = plan_batch(self.pending, &self.compiled)?;
+            self.pending -= plan.take;
+            self.oldest = if self.pending > 0 { Some(now) } else { None };
+            return Some(plan);
+        }
+        None
+    }
+
+    /// Time until the current deadline fires (for recv_timeout), or None
+    /// when idle.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t| {
+            let elapsed = now.duration_since(t);
+            self.max_wait.checked_sub(elapsed).unwrap_or(Duration::ZERO)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const COMPILED: &[usize] = &[1, 2, 4, 8];
+
+    #[test]
+    fn empty_and_zero() {
+        assert_eq!(plan_batch(0, COMPILED), None);
+        assert_eq!(plan_batch(5, &[]), None);
+    }
+
+    #[test]
+    fn exact_fits() {
+        for &b in COMPILED {
+            let p = plan_batch(b, COMPILED).unwrap();
+            assert_eq!((p.take, p.padded_to, p.padding()), (b, b, 0));
+        }
+    }
+
+    #[test]
+    fn overflow_takes_max() {
+        let p = plan_batch(23, COMPILED).unwrap();
+        assert_eq!((p.take, p.padded_to), (8, 8));
+    }
+
+    #[test]
+    fn pads_up_to_next_size() {
+        let p = plan_batch(3, COMPILED).unwrap();
+        assert_eq!((p.take, p.padded_to, p.padding()), (3, 4, 1));
+        let p = plan_batch(5, COMPILED).unwrap();
+        assert_eq!((p.take, p.padded_to, p.padding()), (5, 8, 3));
+    }
+
+    #[test]
+    fn property_invariants() {
+        // Hand-rolled property test over random compiled sets + pendings:
+        //  (1) take ≤ pending, (2) take ≤ padded_to, (3) padded_to is a
+        //  compiled size, (4) padding only when pending < padded_to,
+        //  (5) take > 0.
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let mut sizes: Vec<usize> =
+                (0..1 + rng.below(5) as usize).map(|_| 1 + rng.below(32) as usize).collect();
+            sizes.sort_unstable();
+            sizes.dedup();
+            let pending = 1 + rng.below(64) as usize;
+            let p = plan_batch(pending, &sizes).unwrap();
+            assert!(p.take >= 1);
+            assert!(p.take <= pending);
+            assert!(p.take <= p.padded_to);
+            assert!(sizes.contains(&p.padded_to), "{p:?} sizes {sizes:?}");
+            if p.padding() > 0 {
+                assert!(pending < p.padded_to);
+            }
+        }
+    }
+
+    #[test]
+    fn property_drain_terminates_and_conserves() {
+        // Repeatedly planning over a queue must consume every request
+        // exactly once and terminate.
+        let mut rng = Rng::new(8);
+        for _ in 0..500 {
+            let mut sizes: Vec<usize> =
+                (0..1 + rng.below(4) as usize).map(|_| 1 + rng.below(16) as usize).collect();
+            sizes.sort_unstable();
+            sizes.dedup();
+            let mut pending = rng.below(100) as usize;
+            let total = pending;
+            let mut served = 0;
+            let mut iters = 0;
+            while pending > 0 {
+                let p = plan_batch(pending, &sizes).unwrap();
+                pending -= p.take;
+                served += p.take;
+                iters += 1;
+                assert!(iters <= total + 1, "non-terminating drain");
+            }
+            assert_eq!(served, total);
+        }
+    }
+
+    #[test]
+    fn collector_dispatches_on_full_batch() {
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![1, 2, 4, 8], Duration::from_millis(5));
+        for _ in 0..8 {
+            c.push(t0);
+        }
+        let p = c.poll(t0).unwrap();
+        assert_eq!((p.take, p.padded_to), (8, 8));
+        assert_eq!(c.pending(), 0);
+        assert!(c.poll(t0).is_none());
+    }
+
+    #[test]
+    fn collector_waits_then_fires_deadline() {
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![1, 2, 4, 8], Duration::from_millis(5));
+        c.push(t0);
+        c.push(t0);
+        c.push(t0);
+        assert!(c.poll(t0).is_none(), "below max batch, deadline not hit");
+        let later = t0 + Duration::from_millis(6);
+        let p = c.poll(later).unwrap();
+        assert_eq!((p.take, p.padded_to), (3, 4));
+    }
+
+    #[test]
+    fn collector_deadline_timer() {
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![4], Duration::from_millis(10));
+        assert!(c.time_to_deadline(t0).is_none());
+        c.push(t0);
+        let ttd = c.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(ttd <= Duration::from_millis(6));
+        let ttd2 = c.time_to_deadline(t0 + Duration::from_millis(60)).unwrap();
+        assert_eq!(ttd2, Duration::ZERO);
+    }
+
+    #[test]
+    fn collector_leftovers_rearm() {
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![1, 2], Duration::from_millis(5));
+        for _ in 0..5 {
+            c.push(t0);
+        }
+        let p = c.poll(t0).unwrap();
+        assert_eq!(p.take, 2);
+        assert_eq!(c.pending(), 3);
+        // Leftovers keep a deadline armed.
+        assert!(c.time_to_deadline(t0).is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn collector_rejects_empty_sizes() {
+        BatchCollector::new(vec![], Duration::from_millis(1));
+    }
+}

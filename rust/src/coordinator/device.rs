@@ -1,0 +1,186 @@
+//! Shared simulated-device state.
+//!
+//! The coordinator serves on this host, but latency accounting happens
+//! against the simulated phone (DESIGN.md §2). `DeviceState` is the
+//! bridge: it holds the device profile, the current background GPU/CPU
+//! utilizations (settable at runtime — the server's `set_load` command,
+//! the Fig 7 sweeps) and a virtual GPU-queue horizon so concurrent
+//! batches queue behind each other like they would on one mobile GPU.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::simulator::DeviceProfile;
+
+/// Thread-safe simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceState {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    profile: DeviceProfile,
+    /// Background GPU utilization ×1e6 (atomic fixed-point).
+    gpu_util_micros: AtomicU64,
+    /// Background CPU utilization ×1e6.
+    cpu_util_micros: AtomicU64,
+    /// Virtual time (ns) until which the simulated GPU queue is busy.
+    gpu_busy_until_ns: AtomicU64,
+    /// Monotonic virtual clock origin for the queue.
+    virtual_now_ns: AtomicU64,
+}
+
+impl DeviceState {
+    pub fn new(profile: DeviceProfile) -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                profile,
+                gpu_util_micros: AtomicU64::new(0),
+                cpu_util_micros: AtomicU64::new(0),
+                gpu_busy_until_ns: AtomicU64::new(0),
+                virtual_now_ns: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.inner.profile
+    }
+
+    pub fn set_gpu_util(&self, util: f64) {
+        let v = (util.clamp(0.0, 1.0) * 1e6) as u64;
+        self.inner.gpu_util_micros.store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_cpu_util(&self, util: f64) {
+        let v = (util.clamp(0.0, 1.0) * 1e6) as u64;
+        self.inner.cpu_util_micros.store(v, Ordering::Relaxed);
+    }
+
+    pub fn gpu_util(&self) -> f64 {
+        self.inner.gpu_util_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn cpu_util(&self) -> f64 {
+        self.inner.cpu_util_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Advance the virtual clock by real elapsed time (called by the
+    /// router between batches so the GPU queue drains realistically).
+    pub fn advance_virtual(&self, dt_ns: u64) {
+        self.inner.virtual_now_ns.fetch_add(dt_ns, Ordering::Relaxed);
+    }
+
+    /// Enqueue `work_ns` of simulated GPU work; returns the *total*
+    /// latency including time queued behind earlier work — the mobile
+    /// GPU is a single in-order queue.
+    pub fn enqueue_gpu(&self, work_ns: u64) -> u64 {
+        let now = self.inner.virtual_now_ns.load(Ordering::Relaxed);
+        // CAS loop: start at max(now, busy_until), finish at start + work.
+        loop {
+            let busy = self.inner.gpu_busy_until_ns.load(Ordering::Relaxed);
+            let start = busy.max(now);
+            let finish = start + work_ns;
+            if self
+                .inner
+                .gpu_busy_until_ns
+                .compare_exchange(busy, finish, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return finish - now;
+            }
+        }
+    }
+
+    /// Current queue depth in ns (0 when idle).
+    pub fn gpu_queue_ns(&self) -> u64 {
+        let now = self.inner.virtual_now_ns.load(Ordering::Relaxed);
+        self.inner.gpu_busy_until_ns.load(Ordering::Relaxed).saturating_sub(now)
+    }
+
+    /// Effective GPU utilization the policy sees: background render load
+    /// plus pressure from our own queued work (queue > one frame counts
+    /// as busy time).
+    pub fn effective_gpu_util(&self) -> f64 {
+        let frame = self.inner.profile.frame_period_ns() as f64;
+        let queue_pressure = (self.gpu_queue_ns() as f64 / (4.0 * frame)).min(0.5);
+        (self.gpu_util() + queue_pressure).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> DeviceState {
+        DeviceState::new(DeviceProfile::nexus5())
+    }
+
+    #[test]
+    fn util_set_get_clamped() {
+        let d = state();
+        d.set_gpu_util(0.42);
+        assert!((d.gpu_util() - 0.42).abs() < 1e-6);
+        d.set_gpu_util(7.0);
+        assert_eq!(d.gpu_util(), 1.0);
+        d.set_cpu_util(-1.0);
+        assert_eq!(d.cpu_util(), 0.0);
+    }
+
+    #[test]
+    fn gpu_queue_serializes_work() {
+        let d = state();
+        let l1 = d.enqueue_gpu(1_000_000);
+        let l2 = d.enqueue_gpu(1_000_000);
+        assert_eq!(l1, 1_000_000);
+        assert_eq!(l2, 2_000_000, "second batch queues behind the first");
+        assert_eq!(d.gpu_queue_ns(), 2_000_000);
+    }
+
+    #[test]
+    fn queue_drains_with_virtual_time() {
+        let d = state();
+        d.enqueue_gpu(1_000_000);
+        d.advance_virtual(600_000);
+        assert_eq!(d.gpu_queue_ns(), 400_000);
+        d.advance_virtual(600_000);
+        assert_eq!(d.gpu_queue_ns(), 0);
+        // After draining, new work starts fresh.
+        let l = d.enqueue_gpu(500_000);
+        assert_eq!(l, 500_000);
+    }
+
+    #[test]
+    fn effective_util_includes_queue_pressure() {
+        let d = state();
+        d.set_gpu_util(0.3);
+        let base = d.effective_gpu_util();
+        assert!((base - 0.3).abs() < 1e-6);
+        d.enqueue_gpu(200_000_000); // deep queue
+        assert!(d.effective_gpu_util() > base + 0.4);
+        assert!(d.effective_gpu_util() <= 1.0);
+    }
+
+    #[test]
+    fn concurrent_enqueues_never_overlap() {
+        use std::sync::Arc;
+        let d = state();
+        let total: u64 = 16 * 250_000;
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let d = d.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..4 {
+                    d.enqueue_gpu(250_000);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Sum of all work is reflected exactly once in the horizon.
+        assert_eq!(d.gpu_queue_ns(), total);
+        let _ = Arc::strong_count(&d.inner);
+    }
+}

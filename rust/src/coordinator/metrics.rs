@@ -1,0 +1,217 @@
+//! Serving metrics: counters + log-bucketed latency histograms.
+//!
+//! Lock-free on the hot path (atomics only); snapshots serialize to JSON
+//! for the server's `stats` command and the figure harnesses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::json::{obj, Value};
+
+/// Log₂-bucketed histogram over nanoseconds: bucket i covers
+/// `[2^i, 2^(i+1))`, clamped to 64 buckets (≈ up to 584 years).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, ns: u64) {
+        let idx = (64 - ns.max(1).leading_zeros() as usize - 1).min(63);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound of the
+    /// bucket containing the p-th sample).
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        self.max_ns()
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("count", Value::from(self.count())),
+            ("mean_us", Value::Num(self.mean_ns() / 1e3)),
+            ("p50_us", Value::Num(self.percentile_ns(50.0) as f64 / 1e3)),
+            ("p95_us", Value::Num(self.percentile_ns(95.0) as f64 / 1e3)),
+            ("p99_us", Value::Num(self.percentile_ns(99.0) as f64 / 1e3)),
+            ("max_us", Value::Num(self.max_ns() as f64 / 1e3)),
+        ])
+    }
+}
+
+/// Top-level serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// End-to-end wall latency (enqueue → reply) on this host.
+    pub wall_latency: Histogram,
+    /// Simulated on-device latency (the paper's metric).
+    pub sim_latency: Histogram,
+    /// XLA/native compute time only.
+    pub compute_latency: Histogram,
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub gpu_dispatches: AtomicU64,
+    pub cpu_dispatches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { wall_latency: Histogram::new(), sim_latency: Histogram::new(), compute_latency: Histogram::new(), ..Default::default() }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("requests", Value::from(self.requests.load(Ordering::Relaxed))),
+            ("batches", Value::from(self.batches.load(Ordering::Relaxed))),
+            ("mean_batch_size", Value::Num(self.mean_batch_size())),
+            ("gpu_dispatches", Value::from(self.gpu_dispatches.load(Ordering::Relaxed))),
+            ("cpu_dispatches", Value::from(self.cpu_dispatches.load(Ordering::Relaxed))),
+            ("padded_slots", Value::from(self.padded_slots.load(Ordering::Relaxed))),
+            ("errors", Value::from(self.errors.load(Ordering::Relaxed))),
+            ("wall_latency", self.wall_latency.to_json()),
+            ("sim_latency", self.sim_latency.to_json()),
+            ("compute_latency", self.compute_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic() {
+        let h = Histogram::new();
+        for ns in [100, 200, 400, 800, 100_000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean_ns(), (100.0 + 200.0 + 400.0 + 800.0 + 100_000.0) / 5.0);
+        assert_eq!(h.max_ns(), 100_000);
+    }
+
+    #[test]
+    fn percentiles_monotone_and_bounding() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000);
+        }
+        let p50 = h.percentile_ns(50.0);
+        let p95 = h.percentile_ns(95.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 of 1..=1000 µs is ~500µs; bucket upper bound ≤ 1.05ms... the
+        // log2 bucket containing 500_000 is [2^18, 2^19) -> upper 524288.
+        assert!(p50 >= 500_000 && p50 <= 1_048_576, "{p50}");
+    }
+
+    #[test]
+    fn zero_and_extreme_values_safe() {
+        let h = Histogram::new();
+        h.record(0); // clamped to bucket 0
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_ns(100.0) > 0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_ns(99.0), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let m = Metrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.batches.fetch_add(4, Ordering::Relaxed);
+        m.wall_latency.record(5_000);
+        let j = m.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(10));
+        assert_eq!(j.get("mean_batch_size").as_f64(), Some(2.5));
+        assert_eq!(j.get("wall_latency").get("count").as_usize(), Some(1));
+        // Serializes without panic and round-trips.
+        let text = j.to_json();
+        assert!(crate::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.record((t * 1000 + i) as u64 + 1);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordinator — the serving control plane (the paper's system
+//! contribution, recast as a first-class scheduler).
+//!
+//! Request path (Python never on it):
+//!
+//! ```text
+//! client ──TCP──▶ server ──▶ Router queue ──▶ Batcher (pad to compiled B)
+//!        ──▶ OffloadPolicy (reads DeviceState utilization, §4.5)
+//!        ──▶ { PJRT runtime (GPU target) | native engine (CPU target) }
+//!        ──▶ simulator charges mobile latency ──▶ reply + Metrics
+//! ```
+//!
+//! - [`batcher`]  — dynamic batching onto the AOT-compiled batch sizes
+//! - [`policy`]   — where to run: static, threshold, or cost-model driven
+//!   (the paper's conclusion that offloading must be utilization-aware)
+//! - [`device`]   — shared simulated-device state (background load knobs)
+//! - [`router`]   — the serving loop tying it all together
+//! - [`metrics`]  — latency histograms + counters
+
+pub mod batcher;
+pub mod device;
+pub mod metrics;
+pub mod policy;
+pub mod router;
+
+pub use batcher::{plan_batch, BatchCollector, BatchPlan};
+pub use device::DeviceState;
+pub use metrics::{Histogram, Metrics};
+pub use policy::{DecisionCache, OffloadPolicy};
+pub use router::{Router, RouterConfig, ServeReply, ServeRequest};

@@ -1,0 +1,278 @@
+//! Offload policy: where should this batch run?
+//!
+//! The paper's conclusion (§4.5): "MobiRNN should take into account GPU
+//! utilization before offloading tasks to the GPU." Three policies:
+//!
+//! - [`OffloadPolicy::Static`] — always the given target (the paper's
+//!   fixed GPU/CPU bars; baseline for the policy ablation).
+//! - [`OffloadPolicy::Threshold`] — GPU below a utilization cutoff,
+//!   multi-threaded CPU above it (the simple reading of §4.5).
+//! - [`OffloadPolicy::CostModel`] — evaluate the calibrated simulator for
+//!   every candidate target under current conditions and take the argmin;
+//!   this is the "model-driven scheduler" the paper's future work implies.
+
+use crate::config::ModelShape;
+use crate::simulator::{simulate_inference, DeviceProfile, Factorization, Target};
+
+/// Utilization snapshot the policy decides on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadSnapshot {
+    pub gpu_util: f64,
+    pub cpu_util: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OffloadPolicy {
+    /// Always run on the given target.
+    Static(Target),
+    /// GPU while `gpu_util < gpu_threshold`, else multithreaded CPU.
+    Threshold { gpu_threshold: f64 },
+    /// Argmin of simulated latency over candidate targets.
+    CostModel,
+}
+
+impl OffloadPolicy {
+    /// Candidate targets the cost model ranks.
+    pub fn candidates(profile: &DeviceProfile) -> [Target; 3] {
+        [
+            Target::Gpu(Factorization::Coarse),
+            Target::CpuMulti(profile.cpu_cores),
+            Target::CpuSingle,
+        ]
+    }
+
+    /// Decide the execution target for a batch of `batch` inferences.
+    pub fn decide(
+        &self,
+        profile: &DeviceProfile,
+        shape: ModelShape,
+        batch: usize,
+        load: LoadSnapshot,
+    ) -> Target {
+        match *self {
+            OffloadPolicy::Static(t) => t,
+            OffloadPolicy::Threshold { gpu_threshold } => {
+                if load.gpu_util < gpu_threshold {
+                    Target::Gpu(Factorization::Coarse)
+                } else {
+                    Target::CpuMulti(profile.cpu_cores)
+                }
+            }
+            OffloadPolicy::CostModel => {
+                let mut best = Target::CpuSingle;
+                let mut best_ns = u64::MAX;
+                for t in Self::candidates(profile) {
+                    let util = match t {
+                        Target::Gpu(_) => load.gpu_util,
+                        _ => load.cpu_util,
+                    };
+                    let ns = simulate_inference(profile, shape, batch, t, util);
+                    if ns < best_ns {
+                        best_ns = ns;
+                        best = t;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Parse from CLI string: "gpu", "cpu", "cpu-multi", "threshold:0.5",
+    /// "cost-model", "fine" (the CUDA-style baseline).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gpu" | "coarse" => Some(Self::Static(Target::Gpu(Factorization::Coarse))),
+            "fine" | "cuda" => Some(Self::Static(Target::Gpu(Factorization::Fine))),
+            "cpu" | "cpu-single" => Some(Self::Static(Target::CpuSingle)),
+            "cpu-multi" | "multithread" => Some(Self::Static(Target::CpuMulti(4))),
+            "cost-model" | "auto" => Some(Self::CostModel),
+            _ => s
+                .strip_prefix("threshold:")
+                .and_then(|v| v.parse().ok())
+                .map(|gpu_threshold| Self::Threshold { gpu_threshold }),
+        }
+    }
+}
+
+/// Memoizing wrapper around [`OffloadPolicy::decide`].
+///
+/// The cost model runs three full device simulations per decision
+/// (~50–80 µs) — measurable against sub-millisecond batches. Decisions
+/// only depend on (batch, load), and load is quantized to 2% buckets
+/// (well inside the simulator's calibration error), so a small hash map
+/// turns the steady-state decision into a ~100 ns lookup
+/// (EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct DecisionCache {
+    map: std::collections::HashMap<(usize, u16, u16), Target>,
+}
+
+impl DecisionCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quantize a utilization to a 2%-wide bucket id.
+    fn bucket(util: f64) -> u16 {
+        (util.clamp(0.0, 1.0) * 50.0).round() as u16
+    }
+
+    pub fn decide(
+        &mut self,
+        policy: &OffloadPolicy,
+        profile: &DeviceProfile,
+        shape: ModelShape,
+        batch: usize,
+        load: LoadSnapshot,
+    ) -> Target {
+        match policy {
+            // Static and threshold policies are already nanosecond-cheap.
+            OffloadPolicy::Static(_) | OffloadPolicy::Threshold { .. } => {
+                policy.decide(profile, shape, batch, load)
+            }
+            OffloadPolicy::CostModel => {
+                let key = (batch, Self::bucket(load.gpu_util), Self::bucket(load.cpu_util));
+                if let Some(&t) = self.map.get(&key) {
+                    return t;
+                }
+                // Evaluate at the bucket CENTER so every load in the
+                // bucket gets the same (representative) answer.
+                let centered = LoadSnapshot {
+                    gpu_util: key.1 as f64 / 50.0,
+                    cpu_util: key.2 as f64 / 50.0,
+                };
+                let t = policy.decide(profile, shape, batch, centered);
+                self.map.insert(key, t);
+                t
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Human-readable target label (wire protocol + figures).
+pub fn target_label(t: Target) -> &'static str {
+    match t {
+        Target::Gpu(Factorization::Coarse) => "gpu",
+        Target::Gpu(Factorization::Fine) => "gpu-fine",
+        Target::CpuSingle => "cpu",
+        Target::CpuMulti(_) => "cpu-multi",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n5() -> DeviceProfile {
+        DeviceProfile::nexus5()
+    }
+
+    #[test]
+    fn static_policy_is_constant() {
+        let p = OffloadPolicy::Static(Target::CpuSingle);
+        for util in [0.0, 0.5, 0.9] {
+            let t = p.decide(&n5(), ModelShape::default(), 1, LoadSnapshot { gpu_util: util, cpu_util: 0.0 });
+            assert_eq!(t, Target::CpuSingle);
+        }
+    }
+
+    #[test]
+    fn threshold_switches_at_cutoff() {
+        let p = OffloadPolicy::Threshold { gpu_threshold: 0.6 };
+        let lo = p.decide(&n5(), ModelShape::default(), 1, LoadSnapshot { gpu_util: 0.3, cpu_util: 0.0 });
+        let hi = p.decide(&n5(), ModelShape::default(), 1, LoadSnapshot { gpu_util: 0.8, cpu_util: 0.0 });
+        assert_eq!(lo, Target::Gpu(Factorization::Coarse));
+        assert_eq!(hi, Target::CpuMulti(4));
+    }
+
+    #[test]
+    fn cost_model_prefers_gpu_idle_cpu_loaded() {
+        // The paper's Fig 7 behaviour, as a scheduler decision.
+        let p = OffloadPolicy::CostModel;
+        let shape = ModelShape::default();
+        let idle = p.decide(&n5(), shape, 1, LoadSnapshot::default());
+        assert_eq!(idle, Target::Gpu(Factorization::Coarse), "idle device: GPU wins (Fig 4)");
+        let loaded = p.decide(&n5(), shape, 1, LoadSnapshot { gpu_util: 0.85, cpu_util: 0.85 });
+        assert!(
+            matches!(loaded, Target::CpuSingle | Target::CpuMulti(_)),
+            "high load: CPU wins (Fig 7), got {loaded:?}"
+        );
+    }
+
+    #[test]
+    fn cost_model_monotone_region_exists() {
+        // Somewhere between idle and saturated the decision flips exactly once
+        // (no flapping) when CPU stays idle.
+        let p = OffloadPolicy::CostModel;
+        let shape = ModelShape::default();
+        let mut last_gpu = true;
+        let mut flips = 0;
+        for i in 0..=20 {
+            let u = i as f64 / 20.0;
+            let t = p.decide(&n5(), shape, 1, LoadSnapshot { gpu_util: u, cpu_util: u });
+            let is_gpu = matches!(t, Target::Gpu(_));
+            if is_gpu != last_gpu {
+                flips += 1;
+                last_gpu = is_gpu;
+            }
+        }
+        assert!(flips <= 2, "decision flapped {flips} times");
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(OffloadPolicy::parse("gpu"), Some(OffloadPolicy::Static(Target::Gpu(Factorization::Coarse))));
+        assert_eq!(OffloadPolicy::parse("fine"), Some(OffloadPolicy::Static(Target::Gpu(Factorization::Fine))));
+        assert_eq!(OffloadPolicy::parse("cpu"), Some(OffloadPolicy::Static(Target::CpuSingle)));
+        assert_eq!(OffloadPolicy::parse("cost-model"), Some(OffloadPolicy::CostModel));
+        assert_eq!(OffloadPolicy::parse("threshold:0.5"), Some(OffloadPolicy::Threshold { gpu_threshold: 0.5 }));
+        assert_eq!(OffloadPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn cache_matches_uncached_decisions() {
+        let mut cache = DecisionCache::new();
+        let p = OffloadPolicy::CostModel;
+        let shape = ModelShape::default();
+        for i in 0..=50 {
+            // Bucket centers: cached and uncached must agree exactly.
+            let u = i as f64 / 50.0;
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u };
+            let direct = p.decide(&n5(), shape, 1, load);
+            let cached = cache.decide(&p, &n5(), shape, 1, load);
+            assert_eq!(direct, cached, "util {u}");
+        }
+        assert!(cache.len() <= 51);
+        // Second pass is pure lookup and still agrees.
+        let before = cache.len();
+        for i in 0..=50 {
+            let u = i as f64 / 50.0;
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u };
+            let _ = cache.decide(&p, &n5(), shape, 1, load);
+        }
+        assert_eq!(cache.len(), before);
+    }
+
+    #[test]
+    fn cache_passthrough_for_static() {
+        let mut cache = DecisionCache::new();
+        let p = OffloadPolicy::Static(Target::CpuSingle);
+        let t = cache.decide(&p, &n5(), ModelShape::default(), 1, LoadSnapshot::default());
+        assert_eq!(t, Target::CpuSingle);
+        assert!(cache.is_empty(), "static policies must not populate the cache");
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(target_label(Target::Gpu(Factorization::Coarse)), "gpu");
+        assert_eq!(target_label(Target::CpuMulti(4)), "cpu-multi");
+    }
+}

@@ -1,0 +1,439 @@
+//! The serving loop: queue → batch → offload decision → execute → reply.
+//!
+//! Numerics are always REAL — the PJRT artifact (GPU target) or the
+//! native Rust engine (CPU targets); only the *latency accounting* runs
+//! through the calibrated device simulator (we do not own a Nexus 5).
+//! Both numeric paths are pinned to the same trained weights and
+//! golden-tested against the JAX oracle, so the offload decision never
+//! changes the answer, only the cost — exactly the paper's setting.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Manifest, ModelShape};
+use crate::coordinator::batcher::BatchCollector;
+use crate::coordinator::device::DeviceState;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::{target_label, DecisionCache, LoadSnapshot, OffloadPolicy};
+use crate::har::CLASS_NAMES;
+use crate::lstm::{LstmModel, ThreadedLstm};
+use crate::runtime::Runtime;
+use crate::simulator::{simulate_inference, Target};
+use crate::tensor::Tensor;
+
+/// One classify request.
+pub struct ServeRequest {
+    /// Flat `[seq_len * input_dim]` window.
+    pub window: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<ServeReply>,
+}
+
+/// The answer sent back to the client.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    pub class: usize,
+    pub label: String,
+    pub logits: Vec<f32>,
+    /// Wall-clock latency on this host (enqueue → reply), ns.
+    pub wall_ns: u64,
+    /// Simulated on-device latency (the paper's metric), ns.
+    pub sim_ns: u64,
+    pub target: &'static str,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub shape: ModelShape,
+    pub policy: OffloadPolicy,
+    /// Batching deadline: how long the oldest request may wait.
+    pub max_wait: Duration,
+    /// Threads for the native multi-thread CPU path.
+    pub cpu_threads: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            shape: ModelShape::default(),
+            policy: OffloadPolicy::CostModel,
+            max_wait: Duration::from_millis(2),
+            cpu_threads: 4,
+        }
+    }
+}
+
+/// Handle to the router thread.
+#[derive(Clone)]
+pub struct Router {
+    tx: mpsc::Sender<ServeRequest>,
+    pub metrics: Arc<Metrics>,
+    pub device: DeviceState,
+    cfg: RouterConfig,
+    joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Router {
+    /// Start the router over a PJRT runtime + native engine.
+    pub fn start(
+        manifest: &Manifest,
+        runtime: Runtime,
+        device: DeviceState,
+        cfg: RouterConfig,
+    ) -> Result<Self> {
+        let batches = manifest.batches_for(cfg.shape);
+        if batches.is_empty() {
+            return Err(anyhow!(
+                "no compiled variants for shape {:?}; run `make artifacts`",
+                cfg.shape
+            ));
+        }
+        // Native engine shares the artifact weights with the PJRT path.
+        let weights_file = manifest
+            .variant_for(cfg.shape, batches[0])
+            .context("variant for smallest batch")?
+            .weights
+            .clone();
+        let wf = crate::lstm::WeightFile::load(manifest.path(&weights_file))?;
+        let native = Arc::new(LstmModel::from_weight_file(cfg.shape, &wf)?);
+        let pool = ThreadedLstm::new(Arc::clone(&native), cfg.cpu_threads);
+
+        // Pre-compile every batch variant so serving never hits XLA compile.
+        for &b in &batches {
+            let name = cfg.shape.variant_name(b);
+            runtime.preload(&name)?;
+        }
+
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<ServeRequest>();
+        let worker = Worker {
+            rx,
+            collector: BatchCollector::new(batches, cfg.max_wait),
+            queue: VecDeque::new(),
+            runtime,
+            native,
+            pool,
+            device: device.clone(),
+            metrics: Arc::clone(&metrics),
+            cfg: cfg.clone(),
+            decisions: DecisionCache::new(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("mobirnn-router".into())
+            .spawn(move || worker.run())
+            .context("spawning router")?;
+        Ok(Self {
+            tx,
+            metrics,
+            device,
+            cfg,
+            joiner: Arc::new(Joiner { handle: Mutex::new(Some(handle)) }),
+        })
+    }
+
+    /// Submit a window; returns the reply receiver.
+    pub fn submit(&self, window: Vec<f32>) -> Result<mpsc::Receiver<ServeReply>> {
+        let expect = self.cfg.shape.seq_len * self.cfg.shape.input_dim;
+        if window.len() != expect {
+            return Err(anyhow!("window has {} values, expected {expect}", window.len()));
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(ServeRequest { window, enqueued: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow!("router gone"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking classify (submit + wait).
+    pub fn classify(&self, window: Vec<f32>) -> Result<ServeReply> {
+        self.submit(window)?.recv().context("router dropped reply")
+    }
+
+    pub fn shape(&self) -> ModelShape {
+        self.cfg.shape
+    }
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        // Router thread exits when the last sender drops; just join.
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Worker {
+    rx: mpsc::Receiver<ServeRequest>,
+    collector: BatchCollector,
+    queue: VecDeque<ServeRequest>,
+    runtime: Runtime,
+    native: Arc<LstmModel>,
+    pool: ThreadedLstm,
+    device: DeviceState,
+    metrics: Arc<Metrics>,
+    cfg: RouterConfig,
+    decisions: DecisionCache,
+}
+
+impl Worker {
+    fn run(mut self) {
+        let mut last_tick = Instant::now();
+        loop {
+            // Virtual device time advances with real time (queue drain).
+            let now = Instant::now();
+            self.device.advance_virtual(now.duration_since(last_tick).as_nanos() as u64);
+            last_tick = now;
+
+            // Wait for work or the batching deadline.
+            let timeout = self
+                .collector
+                .time_to_deadline(now)
+                .unwrap_or(Duration::from_millis(50));
+            match self.rx.recv_timeout(timeout) {
+                Ok(req) => {
+                    self.collector.push(req.enqueued);
+                    self.queue.push_back(req);
+                    // Opportunistically drain whatever is already queued.
+                    while let Ok(req) = self.rx.try_recv() {
+                        self.collector.push(req.enqueued);
+                        self.queue.push_back(req);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Serve the tail (poll "in the future" so every
+                    // deadline fires), then exit.
+                    while self.collector.pending() > 0 {
+                        self.dispatch_once(Instant::now() + 2 * self.cfg.max_wait);
+                    }
+                    return;
+                }
+            }
+            self.dispatch_once(Instant::now());
+        }
+    }
+
+    fn dispatch_once(&mut self, now: Instant) {
+        let Some(plan) = self.collector.poll(now) else { return };
+
+        let reqs: Vec<ServeRequest> =
+            (0..plan.take).filter_map(|_| self.queue.pop_front()).collect();
+        if reqs.is_empty() {
+            return;
+        }
+        let shape = self.cfg.shape;
+        let window_len = shape.seq_len * shape.input_dim;
+
+        // Build the padded [B, T, D] tensor.
+        let mut data = Vec::with_capacity(plan.padded_to * window_len);
+        for r in &reqs {
+            data.extend_from_slice(&r.window);
+        }
+        data.resize(plan.padded_to * window_len, 0.0);
+        let x = Tensor::new(vec![plan.padded_to, shape.seq_len, shape.input_dim], data);
+
+        // Offload decision on current load.
+        let load = LoadSnapshot {
+            gpu_util: self.device.effective_gpu_util(),
+            cpu_util: self.device.cpu_util(),
+        };
+        let target = self.decisions.decide(
+            &self.cfg.policy,
+            self.device.profile(),
+            shape,
+            plan.padded_to,
+            load,
+        );
+
+        // REAL numerics.
+        let t0 = Instant::now();
+        let logits = match target {
+            Target::Gpu(_) => {
+                let variant = shape.variant_name(plan.padded_to);
+                match self.runtime.execute(&variant, x.clone()) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        eprintln!("[router] PJRT error, falling back to native: {e:#}");
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let mut st = crate::lstm::model::InferenceState::new(shape);
+                        self.native.forward_batch(&x, &mut st)
+                    }
+                }
+            }
+            Target::CpuMulti(_) => self.pool.forward_batch(&x),
+            Target::CpuSingle => {
+                let mut st = crate::lstm::model::InferenceState::new(shape);
+                self.native.forward_batch(&x, &mut st)
+            }
+        };
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+
+        // SIMULATED device latency. The paper's measurement is CLOSED-LOOP
+        // (inferences run back-to-back on the phone), so each batch's
+        // device time elapses on the virtual clock before the next
+        // dispatch: enqueue + advance drains the queue exactly, keeping
+        // sim_ns = work_ns for sequential batches while still charging
+        // queueing delay if dispatches ever overlap.
+        let util = match target {
+            Target::Gpu(_) => self.device.gpu_util(),
+            _ => self.device.cpu_util(),
+        };
+        let work_ns =
+            simulate_inference(self.device.profile(), shape, plan.padded_to, target, util);
+        let sim_ns = match target {
+            Target::Gpu(_) => {
+                let latency = self.device.enqueue_gpu(work_ns);
+                self.device.advance_virtual(work_ns);
+                latency
+            }
+            _ => work_ns,
+        };
+
+        // Account + reply.
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        self.metrics.padded_slots.fetch_add(plan.padding() as u64, Ordering::Relaxed);
+        self.metrics.compute_latency.record(compute_ns);
+        self.metrics.sim_latency.record(sim_ns);
+        match target {
+            Target::Gpu(_) => self.metrics.gpu_dispatches.fetch_add(1, Ordering::Relaxed),
+            _ => self.metrics.cpu_dispatches.fetch_add(1, Ordering::Relaxed),
+        };
+        let done = Instant::now();
+        for (i, req) in reqs.into_iter().enumerate() {
+            let wall_ns = done.duration_since(req.enqueued).as_nanos() as u64;
+            self.metrics.wall_latency.record(wall_ns);
+            let row = logits.row(i).to_vec();
+            let class = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            let _ = req.reply.send(ServeReply {
+                class,
+                label: CLASS_NAMES.get(class).unwrap_or(&"?").to_string(),
+                logits: row,
+                wall_ns,
+                sim_ns,
+                target: target_label(target),
+                batch_size: plan.padded_to,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::har;
+    use crate::simulator::DeviceProfile;
+
+    fn setup(policy: OffloadPolicy) -> Option<(Router, Manifest)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let man = Manifest::load(dir).unwrap();
+        let rt = Runtime::start(&man).unwrap();
+        let device = DeviceState::new(DeviceProfile::nexus5());
+        let router = Router::start(
+            &man,
+            rt,
+            device,
+            RouterConfig { policy, max_wait: Duration::from_millis(1), ..Default::default() },
+        )
+        .unwrap();
+        Some((router, man))
+    }
+
+    #[test]
+    fn classify_roundtrip_gpu() {
+        let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
+        let ds = har::generate(4, 11);
+        for i in 0..4 {
+            let reply = router.classify(ds.window(i).to_vec()).unwrap();
+            assert!(reply.class < har::NUM_CLASSES);
+            assert_eq!(reply.logits.len(), har::NUM_CLASSES);
+            assert_eq!(reply.target, "gpu", "idle device should offload");
+            assert!(reply.sim_ns > 0);
+        }
+        assert_eq!(router.metrics.requests.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn classify_cpu_matches_gpu_numerics() {
+        // The offload decision must not change answers: native CPU logits
+        // track the XLA logits within fp tolerance.
+        let Some((gpu_router, man)) = setup(OffloadPolicy::Static(Target::Gpu(
+            crate::simulator::Factorization::Coarse,
+        ))) else {
+            return;
+        };
+        let rt = Runtime::start(&man).unwrap();
+        let cpu_router = Router::start(
+            &man,
+            rt,
+            DeviceState::new(DeviceProfile::nexus5()),
+            RouterConfig {
+                policy: OffloadPolicy::Static(Target::CpuSingle),
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ds = har::generate(6, 13);
+        for i in 0..6 {
+            let g = gpu_router.classify(ds.window(i).to_vec()).unwrap();
+            let c = cpu_router.classify(ds.window(i).to_vec()).unwrap();
+            assert_eq!(g.target, "gpu");
+            assert_eq!(c.target, "cpu");
+            assert_eq!(g.class, c.class, "window {i}: targets disagree");
+            for (a, b) in g.logits.iter().zip(&c.logits) {
+                assert!((a - b).abs() < 1e-3, "logit drift {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn high_load_switches_to_cpu() {
+        let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
+        router.device.set_gpu_util(0.9);
+        router.device.set_cpu_util(0.9);
+        let ds = har::generate(1, 17);
+        let reply = router.classify(ds.window(0).to_vec()).unwrap();
+        assert_ne!(reply.target, "gpu", "§4.5: loaded GPU must not be chosen");
+    }
+
+    #[test]
+    fn submit_rejects_wrong_window() {
+        let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
+        assert!(router.submit(vec![0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn batches_form_under_burst() {
+        let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
+        let ds = har::generate(16, 19);
+        let rxs: Vec<_> =
+            (0..16).map(|i| router.submit(ds.window(i).to_vec()).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.batch_size >= 1);
+        }
+        let batches = router.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches < 16, "burst should batch: {batches} batches for 16 reqs");
+        assert_eq!(router.metrics.requests.load(Ordering::Relaxed), 16);
+    }
+}

@@ -1,0 +1,496 @@
+//! The per-figure series generators.
+
+use crate::config::ModelShape;
+use crate::simulator::{
+    build_trace_with_slots, gpu_run, simulate_inference, DeviceProfile, Factorization,
+    LoadLevel, Target, TraceOpts,
+};
+use crate::util::Stats;
+
+/// The paper's "100 randomly selected test cases" (§4.1).
+pub const TEST_CASES: usize = 100;
+
+/// Model sweep used by Figs 3/5/6: (layers, hidden).
+pub const COMPLEXITY_SWEEP: [(usize, usize); 6] =
+    [(1, 32), (2, 32), (3, 32), (2, 64), (2, 128), (2, 256)];
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+// ---------------------------------------------------------------- Fig 2
+
+/// Fig 2: the factorization contrast on the paper's own example — a
+/// 32-dim input vector times a 32×120 weight matrix.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub strategy: &'static str,
+    pub work_units: usize,
+    pub launches: usize,
+    pub products_per_unit: usize,
+    pub sim_us: f64,
+}
+
+pub fn fig2(profile: &DeviceProfile) -> Vec<Fig2Row> {
+    // 120 output columns (the paper's 32x120), input dim 2+30 = 32.
+    let shape = ModelShape {
+        num_layers: 1,
+        hidden: 30,
+        input_dim: 2,
+        seq_len: 1,
+        num_classes: 6,
+    };
+    let mut rows = Vec::new();
+    for (name, fact) in [("fine (CUDA-style)", Factorization::Fine),
+                         ("coarse (RenderScript)", Factorization::Coarse)] {
+        let trace = build_trace_with_slots(shape, 1, fact, &TraceOpts::mobirnn(), profile.gpu_slots);
+        // Look at the GEMM launches only (the figure's subject).
+        let gemm: Vec<_> = trace.launches.iter().filter(|l| l.units[0].flops >= 2 * 32).collect();
+        let units: usize = gemm.iter().map(|l| l.units.len()).sum();
+        let r = gpu_run(profile, &trace, 0.0, 0);
+        rows.push(Fig2Row {
+            strategy: name,
+            work_units: units,
+            launches: gemm.len(),
+            products_per_unit: 120 / units.max(1).min(120),
+            sim_us: r.total_ns as f64 / 1e3,
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------- Fig 3
+
+/// Fig 3: CUDA-style (fine) GPU offload vs single-thread CPU.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub layers: usize,
+    pub hidden: usize,
+    /// Aggregate ms over TEST_CASES inferences.
+    pub cpu_ms: f64,
+    pub gpu_fine_ms: f64,
+    /// How many times SLOWER the fine GPU port is (paper: up to ~4×).
+    pub slowdown: f64,
+}
+
+pub fn fig3(profile: &DeviceProfile) -> Vec<Fig3Row> {
+    COMPLEXITY_SWEEP
+        .iter()
+        .map(|&(layers, hidden)| {
+            let shape = ModelShape::new(layers, hidden);
+            let cpu = simulate_inference(profile, shape, 1, Target::CpuSingle, 0.0);
+            let gpu = simulate_inference(profile, shape, 1, Target::Gpu(Factorization::Fine), 0.0);
+            Fig3Row {
+                layers,
+                hidden,
+                cpu_ms: ms(cpu) * TEST_CASES as f64,
+                gpu_fine_ms: ms(gpu) * TEST_CASES as f64,
+                slowdown: gpu as f64 / cpu as f64,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- Fig 4
+
+/// Fig 4: MobiRNN (coarse) GPU vs CPU on both phones, default model.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub device: String,
+    pub cpu_ms: f64,
+    pub gpu_ms: f64,
+    pub speedup: f64,
+}
+
+pub fn fig4() -> Vec<Fig4Row> {
+    let shape = ModelShape::default();
+    [DeviceProfile::nexus5(), DeviceProfile::nexus6p()]
+        .iter()
+        .map(|p| {
+            let cpu = simulate_inference(p, shape, 1, Target::CpuSingle, 0.0);
+            let gpu = simulate_inference(p, shape, 1, Target::Gpu(Factorization::Coarse), 0.0);
+            Fig4Row {
+                device: p.name.clone(),
+                cpu_ms: ms(cpu) * TEST_CASES as f64,
+                gpu_ms: ms(gpu) * TEST_CASES as f64,
+                speedup: cpu as f64 / gpu as f64,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- Fig 5
+
+/// Fig 5: GPU-over-CPU speedup as model complexity grows (Nexus 5).
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub layers: usize,
+    pub hidden: usize,
+    pub params: usize,
+    pub cpu_ms: f64,
+    pub gpu_ms: f64,
+    pub speedup: f64,
+}
+
+pub fn fig5(profile: &DeviceProfile) -> Vec<Fig5Row> {
+    COMPLEXITY_SWEEP
+        .iter()
+        .map(|&(layers, hidden)| {
+            let shape = ModelShape::new(layers, hidden);
+            let cpu = simulate_inference(profile, shape, 1, Target::CpuSingle, 0.0);
+            let gpu = simulate_inference(profile, shape, 1, Target::Gpu(Factorization::Coarse), 0.0);
+            Fig5Row {
+                layers,
+                hidden,
+                params: shape.param_count(),
+                cpu_ms: ms(cpu),
+                gpu_ms: ms(gpu),
+                speedup: cpu as f64 / gpu as f64,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- Fig 6
+
+/// Fig 6: multi-threaded CPU vs GPU across complexity (Nexus 5).
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub layers: usize,
+    pub hidden: usize,
+    pub cpu_single_ms: f64,
+    pub cpu_multi_ms: f64,
+    pub gpu_ms: f64,
+    /// GPU advantage over the multithreaded CPU (paper: ~32% average).
+    pub gpu_gain_over_mt: f64,
+    /// Fraction of the GPU's benefit the MT CPU captures (paper: ≥70.5%).
+    pub mt_benefit_fraction: f64,
+}
+
+pub fn fig6(profile: &DeviceProfile) -> Vec<Fig6Row> {
+    COMPLEXITY_SWEEP
+        .iter()
+        .map(|&(layers, hidden)| {
+            let shape = ModelShape::new(layers, hidden);
+            let single = simulate_inference(profile, shape, 1, Target::CpuSingle, 0.0) as f64;
+            let multi =
+                simulate_inference(profile, shape, 1, Target::CpuMulti(profile.cpu_cores), 0.0)
+                    as f64;
+            let gpu =
+                simulate_inference(profile, shape, 1, Target::Gpu(Factorization::Coarse), 0.0)
+                    as f64;
+            Fig6Row {
+                layers,
+                hidden,
+                cpu_single_ms: single / 1e6,
+                cpu_multi_ms: multi / 1e6,
+                gpu_ms: gpu / 1e6,
+                gpu_gain_over_mt: multi / gpu - 1.0,
+                mt_benefit_fraction: (single - multi) / (single - gpu),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- Fig 7
+
+/// Fig 7: latency under background load (Nexus 6P in the paper).
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub level: LoadLevel,
+    /// Mean + spread of GPU latency over sampled utilizations (the dots).
+    pub gpu_mean_ms: f64,
+    pub gpu_min_ms: f64,
+    pub gpu_max_ms: f64,
+    /// CPU under the matching CPU load (the lines). The paper's "CPU"
+    /// line is its standard single-thread implementation; cpu_multi is
+    /// reported for context (§4.4 predicts MT shines on the 6P).
+    pub cpu_single_ms: f64,
+    pub cpu_multi_ms: f64,
+    /// Whether offloading beats the paper's CPU line at this load level.
+    pub gpu_wins: bool,
+}
+
+pub fn fig7(profile: &DeviceProfile, samples: usize, seed: u64) -> Vec<Fig7Row> {
+    let shape = ModelShape::default();
+    LoadLevel::ALL
+        .iter()
+        .map(|&level| {
+            let mut trace = crate::simulator::load::LoadTrace::new(level, seed);
+            let mut stats = Stats::new();
+            for _ in 0..samples {
+                let util = trace.sample();
+                let ns =
+                    simulate_inference(profile, shape, 1, Target::Gpu(Factorization::Coarse), util);
+                stats.push(ms(ns));
+            }
+            let cpu_util = level.nominal_util();
+            let cpu_single =
+                ms(simulate_inference(profile, shape, 1, Target::CpuSingle, cpu_util));
+            let cpu_multi = ms(simulate_inference(
+                profile,
+                shape,
+                1,
+                Target::CpuMulti(profile.cpu_cores),
+                cpu_util,
+            ));
+            Fig7Row {
+                level,
+                gpu_mean_ms: stats.mean(),
+                gpu_min_ms: stats.min(),
+                gpu_max_ms: stats.max(),
+                cpu_single_ms: cpu_single,
+                cpu_multi_ms: cpu_multi,
+                gpu_wins: stats.mean() < cpu_single,
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ headline
+
+/// The abstract's headline numbers, computed from the same series.
+#[derive(Debug, Clone)]
+pub struct Headline {
+    pub mobirnn_speedup_nexus5: f64,
+    pub mobirnn_speedup_nexus6p: f64,
+    pub cuda_style_slowdown: f64,
+    pub mt_benefit_fraction_min: f64,
+    pub gpu_gain_over_mt_mean: f64,
+}
+
+pub fn headline() -> Headline {
+    let f4 = fig4();
+    let n5 = DeviceProfile::nexus5();
+    let f3 = fig3(&n5);
+    let f6 = fig6(&n5);
+    Headline {
+        mobirnn_speedup_nexus5: f4[0].speedup,
+        mobirnn_speedup_nexus6p: f4[1].speedup,
+        cuda_style_slowdown: f3.iter().map(|r| r.slowdown).fold(0.0, f64::max),
+        mt_benefit_fraction_min: f6
+            .iter()
+            .map(|r| r.mt_benefit_fraction)
+            .fold(f64::INFINITY, f64::min),
+        gpu_gain_over_mt_mean: f6.iter().map(|r| r.gpu_gain_over_mt).sum::<f64>()
+            / f6.len() as f64,
+    }
+}
+
+// ------------------------------------------------------------- printing
+
+pub fn print_fig2(rows: &[Fig2Row]) {
+    println!("\n== Fig 2: factorization of a 32-dim x (32x120) gate GEMM ==");
+    println!("{:<24} {:>6} {:>9} {:>14} {:>10}", "strategy", "units", "launches", "products/unit", "sim time");
+    for r in rows {
+        println!(
+            "{:<24} {:>6} {:>9} {:>14} {:>8.1}µs",
+            r.strategy, r.work_units, r.launches, r.products_per_unit, r.sim_us
+        );
+    }
+}
+
+pub fn print_fig3(rows: &[Fig3Row]) {
+    println!("\n== Fig 3: CUDA-style GPU offload vs CPU (Nexus 5, {TEST_CASES} cases) ==");
+    println!("{:<10} {:>12} {:>14} {:>10}", "model", "cpu (ms)", "gpu-fine (ms)", "slowdown");
+    for r in rows {
+        println!(
+            "{:<10} {:>12.0} {:>14.0} {:>9.2}x",
+            format!("{}l/{}h", r.layers, r.hidden),
+            r.cpu_ms,
+            r.gpu_fine_ms,
+            r.slowdown
+        );
+    }
+}
+
+pub fn print_fig4(rows: &[Fig4Row]) {
+    println!("\n== Fig 4: MobiRNN GPU vs CPU, default 2l/32h model ({TEST_CASES} cases) ==");
+    println!("{:<10} {:>12} {:>12} {:>9}", "device", "cpu (ms)", "gpu (ms)", "speedup");
+    for r in rows {
+        println!("{:<10} {:>12.0} {:>12.0} {:>8.2}x", r.device, r.cpu_ms, r.gpu_ms, r.speedup);
+    }
+}
+
+pub fn print_fig5(rows: &[Fig5Row]) {
+    println!("\n== Fig 5: speedup vs model complexity (Nexus 5, per inference) ==");
+    println!("{:<10} {:>9} {:>10} {:>10} {:>9}", "model", "params", "cpu (ms)", "gpu (ms)", "speedup");
+    for r in rows {
+        println!(
+            "{:<10} {:>9} {:>10.1} {:>10.1} {:>8.2}x",
+            format!("{}l/{}h", r.layers, r.hidden),
+            r.params,
+            r.cpu_ms,
+            r.gpu_ms,
+            r.speedup
+        );
+    }
+}
+
+pub fn print_fig6(rows: &[Fig6Row]) {
+    println!("\n== Fig 6: multithreaded CPU vs GPU (Nexus 5, per inference) ==");
+    println!(
+        "{:<10} {:>10} {:>10} {:>9} {:>12} {:>12}",
+        "model", "cpu-1t", "cpu-mt", "gpu", "gpu vs mt", "mt benefit"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:>8.1}ms {:>8.1}ms {:>7.1}ms {:>+11.1}% {:>11.1}%",
+            format!("{}l/{}h", r.layers, r.hidden),
+            r.cpu_single_ms,
+            r.cpu_multi_ms,
+            r.gpu_ms,
+            100.0 * r.gpu_gain_over_mt,
+            100.0 * r.mt_benefit_fraction
+        );
+    }
+}
+
+pub fn print_fig7(rows: &[Fig7Row]) {
+    println!("\n== Fig 7: latency under background load (Nexus 6P, 2l/32h) ==");
+    println!(
+        "{:<18} {:>22} {:>10} {:>10} {:>9}",
+        "load", "gpu mean [min..max]", "cpu-1t", "cpu-mt", "offload?"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:>7.1}ms [{:>5.1}..{:>6.1}] {:>8.1}ms {:>8.1}ms {:>9}",
+            r.level.label(),
+            r.gpu_mean_ms,
+            r.gpu_min_ms,
+            r.gpu_max_ms,
+            r.cpu_single_ms,
+            r.cpu_multi_ms,
+            if r.gpu_wins { "gpu" } else { "cpu" }
+        );
+    }
+}
+
+pub fn print_headline(h: &Headline) {
+    println!("\n== Headline (abstract) ==");
+    println!("MobiRNN GPU speedup, Nexus 5 : {:.2}x   (paper: 3.93x)", h.mobirnn_speedup_nexus5);
+    println!("MobiRNN GPU speedup, Nexus 6P: {:.2}x   (paper: 2.83x)", h.mobirnn_speedup_nexus6p);
+    println!("CUDA-style port slowdown     : {:.2}x   (paper: ~4x slower)", h.cuda_style_slowdown);
+    println!(
+        "MT-CPU captures ≥ {:.1}% of GPU benefit   (paper: ≥70.5%)",
+        100.0 * h.mt_benefit_fraction_min
+    );
+    println!(
+        "GPU beats MT-CPU by {:.1}% on average      (paper: ~32%)",
+        100.0 * h.gpu_gain_over_mt_mean
+    );
+}
+
+/// Run + print everything (the `mobirnn figures --all` path).
+pub fn run_all() {
+    let n5 = DeviceProfile::nexus5();
+    let n6p = DeviceProfile::nexus6p();
+    print_fig2(&fig2(&n5));
+    print_fig3(&fig3(&n5));
+    print_fig4(&fig4());
+    print_fig5(&fig5(&n5));
+    print_fig6(&fig6(&n5));
+    print_fig7(&fig7(&n6p, 30, 42));
+    print_headline(&headline());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_packing_matches_paper_example() {
+        let rows = fig2(&DeviceProfile::nexus5());
+        let fine = &rows[0];
+        let coarse = &rows[1];
+        // "120 work units ... leading to 120 function calls"
+        assert_eq!(fine.work_units, 120);
+        assert_eq!(fine.launches, 120);
+        // "12 work units that compute ten vector products each"
+        assert_eq!(coarse.work_units, 12);
+        assert_eq!(coarse.launches, 1);
+        assert_eq!(coarse.products_per_unit, 10);
+        assert!(fine.sim_us > coarse.sim_us);
+    }
+
+    #[test]
+    fn fig3_fine_always_slower_and_up_to_4x() {
+        let rows = fig3(&DeviceProfile::nexus5());
+        for r in &rows {
+            assert!(r.slowdown > 1.0, "{r:?}");
+        }
+        let max = rows.iter().map(|r| r.slowdown).fold(0.0, f64::max);
+        assert!((3.0..5.0).contains(&max), "paper: up to ~4x, got {max}");
+    }
+
+    #[test]
+    fn fig4_headline_speedups() {
+        let rows = fig4();
+        assert!((rows[0].speedup - 3.93).abs() < 0.4, "Nexus5: {}", rows[0].speedup);
+        assert!((rows[1].speedup - 2.83).abs() < 0.4, "Nexus6P: {}", rows[1].speedup);
+        // Paper: CPU faster on 6P, GPUs comparable.
+        assert!(rows[1].cpu_ms < rows[0].cpu_ms);
+        assert!((rows[1].gpu_ms / rows[0].gpu_ms - 1.0).abs() < 0.25);
+        // Absolute anchor: ~142 ms/case CPU on Nexus 5.
+        assert!((rows[0].cpu_ms / TEST_CASES as f64 - 142.0).abs() < 15.0);
+    }
+
+    #[test]
+    fn fig5_rises_then_saturates_in_hidden() {
+        let rows = fig5(&DeviceProfile::nexus5());
+        let by = |l: usize, h: usize| rows.iter().find(|r| r.layers == l && r.hidden == h).unwrap();
+        // Speedup grows with layers...
+        assert!(by(2, 32).speedup > by(1, 32).speedup);
+        assert!(by(3, 32).speedup >= by(2, 32).speedup * 0.99);
+        // ...and with hidden until the bandwidth wall...
+        assert!(by(2, 64).speedup > by(2, 32).speedup);
+        assert!(by(2, 128).speedup > by(2, 64).speedup * 0.98);
+        // ...then saturates (H=256 does NOT keep rising).
+        assert!(by(2, 256).speedup < by(2, 128).speedup * 1.02);
+        // And never collapses below the small-model speedup.
+        assert!(by(2, 256).speedup > 0.8 * by(2, 32).speedup);
+    }
+
+    #[test]
+    fn fig6_paper_claims() {
+        let rows = fig6(&DeviceProfile::nexus5());
+        for r in &rows {
+            assert!(
+                r.mt_benefit_fraction >= 0.705,
+                "paper: MT captures >=70.5%, got {:?}",
+                r
+            );
+            assert!(r.gpu_ms < r.cpu_multi_ms, "GPU still fastest: {r:?}");
+        }
+        let mean_gain: f64 =
+            rows.iter().map(|r| r.gpu_gain_over_mt).sum::<f64>() / rows.len() as f64;
+        assert!((0.1..0.6).contains(&mean_gain), "paper: ~32% mean GPU gain, got {mean_gain}");
+    }
+
+    #[test]
+    fn fig7_crossover_at_high_load() {
+        let rows = fig7(&DeviceProfile::nexus6p(), 20, 7);
+        assert!(rows[0].gpu_wins, "low load: offload wins");
+        assert!(rows[1].gpu_wins, "medium load: offload wins");
+        assert!(!rows[2].gpu_wins, "high load: CPU wins (the paper's §4.5 result)");
+        // Latency correlates with load (monotone mean).
+        assert!(rows[0].gpu_mean_ms < rows[1].gpu_mean_ms);
+        assert!(rows[1].gpu_mean_ms < rows[2].gpu_mean_ms);
+        // Spread exists (the dots are a cloud, not a line).
+        assert!(rows[2].gpu_max_ms > rows[2].gpu_min_ms);
+    }
+
+    #[test]
+    fn headline_matches_abstract() {
+        let h = headline();
+        assert!(h.mobirnn_speedup_nexus5 > 3.5, "{h:?}");
+        assert!(h.cuda_style_slowdown > 3.0 && h.cuda_style_slowdown < 5.0, "{h:?}");
+        assert!(h.mt_benefit_fraction_min >= 0.705, "{h:?}");
+        assert!(h.gpu_gain_over_mt_mean > 0.1, "{h:?}");
+    }
+
+    #[test]
+    fn run_all_prints_without_panic() {
+        run_all();
+    }
+}

@@ -1,0 +1,13 @@
+//! Figure harnesses: regenerate every table/figure in the paper's
+//! evaluation (DESIGN.md §5 experiment index).
+//!
+//! Each `figN()` returns structured rows (asserted by integration tests
+//! and serialized into EXPERIMENTS.md); `print_*` renders the table the
+//! way the paper's figure reads. All series come from the calibrated
+//! device simulator — the substitution for the Nexus 5/6P testbed — while
+//! the *numerics* those latencies describe run for real through PJRT or
+//! the native engine (see coordinator::router).
+
+pub mod figs;
+
+pub use figs::*;

@@ -1,0 +1,38 @@
+//! # MobiRNN — mobile-GPU-aware LSTM serving (EMDL'17 reproduction)
+//!
+//! This crate is Layer 3 of the three-layer stack described in DESIGN.md:
+//! a Rust serving coordinator that executes AOT-compiled JAX/Pallas LSTM
+//! artifacts via PJRT, decides *where* each inference should run (GPU vs
+//! CPU — the paper's central question) using a discrete-event mobile-SoC
+//! simulator as the hardware substrate, and regenerates every figure in
+//! the paper's evaluation.
+//!
+//! Module map (see DESIGN.md §4 for the full systems inventory):
+//!
+//! - [`tensor`]     — minimal dense f32 tensor used across the crate
+//! - [`config`]     — model/variant/manifest configuration
+//! - [`lstm`]       — native Rust LSTM engine (CPU path) + MRNW weights
+//! - [`har`]        — synthetic HAR dataset substrate (MRNH loader + generator)
+//! - [`simulator`]  — DES mobile-SoC simulator (GPU slots, launch overhead,
+//!   shared bandwidth, background load; Fine vs Coarse factorization)
+//! - [`runtime`]    — PJRT runtime: HLO-text artifacts -> compile -> execute
+//! - [`coordinator`]— router, dynamic batcher, utilization-aware offload policy
+//! - [`server`]     — tokio TCP JSON-lines serving front-end
+//! - [`figures`]    — harnesses that regenerate paper Figs 2–7
+//! - [`util`]       — deterministic RNG + stats helpers
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod har;
+pub mod json;
+pub mod lstm;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod tensor;
+pub mod util;
+
+pub use config::{Manifest, ModelShape, VariantInfo};
+pub use tensor::Tensor;

@@ -1,0 +1,262 @@
+//! One LSTM cell step — numerics mirror `python/compile/kernels/ref.py`.
+//!
+//! Gate layout: `gates = [x;h] @ W + b`, split (i, g, f, o);
+//! `c' = σ(f + 1) ⊙ c + σ(i) ⊙ tanh(g)`, `h' = σ(o) ⊙ tanh(c')`.
+//!
+//! The hot loop applies the paper's §3.3 CPU-side optimizations:
+//! - combined input+hidden GEMM (one pass over W, not two);
+//! - fused point-wise tail (gates never leave the scratch buffer);
+//! - caller-provided scratch so the serving loop never allocates
+//!   (§3.2's "preallocate and reuse c/h" on the CPU path).
+
+use crate::tensor::Tensor;
+
+/// TensorFlow BasicLSTMCell forget-gate bias, as trained (ref.py).
+pub const FORGET_BIAS: f32 = 1.0;
+
+/// Weights of one layer: combined `[I+H, 4H]` matrix + `[4H]` bias.
+#[derive(Debug, Clone)]
+pub struct LstmCellWeights {
+    pub w: Tensor,
+    pub b: Tensor,
+    pub input_dim: usize,
+    pub hidden: usize,
+}
+
+impl LstmCellWeights {
+    pub fn new(w: Tensor, b: Tensor, input_dim: usize, hidden: usize) -> Self {
+        assert_eq!(w.shape(), &[input_dim + hidden, 4 * hidden], "W shape");
+        assert_eq!(b.shape(), &[4 * hidden], "b shape");
+        Self { w, b, input_dim, hidden }
+    }
+}
+
+#[inline(always)]
+fn sigmoid(x: f32) -> f32 {
+    // Numerically-stable logistic, matching ref.py's select form.
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Per-call scratch: the `[4H]` gate buffer. Reused across timesteps by
+/// the model loop so the inner path is allocation-free.
+#[derive(Debug, Clone)]
+pub struct CellScratch {
+    pub gates: Vec<f32>,
+}
+
+impl CellScratch {
+    pub fn new(hidden: usize) -> Self {
+        Self { gates: vec![0.0; 4 * hidden] }
+    }
+}
+
+/// `gates[k] += Σ_r v[r] * W[row0+r][k]`, rows blocked in quads.
+///
+/// `w_rows` must hold at least `(row0 + v.len()) * gates.len()` values in
+/// row-major layout. The quad blocking keeps the accumulator in registers
+/// / L1 across four weight rows, which is the hot-loop win on this GEMV
+/// (the whole serving CPU path is this function).
+#[inline]
+fn gemv_rows_into(gates: &mut [f32], w_rows: &[f32], row0: usize, v: &[f32]) {
+    let width = gates.len();
+    let mut r = 0;
+    while r + 4 <= v.len() {
+        let (v0, v1, v2, v3) = (v[r], v[r + 1], v[r + 2], v[r + 3]);
+        let base = (row0 + r) * width;
+        let row0s = &w_rows[base..base + width];
+        let row1s = &w_rows[base + width..base + 2 * width];
+        let row2s = &w_rows[base + 2 * width..base + 3 * width];
+        let row3s = &w_rows[base + 3 * width..base + 4 * width];
+        for ((((gk, w0), w1), w2), w3) in
+            gates.iter_mut().zip(row0s).zip(row1s).zip(row2s).zip(row3s)
+        {
+            *gk += v0 * w0 + v1 * w1 + v2 * w2 + v3 * w3;
+        }
+        r += 4;
+    }
+    while r < v.len() {
+        let vr = v[r];
+        if vr != 0.0 {
+            let base = (row0 + r) * width;
+            let row = &w_rows[base..base + width];
+            for (gk, wk) in gates.iter_mut().zip(row) {
+                *gk += vr * wk;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// One cell step for ONE batch row, in place:
+/// reads `x` (len I) and `h`/`c` (len H), overwrites `h`/`c` with the
+/// next state. `scratch.gates` must be sized `4H`.
+pub fn lstm_cell(
+    weights: &LstmCellWeights,
+    x: &[f32],
+    h: &mut [f32],
+    c: &mut [f32],
+    scratch: &mut CellScratch,
+) {
+    let hid = weights.hidden;
+    let in_dim = weights.input_dim;
+    debug_assert_eq!(x.len(), in_dim);
+    debug_assert_eq!(h.len(), hid);
+    debug_assert_eq!(c.len(), hid);
+    let gates = &mut scratch.gates[..4 * hid];
+    let w = weights.w.data();
+    let b = weights.b.data();
+
+    // gates = b  (init), then accumulate rows of W scaled by [x;h].
+    gates.copy_from_slice(b);
+    // Row-major W: row r holds the 4H outputs for input feature r, so the
+    // GEMV walks W exactly once, row by row — this is the "combined
+    // inputs and weights" single pass (paper §3.3). Rows are processed
+    // FOUR at a time so the `gates` accumulator is read/written once per
+    // quad instead of once per row (≈4× less accumulator traffic; see
+    // EXPERIMENTS.md §Perf — ~2.3× on the full window forward).
+    gemv_rows_into(gates, w, 0, x);
+    gemv_rows_into(gates, &w[in_dim * 4 * hid..], 0, h);
+
+    // Fused point-wise tail (i, g, f, o), writing h/c in place.
+    let (ig, rest) = gates.split_at(hid);
+    let (gg, rest) = rest.split_at(hid);
+    let (fg, og) = rest.split_at(hid);
+    for k in 0..hid {
+        let c_next = sigmoid(fg[k] + FORGET_BIAS) * c[k] + sigmoid(ig[k]) * gg[k].tanh();
+        c[k] = c_next;
+        h[k] = sigmoid(og[k]) * c_next.tanh();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_weights(rng: &mut Rng, input_dim: usize, hidden: usize) -> LstmCellWeights {
+        let wn = (input_dim + hidden) * 4 * hidden;
+        let w: Vec<f32> = (0..wn).map(|_| rng.uniform(-0.2, 0.2)).collect();
+        let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        LstmCellWeights::new(
+            Tensor::new(vec![input_dim + hidden, 4 * hidden], w),
+            Tensor::new(vec![4 * hidden], b),
+            input_dim,
+            hidden,
+        )
+    }
+
+    /// Unoptimized oracle: explicit concat + naive matmul, textbook gates.
+    fn cell_oracle(w: &LstmCellWeights, x: &[f32], h: &[f32], c: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let hid = w.hidden;
+        let mut xh = x.to_vec();
+        xh.extend_from_slice(h);
+        let mut gates = w.b.data().to_vec();
+        for (j, g) in gates.iter_mut().enumerate() {
+            for (r, &v) in xh.iter().enumerate() {
+                *g += v * w.w.data()[r * 4 * hid + j];
+            }
+        }
+        let mut hn = vec![0.0; hid];
+        let mut cn = vec![0.0; hid];
+        for k in 0..hid {
+            let (i, g, f, o) = (gates[k], gates[hid + k], gates[2 * hid + k], gates[3 * hid + k]);
+            cn[k] = sigmoid(f + FORGET_BIAS) * c[k] + sigmoid(i) * g.tanh();
+            hn[k] = sigmoid(o) * cn[k].tanh();
+        }
+        (hn, cn)
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let mut rng = Rng::new(1);
+        for &(i, h) in &[(9usize, 32usize), (32, 32), (9, 64), (3, 5)] {
+            let w = rand_weights(&mut rng, i, h);
+            let x: Vec<f32> = (0..i).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut hv: Vec<f32> = (0..h).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut cv: Vec<f32> = (0..h).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let (h_exp, c_exp) = cell_oracle(&w, &x, &hv, &cv);
+            let mut scratch = CellScratch::new(h);
+            lstm_cell(&w, &x, &mut hv, &mut cv, &mut scratch);
+            for k in 0..h {
+                assert!((hv[k] - h_exp[k]).abs() < 1e-5, "h[{k}]");
+                assert!((cv[k] - c_exp[k]).abs() < 1e-5, "c[{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_keeps_bounded_state() {
+        let mut rng = Rng::new(2);
+        let w = rand_weights(&mut rng, 9, 16);
+        let mut h = vec![0.0; 16];
+        let mut c = vec![0.0; 16];
+        let mut s = CellScratch::new(16);
+        for _ in 0..100 {
+            lstm_cell(&w, &[0.0; 9], &mut h, &mut c, &mut s);
+        }
+        // |h| <= 1 always (sigmoid * tanh); c stays finite via forget < 1.
+        assert!(h.iter().all(|v| v.abs() <= 1.0 && v.is_finite()));
+        assert!(c.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forget_gate_saturation_preserves_cell() {
+        // With huge forget bias contribution and zero input gate the cell
+        // state must persist ~unchanged (the LSTM memory mechanism, §2.1).
+        let hid = 4;
+        let in_dim = 2;
+        let mut w = vec![0.0; (in_dim + hid) * 4 * hid];
+        // force f-gate pre-activation very positive, i-gate very negative
+        let b: Vec<f32> = (0..4 * hid)
+            .map(|j| {
+                if (hid..2 * hid).contains(&j) {
+                    0.0
+                } else if (2 * hid..3 * hid).contains(&j) {
+                    20.0 // forget
+                } else if j < hid {
+                    -20.0 // input
+                } else {
+                    0.0 // output
+                }
+            })
+            .collect();
+        w.iter_mut().for_each(|v| *v = 0.0);
+        let weights = LstmCellWeights::new(
+            Tensor::new(vec![in_dim + hid, 4 * hid], w),
+            Tensor::new(vec![4 * hid], b),
+            in_dim,
+            hid,
+        );
+        let mut h = vec![0.0; hid];
+        let mut c = vec![0.7; hid];
+        let mut s = CellScratch::new(hid);
+        for _ in 0..50 {
+            lstm_cell(&weights, &[1.0, -1.0], &mut h, &mut c, &mut s);
+        }
+        for &cv in &c {
+            assert!((cv - 0.7).abs() < 1e-4, "cell state leaked: {cv}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert_eq!(sigmoid(1000.0), 1.0);
+        assert_eq!(sigmoid(-1000.0), 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        // symmetric: σ(-x) = 1 - σ(x)
+        for x in [-5.0f32, -1.0, 0.3, 2.5] {
+            assert!((sigmoid(-x) - (1.0 - sigmoid(x))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn weights_shape_checked() {
+        LstmCellWeights::new(Tensor::zeros(vec![10, 10]), Tensor::zeros(vec![8]), 9, 2);
+    }
+}

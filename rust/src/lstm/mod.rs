@@ -1,0 +1,26 @@
+//! Native Rust LSTM engine — the serving CPU path.
+//!
+//! This is the substrate the paper's CPU baselines run on: a from-scratch
+//! stacked-LSTM forward pass whose numerics mirror the pure-jnp oracle
+//! (`python/compile/kernels/ref.py`) bit-for-bit in layout and gate order
+//! (i, g, f, o over a combined `[x;h] @ W + b` GEMM, forget bias 1.0).
+//!
+//! Two execution flavours:
+//! - [`model::LstmModel::forward`] — single-threaded (paper's "CPU" bars)
+//! - [`threaded::ThreadedLstm`]    — multi-threaded over the batch
+//!   (paper §4.4's "multi-threaded RNN on the CPU")
+//!
+//! Weights come from MRNW files written by `python/compile/aot.py`
+//! ([`weights`]), so the native engine and the PJRT artifact execute the
+//! *same trained model* — cross-checked against golden logits in
+//! `rust/tests/`.
+
+pub mod cell;
+pub mod model;
+pub mod threaded;
+pub mod weights;
+
+pub use cell::{lstm_cell, LstmCellWeights, FORGET_BIAS};
+pub use model::LstmModel;
+pub use threaded::ThreadedLstm;
+pub use weights::WeightFile;

@@ -1,0 +1,228 @@
+//! Stacked-LSTM classifier — the native (CPU) forward pass.
+//!
+//! Mirrors `python/compile/model.py::forward` + head. The per-request
+//! state (`h`/`c` per layer and the gate scratch) lives in a reusable
+//! [`InferenceState`], so steady-state serving performs ZERO heap
+//! allocations per inference — the Rust-CPU incarnation of the paper's
+//! §3.2 "preallocate and reuse c/h" optimization (see the ablation bench
+//! `ablations.rs::mempool`).
+
+use anyhow::Result;
+
+use crate::config::ModelShape;
+use crate::lstm::cell::{lstm_cell, CellScratch, LstmCellWeights};
+use crate::lstm::weights::WeightFile;
+use crate::tensor::Tensor;
+
+/// A loaded model: per-layer weights + classifier head.
+#[derive(Debug, Clone)]
+pub struct LstmModel {
+    pub shape: ModelShape,
+    layers: Vec<LstmCellWeights>,
+    w_out: Tensor,
+    b_out: Tensor,
+}
+
+/// Reusable per-worker inference state (paper §3.2 preallocation).
+#[derive(Debug, Clone)]
+pub struct InferenceState {
+    h: Vec<Vec<f32>>,
+    c: Vec<Vec<f32>>,
+    scratch: CellScratch,
+}
+
+impl InferenceState {
+    pub fn new(shape: ModelShape) -> Self {
+        Self {
+            h: vec![vec![0.0; shape.hidden]; shape.num_layers],
+            c: vec![vec![0.0; shape.hidden]; shape.num_layers],
+            scratch: CellScratch::new(shape.hidden),
+        }
+    }
+
+    fn reset(&mut self) {
+        for v in self.h.iter_mut().chain(self.c.iter_mut()) {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+}
+
+impl LstmModel {
+    pub fn new(shape: ModelShape, layers: Vec<LstmCellWeights>, w_out: Tensor, b_out: Tensor) -> Self {
+        assert_eq!(layers.len(), shape.num_layers);
+        Self { shape, layers, w_out, b_out }
+    }
+
+    /// Load from an MRNW weight file.
+    pub fn from_weight_file(shape: ModelShape, wf: &WeightFile) -> Result<Self> {
+        let (layers, w_out, b_out) = wf.to_model_weights(shape)?;
+        Ok(Self::new(shape, layers, w_out, b_out))
+    }
+
+    /// Classify one `[T, D]` window (flat slice, row-major). Returns logits.
+    /// Allocation-free except the small logits vec.
+    pub fn forward_window(&self, window: &[f32], state: &mut InferenceState) -> Vec<f32> {
+        let s = self.shape;
+        debug_assert_eq!(window.len(), s.seq_len * s.input_dim);
+        state.reset();
+        for t in 0..s.seq_len {
+            let x = &window[t * s.input_dim..(t + 1) * s.input_dim];
+            // First layer reads x; each next layer reads the previous
+            // layer's fresh h. Split-borrow trick keeps it in-place.
+            for li in 0..s.num_layers {
+                if li == 0 {
+                    lstm_cell(
+                        &self.layers[0],
+                        x,
+                        &mut state.h[0],
+                        &mut state.c[0],
+                        &mut state.scratch,
+                    );
+                } else {
+                    let (prev, cur) = state.h.split_at_mut(li);
+                    lstm_cell(
+                        &self.layers[li],
+                        &prev[li - 1],
+                        &mut cur[0],
+                        &mut state.c[li],
+                        &mut state.scratch,
+                    );
+                }
+            }
+        }
+        // Head: logits = h_last @ W_out + b_out.
+        let h_last = &state.h[s.num_layers - 1];
+        let mut logits = self.b_out.data().to_vec();
+        for (r, &hv) in h_last.iter().enumerate() {
+            let row = self.w_out.row(r);
+            for (l, wv) in logits.iter_mut().zip(row) {
+                *l += hv * wv;
+            }
+        }
+        logits
+    }
+
+    /// Classify a `[B, T, D]` batch tensor; returns `[B, C]` logits.
+    pub fn forward_batch(&self, x: &Tensor, state: &mut InferenceState) -> Tensor {
+        let s = self.shape;
+        assert_eq!(x.shape(), &[x.shape()[0], s.seq_len, s.input_dim]);
+        let batch = x.shape()[0];
+        let mut out = Vec::with_capacity(batch * s.num_classes);
+        for i in 0..batch {
+            out.extend(self.forward_window(x.slab(i), state));
+        }
+        Tensor::new(vec![batch, s.num_classes], out)
+    }
+
+    /// Predicted class for one window.
+    pub fn predict(&self, window: &[f32], state: &mut InferenceState) -> usize {
+        let logits = self.forward_window(window, state);
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    pub(crate) fn random_model(shape: ModelShape, seed: u64) -> LstmModel {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let mut in_dim = shape.input_dim;
+        for _ in 0..shape.num_layers {
+            let wn = (in_dim + shape.hidden) * 4 * shape.hidden;
+            let w: Vec<f32> = (0..wn).map(|_| rng.uniform(-0.2, 0.2)).collect();
+            let b: Vec<f32> = (0..4 * shape.hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
+            layers.push(LstmCellWeights::new(
+                Tensor::new(vec![in_dim + shape.hidden, 4 * shape.hidden], w),
+                Tensor::new(vec![4 * shape.hidden], b),
+                in_dim,
+                shape.hidden,
+            ));
+            in_dim = shape.hidden;
+        }
+        let w_out: Vec<f32> = (0..shape.hidden * shape.num_classes)
+            .map(|_| rng.uniform(-0.3, 0.3))
+            .collect();
+        let b_out = vec![0.0; shape.num_classes];
+        LstmModel::new(
+            shape,
+            layers,
+            Tensor::new(vec![shape.hidden, shape.num_classes], w_out),
+            Tensor::new(vec![shape.num_classes], b_out),
+        )
+    }
+
+    fn tiny_shape() -> ModelShape {
+        ModelShape { num_layers: 2, hidden: 8, input_dim: 3, seq_len: 10, num_classes: 4 }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = random_model(tiny_shape(), 1);
+        let mut st = InferenceState::new(m.shape);
+        let window = vec![0.1; 10 * 3];
+        let logits = m.forward_window(&window, &mut st);
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_deterministic_and_state_isolated() {
+        // Running window B after window A must give the same logits as
+        // running B alone — InferenceState fully resets (no state leak
+        // between requests, a serving-correctness invariant).
+        let m = random_model(tiny_shape(), 2);
+        let mut rng = Rng::new(3);
+        let wa: Vec<f32> = (0..30).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let wb: Vec<f32> = (0..30).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut st = InferenceState::new(m.shape);
+        let fresh = m.forward_window(&wb, &mut st.clone());
+        m.forward_window(&wa, &mut st);
+        let after_a = m.forward_window(&wb, &mut st);
+        assert_eq!(fresh, after_a);
+    }
+
+    #[test]
+    fn batch_equals_window_loop() {
+        let m = random_model(tiny_shape(), 4);
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..3 * 30).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = Tensor::new(vec![3, 10, 3], data.clone());
+        let mut st = InferenceState::new(m.shape);
+        let batch = m.forward_batch(&x, &mut st);
+        for i in 0..3 {
+            let single = m.forward_window(&data[i * 30..(i + 1) * 30], &mut st);
+            assert_eq!(batch.row(i), &single[..]);
+        }
+    }
+
+    #[test]
+    fn predict_in_range() {
+        let m = random_model(tiny_shape(), 6);
+        let mut st = InferenceState::new(m.shape);
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let w: Vec<f32> = (0..30).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            assert!(m.predict(&w, &mut st) < 4);
+        }
+    }
+
+    #[test]
+    fn deeper_model_changes_output() {
+        let s1 = ModelShape { num_layers: 1, ..tiny_shape() };
+        let s2 = tiny_shape();
+        let m1 = random_model(s1, 8);
+        let m2 = random_model(s2, 8);
+        let w = vec![0.5; 30];
+        let l1 = m1.forward_window(&w, &mut InferenceState::new(s1));
+        let l2 = m2.forward_window(&w, &mut InferenceState::new(s2));
+        assert_ne!(l1, l2);
+    }
+}

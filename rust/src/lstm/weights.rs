@@ -1,0 +1,237 @@
+//! MRNW weight-container parser (format written by `python/compile/aot.py`).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic[4] "MRNW" | u32 version | u32 n_tensors
+//! per tensor: u16 name_len | name | u8 ndim | u32 dims[ndim] | f32 data
+//! ```
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelShape;
+use crate::lstm::cell::LstmCellWeights;
+use crate::tensor::Tensor;
+
+/// A parsed MRNW file: named tensors in file order.
+#[derive(Debug, Clone)]
+pub struct WeightFile {
+    pub names: Vec<String>,
+    tensors: HashMap<String, Tensor>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+impl WeightFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let data = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&data).with_context(|| format!("parsing MRNW {path:?}"))
+    }
+
+    pub fn parse(mut data: &[u8]) -> Result<Self> {
+        let r = &mut data;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"MRNW" {
+            return Err(anyhow!("bad magic {magic:?}"));
+        }
+        let version = read_u32(r)?;
+        if version != 1 {
+            return Err(anyhow!("unsupported MRNW version {version}"));
+        }
+        let n = read_u32(r)? as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u16(r)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
+            let mut ndim_b = [0u8; 1];
+            r.read_exact(&mut ndim_b)?;
+            let ndim = ndim_b[0] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(r)? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let mut raw = vec![0u8; count * 4];
+            r.read_exact(&mut raw)?;
+            let vals: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name.clone(), Tensor::new(dims, vals));
+            names.push(name);
+        }
+        if !r.is_empty() {
+            return Err(anyhow!("{} trailing bytes after last tensor", r.len()));
+        }
+        Ok(Self { names, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor {name:?} missing (have {:?})", self.names))
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Tensors in file order — the exact order the AOT artifact's HLO
+    /// parameters expect (after the leading `x` input).
+    pub fn in_order(&self) -> Vec<&Tensor> {
+        self.names.iter().map(|n| &self.tensors[n]).collect()
+    }
+
+    /// Interpret the file as stacked-LSTM weights for `shape`:
+    /// layer{i}.w / layer{i}.b per layer, then head.w / head.b.
+    pub fn to_model_weights(
+        &self,
+        shape: ModelShape,
+    ) -> Result<(Vec<LstmCellWeights>, Tensor, Tensor)> {
+        let mut layers = Vec::with_capacity(shape.num_layers);
+        let mut in_dim = shape.input_dim;
+        for li in 0..shape.num_layers {
+            let w = self.get(&format!("layer{li}.w"))?.clone();
+            let b = self.get(&format!("layer{li}.b"))?.clone();
+            if w.shape() != [in_dim + shape.hidden, 4 * shape.hidden] {
+                return Err(anyhow!(
+                    "layer{li}.w shape {:?} != expected [{}, {}]",
+                    w.shape(),
+                    in_dim + shape.hidden,
+                    4 * shape.hidden
+                ));
+            }
+            layers.push(LstmCellWeights::new(w, b, in_dim, shape.hidden));
+            in_dim = shape.hidden;
+        }
+        let w_out = self.get("head.w")?.clone();
+        let b_out = self.get("head.b")?.clone();
+        if w_out.shape() != [shape.hidden, shape.num_classes] {
+            return Err(anyhow!("head.w shape {:?}", w_out.shape()));
+        }
+        Ok((layers, w_out, b_out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build an MRNW byte stream (mirrors the python writer).
+    pub(crate) fn build_mrnw(entries: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"MRNW");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (name, dims, data) in entries {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(dims.len() as u8);
+            for &d in *dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let bytes = build_mrnw(&[
+            ("a", &[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            ("b.c", &[3], &[5.0, 6.0, 7.0]),
+        ]);
+        let wf = WeightFile::parse(&bytes).unwrap();
+        assert_eq!(wf.names, vec!["a", "b.c"]);
+        assert_eq!(wf.get("a").unwrap().shape(), &[2, 2]);
+        assert_eq!(wf.get("b.c").unwrap().data(), &[5.0, 6.0, 7.0]);
+        assert_eq!(wf.in_order().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(WeightFile::parse(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut bytes = build_mrnw(&[("a", &[1], &[0.0])]);
+        bytes[4] = 9;
+        assert!(WeightFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = build_mrnw(&[("a", &[1], &[0.0])]);
+        bytes.push(0xFF);
+        assert!(WeightFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = build_mrnw(&[("a", &[4], &[0.0; 4])]);
+        assert!(WeightFile::parse(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_lists_names() {
+        let bytes = build_mrnw(&[("x", &[1], &[0.0])]);
+        let wf = WeightFile::parse(&bytes).unwrap();
+        let err = wf.get("y").unwrap_err().to_string();
+        assert!(err.contains("\"x\""), "{err}");
+    }
+
+    #[test]
+    fn to_model_weights_shape_check() {
+        // A consistent tiny model: 1 layer, input 2, hidden 3, 2 classes.
+        let shape = ModelShape {
+            num_layers: 1,
+            hidden: 3,
+            input_dim: 2,
+            seq_len: 4,
+            num_classes: 2,
+        };
+        let w0 = vec![0.1f32; (2 + 3) * 12];
+        let b0 = vec![0.0f32; 12];
+        let hw = vec![0.2f32; 3 * 2];
+        let hb = vec![0.0f32; 2];
+        let bytes = build_mrnw(&[
+            ("layer0.w", &[5, 12], &w0),
+            ("layer0.b", &[12], &b0),
+            ("head.w", &[3, 2], &hw),
+            ("head.b", &[2], &hb),
+        ]);
+        let wf = WeightFile::parse(&bytes).unwrap();
+        let (layers, w_out, _) = wf.to_model_weights(shape).unwrap();
+        assert_eq!(layers.len(), 1);
+        assert_eq!(w_out.shape(), &[3, 2]);
+
+        // Wrong hidden size must be rejected.
+        let bad = ModelShape { hidden: 4, ..shape };
+        assert!(wf.to_model_weights(bad).is_err());
+    }
+}

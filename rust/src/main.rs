@@ -1,0 +1,224 @@
+//! `mobirnn` — the launcher / CLI.
+//!
+//! ```text
+//! mobirnn figures [--fig 2|3|4|5|6|7] [--all]     regenerate paper figures
+//! mobirnn serve   [--addr A] [--policy P] [--device D] [--max-wait-ms N]
+//! mobirnn classify [--n N] [--policy P] [--device D] [--gpu-load U]
+//! mobirnn info                                      artifact manifest summary
+//! ```
+//!
+//! (The vendored crate set has no clap; parsing is a small hand-rolled
+//! flag walker — see `Args`.)
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use mobirnn::config::Manifest;
+use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::figures;
+use mobirnn::har;
+use mobirnn::runtime::Runtime;
+use mobirnn::server::Server;
+use mobirnn::simulator::DeviceProfile;
+
+/// Tiny flag parser: `--key value` and `--flag` pairs after a subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut argv = std::env::args().skip(1);
+        let cmd = argv.next().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i].trim_start_matches('-').to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.insert(k, rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(k, "true".into());
+                i += 1;
+            }
+        }
+        Self { cmd, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let r = match args.cmd.as_str() {
+        "figures" => cmd_figures(&args),
+        "serve" => cmd_serve(&args),
+        "classify" => cmd_classify(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "mobirnn — MobiRNN (EMDL'17) serving reproduction\n\
+         \n\
+         USAGE: mobirnn <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 figures   regenerate paper figures   [--fig N | --all]\n\
+         \x20 serve     TCP serving front-end      [--addr 127.0.0.1:7878] [--policy cost-model]\n\
+         \x20                                      [--device nexus5|nexus6p] [--max-wait-ms 2]\n\
+         \x20 classify  run N windows through the local router\n\
+         \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
+         \x20 info      print the artifact manifest summary\n\
+         \n\
+         POLICIES: gpu | fine | cpu | cpu-multi | threshold:<0..1> | cost-model"
+    );
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let n5 = DeviceProfile::nexus5();
+    let n6p = DeviceProfile::nexus6p();
+    match args.get("fig") {
+        None => figures::run_all(),
+        Some("2") => figures::print_fig2(&figures::fig2(&n5)),
+        Some("3") => figures::print_fig3(&figures::fig3(&n5)),
+        Some("4") => figures::print_fig4(&figures::fig4()),
+        Some("5") => figures::print_fig5(&figures::fig5(&n5)),
+        Some("6") => figures::print_fig6(&figures::fig6(&n5)),
+        Some("7") => figures::print_fig7(&figures::fig7(&n6p, 30, 42)),
+        Some(other) => return Err(anyhow!("unknown figure {other}")),
+    }
+    Ok(())
+}
+
+fn build_router(args: &Args) -> Result<(Router, Manifest)> {
+    let manifest = Manifest::load_default()?;
+    let device_name = args.get_or("device", "nexus5");
+    let profile = DeviceProfile::by_name(&device_name)
+        .ok_or_else(|| anyhow!("unknown device {device_name:?} (nexus5|nexus6p)"))?;
+    let policy = OffloadPolicy::parse(&args.get_or("policy", "cost-model"))
+        .ok_or_else(|| anyhow!("bad --policy (see --help)"))?;
+    let max_wait: u64 = args.get_or("max-wait-ms", "2").parse().context("--max-wait-ms")?;
+    let device = DeviceState::new(profile);
+    if let Some(u) = args.get("gpu-load") {
+        device.set_gpu_util(u.parse().context("--gpu-load")?);
+    }
+    if let Some(u) = args.get("cpu-load") {
+        device.set_cpu_util(u.parse().context("--cpu-load")?);
+    }
+    let runtime = Runtime::start(&manifest)?;
+    let router = Router::start(
+        &manifest,
+        runtime,
+        device,
+        RouterConfig {
+            policy,
+            max_wait: Duration::from_millis(max_wait),
+            ..Default::default()
+        },
+    )?;
+    Ok((router, manifest))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let (router, manifest) = build_router(args)?;
+    let server = Server::bind(&addr, router)?;
+    println!(
+        "mobirnn serving {} on {} (policy {}, device {}) — JSON lines; Ctrl-C to stop",
+        manifest.default_variant,
+        server.addr(),
+        args.get_or("policy", "cost-model"),
+        args.get_or("device", "nexus5"),
+    );
+    // Serve forever.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let n: usize = args.get_or("n", "10").parse().context("--n")?;
+    let (router, manifest) = build_router(args)?;
+    let ds = har::HarDataset::load(manifest.path(&manifest.har_test.file))?;
+    let n = n.min(ds.len());
+    println!("classifying {n} windows from {} ...", manifest.har_test.file);
+    let t0 = Instant::now();
+    let mut correct = 0;
+    for i in 0..n {
+        let reply = router.classify(ds.window(i).to_vec())?;
+        let gold = ds.labels[i] as usize;
+        if reply.class == gold {
+            correct += 1;
+        }
+        if i < 10 || i % 100 == 0 {
+            println!(
+                "  #{i:<4} pred={:<18} gold={:<18} target={:<9} sim={:.1}ms wall={:.2}ms",
+                reply.label,
+                har::CLASS_NAMES[gold],
+                reply.target,
+                reply.sim_ns as f64 / 1e6,
+                reply.wall_ns as f64 / 1e6,
+            );
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "\naccuracy {}/{n} = {:.1}%   wall {:.2}s ({:.1} inf/s)",
+        correct,
+        100.0 * correct as f64 / n as f64,
+        elapsed.as_secs_f64(),
+        n as f64 / elapsed.as_secs_f64()
+    );
+    println!("metrics: {}", router.metrics.to_json().to_json());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let man = Manifest::load_default()?;
+    println!("artifacts: {:?}", man.dir);
+    println!(
+        "trained model: {} (test_acc {:.1}%, {} params, {} train steps)",
+        man.default_variant,
+        100.0 * man.train_report.test_accuracy,
+        man.train_report.param_count,
+        man.train_report.steps
+    );
+    println!("har test set: {} windows", man.har_test.n);
+    println!("variants:");
+    for v in &man.variants {
+        println!(
+            "  {:<18} batch {:<2} {}  block_h={} vmem={}KiB mxu={:.1}%",
+            v.name,
+            v.batch,
+            if v.trained { "trained" } else { "seeded " },
+            v.block_h,
+            v.vmem_bytes / 1024,
+            100.0 * v.mxu_utilization,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,309 @@
+//! The PJRT executor thread and its [`Runtime`] handle.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Manifest, VariantInfo};
+use crate::lstm::weights::WeightFile;
+use crate::tensor::Tensor;
+
+enum Cmd {
+    /// Compile a variant now (idempotent).
+    Preload(String, mpsc::Sender<Result<(), String>>),
+    /// Execute variant on `[B, T, D]` input; reply with `[B, C]` logits.
+    Execute(String, Tensor, mpsc::Sender<Result<Tensor, String>>),
+    Shutdown,
+}
+
+/// Cumulative executor counters (exposed on the /stats path and used by
+/// the §Perf hot-path benches).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: AtomicU64,
+    pub exec_ns_total: AtomicU64,
+    pub compiles: AtomicU64,
+    pub compile_ns_total: AtomicU64,
+}
+
+/// Thread-safe handle to the PJRT executor thread.
+#[derive(Clone)]
+pub struct Runtime {
+    tx: mpsc::Sender<Cmd>,
+    stats: Arc<RuntimeStats>,
+    // Keep join handle so the thread is cleanly terminated on last drop.
+    joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: mpsc::Sender<Cmd>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weights staged as DEVICE BUFFERS once at compile time, so the hot
+    /// path never re-uploads them (§Perf: literal-arg execute re-staged
+    /// every weight tensor per call — ~35% of host-side latency at B=1).
+    weights: Vec<xla::PjRtBuffer>,
+    info: VariantInfo,
+}
+
+impl Runtime {
+    /// Spawn the executor thread over `manifest`'s artifact directory.
+    pub fn start(manifest: &Manifest) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let stats = Arc::new(RuntimeStats::default());
+        let man = manifest.clone();
+        let st = Arc::clone(&stats);
+        // Fail fast if the PJRT client cannot come up: report via channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(man, rx, ready_tx, st))
+            .context("spawning pjrt-executor")?;
+        ready_rx
+            .recv()
+            .context("executor thread died during startup")?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Self {
+            tx: tx.clone(),
+            stats,
+            joiner: Arc::new(Joiner { tx, handle: Mutex::new(Some(handle)) }),
+        })
+    }
+
+    /// Convenience: load the default artifact dir and start.
+    pub fn start_default() -> Result<Self> {
+        Self::start(&Manifest::load_default()?)
+    }
+
+    /// Compile `variant` now so the first request doesn't pay for it.
+    pub fn preload(&self, variant: &str) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Preload(variant.to_string(), rtx))
+            .map_err(|_| anyhow!("executor gone"))?;
+        rrx.recv().context("executor dropped reply")?.map_err(|e| anyhow!(e))
+    }
+
+    /// Execute a variant on `x` `[B, T, D]`; returns `[B, C]` logits.
+    /// Blocking; callable from any thread.
+    pub fn execute(&self, variant: &str, x: Tensor) -> Result<Tensor> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Execute(variant.to_string(), x, rtx))
+            .map_err(|_| anyhow!("executor gone"))?;
+        rrx.recv().context("executor dropped reply")?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> &RuntimeStats {
+        &self.stats
+    }
+
+    /// Mean XLA execution time over the runtime's lifetime (ns).
+    pub fn mean_exec_ns(&self) -> f64 {
+        let n = self.stats.executions.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.stats.exec_ns_total.load(Ordering::Relaxed) as f64 / n as f64
+    }
+}
+
+fn executor_loop(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Cmd>,
+    ready_tx: mpsc::Sender<Result<(), String>>,
+    stats: Arc<RuntimeStats>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready_tx.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, Compiled> = HashMap::new();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Shutdown => break,
+            Cmd::Preload(name, reply) => {
+                let r = ensure_compiled(&client, &manifest, &mut cache, &name, &stats)
+                    .map(|_| ())
+                    .map_err(|e| format!("{e:#}"));
+                let _ = reply.send(r);
+            }
+            Cmd::Execute(name, x, reply) => {
+                let r = (|| -> Result<Tensor> {
+                    ensure_compiled(&client, &manifest, &mut cache, &name, &stats)?;
+                    let compiled = cache.get(&name).expect("just compiled");
+                    run_compiled(compiled, &x, &stats)
+                })()
+                .map_err(|e| format!("{e:#}"));
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, Compiled>,
+    name: &str,
+    stats: &RuntimeStats,
+) -> Result<&'a Compiled> {
+    if !cache.contains_key(name) {
+        let info = manifest.variant(name)?.clone();
+        let t0 = Instant::now();
+        let hlo_path = manifest.path(&info.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO {hlo_path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("XLA compile {name}: {e}"))?;
+
+        // Marshal weights once, in manifest parameter order.
+        let wf = WeightFile::load(manifest.path(&info.weights))?;
+        if wf.names != info.param_names {
+            return Err(anyhow!(
+                "weight file order {:?} != manifest order {:?}",
+                wf.names,
+                info.param_names
+            ));
+        }
+        let mut weights = Vec::with_capacity(wf.len());
+        for t in wf.in_order() {
+            weights.push(
+                client
+                    .buffer_from_host_buffer(t.data(), t.shape(), None)
+                    .map_err(|e| anyhow!("staging weight buffer: {e}"))?,
+            );
+        }
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+        stats
+            .compile_ns_total
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        cache.insert(name.to_string(), Compiled { exe, weights, info });
+    }
+    Ok(cache.get(name).expect("present"))
+}
+
+fn run_compiled(compiled: &Compiled, x: &Tensor, stats: &RuntimeStats) -> Result<Tensor> {
+    let info = &compiled.info;
+    let expect = [info.batch, info.seq_len, info.input_dim];
+    if x.shape() != expect {
+        return Err(anyhow!("input shape {:?} != variant {:?} {:?}", x.shape(), info.name, expect));
+    }
+    let t0 = Instant::now();
+    let x_buf = compiled
+        .exe
+        .client()
+        .buffer_from_host_buffer(x.data(), x.shape(), None)
+        .map_err(|e| anyhow!("staging input buffer: {e}"))?;
+    // args = [x, w0, b0, ..., w_out, b_out] — weights already on device.
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + compiled.weights.len());
+    args.push(&x_buf);
+    args.extend(compiled.weights.iter());
+    let result = compiled
+        .exe
+        .execute_b::<&xla::PjRtBuffer>(&args)
+        .map_err(|e| anyhow!("execute {}: {e}", info.name))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let logits = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e}"))?;
+    let vals = logits.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+    stats.executions.fetch_add(1, Ordering::Relaxed);
+    stats.exec_ns_total.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if vals.len() != info.batch * info.num_classes {
+        return Err(anyhow!("output len {} != {}x{}", vals.len(), info.batch, info.num_classes));
+    }
+    Ok(Tensor::new(vec![info.batch, info.num_classes], vals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn start_and_preload_default() {
+        let Some(man) = manifest() else { return };
+        let rt = Runtime::start(&man).unwrap();
+        rt.preload(&man.default_variant).unwrap();
+        assert_eq!(rt.stats().compiles.load(Ordering::Relaxed), 1);
+        // Preload is idempotent.
+        rt.preload(&man.default_variant).unwrap();
+        assert_eq!(rt.stats().compiles.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn execute_shapes_and_determinism() {
+        let Some(man) = manifest() else { return };
+        let rt = Runtime::start(&man).unwrap();
+        let v = man.variant(&man.default_variant).unwrap();
+        let n = v.batch * v.seq_len * v.input_dim;
+        let x = Tensor::new(
+            vec![v.batch, v.seq_len, v.input_dim],
+            (0..n).map(|i| (i % 17) as f32 / 17.0 - 0.5).collect(),
+        );
+        let a = rt.execute(&v.name, x.clone()).unwrap();
+        assert_eq!(a.shape(), &[v.batch, v.num_classes]);
+        let b = rt.execute(&v.name, x).unwrap();
+        assert_eq!(a, b, "XLA execution must be deterministic");
+        assert!(a.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn execute_rejects_wrong_shape() {
+        let Some(man) = manifest() else { return };
+        let rt = Runtime::start(&man).unwrap();
+        let bad = Tensor::zeros(vec![1, 2, 3]);
+        let err = rt.execute(&man.default_variant, bad).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let Some(man) = manifest() else { return };
+        let rt = Runtime::start(&man).unwrap();
+        assert!(rt.execute("lstm_L9_H9_B9", Tensor::zeros(vec![1, 128, 9])).is_err());
+    }
+
+    #[test]
+    fn handle_clone_shares_executor() {
+        let Some(man) = manifest() else { return };
+        let rt = Runtime::start(&man).unwrap();
+        let rt2 = rt.clone();
+        rt2.preload(&man.default_variant).unwrap();
+        assert_eq!(rt.stats().compiles.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them on the PJRT
+//! CPU client, and executes them from the serving hot path.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The artifact signature is
+//! `logits = f(x, w0, b0, …, w_out, b_out)` with weights as HLO
+//! parameters; weights are marshalled once per variant into `xla::Literal`s
+//! and reused for every request (§3.2's preallocation at the XLA level).
+//!
+//! The `xla` wrapper types hold raw C pointers and are not `Send`, so the
+//! client and all compiled executables live on ONE dedicated executor
+//! thread; [`Runtime`] is a cheap, cloneable, thread-safe handle that
+//! sends commands over a channel — exactly the "single hardware queue"
+//! discipline a mobile GPU driver imposes, which keeps the serving
+//! architecture faithful to the simulated device.
+
+pub mod executor;
+
+pub use executor::{Runtime, RuntimeStats};

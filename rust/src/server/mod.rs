@@ -1,0 +1,24 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! The image's vendor set has no tokio, so this is a classic std::net
+//! threaded server: one acceptor, one handler thread per connection,
+//! all feeding the shared [`Router`]. The protocol is newline-delimited
+//! JSON (one object per line):
+//!
+//! ```text
+//! → {"type":"classify","id":7,"window":[... 1152 floats ...]}
+//! ← {"type":"result","id":7,"class":3,"label":"sitting",
+//!    "sim_latency_us":36123.4,"wall_latency_us":812.0,
+//!    "target":"gpu","batch_size":2}
+//! → {"type":"set_load","gpu":0.8,"cpu":0.5}      ← Fig 7 knobs
+//! ← {"type":"ok"}
+//! → {"type":"stats"}
+//! ← {"type":"stats", ...Metrics::to_json()...}
+//! → {"type":"ping"}   ← {"type":"pong"}
+//! ```
+
+pub mod protocol;
+pub mod tcp;
+
+pub use protocol::{handle_message, Response};
+pub use tcp::{Client, Server};

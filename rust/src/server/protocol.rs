@@ -1,0 +1,172 @@
+//! Wire protocol: parse request lines, produce response values.
+//!
+//! Pure functions over [`crate::json::Value`] so the protocol is testable
+//! without sockets; [`super::tcp`] adds the transport.
+
+use crate::coordinator::Router;
+use crate::json::{obj, Value};
+
+/// A response line plus whether the connection should close.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub value: Value,
+    pub close: bool,
+}
+
+fn err_response(id: Option<&Value>, msg: &str) -> Response {
+    let mut fields = vec![
+        ("type", Value::from("error")),
+        ("message", Value::from(msg)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
+    Response { value: obj(fields), close: false }
+}
+
+/// Handle one request line against the router. Never panics on malformed
+/// input — protocol errors become `{"type":"error"}` lines.
+pub fn handle_message(router: &Router, line: &str) -> Response {
+    let msg = match crate::json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_response(None, &format!("bad json: {e}")),
+    };
+    let id = msg.as_obj().and_then(|o| o.get("id")).cloned();
+    let id_ref = id.as_ref();
+    match msg.get("type").as_str() {
+        Some("ping") => Response { value: obj([("type", Value::from("pong"))]), close: false },
+        Some("quit") => Response { value: obj([("type", Value::from("bye"))]), close: true },
+        Some("stats") => {
+            let mut v = router.metrics.to_json();
+            if let Value::Obj(o) = &mut v {
+                o.insert("type".into(), Value::from("stats"));
+                o.insert("gpu_util".into(), Value::Num(router.device.gpu_util()));
+                o.insert("cpu_util".into(), Value::Num(router.device.cpu_util()));
+            }
+            Response { value: v, close: false }
+        }
+        Some("set_load") => {
+            if let Some(g) = msg.get("gpu").as_f64() {
+                router.device.set_gpu_util(g);
+            }
+            if let Some(c) = msg.get("cpu").as_f64() {
+                router.device.set_cpu_util(c);
+            }
+            Response { value: obj([("type", Value::from("ok"))]), close: false }
+        }
+        Some("classify") => {
+            let Some(arr) = msg.get("window").as_arr() else {
+                return err_response(id_ref, "classify requires a 'window' array");
+            };
+            let mut window = Vec::with_capacity(arr.len());
+            for v in arr {
+                match v.as_f64() {
+                    Some(f) => window.push(f as f32),
+                    None => return err_response(id_ref, "window must contain only numbers"),
+                }
+            }
+            match router.classify(window) {
+                Ok(reply) => {
+                    let mut fields = vec![
+                        ("type", Value::from("result")),
+                        ("class", Value::from(reply.class)),
+                        ("label", Value::from(reply.label.clone())),
+                        ("sim_latency_us", Value::Num(reply.sim_ns as f64 / 1e3)),
+                        ("wall_latency_us", Value::Num(reply.wall_ns as f64 / 1e3)),
+                        ("target", Value::from(reply.target)),
+                        ("batch_size", Value::from(reply.batch_size)),
+                    ];
+                    if let Some(id) = id_ref {
+                        fields.push(("id", id.clone()));
+                    }
+                    Response { value: obj(fields), close: false }
+                }
+                Err(e) => err_response(id_ref, &format!("{e:#}")),
+            }
+        }
+        Some(other) => err_response(id_ref, &format!("unknown type {other:?}")),
+        None => err_response(id_ref, "missing 'type' field"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+    use crate::coordinator::{DeviceState, OffloadPolicy, RouterConfig};
+    use crate::runtime::Runtime;
+    use crate::simulator::DeviceProfile;
+    use std::time::Duration;
+
+    fn router() -> Option<Router> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let man = Manifest::load(dir).unwrap();
+        let rt = Runtime::start(&man).unwrap();
+        Some(
+            Router::start(
+                &man,
+                rt,
+                DeviceState::new(DeviceProfile::nexus5()),
+                RouterConfig {
+                    policy: OffloadPolicy::CostModel,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn ping_pong_and_quit() {
+        let Some(r) = router() else { return };
+        let pong = handle_message(&r, r#"{"type":"ping"}"#);
+        assert_eq!(pong.value.get("type").as_str(), Some("pong"));
+        assert!(!pong.close);
+        let bye = handle_message(&r, r#"{"type":"quit"}"#);
+        assert!(bye.close);
+    }
+
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        let Some(r) = router() else { return };
+        for bad in ["", "not json", "{}", r#"{"type":"nope"}"#,
+                    r#"{"type":"classify"}"#,
+                    r#"{"type":"classify","window":["a"]}"#,
+                    r#"{"type":"classify","window":[1,2,3]}"#] {
+            let resp = handle_message(&r, bad);
+            assert_eq!(resp.value.get("type").as_str(), Some("error"), "{bad}");
+            assert!(!resp.close);
+        }
+    }
+
+    #[test]
+    fn classify_round_trip_with_id() {
+        let Some(r) = router() else { return };
+        let ds = crate::har::generate(1, 23);
+        let window: Vec<String> = ds.window(0).iter().map(|v| format!("{v}")).collect();
+        let line = format!(
+            r#"{{"type":"classify","id":42,"window":[{}]}}"#,
+            window.join(",")
+        );
+        let resp = handle_message(&r, &line);
+        assert_eq!(resp.value.get("type").as_str(), Some("result"), "{:?}", resp.value);
+        assert_eq!(resp.value.get("id").as_usize(), Some(42));
+        assert!(resp.value.get("class").as_usize().unwrap() < 6);
+        assert!(resp.value.get("sim_latency_us").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn set_load_then_stats_reflects() {
+        let Some(r) = router() else { return };
+        let ok = handle_message(&r, r#"{"type":"set_load","gpu":0.75,"cpu":0.2}"#);
+        assert_eq!(ok.value.get("type").as_str(), Some("ok"));
+        let stats = handle_message(&r, r#"{"type":"stats"}"#);
+        assert_eq!(stats.value.get("gpu_util").as_f64(), Some(0.75));
+        assert_eq!(stats.value.get("cpu_util").as_f64(), Some(0.2));
+    }
+}

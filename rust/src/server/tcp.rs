@@ -1,0 +1,226 @@
+//! Threaded TCP transport for the JSON-lines protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Router;
+use crate::server::protocol::handle_message;
+
+/// A running server; drop or call [`Server::stop`] to shut down.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    connections: Arc<AtomicU64>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
+    /// `router` until stopped.
+    pub fn bind(addr: &str, router: Router) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+        let stop2 = Arc::clone(&stop);
+        let conns2 = Arc::clone(&connections);
+        // Poll-accept so the stop flag is honored promptly.
+        listener.set_nonblocking(true)?;
+        let acceptor = std::thread::Builder::new()
+            .name("mobirnn-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            conns2.fetch_add(1, Ordering::Relaxed);
+                            let router = router.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("mobirnn-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_connection(stream, router);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning acceptor")?;
+        Ok(Self { addr: local, stop, connections, acceptor: Some(acceptor) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn connections_accepted(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(stream: TcpStream, router: Router) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_message(&router, &line);
+        let mut out = resp.value.to_json();
+        out.push('\n');
+        writer.write_all(out.as_bytes())?;
+        if resp.close {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one JSON line, read one JSON line back.
+    pub fn call(&mut self, msg: &crate::json::Value) -> Result<crate::json::Value> {
+        let mut line = msg.to_json();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        crate::json::parse(resp.trim()).map_err(Into::into)
+    }
+
+    /// Classify a window; returns (class, sim_latency_us, target).
+    pub fn classify(&mut self, window: &[f32], id: usize) -> Result<(usize, f64, String)> {
+        use crate::json::{obj, Value};
+        let msg = obj([
+            ("type", Value::from("classify")),
+            ("id", Value::from(id)),
+            ("window", Value::Arr(window.iter().map(|&v| Value::Num(v as f64)).collect())),
+        ]);
+        let resp = self.call(&msg)?;
+        if resp.get("type").as_str() != Some("result") {
+            return Err(anyhow::anyhow!("server error: {}", resp.to_json()));
+        }
+        Ok((
+            resp.get("class").as_usize().context("class")?,
+            resp.get("sim_latency_us").as_f64().context("sim_latency_us")?,
+            resp.get("target").as_str().unwrap_or("?").to_string(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+    use crate::coordinator::{DeviceState, OffloadPolicy, RouterConfig};
+    use crate::json::{obj, Value};
+    use crate::runtime::Runtime;
+    use crate::simulator::DeviceProfile;
+    use std::time::Duration;
+
+    fn server() -> Option<Server> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let man = Manifest::load(dir).unwrap();
+        let rt = Runtime::start(&man).unwrap();
+        let router = Router::start(
+            &man,
+            rt,
+            DeviceState::new(DeviceProfile::nexus5()),
+            RouterConfig {
+                policy: OffloadPolicy::CostModel,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        Some(Server::bind("127.0.0.1:0", router).unwrap())
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let Some(srv) = server() else { return };
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let pong = client.call(&obj([("type", Value::from("ping"))])).unwrap();
+        assert_eq!(pong.get("type").as_str(), Some("pong"));
+
+        let ds = crate::har::generate(2, 31);
+        let (class, sim_us, target) = client.classify(ds.window(0), 1).unwrap();
+        assert!(class < 6);
+        assert!(sim_us > 0.0);
+        assert_eq!(target, "gpu");
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let Some(srv) = server() else { return };
+        let ds = crate::har::generate(4, 37);
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let w = ds.window(i).to_vec();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    c.classify(&w, i).unwrap().0
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap() < 6);
+        }
+        assert_eq!(srv.connections_accepted(), 4);
+    }
+
+    #[test]
+    fn quit_closes_connection() {
+        let Some(srv) = server() else { return };
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let bye = client.call(&obj([("type", Value::from("quit"))])).unwrap();
+        assert_eq!(bye.get("type").as_str(), Some("bye"));
+        // Subsequent reads hit EOF -> call errors out.
+        assert!(client.call(&obj([("type", Value::from("ping"))])).is_err());
+    }
+
+    #[test]
+    fn stop_is_idempotent() {
+        let Some(mut srv) = server() else { return };
+        srv.stop();
+        srv.stop();
+    }
+}

@@ -1,0 +1,174 @@
+//! CPU execution-time model (single- and multi-threaded, paper §4.2/§4.4).
+//!
+//! The CPU path has no launch machinery — it is a straight roofline:
+//! `time = max(flops / throughput, bytes / bandwidth) (+ spawn overhead)`.
+//!
+//! Background CPU load (Fig 7's "similar low/medium/high CPU loads"):
+//! background tasks occupy whole cores first; our job runs on the
+//! remaining free cores, or — when every core is busy — fair-share
+//! time-slices on one core. The OS scheduler gives the foreground app a
+//! protected share (Android keeps foreground apps responsive), so
+//! degradation is gentler than the GPU's render preemption — which is
+//! exactly why the paper finds CPU the better target under high load.
+
+use crate::config::ModelShape;
+
+use super::device::DeviceProfile;
+
+/// Accounting from one simulated CPU run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CpuRunResult {
+    pub total_ns: u64,
+    pub compute_ns: u64,
+    pub mem_stall_ns: u64,
+    pub spawn_ns: u64,
+    /// Slowdown factor applied due to background load.
+    pub load_factor: f64,
+}
+
+/// Fraction of nominal throughput retained under background load `util`
+/// with `threads` worker threads on `cores` cores.
+fn load_retention(cores: usize, threads: usize, util: f64) -> f64 {
+    let util = util.clamp(0.0, 0.95);
+    let busy_cores = util * cores as f64;
+    let free_cores = (cores as f64 - busy_cores).max(0.0);
+    let want = threads.min(cores) as f64;
+    // Our threads get the free cores, floored by the foreground-priority
+    // guarantee — Android's scheduler protects the focused app with
+    // ~0.6 of one core even under heavy background load. Continuous in
+    // `util` (no decision flapping in the cost-model policy), and this
+    // gentle degradation (vs the GPU's frame-granular render preemption)
+    // is why the paper finds the CPU the better target under high load
+    // (§4.5 / Fig 7).
+    const FOREGROUND_FLOOR: f64 = 0.6;
+    free_cores.min(want).max(FOREGROUND_FLOOR) / want
+}
+
+/// Simulate one inference of `shape`×`batch` on the CPU with `threads`
+/// worker threads under background utilization `util`.
+pub fn cpu_run(
+    profile: &DeviceProfile,
+    shape: ModelShape,
+    batch: usize,
+    threads: usize,
+    util: f64,
+) -> CpuRunResult {
+    let threads = threads.max(1);
+    let flops = shape.flops_per_inference() * batch as u64;
+    let bytes = shape.weight_bytes_per_step() * shape.seq_len as u64;
+
+    let throughput = profile.cpu_mt_flops_per_ns(threads);
+    let retention = load_retention(profile.cpu_cores, threads, util);
+    let compute = flops as f64 / (throughput * retention);
+    // Weights stream once per timestep from LPDDR; CPU caches hold the
+    // small-H models entirely (32 KiB L1 / 2 MiB L2), so the memory term
+    // only binds for large hidden sizes.
+    let cacheable = shape.param_count() * 4 < 2 * 1024 * 1024;
+    let mem = if cacheable { 0.0 } else { bytes as f64 / profile.bandwidth_bytes_per_ns };
+    let spawn = if threads > 1 { profile.thread_spawn_ns } else { 0 };
+
+    let body = compute.max(mem);
+    CpuRunResult {
+        total_ns: spawn + body as u64,
+        compute_ns: compute as u64,
+        mem_stall_ns: (body - compute).max(0.0) as u64,
+        spawn_ns: spawn,
+        load_factor: 1.0 / retention,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n5() -> DeviceProfile {
+        DeviceProfile::nexus5()
+    }
+
+    #[test]
+    fn single_thread_anchor() {
+        // Calibration anchor (§4.4): 2l/32h single-thread ≈ 142 ms.
+        let r = cpu_run(&n5(), ModelShape::default(), 1, 1, 0.0);
+        let ms = r.total_ns as f64 / 1e6;
+        assert!((ms - 142.0).abs() < 15.0, "got {ms} ms");
+    }
+
+    #[test]
+    fn multithread_speeds_up() {
+        let s = ModelShape::default();
+        let one = cpu_run(&n5(), s, 1, 1, 0.0).total_ns;
+        let four = cpu_run(&n5(), s, 1, 4, 0.0).total_ns;
+        assert!(four < one / 2, "4 threads {four} vs 1 thread {one}");
+        // Sub-linear: speedup below 4x.
+        assert!(four > one / 4);
+    }
+
+    #[test]
+    fn threads_beyond_cores_no_gain() {
+        let s = ModelShape::default();
+        let four = cpu_run(&n5(), s, 1, 4, 0.0).total_ns;
+        let sixteen = cpu_run(&n5(), s, 1, 16, 0.0).total_ns;
+        assert_eq!(four, sixteen);
+    }
+
+    #[test]
+    fn load_degrades_gently_single_thread() {
+        // One busy core out of four leaves our single thread unaffected.
+        let s = ModelShape::default();
+        let idle = cpu_run(&n5(), s, 1, 1, 0.0).total_ns;
+        let some = cpu_run(&n5(), s, 1, 1, 0.25).total_ns;
+        assert_eq!(idle, some);
+        // High load degrades but stays bounded by the foreground floor.
+        let high = cpu_run(&n5(), s, 1, 1, 0.9).total_ns;
+        assert!(high > idle);
+        assert!(high < idle * 4);
+    }
+
+    #[test]
+    fn load_hits_multithread_harder() {
+        let s = ModelShape::default();
+        let mt_idle = cpu_run(&n5(), s, 1, 4, 0.0).total_ns;
+        let mt_high = cpu_run(&n5(), s, 1, 4, 0.8).total_ns;
+        assert!(mt_high > 2 * mt_idle);
+    }
+
+    #[test]
+    fn batch_scales_linearly() {
+        let s = ModelShape::default();
+        let b1 = cpu_run(&n5(), s, 1, 1, 0.0).total_ns;
+        let b4 = cpu_run(&n5(), s, 4, 1, 0.0).total_ns;
+        let ratio = b4 as f64 / b1 as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    fn small_models_compute_bound_large_mem_visible() {
+        let small = cpu_run(&n5(), ModelShape::default(), 1, 1, 0.0);
+        assert_eq!(small.mem_stall_ns, 0);
+        // H=512 exceeds the cache model; memory term participates.
+        let big = cpu_run(&n5(), ModelShape::new(2, 512), 1, 1, 0.0);
+        // At Java-level flop rates compute still dominates, but the term
+        // must at least be computed without panic and stay consistent.
+        assert_eq!(big.total_ns, big.spawn_ns + big.compute_ns.max(big.compute_ns + big.mem_stall_ns));
+    }
+
+    #[test]
+    fn nexus6p_faster_cpu() {
+        let s = ModelShape::default();
+        let n5t = cpu_run(&n5(), s, 1, 1, 0.0).total_ns;
+        let n6t = cpu_run(&DeviceProfile::nexus6p(), s, 1, 1, 0.0).total_ns;
+        assert!(n6t < n5t, "§4.2: 6P CPU must be faster");
+    }
+
+    #[test]
+    fn retention_bounds() {
+        for cores in [1usize, 4, 8] {
+            for threads in [1usize, 2, 8] {
+                for util in [0.0, 0.3, 0.6, 0.95] {
+                    let r = load_retention(cores, threads, util);
+                    assert!(r > 0.0 && r <= 1.0, "cores={cores} threads={threads} util={util}: {r}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Discrete-event simulation core: a virtual clock and a stable
+//! time-ordered event heap.
+//!
+//! Deliberately small: the GPU timeline ([`super::gpu`]) and the load
+//! injectors ([`super::load`]) need exactly (a) "pop the earliest event",
+//! (b) FIFO tie-breaking for equal timestamps (determinism), and (c) a
+//! monotonic clock that refuses to run backwards.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual clock in nanoseconds. Monotone by construction.
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now_ns: u64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Advance to an absolute time; panics on time travel.
+    pub fn advance_to(&mut self, t_ns: u64) {
+        assert!(t_ns >= self.now_ns, "clock moving backwards: {} -> {t_ns}", self.now_ns);
+        self.now_ns = t_ns;
+    }
+
+    /// Advance by a delta, saturating at u64::MAX.
+    pub fn advance_by(&mut self, dt_ns: u64) {
+        self.now_ns = self.now_ns.saturating_add(dt_ns);
+    }
+}
+
+struct HeapEntry<T> {
+    time_ns: u64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ns == other.time_ns && self.seq == other.seq
+    }
+}
+impl<T> Eq for HeapEntry<T> {}
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first, then by
+        // insertion sequence for stable FIFO ties.
+        other
+            .time_ns
+            .cmp(&self.time_ns)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with FIFO tie-breaking.
+pub struct EventHeap<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+    next_seq: u64,
+}
+
+impl<T> Default for EventHeap<T> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time_ns: u64, payload: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry { time_ns, seq, payload });
+    }
+
+    /// Pop the earliest event as (time, payload).
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.heap.pop().map(|e| (e.time_ns, e.payload))
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.time_ns)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(30, "c");
+        h.push(10, "a");
+        h.push(20, "b");
+        assert_eq!(h.pop(), Some((10, "a")));
+        assert_eq!(h.pop(), Some((20, "b")));
+        assert_eq!(h.pop(), Some((30, "c")));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn equal_times_are_fifo() {
+        let mut h = EventHeap::new();
+        for i in 0..10 {
+            h.push(5, i);
+        }
+        for i in 0..10 {
+            assert_eq!(h.pop(), Some((5, i)));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut h = EventHeap::new();
+        h.push(10, 1);
+        h.push(5, 0);
+        assert_eq!(h.pop(), Some((5, 0)));
+        h.push(7, 2);
+        assert_eq!(h.pop(), Some((7, 2)));
+        assert_eq!(h.pop(), Some((10, 1)));
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = Clock::new();
+        c.advance_to(100);
+        c.advance_by(50);
+        assert_eq!(c.now(), 150);
+        c.advance_to(150); // equal is fine
+    }
+
+    #[test]
+    #[should_panic]
+    fn clock_rejects_backwards() {
+        let mut c = Clock::new();
+        c.advance_to(100);
+        c.advance_to(99);
+    }
+
+    #[test]
+    fn clock_saturates() {
+        let mut c = Clock::new();
+        c.advance_to(u64::MAX - 1);
+        c.advance_by(100);
+        assert_eq!(c.now(), u64::MAX);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut h: EventHeap<()> = EventHeap::new();
+        assert!(h.is_empty());
+        h.push(1, ());
+        h.push(2, ());
+        assert_eq!(h.len(), 2);
+        h.pop();
+        assert_eq!(h.len(), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Background-load levels and trace generation (paper §4.5 / Fig 7).
+//!
+//! The paper buckets GPU utilization into low (<30%), medium (30–50%)
+//! and high (>70%) using ADB sampling. [`LoadLevel`] reproduces those
+//! buckets; [`LoadTrace`] draws a jittered utilization sample per
+//! inference so repeated runs show realistic spread (the dots in Fig 7),
+//! deterministically from a seed.
+
+use crate::util::Rng;
+
+/// The paper's three GPU-load buckets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoadLevel {
+    /// < 30% utilization.
+    Low,
+    /// 30–50% utilization.
+    Medium,
+    /// > 70% utilization.
+    High,
+}
+
+impl LoadLevel {
+    pub const ALL: [LoadLevel; 3] = [LoadLevel::Low, LoadLevel::Medium, LoadLevel::High];
+
+    /// Bucket midpoint used for headline numbers.
+    pub fn nominal_util(self) -> f64 {
+        match self {
+            LoadLevel::Low => 0.15,
+            LoadLevel::Medium => 0.40,
+            LoadLevel::High => 0.78,
+        }
+    }
+
+    /// Sampling range (min, max) within the bucket.
+    pub fn util_range(self) -> (f64, f64) {
+        match self {
+            LoadLevel::Low => (0.02, 0.30),
+            LoadLevel::Medium => (0.30, 0.50),
+            LoadLevel::High => (0.70, 0.92),
+        }
+    }
+
+    /// Classify a measured utilization into the paper's buckets
+    /// (the 50–70% gap goes to Medium's upper shoulder, as the paper's
+    /// methodology leaves it unassigned).
+    pub fn classify(util: f64) -> LoadLevel {
+        if util < 0.30 {
+            LoadLevel::Low
+        } else if util <= 0.70 {
+            LoadLevel::Medium
+        } else {
+            LoadLevel::High
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LoadLevel::Low => "low (<30%)",
+            LoadLevel::Medium => "medium (30-50%)",
+            LoadLevel::High => "high (>70%)",
+        }
+    }
+}
+
+/// Deterministic per-inference utilization sampler within a bucket.
+#[derive(Debug, Clone)]
+pub struct LoadTrace {
+    level: LoadLevel,
+    rng: Rng,
+}
+
+impl LoadTrace {
+    pub fn new(level: LoadLevel, seed: u64) -> Self {
+        Self { level, rng: Rng::new(seed) }
+    }
+
+    pub fn level(&self) -> LoadLevel {
+        self.level
+    }
+
+    /// Next sampled utilization in the bucket's range.
+    pub fn sample(&mut self) -> f64 {
+        let (lo, hi) = self.level.util_range();
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_in_range() {
+        for level in LoadLevel::ALL {
+            let (lo, hi) = level.util_range();
+            let nom = level.nominal_util();
+            assert!(nom >= lo && nom <= hi, "{level:?}");
+        }
+    }
+
+    #[test]
+    fn classify_matches_paper_buckets() {
+        assert_eq!(LoadLevel::classify(0.1), LoadLevel::Low);
+        assert_eq!(LoadLevel::classify(0.29), LoadLevel::Low);
+        assert_eq!(LoadLevel::classify(0.35), LoadLevel::Medium);
+        assert_eq!(LoadLevel::classify(0.75), LoadLevel::High);
+        assert_eq!(LoadLevel::classify(0.95), LoadLevel::High);
+    }
+
+    #[test]
+    fn samples_stay_in_bucket() {
+        for level in LoadLevel::ALL {
+            let mut trace = LoadTrace::new(level, 99);
+            let (lo, hi) = level.util_range();
+            for _ in 0..1000 {
+                let u = trace.sample();
+                assert!(u >= lo && u < hi, "{level:?}: {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let mut a = LoadTrace::new(LoadLevel::Medium, 5);
+        let mut b = LoadTrace::new(LoadLevel::Medium, 5);
+        for _ in 0..50 {
+            assert_eq!(a.sample(), b.sample());
+        }
+    }
+
+    #[test]
+    fn levels_ordered() {
+        assert!(LoadLevel::Low.nominal_util() < LoadLevel::Medium.nominal_util());
+        assert!(LoadLevel::Medium.nominal_util() < LoadLevel::High.nominal_util());
+    }
+}

@@ -1,0 +1,134 @@
+//! Discrete-event mobile-SoC simulator — the hardware substitute for the
+//! paper's Nexus 5 / Nexus 6P testbed (DESIGN.md §2).
+//!
+//! Every figure in the paper is a *latency shape* produced by four
+//! mechanisms, and the simulator models exactly those four:
+//!
+//! 1. **Dispatch overhead per GPU "function call"** (`device::dispatch_ns`)
+//!    — the paper's §3.1 observation that a CUDA-style factorization makes
+//!    one call per work unit ("120 function calls to the GPU") while
+//!    RenderScript makes one call per kernel containing many units.
+//! 2. **Limited parallel slots** (`device::gpu_slots`) — "scheduled twelve
+//!    at a time" fixes Nexus 5 at 12; units within a launch run in waves.
+//! 3. **Shared memory bandwidth** (`device::bandwidth_bytes_per_ns`) —
+//!    CPU and GPU share LPDDR on a phone SoC; weight streaming per
+//!    timestep caps GPU benefit as hidden size grows (Fig 5 saturation).
+//! 4. **Interference** (`load`) — UI rendering preempts the GPU at frame
+//!    granularity (Fig 7); background CPU tasks occupy cores.
+//!
+//! Calibration anchors and tolerances are documented in [`device`] and
+//! asserted by `rust/tests/calibration.rs`.
+
+pub mod cpu;
+pub mod des;
+pub mod device;
+pub mod gpu;
+pub mod load;
+pub mod workunit;
+
+use crate::config::ModelShape;
+
+pub use cpu::{cpu_run, CpuRunResult};
+pub use des::{Clock, EventHeap};
+pub use device::DeviceProfile;
+pub use gpu::{gpu_run, GpuRunResult};
+pub use load::LoadLevel;
+pub use workunit::{build_trace, build_trace_with_slots, Factorization, KernelTrace, Launch, TraceOpts, WorkUnit};
+
+/// Where an inference runs (the coordinator's offload decision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// Mobile GPU with the given factorization strategy.
+    Gpu(Factorization),
+    /// Single-threaded CPU (the paper's baseline bars).
+    CpuSingle,
+    /// Multi-threaded CPU with `n` threads (paper §4.4).
+    CpuMulti(usize),
+}
+
+/// Simulated latency of ONE inference of `shape` at `batch` on `target`
+/// under background utilization `util` (0..1). Returns nanoseconds.
+///
+/// This is the single entry point the coordinator, figures and benches
+/// use; it dispatches to the GPU DES or the CPU analytical model.
+pub fn simulate_inference(
+    profile: &DeviceProfile,
+    shape: ModelShape,
+    batch: usize,
+    target: Target,
+    util: f64,
+) -> u64 {
+    match target {
+        Target::Gpu(fact) => {
+            let trace =
+                build_trace_with_slots(shape, batch, fact, &TraceOpts::mobirnn(), profile.gpu_slots);
+            gpu_run(profile, &trace, util, 0).total_ns
+        }
+        Target::CpuSingle => cpu_run(profile, shape, batch, 1, util).total_ns,
+        Target::CpuMulti(n) => cpu_run(profile, shape, batch, n, util).total_ns,
+    }
+}
+
+/// Simulated latency with explicit trace options (ablation entry point).
+pub fn simulate_gpu_with_opts(
+    profile: &DeviceProfile,
+    shape: ModelShape,
+    batch: usize,
+    fact: Factorization,
+    opts: &TraceOpts,
+    util: f64,
+) -> u64 {
+    let trace = build_trace_with_slots(shape, batch, fact, opts, profile.gpu_slots);
+    gpu_run(profile, &trace, util, 0).total_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+
+    #[test]
+    fn gpu_coarse_beats_cpu_on_default_model() {
+        // The paper's headline direction (Fig 4): MobiRNN (coarse) GPU is
+        // multiple times faster than single-thread CPU on Nexus 5.
+        let p = DeviceProfile::nexus5();
+        let shape = ModelShape::default();
+        let gpu = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Coarse), 0.0);
+        let cpu = simulate_inference(&p, shape, 1, Target::CpuSingle, 0.0);
+        assert!(gpu < cpu, "gpu {gpu} !< cpu {cpu}");
+    }
+
+    #[test]
+    fn gpu_fine_loses_to_cpu() {
+        // Fig 3: CUDA-style factorization on a mobile GPU is SLOWER than CPU.
+        let p = DeviceProfile::nexus5();
+        let shape = ModelShape::default();
+        let gpu = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Fine), 0.0);
+        let cpu = simulate_inference(&p, shape, 1, Target::CpuSingle, 0.0);
+        assert!(gpu > cpu, "fine gpu {gpu} should lose to cpu {cpu}");
+    }
+
+    #[test]
+    fn multithread_between_single_and_gpu() {
+        // Fig 6: MT-CPU recovers most of the GPU benefit.
+        let p = DeviceProfile::nexus5();
+        let shape = ModelShape::default();
+        let single = simulate_inference(&p, shape, 1, Target::CpuSingle, 0.0);
+        let multi = simulate_inference(&p, shape, 1, Target::CpuMulti(4), 0.0);
+        let gpu = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Coarse), 0.0);
+        assert!(multi < single);
+        assert!(gpu < multi);
+    }
+
+    #[test]
+    fn load_increases_latency_monotonically() {
+        let p = DeviceProfile::nexus5();
+        let shape = ModelShape::default();
+        let mut last = 0;
+        for util in [0.0, 0.2, 0.4, 0.6, 0.8] {
+            let t = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Coarse), util);
+            assert!(t >= last, "util {util}: {t} < {last}");
+            last = t;
+        }
+    }
+}

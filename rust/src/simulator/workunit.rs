@@ -1,0 +1,364 @@
+//! Work-unit IR + factorization strategies (paper Fig 2).
+//!
+//! One LSTM inference decomposes, per timestep and per layer, into
+//! (a) the combined gate GEMM `[B, I+H] @ [I+H, 4H]` and (b) the
+//! point-wise gate tail. How those ops are chopped into *work units* and
+//! grouped into *launches* ("function calls to the GPU") is exactly the
+//! contrast the paper draws:
+//!
+//! - **Fine (CUDA-style, Fig 2b)**: one work unit per output column; one
+//!   launch per unit — "120 work units … leading to 120 function calls".
+//! - **Coarse (RenderScript-style, Fig 2c)**: the framework packs columns
+//!   into `gpu_slots` units and dispatches them as a single launch —
+//!   "12 work units that compute ten vector products each".
+//!
+//! [`TraceOpts`] toggles the paper's §3.2–3.3 secondary optimizations so
+//! ablation benches can switch them off one at a time.
+
+use crate::config::ModelShape;
+
+/// How GEMM columns are packed into work units and launches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Factorization {
+    /// CUDA-desktop style: 1 column = 1 unit = 1 launch (paper §3.1).
+    Fine,
+    /// MobiRNN/RenderScript style: pack into `slots` units, 1 launch (§3.2).
+    Coarse,
+}
+
+/// The §3.2/§3.3 optimization toggles (all ON = MobiRNN).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOpts {
+    /// Single combined `[x;h]` GEMM vs separate input & hidden GEMMs.
+    pub combined_gemm: bool,
+    /// Fused point-wise tail (1 launch) vs one launch per point-wise op.
+    pub fused_pointwise: bool,
+    /// Preallocated, reused c/h buffers vs on-demand Allocation per launch.
+    pub mem_pool: bool,
+    /// Divergence-free kernels; when false, units pay a serialization
+    /// penalty inside the streaming processor (§3.3).
+    pub divergence_free: bool,
+}
+
+impl TraceOpts {
+    /// All MobiRNN optimizations enabled (the paper's system).
+    pub fn mobirnn() -> Self {
+        Self { combined_gemm: true, fused_pointwise: true, mem_pool: true, divergence_free: true }
+    }
+
+    /// A naive port with none of the §3.2–3.3 optimizations.
+    pub fn naive() -> Self {
+        Self {
+            combined_gemm: false,
+            fused_pointwise: false,
+            mem_pool: false,
+            divergence_free: false,
+        }
+    }
+}
+
+/// One schedulable unit of GPU work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// Arithmetic in the unit.
+    pub flops: u64,
+    /// Bytes it must stream from shared memory (weights dominate).
+    pub bytes: u64,
+}
+
+/// One "function call to the GPU": a dispatch carrying `units` that run
+/// in waves across the device's slots.
+#[derive(Debug, Clone)]
+pub struct Launch {
+    pub units: Vec<WorkUnit>,
+    /// Unit bodies contain divergent control flow (§3.3 penalty).
+    pub divergent: bool,
+    /// Requires a fresh on-demand Allocation (no buffer pool).
+    pub needs_alloc: bool,
+}
+
+impl Launch {
+    pub fn total_flops(&self) -> u64 {
+        self.units.iter().map(|u| u.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.units.iter().map(|u| u.bytes).sum()
+    }
+
+    pub fn max_unit_flops(&self) -> u64 {
+        self.units.iter().map(|u| u.flops).max().unwrap_or(0)
+    }
+}
+
+/// The full launch sequence of one inference (sequential dependencies:
+/// launches execute in order — the RNN's serial structure, §2.1).
+#[derive(Debug, Clone)]
+pub struct KernelTrace {
+    pub launches: Vec<Launch>,
+    pub shape: ModelShape,
+    pub batch: usize,
+}
+
+impl KernelTrace {
+    pub fn num_launches(&self) -> usize {
+        self.launches.len()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.launches.iter().map(Launch::total_flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.launches.iter().map(Launch::total_bytes).sum()
+    }
+}
+
+/// Split one GEMM of `cols` output columns (each costing `flops_per_col`
+/// / `bytes_per_col`) into launches per the strategy.
+fn factorize_gemm(
+    fact: Factorization,
+    slots: usize,
+    cols: usize,
+    flops_per_col: u64,
+    bytes_per_col: u64,
+    opts: &TraceOpts,
+) -> Vec<Launch> {
+    let divergent = !opts.divergence_free;
+    let needs_alloc = !opts.mem_pool;
+    match fact {
+        Factorization::Fine => (0..cols)
+            .map(|_| Launch {
+                units: vec![WorkUnit { flops: flops_per_col, bytes: bytes_per_col }],
+                divergent,
+                needs_alloc,
+            })
+            .collect(),
+        Factorization::Coarse => {
+            // Pack into at most `slots` units: Fig 2c's "12 work units
+            // that compute ten vector products each".
+            let n_units = slots.min(cols).max(1);
+            let per = cols / n_units;
+            let extra = cols % n_units;
+            let units: Vec<WorkUnit> = (0..n_units)
+                .map(|i| {
+                    let c = per + usize::from(i < extra);
+                    WorkUnit { flops: flops_per_col * c as u64, bytes: bytes_per_col * c as u64 }
+                })
+                .collect();
+            vec![Launch { units, divergent, needs_alloc }]
+        }
+    }
+}
+
+/// Point-wise tail of one cell: 4H activations + elementwise combine.
+fn pointwise_launches(
+    fact: Factorization,
+    slots: usize,
+    hidden: usize,
+    batch: usize,
+    opts: &TraceOpts,
+) -> Vec<Launch> {
+    let divergent = !opts.divergence_free;
+    let needs_alloc = !opts.mem_pool;
+    // ~9 flops per hidden element (3σ + 2tanh + 2mul + 2add, amortized),
+    // state bytes: read c + write c,h.
+    let total_flops = (9 * hidden * batch) as u64;
+    let total_bytes = (3 * hidden * batch * 4) as u64;
+    let n_ops = if opts.fused_pointwise { 1 } else { 5 }; // σi,σf,σo,tanh-g,combine
+    let mut out = Vec::new();
+    for _ in 0..n_ops {
+        let fl = total_flops / n_ops as u64;
+        let by = total_bytes / n_ops as u64;
+        match fact {
+            Factorization::Fine => {
+                // Desktop style still launches per slot-sized chunk here;
+                // the dominant fine-grained cost lives in the GEMM columns.
+                let n_units = slots.min(hidden).max(1);
+                out.extend((0..n_units).map(|_| Launch {
+                    units: vec![WorkUnit { flops: fl / n_units as u64, bytes: by / n_units as u64 }],
+                    divergent,
+                    needs_alloc,
+                }));
+            }
+            Factorization::Coarse => {
+                let n_units = slots.min(hidden).max(1);
+                let units = (0..n_units)
+                    .map(|_| WorkUnit { flops: fl / n_units as u64, bytes: by / n_units as u64 })
+                    .collect();
+                out.push(Launch { units, divergent, needs_alloc });
+            }
+        }
+    }
+    out
+}
+
+/// Build the launch trace of one inference.
+///
+/// `slots` is read from the Nexus-5 profile's 12 by the caller via
+/// [`build_trace_with_slots`]; this convenience uses 12 (the paper's
+/// "scheduled twelve at a time").
+pub fn build_trace(shape: ModelShape, batch: usize, fact: Factorization, opts: &TraceOpts) -> KernelTrace {
+    build_trace_with_slots(shape, batch, fact, opts, 12)
+}
+
+/// Build the launch trace with an explicit slot width (device-specific).
+pub fn build_trace_with_slots(
+    shape: ModelShape,
+    batch: usize,
+    fact: Factorization,
+    opts: &TraceOpts,
+    slots: usize,
+) -> KernelTrace {
+    let mut launches = Vec::new();
+    let h = shape.hidden;
+    for _t in 0..shape.seq_len {
+        let mut in_dim = shape.input_dim;
+        for _l in 0..shape.num_layers {
+            let cols = 4 * h;
+            if opts.combined_gemm {
+                // One [B, I+H] @ [I+H, 4H] GEMM.
+                let fpc = (2 * (in_dim + h) * batch) as u64;
+                let bpc = ((in_dim + h) * 4) as u64; // one weight column
+                launches.extend(factorize_gemm(fact, slots, cols, fpc, bpc, opts));
+            } else {
+                // Separate input and hidden GEMMs (pre-§3.3 form):
+                // same math, one extra pass + one extra dispatch set.
+                let fpc_x = (2 * in_dim * batch) as u64;
+                let bpc_x = (in_dim * 4) as u64;
+                let fpc_h = (2 * h * batch) as u64;
+                let bpc_h = (h * 4) as u64;
+                launches.extend(factorize_gemm(fact, slots, cols, fpc_x, bpc_x, opts));
+                launches.extend(factorize_gemm(fact, slots, cols, fpc_h, bpc_h, opts));
+            }
+            launches.extend(pointwise_launches(fact, slots, h, batch, opts));
+            in_dim = h;
+        }
+    }
+    // Classifier head: one small GEMM launch.
+    let fpc = (2 * h * batch) as u64;
+    let bpc = (h * 4) as u64;
+    launches.extend(factorize_gemm(fact, slots, shape.num_classes, fpc, bpc, opts));
+    KernelTrace { launches, shape, batch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_shape() -> ModelShape {
+        ModelShape::default()
+    }
+
+    #[test]
+    fn fine_has_one_launch_per_column() {
+        // Paper §3.1's example: a gate GEMM with 4H=128 columns issues 128
+        // "function calls" per layer-step under the fine factorization.
+        let t = build_trace(default_shape(), 1, Factorization::Fine, &TraceOpts::mobirnn());
+        // per layer-step: 128 gemm launches + 12 pointwise; 2 layers, 128 steps
+        let per_step_layer = 128 + 12;
+        let expected = 128 * 2 * per_step_layer + 6; // + head (6 cols fine)
+        assert_eq!(t.num_launches(), expected);
+    }
+
+    #[test]
+    fn coarse_has_two_launches_per_cell() {
+        let t = build_trace(default_shape(), 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        // per layer-step: 1 gemm + 1 fused pointwise; + 1 head
+        assert_eq!(t.num_launches(), 128 * 2 * 2 + 1);
+    }
+
+    #[test]
+    fn coarse_packs_into_slot_units() {
+        // Fig 2c: the paper's 32x120 example -> 12 units of 10 columns.
+        let shape = ModelShape { num_layers: 1, hidden: 30, input_dim: 2, seq_len: 1, num_classes: 6 };
+        let t = build_trace(shape, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        let gemm = &t.launches[0];
+        assert_eq!(gemm.units.len(), 12);
+        // 120 columns over 12 units = 10 each, perfectly even
+        let fl: Vec<u64> = gemm.units.iter().map(|u| u.flops).collect();
+        assert!(fl.iter().all(|&f| f == fl[0]));
+    }
+
+    #[test]
+    fn uneven_columns_distribute_within_one() {
+        let shape = ModelShape { num_layers: 1, hidden: 25, input_dim: 2, seq_len: 1, num_classes: 6 };
+        // 100 columns over 12 units: 4 units of 9, 8 of 8.
+        let t = build_trace(shape, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        let sizes: Vec<u64> = t.launches[0].units.iter().map(|u| u.flops).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        let fpc = 2 * (2 + 25) as u64;
+        assert!(max - min <= fpc, "unit imbalance > 1 column");
+    }
+
+    #[test]
+    fn total_flops_invariant_under_factorization() {
+        // Chopping differently must never change the arithmetic performed.
+        let s = default_shape();
+        let fine = build_trace(s, 1, Factorization::Fine, &TraceOpts::mobirnn());
+        let coarse = build_trace(s, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        assert_eq!(fine.total_flops(), coarse.total_flops());
+    }
+
+    #[test]
+    fn split_gemm_costs_more_dispatches_same_flops_order() {
+        let s = default_shape();
+        let combined = build_trace(s, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        let mut o = TraceOpts::mobirnn();
+        o.combined_gemm = false;
+        let split = build_trace(s, 1, Factorization::Coarse, &o);
+        assert!(split.num_launches() > combined.num_launches());
+        // split performs the same MACs (x-part + h-part = combined part)
+        assert_eq!(split.total_flops(), combined.total_flops());
+    }
+
+    #[test]
+    fn unfused_pointwise_multiplies_launches() {
+        let s = default_shape();
+        let mut o = TraceOpts::mobirnn();
+        o.fused_pointwise = false;
+        let unfused = build_trace(s, 1, Factorization::Coarse, &o);
+        let fused = build_trace(s, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        assert_eq!(unfused.num_launches(), 128 * 2 * 6 + 1); // 1 gemm + 5 pw
+        assert!(unfused.num_launches() > fused.num_launches());
+    }
+
+    #[test]
+    fn naive_opts_flag_launches() {
+        let s = default_shape();
+        let t = build_trace(s, 1, Factorization::Coarse, &TraceOpts::naive());
+        assert!(t.launches.iter().all(|l| l.divergent && l.needs_alloc));
+        let t2 = build_trace(s, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        assert!(t2.launches.iter().all(|l| !l.divergent && !l.needs_alloc));
+    }
+
+    #[test]
+    fn batch_scales_flops_not_launches() {
+        let s = default_shape();
+        let b1 = build_trace(s, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        let b4 = build_trace(s, 4, Factorization::Coarse, &TraceOpts::mobirnn());
+        assert_eq!(b1.num_launches(), b4.num_launches());
+        assert!(b4.total_flops() > 3 * b1.total_flops());
+    }
+
+    #[test]
+    fn bytes_track_weight_streaming() {
+        // Per-inference weight traffic ~= weight_bytes_per_step * seq_len.
+        let s = default_shape();
+        let t = build_trace(s, 1, Factorization::Coarse, &TraceOpts::mobirnn());
+        let weights = s.weight_bytes_per_step() * s.seq_len as u64;
+        let total = t.total_bytes();
+        // Within [90%, 200%]: launches stream the weight matrices (biases
+        // ride along with dispatch, state traffic is small).
+        assert!(total * 10 > weights * 9, "weights must dominate: {total} vs {weights}");
+        assert!(total < 2 * weights, "state traffic should not dominate");
+    }
+
+    #[test]
+    fn custom_slot_width_respected() {
+        let s = default_shape();
+        let t = build_trace_with_slots(s, 1, Factorization::Coarse, &TraceOpts::mobirnn(), 16);
+        assert_eq!(t.launches[0].units.len(), 16);
+    }
+}

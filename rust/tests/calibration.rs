@@ -1,0 +1,176 @@
+//! Calibration suite: every numeric anchor quoted from the paper must
+//! hold on the simulated devices (DESIGN.md §6). If someone retunes a
+//! device constant and silently breaks a figure, this fails first.
+
+use mobirnn::config::ModelShape;
+use mobirnn::simulator::{
+    simulate_gpu_with_opts, simulate_inference, DeviceProfile, Factorization, Target, TraceOpts,
+};
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+#[test]
+fn anchor_cpu_142ms() {
+    // §4.4: "single thread CPU time is 142ms on average" (Nexus 5, 2l/32h).
+    let t = simulate_inference(&DeviceProfile::nexus5(), ModelShape::default(), 1, Target::CpuSingle, 0.0);
+    assert!((ms(t) - 142.0).abs() < 10.0, "got {} ms", ms(t));
+}
+
+#[test]
+fn anchor_nexus5_speedup_393() {
+    // §4.2: "at least 3.93 times faster on the GPU compared to the CPU".
+    let p = DeviceProfile::nexus5();
+    let s = ModelShape::default();
+    let cpu = simulate_inference(&p, s, 1, Target::CpuSingle, 0.0) as f64;
+    let gpu = simulate_inference(&p, s, 1, Target::Gpu(Factorization::Coarse), 0.0) as f64;
+    let speedup = cpu / gpu;
+    assert!((speedup - 3.93).abs() < 0.3, "got {speedup}");
+}
+
+#[test]
+fn anchor_nexus6p_speedup_283() {
+    // §4.2: 2.83x on the Nexus 6P.
+    let p = DeviceProfile::nexus6p();
+    let s = ModelShape::default();
+    let cpu = simulate_inference(&p, s, 1, Target::CpuSingle, 0.0) as f64;
+    let gpu = simulate_inference(&p, s, 1, Target::Gpu(Factorization::Coarse), 0.0) as f64;
+    let speedup = cpu / gpu;
+    assert!((speedup - 2.83).abs() < 0.35, "got {speedup}");
+}
+
+#[test]
+fn anchor_cuda_style_4x_slower() {
+    // §3.1/abstract: desktop-style offloading "up to 4 times slower".
+    let p = DeviceProfile::nexus5();
+    let worst = [(1usize, 32usize), (2, 32), (3, 32), (2, 64), (2, 128), (2, 256)]
+        .iter()
+        .map(|&(l, h)| {
+            let s = ModelShape::new(l, h);
+            let cpu = simulate_inference(&p, s, 1, Target::CpuSingle, 0.0) as f64;
+            let gpu = simulate_inference(&p, s, 1, Target::Gpu(Factorization::Fine), 0.0) as f64;
+            gpu / cpu
+        })
+        .fold(0.0f64, f64::max);
+    assert!((3.2..4.8).contains(&worst), "worst fine slowdown {worst}");
+}
+
+#[test]
+fn anchor_6p_cpu_faster_gpu_comparable() {
+    // §4.2: "running the RNN model on the CPU is faster on the Nexus 6P
+    // ... the performance of the RNN model on the GPU are comparable".
+    let s = ModelShape::default();
+    let n5 = DeviceProfile::nexus5();
+    let n6 = DeviceProfile::nexus6p();
+    let cpu5 = simulate_inference(&n5, s, 1, Target::CpuSingle, 0.0) as f64;
+    let cpu6 = simulate_inference(&n6, s, 1, Target::CpuSingle, 0.0) as f64;
+    assert!(cpu6 < 0.8 * cpu5);
+    let gpu5 = simulate_inference(&n5, s, 1, Target::Gpu(Factorization::Coarse), 0.0) as f64;
+    let gpu6 = simulate_inference(&n6, s, 1, Target::Gpu(Factorization::Coarse), 0.0) as f64;
+    assert!((gpu6 / gpu5 - 1.0).abs() < 0.2, "GPU ratio {}", gpu6 / gpu5);
+}
+
+#[test]
+fn anchor_mt_cpu_captures_70_percent() {
+    // §4/abstract: multithreaded CPU gets ≥70.5% of the GPU benefit.
+    let p = DeviceProfile::nexus5();
+    for (l, h) in [(1, 32), (2, 32), (3, 32), (2, 64), (2, 128), (2, 256)] {
+        let s = ModelShape::new(l, h);
+        let single = simulate_inference(&p, s, 1, Target::CpuSingle, 0.0) as f64;
+        let multi = simulate_inference(&p, s, 1, Target::CpuMulti(4), 0.0) as f64;
+        let gpu = simulate_inference(&p, s, 1, Target::Gpu(Factorization::Coarse), 0.0) as f64;
+        let frac = (single - multi) / (single - gpu);
+        assert!(frac >= 0.705, "{l}l/{h}h: {frac}");
+    }
+}
+
+#[test]
+fn anchor_gpu_32_percent_over_mt() {
+    // §4.4: "the GPU gives an average of 32% speed up over the
+    // multithreaded version across the models".
+    let p = DeviceProfile::nexus5();
+    let gains: Vec<f64> = [(1, 32), (2, 32), (3, 32), (2, 64), (2, 128), (2, 256)]
+        .iter()
+        .map(|&(l, h)| {
+            let s = ModelShape::new(l, h);
+            let multi = simulate_inference(&p, s, 1, Target::CpuMulti(4), 0.0) as f64;
+            let gpu = simulate_inference(&p, s, 1, Target::Gpu(Factorization::Coarse), 0.0) as f64;
+            multi / gpu - 1.0
+        })
+        .collect();
+    let mean = gains.iter().sum::<f64>() / gains.len() as f64;
+    assert!((0.15..0.55).contains(&mean), "mean GPU gain over MT = {mean}");
+}
+
+#[test]
+fn anchor_fig7_crossover() {
+    // §4.5: low/medium load → offload wins; high load → CPU wins.
+    let p = DeviceProfile::nexus6p();
+    let s = ModelShape::default();
+    for (util, gpu_should_win) in [(0.15, true), (0.40, true), (0.78, false)] {
+        let cpu = simulate_inference(&p, s, 1, Target::CpuSingle, util) as f64;
+        let gpu = simulate_inference(&p, s, 1, Target::Gpu(Factorization::Coarse), util) as f64;
+        assert_eq!(gpu < cpu, gpu_should_win, "util {util}: gpu {gpu} cpu {cpu}");
+    }
+}
+
+// ---- ablation directions (§3.2/3.3): every optimization must help ----
+
+#[test]
+fn ablation_memory_pool_helps() {
+    let p = DeviceProfile::nexus5();
+    let s = ModelShape::default();
+    let pooled = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &TraceOpts::mobirnn(), 0.0);
+    let mut o = TraceOpts::mobirnn();
+    o.mem_pool = false;
+    let unpooled = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &o, 0.0);
+    assert!(
+        unpooled as f64 > 1.3 * pooled as f64,
+        "on-demand allocation should hurt clearly: {pooled} vs {unpooled}"
+    );
+}
+
+#[test]
+fn ablation_fused_pointwise_helps() {
+    let p = DeviceProfile::nexus5();
+    let s = ModelShape::default();
+    let fused = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &TraceOpts::mobirnn(), 0.0);
+    let mut o = TraceOpts::mobirnn();
+    o.fused_pointwise = false;
+    let unfused = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &o, 0.0);
+    assert!(unfused > fused, "{unfused} !> {fused}");
+}
+
+#[test]
+fn ablation_combined_gemm_helps() {
+    let p = DeviceProfile::nexus5();
+    let s = ModelShape::default();
+    let combined = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &TraceOpts::mobirnn(), 0.0);
+    let mut o = TraceOpts::mobirnn();
+    o.combined_gemm = false;
+    let split = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &o, 0.0);
+    assert!(split > combined, "{split} !> {combined}");
+}
+
+#[test]
+fn ablation_divergence_free_helps() {
+    let p = DeviceProfile::nexus5();
+    let s = ModelShape::default();
+    let clean = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &TraceOpts::mobirnn(), 0.0);
+    let mut o = TraceOpts::mobirnn();
+    o.divergence_free = false;
+    let divergent = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &o, 0.0);
+    assert!(divergent > clean, "{divergent} !> {clean}");
+}
+
+#[test]
+fn ablation_all_off_is_much_worse() {
+    // The naive port (no §3.2/3.3 optimizations, still coarse) should be
+    // several times slower than MobiRNN.
+    let p = DeviceProfile::nexus5();
+    let s = ModelShape::default();
+    let mobirnn = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &TraceOpts::mobirnn(), 0.0);
+    let naive = simulate_gpu_with_opts(&p, s, 1, Factorization::Coarse, &TraceOpts::naive(), 0.0);
+    assert!(naive as f64 > 2.0 * mobirnn as f64, "naive {naive} vs mobirnn {mobirnn}");
+}

@@ -1,0 +1,123 @@
+//! Cross-language golden test — the keystone correctness check.
+//!
+//! `python/compile/aot.py` ran 8 held-out HAR windows through the
+//! TRAINED model using the Pallas-kernel graph and froze inputs+logits
+//! into `artifacts/golden_L2_H32.bin`. Here the SAME windows go through
+//! (a) the PJRT-compiled artifact and (b) the native Rust engine, both
+//! loaded from the same MRNW weights. If either path drifts from the JAX
+//! oracle, serving is broken no matter what the latency numbers say.
+
+use mobirnn::config::Manifest;
+use mobirnn::lstm::model::InferenceState;
+use mobirnn::lstm::{LstmModel, WeightFile};
+use mobirnn::runtime::Runtime;
+use mobirnn::tensor::Tensor;
+
+/// MRNG v1: magic | u32 ver,B,T,D,C | f32 x[B*T*D] | f32 logits[B*C].
+fn read_golden(path: &std::path::Path) -> (Tensor, Tensor) {
+    let raw = std::fs::read(path).expect("golden file");
+    assert_eq!(&raw[..4], b"MRNG");
+    let word = |i: usize| {
+        u32::from_le_bytes(raw[4 + 4 * i..8 + 4 * i].try_into().unwrap()) as usize
+    };
+    let (ver, b, t, d, c) = (word(0), word(1), word(2), word(3), word(4));
+    assert_eq!(ver, 1);
+    let f32s: Vec<f32> = raw[24..]
+        .chunks_exact(4)
+        .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+        .collect();
+    assert_eq!(f32s.len(), b * t * d + b * c);
+    let x = Tensor::new(vec![b, t, d], f32s[..b * t * d].to_vec());
+    let logits = Tensor::new(vec![b, c], f32s[b * t * d..].to_vec());
+    (x, logits)
+}
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(dir).unwrap())
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matches_jax_golden() {
+    let Some(man) = manifest() else { return };
+    let (x, expected) = read_golden(&man.path(&man.golden.file));
+    let rt = Runtime::start(&man).unwrap();
+    let got = rt.execute(&man.golden.variant, x).unwrap();
+    assert_eq!(got.shape(), expected.shape());
+    let diff = got.max_abs_diff(&expected);
+    // Same HLO graph, same weights, same XLA backend as the python dump:
+    // agreement should be at float-noise level.
+    assert!(diff < 1e-4, "PJRT drifted from JAX golden: max|Δ| = {diff}");
+}
+
+#[test]
+fn native_engine_matches_jax_golden() {
+    let Some(man) = manifest() else { return };
+    let (x, expected) = read_golden(&man.path(&man.golden.file));
+    let info = man.variant(&man.golden.variant).unwrap();
+    let wf = WeightFile::load(man.path(&info.weights)).unwrap();
+    let model = LstmModel::from_weight_file(info.shape(), &wf).unwrap();
+    let mut st = InferenceState::new(model.shape);
+    let got = model.forward_batch(&x, &mut st);
+    let diff = got.max_abs_diff(&expected);
+    // Different accumulation order than XLA: allow a slightly wider but
+    // still tight envelope over 128 recurrent steps.
+    assert!(diff < 2e-3, "native engine drifted from JAX golden: max|Δ| = {diff}");
+    // Predictions must agree exactly.
+    assert_eq!(got.argmax_rows(), expected.argmax_rows());
+}
+
+#[test]
+fn golden_predictions_match_manifest() {
+    let Some(man) = manifest() else { return };
+    let (_, logits) = read_golden(&man.path(&man.golden.file));
+    let preds: Vec<u32> = logits.argmax_rows().iter().map(|&v| v as u32).collect();
+    assert_eq!(preds, man.golden.predictions, "manifest predictions stale");
+    assert_eq!(man.golden.labels.len(), preds.len());
+}
+
+#[test]
+fn batch_variants_agree_with_each_other() {
+    // The SAME window through B=1 and B=8 artifacts must give the same
+    // logits — batching must never change answers.
+    let Some(man) = manifest() else { return };
+    let (x, _) = read_golden(&man.path(&man.golden.file));
+    let rt = Runtime::start(&man).unwrap();
+    let shape = man.variant(&man.golden.variant).unwrap().shape();
+    let window = x.slab(0).to_vec();
+
+    let out8 = rt.execute(&shape.variant_name(8), x.clone()).unwrap();
+    let x1 = Tensor::new(vec![1, shape.seq_len, shape.input_dim], window);
+    let out1 = rt.execute(&shape.variant_name(1), x1).unwrap();
+    for (a, b) in out1.row(0).iter().zip(out8.row(0)) {
+        assert!((a - b).abs() < 1e-4, "batching changed logits: {a} vs {b}");
+    }
+}
+
+#[test]
+fn trained_model_beats_chance_on_fresh_data() {
+    // End-to-end accuracy signal through the PJRT path on data the
+    // trainer never saw (different seed stream than train/test).
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::start(&man).unwrap();
+    let shape = mobirnn::config::ModelShape::default();
+    let ds = mobirnn::har::generate(64, 987654);
+    let mut correct = 0;
+    for i in 0..ds.len() {
+        let x = Tensor::new(
+            vec![1, shape.seq_len, shape.input_dim],
+            ds.window(i).to_vec(),
+        );
+        let logits = rt.execute(&shape.variant_name(1), x).unwrap();
+        if logits.argmax_rows()[0] == ds.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / ds.len() as f64;
+    assert!(acc > 0.5, "PJRT accuracy on fresh synthetic HAR too low: {acc}");
+}

@@ -1,0 +1,212 @@
+//! Randomized property tests over coordinator + simulator invariants.
+//!
+//! The vendored crate set has no proptest, so generation is explicit:
+//! `util::Rng` drives hundreds of random cases per property, and every
+//! failure message includes the seed-derived case so it reproduces
+//! deterministically.
+
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::plan_batch;
+use mobirnn::simulator::{
+    build_trace_with_slots, gpu_run, simulate_inference, DeviceProfile, Factorization, Target,
+    TraceOpts,
+};
+use mobirnn::util::Rng;
+
+fn random_shape(rng: &mut Rng) -> ModelShape {
+    ModelShape {
+        num_layers: 1 + rng.below(3) as usize,
+        hidden: [8, 16, 32, 48, 64, 128, 256][rng.below(7) as usize],
+        input_dim: 1 + rng.below(16) as usize,
+        seq_len: 1 + rng.below(64) as usize,
+        num_classes: 2 + rng.below(8) as usize,
+    }
+}
+
+#[test]
+fn prop_factorization_preserves_flops() {
+    // Chopping work differently must never change the total arithmetic.
+    let mut rng = Rng::new(101);
+    for case in 0..300 {
+        let shape = random_shape(&mut rng);
+        let batch = 1 + rng.below(8) as usize;
+        let slots = 1 + rng.below(31) as usize;
+        let fine = build_trace_with_slots(shape, batch, Factorization::Fine, &TraceOpts::mobirnn(), slots);
+        let coarse =
+            build_trace_with_slots(shape, batch, Factorization::Coarse, &TraceOpts::mobirnn(), slots);
+        assert_eq!(
+            fine.total_flops(),
+            coarse.total_flops(),
+            "case {case}: {shape:?} batch {batch} slots {slots}"
+        );
+    }
+}
+
+#[test]
+fn prop_coarse_never_slower_than_fine() {
+    // The paper's core claim, as an invariant over the whole model space.
+    let mut rng = Rng::new(102);
+    let p = DeviceProfile::nexus5();
+    for case in 0..120 {
+        let shape = random_shape(&mut rng);
+        let util = rng.next_f64() * 0.8;
+        let fine = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Fine), util);
+        let coarse = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Coarse), util);
+        assert!(coarse <= fine, "case {case}: {shape:?} util {util}: coarse {coarse} fine {fine}");
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_load() {
+    let mut rng = Rng::new(103);
+    let p = DeviceProfile::nexus6p();
+    for case in 0..40 {
+        let shape = random_shape(&mut rng);
+        for target in
+            [Target::Gpu(Factorization::Coarse), Target::CpuSingle, Target::CpuMulti(4)]
+        {
+            let mut last = 0;
+            for step in 0..10 {
+                let util = step as f64 / 10.0;
+                let t = simulate_inference(&p, shape, 1, target, util);
+                assert!(
+                    t >= last,
+                    "case {case}: {shape:?} {target:?} util {util}: {t} < {last}"
+                );
+                last = t;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_model_size() {
+    // More layers or wider hidden can never be faster, on any target.
+    let mut rng = Rng::new(104);
+    let p = DeviceProfile::nexus5();
+    for _ in 0..60 {
+        let base = random_shape(&mut rng);
+        let bigger_layers = ModelShape { num_layers: base.num_layers + 1, ..base };
+        let bigger_hidden = ModelShape { hidden: base.hidden * 2, ..base };
+        for target in
+            [Target::Gpu(Factorization::Coarse), Target::CpuSingle, Target::CpuMulti(4)]
+        {
+            let t0 = simulate_inference(&p, base, 1, target, 0.0);
+            assert!(simulate_inference(&p, bigger_layers, 1, target, 0.0) >= t0);
+            assert!(simulate_inference(&p, bigger_hidden, 1, target, 0.0) >= t0);
+        }
+    }
+}
+
+#[test]
+fn prop_gpu_accounting_identity() {
+    // total == dispatch + alloc + compute + mem_stall + render_wait, always.
+    let mut rng = Rng::new(105);
+    let p = DeviceProfile::nexus5();
+    for case in 0..150 {
+        let shape = random_shape(&mut rng);
+        let fact = if rng.below(2) == 0 { Factorization::Fine } else { Factorization::Coarse };
+        let opts = TraceOpts {
+            combined_gemm: rng.below(2) == 0,
+            fused_pointwise: rng.below(2) == 0,
+            mem_pool: rng.below(2) == 0,
+            divergence_free: rng.below(2) == 0,
+        };
+        let util = rng.next_f64() * 0.9;
+        let trace = build_trace_with_slots(shape, 1, fact, &opts, p.gpu_slots);
+        let r = gpu_run(&p, &trace, util, 0);
+        assert_eq!(
+            r.total_ns,
+            r.dispatch_ns + r.alloc_ns + r.compute_ns + r.mem_stall_ns + r.render_wait_ns,
+            "case {case}: {shape:?} {fact:?} {opts:?} util {util}"
+        );
+        assert_eq!(r.num_launches as usize, trace.num_launches());
+    }
+}
+
+#[test]
+fn prop_every_optimization_helps_or_is_neutral() {
+    // Toggling any single §3.2/3.3 optimization off must never make the
+    // simulated system FASTER, for any shape.
+    let mut rng = Rng::new(106);
+    let p = DeviceProfile::nexus5();
+    for _ in 0..60 {
+        let shape = random_shape(&mut rng);
+        let base_trace =
+            build_trace_with_slots(shape, 1, Factorization::Coarse, &TraceOpts::mobirnn(), p.gpu_slots);
+        let base = gpu_run(&p, &base_trace, 0.0, 0).total_ns;
+        for i in 0..4 {
+            let mut o = TraceOpts::mobirnn();
+            match i {
+                0 => o.combined_gemm = false,
+                1 => o.fused_pointwise = false,
+                2 => o.mem_pool = false,
+                _ => o.divergence_free = false,
+            }
+            let t = build_trace_with_slots(shape, 1, Factorization::Coarse, &o, p.gpu_slots);
+            let ablated = gpu_run(&p, &t, 0.0, 0).total_ns;
+            assert!(ablated >= base, "{shape:?} toggle {i}: {ablated} < {base}");
+        }
+    }
+}
+
+#[test]
+fn prop_batch_plans_conserve_and_terminate() {
+    // Random compiled sets + random arrival counts: draining consumes
+    // everything exactly once, padding bounded by the largest gap.
+    let mut rng = Rng::new(107);
+    for case in 0..500 {
+        let mut sizes: Vec<usize> =
+            (0..1 + rng.below(5)).map(|_| 1 + rng.below(64) as usize).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let total = rng.below(256) as usize;
+        let mut pending = total;
+        let mut served = 0;
+        let mut padding = 0;
+        while pending > 0 {
+            let p = plan_batch(pending, &sizes).expect("plan for nonzero pending");
+            assert!(p.take >= 1 && p.take <= pending, "case {case}");
+            pending -= p.take;
+            served += p.take;
+            padding += p.padding();
+            // Padding only allowed on the final, short batch.
+            if p.padding() > 0 {
+                assert_eq!(pending, 0, "case {case}: padded mid-stream");
+            }
+        }
+        assert_eq!(served, total);
+        assert!(padding < *sizes.last().unwrap(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_cpu_batch_linear() {
+    // CPU latency scales exactly linearly in batch (no batching benefit —
+    // which is WHY the GPU wins once batches form).
+    let mut rng = Rng::new(108);
+    let p = DeviceProfile::nexus5();
+    for _ in 0..50 {
+        let shape = random_shape(&mut rng);
+        let b = 2 + rng.below(7) as usize;
+        let t1 = simulate_inference(&p, shape, 1, Target::CpuSingle, 0.0) as f64;
+        let tb = simulate_inference(&p, shape, b, Target::CpuSingle, 0.0) as f64;
+        let ratio = tb / (t1 * b as f64);
+        assert!((ratio - 1.0).abs() < 0.02, "{shape:?} b={b}: ratio {ratio}");
+    }
+}
+
+#[test]
+fn prop_gpu_batching_amortizes() {
+    // GPU latency at batch B is strictly less than B sequential runs
+    // (dispatch amortization — the coordinator's reason to batch).
+    let mut rng = Rng::new(109);
+    let p = DeviceProfile::nexus5();
+    for _ in 0..50 {
+        let shape = random_shape(&mut rng);
+        let b = 2 + rng.below(7) as usize;
+        let t1 = simulate_inference(&p, shape, 1, Target::Gpu(Factorization::Coarse), 0.0);
+        let tb = simulate_inference(&p, shape, b, Target::Gpu(Factorization::Coarse), 0.0);
+        assert!(tb < t1 * b as u64, "{shape:?} b={b}: {tb} !< {}", t1 * b as u64);
+    }
+}

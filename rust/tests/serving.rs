@@ -1,0 +1,159 @@
+//! End-to-end serving integration: TCP server + concurrent clients +
+//! load knobs, against the real trained artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mobirnn::config::Manifest;
+use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::har;
+use mobirnn::json::{obj, Value};
+use mobirnn::runtime::Runtime;
+use mobirnn::server::{Client, Server};
+use mobirnn::simulator::DeviceProfile;
+
+fn start_server(policy: OffloadPolicy) -> Option<(Server, DeviceState)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let man = Manifest::load(dir).unwrap();
+    let rt = Runtime::start(&man).unwrap();
+    let device = DeviceState::new(DeviceProfile::nexus5());
+    let router = Router::start(
+        &man,
+        rt,
+        device.clone(),
+        RouterConfig { policy, max_wait: Duration::from_millis(1), ..Default::default() },
+    )
+    .unwrap();
+    Some((Server::bind("127.0.0.1:0", router).unwrap(), device))
+}
+
+#[test]
+fn end_to_end_accuracy_over_tcp() {
+    let Some((srv, _)) = start_server(OffloadPolicy::CostModel) else { return };
+    // Use the python-generated artifact test set so accuracy is
+    // comparable to the manifest's train_report.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let man = Manifest::load(&dir).unwrap();
+    let ds = har::HarDataset::load(man.path(&man.har_test.file)).unwrap();
+
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let n = 64;
+    let mut correct = 0;
+    for i in 0..n {
+        let (class, sim_us, _target) = client.classify(ds.window(i), i).unwrap();
+        if class == ds.labels[i] as usize {
+            correct += 1;
+        }
+        assert!(sim_us > 0.0);
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.6, "TCP-served accuracy {acc} too low (train report says ~0.8)");
+}
+
+#[test]
+fn concurrent_clients_get_batched() {
+    let Some((srv, _)) = start_server(OffloadPolicy::CostModel) else { return };
+    let ds = Arc::new(har::generate(32, 5));
+    let addr = srv.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|c| {
+            let ds = Arc::clone(&ds);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for i in 0..4 {
+                    let idx = c * 4 + i;
+                    let (class, _, _) = client.classify(ds.window(idx), idx).unwrap();
+                    assert!(class < har::NUM_CLASSES);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Ask the server for its stats and check batching happened.
+    let mut client = Client::connect(addr).unwrap();
+    let stats = client.call(&obj([("type", Value::from("stats"))])).unwrap();
+    let requests = stats.get("requests").as_usize().unwrap();
+    let batches = stats.get("batches").as_usize().unwrap();
+    assert_eq!(requests, 32);
+    assert!(batches <= requests);
+    assert!(stats.get("mean_batch_size").as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn load_knob_flips_offload_target_live() {
+    let Some((srv, _device)) = start_server(OffloadPolicy::CostModel) else { return };
+    let ds = har::generate(2, 9);
+    let mut client = Client::connect(srv.addr()).unwrap();
+
+    // Idle: GPU.
+    let (_, _, target) = client.classify(ds.window(0), 0).unwrap();
+    assert_eq!(target, "gpu");
+
+    // Saturate the device via the wire protocol, like a co-running game.
+    let ok = client
+        .call(&obj([
+            ("type", Value::from("set_load")),
+            ("gpu", Value::Num(0.9)),
+            ("cpu", Value::Num(0.9)),
+        ]))
+        .unwrap();
+    assert_eq!(ok.get("type").as_str(), Some("ok"));
+
+    let (_, _, target) = client.classify(ds.window(1), 1).unwrap();
+    assert_ne!(target, "gpu", "§4.5: high load must steer off the GPU");
+
+    // And back.
+    client
+        .call(&obj([
+            ("type", Value::from("set_load")),
+            ("gpu", Value::Num(0.0)),
+            ("cpu", Value::Num(0.0)),
+        ]))
+        .unwrap();
+    let (_, _, target) = client.classify(ds.window(0), 2).unwrap();
+    assert_eq!(target, "gpu");
+}
+
+#[test]
+fn fine_policy_reports_higher_sim_latency() {
+    // The CUDA-style policy must be visibly worse in the served
+    // simulated latencies (Fig 3, live).
+    let Some((coarse_srv, _)) = start_server(OffloadPolicy::parse("gpu").unwrap()) else {
+        return;
+    };
+    let Some((fine_srv, _)) = start_server(OffloadPolicy::parse("fine").unwrap()) else { return };
+    let ds = har::generate(3, 21);
+    let mut c1 = Client::connect(coarse_srv.addr()).unwrap();
+    let mut c2 = Client::connect(fine_srv.addr()).unwrap();
+    for i in 0..3 {
+        let (_, coarse_us, _) = c1.classify(ds.window(i), i).unwrap();
+        let (_, fine_us, _) = c2.classify(ds.window(i), i).unwrap();
+        assert!(
+            fine_us > 5.0 * coarse_us,
+            "fine {fine_us}µs should dwarf coarse {coarse_us}µs"
+        );
+    }
+}
+
+#[test]
+fn malformed_traffic_does_not_kill_server() {
+    let Some((srv, _)) = start_server(OffloadPolicy::CostModel) else { return };
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect(srv.addr()).unwrap();
+    s.write_all(b"garbage\n{\"type\":\"nope\"}\n\n").unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+    // Server still answers a well-formed request on a fresh connection.
+    let ds = har::generate(1, 33);
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let (class, _, _) = client.classify(ds.window(0), 0).unwrap();
+    assert!(class < har::NUM_CLASSES);
+}
