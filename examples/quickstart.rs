@@ -8,10 +8,10 @@
 use std::time::Duration;
 
 use mobirnn::config::Manifest;
-use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::coordinator::{ClassifyOptions, DeviceState, OffloadPolicy, Router};
 use mobirnn::har;
 use mobirnn::runtime::Runtime;
-use mobirnn::simulator::DeviceProfile;
+use mobirnn::simulator::{DeviceProfile, Target};
 
 fn main() -> anyhow::Result<()> {
     // 1. Artifacts: HLO text + MRNW weights + test data, built once by
@@ -24,20 +24,17 @@ fn main() -> anyhow::Result<()> {
         100.0 * manifest.train_report.test_accuracy
     );
 
-    // 2. Serving stack: PJRT executor thread + router with the
-    //    utilization-aware cost-model policy on a simulated Nexus 5.
+    // 2. Serving stack via the builder: the standard engine set (PJRT
+    //    GPU + native CPU single/multi) behind the utilization-aware
+    //    cost-model policy, on a simulated Nexus 5.
     let runtime = Runtime::start(&manifest)?;
     let device = DeviceState::new(DeviceProfile::nexus5());
-    let router = Router::start(
-        &manifest,
-        runtime,
-        device.clone(),
-        RouterConfig {
-            policy: OffloadPolicy::CostModel,
-            max_wait: Duration::from_millis(2),
-            ..Default::default()
-        },
-    )?;
+    let router = Router::builder()
+        .policy(OffloadPolicy::CostModel)
+        .device(device.clone())
+        .max_wait(Duration::from_millis(2))
+        .manifest(&manifest, runtime)?
+        .build()?;
 
     // 3. Classify: 8 windows from the artifact test set.
     let ds = har::HarDataset::load(manifest.path(&manifest.har_test.file))?;
@@ -67,6 +64,20 @@ fn main() -> anyhow::Result<()> {
             r.sim_ns as f64 / 1e6
         );
     }
+
+    // 5. Per-request override: pin one inference to a target regardless
+    //    of what the policy would choose.
+    device.set_gpu_util(0.0);
+    device.set_cpu_util(0.0);
+    let pinned = router.classify_with(
+        ds.window(0).to_vec(),
+        ClassifyOptions { target: Some(Target::CpuSingle), ..Default::default() },
+    )?;
+    println!(
+        "\npinned to cpu (idle device, policy would pick gpu): ran on {:<9} sim {:.1} ms",
+        pinned.target,
+        pinned.sim_ns as f64 / 1e6
+    );
 
     println!("\nmetrics: {}", router.metrics.to_json().to_json());
     Ok(())

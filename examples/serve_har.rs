@@ -1,4 +1,4 @@
-//! End-to-end serving driver (DESIGN.md experiment EE; the repo's
+//! End-to-end serving driver (DESIGN.md §5 experiment EE; the repo's
 //! "real small workload" validation).
 //!
 //! Starts the full stack — PJRT runtime, router with cost-model policy,
@@ -16,9 +16,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mobirnn::config::Manifest;
-use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router};
 use mobirnn::har::HarDataset;
-use mobirnn::json::{obj, Value};
 use mobirnn::runtime::Runtime;
 use mobirnn::server::{Client, Server};
 use mobirnn::simulator::DeviceProfile;
@@ -58,13 +57,14 @@ fn run_phase(
                     if i >= end {
                         break;
                     }
-                    let (class, sim_us, target) = client.classify(ds.window(i), i).expect("classify");
+                    let outcome =
+                        client.classify(ds.window(i), i as u64).expect("classify");
                     served += 1;
-                    if class == ds.labels[i] as usize {
+                    if outcome.class == ds.labels[i] as usize {
                         correct += 1;
                     }
-                    sims.push(sim_us / 1e3);
-                    *targets.entry(target).or_default() += 1;
+                    sims.push(outcome.sim_latency_us / 1e3);
+                    *targets.entry(outcome.target).or_default() += 1;
                 }
                 (served, correct, sims, targets)
             })
@@ -123,16 +123,12 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load_default()?;
     let runtime = Runtime::start(&manifest)?;
     let device = DeviceState::new(DeviceProfile::nexus5());
-    let router = Router::start(
-        &manifest,
-        runtime,
-        device.clone(),
-        RouterConfig {
-            policy: OffloadPolicy::CostModel,
-            max_wait: Duration::from_millis(2),
-            ..Default::default()
-        },
-    )?;
+    let router = Router::builder()
+        .policy(OffloadPolicy::CostModel)
+        .device(device.clone())
+        .max_wait(Duration::from_millis(2))
+        .manifest(&manifest, runtime)?
+        .build()?;
     let metrics = Arc::clone(&router.metrics);
     let server = Server::bind("127.0.0.1:0", router)?;
     let addr = server.addr();
@@ -151,7 +147,7 @@ fn main() -> anyhow::Result<()> {
 
     // Phase 2: medium GPU load (a map app animating, say).
     let mut c = Client::connect(addr)?;
-    c.call(&obj([("type", Value::from("set_load")), ("gpu", Value::Num(0.4)), ("cpu", Value::Num(0.4))]))?;
+    c.set_load(0.4, 0.4)?;
     let p2 = run_phase("medium load (40%)", addr, Arc::clone(&ds), third..2 * third, n_clients);
     print_phase(&p2);
 
@@ -160,7 +156,7 @@ fn main() -> anyhow::Result<()> {
     // deep batches the cost model keeps choosing the GPU even under load,
     // because one launch sequence amortizes over the whole batch — an
     // effect the paper's unbatched runtime could not exploit.
-    c.call(&obj([("type", Value::from("set_load")), ("gpu", Value::Num(0.85)), ("cpu", Value::Num(0.85))]))?;
+    c.set_load(0.85, 0.85)?;
     let p3 = run_phase("high load (85%), unbatched", addr, Arc::clone(&ds), 2 * third..n, 1);
     print_phase(&p3);
 

@@ -124,15 +124,18 @@ fn main() {
         hist.record(12_345);
     });
 
-    // --- wire codec (1152-float classify line) ---
+    // --- wire codec (1152-float classify line, protocol v2) ---
     let window = ds.window(0);
     let line = {
-        use mobirnn::json::{obj, Value};
-        obj([
-            ("type", Value::from("classify")),
-            ("id", Value::from(7usize)),
-            ("window", Value::Arr(window.iter().map(|&v| Value::Num(v as f64)).collect())),
-        ])
+        use mobirnn::json::ToValue;
+        use mobirnn::server::Request;
+        Request::Classify {
+            id: Some(7),
+            window: window.to_vec(),
+            target: None,
+            deadline_ms: None,
+        }
+        .to_value()
         .to_json()
     };
     println!("hotpath/wire_line_bytes: {}", line.len());

@@ -1,0 +1,439 @@
+//! The `Engine` abstraction: one object-safe interface over every way an
+//! inference can execute (DESIGN.md §3).
+//!
+//! MobiRNN's core claim is that *where* an inference runs is a runtime
+//! policy, not a compile-time choice. The precondition (echoed by Lee et
+//! al. 2019 and Rezk et al. 2019) is a uniform backend-delegate seam: the
+//! router must not know that "GPU" means PJRT or that "CPU" means the
+//! native Rust model. [`Engine`] is that seam; [`EngineRegistry`] maps an
+//! offload [`Target`] to the engine serving it and provides the generic
+//! failover path (PJRT error → next registered engine) that used to be a
+//! hard-coded GPU→native special case in the router.
+//!
+//! All engines are pinned to the same trained weights and golden-tested
+//! against the JAX oracle, so failover changes cost, never answers.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Manifest, ModelShape};
+use crate::coordinator::policy::target_label;
+use crate::lstm::model::InferenceState;
+use crate::lstm::{LstmModel, ThreadedLstm};
+use crate::runtime::Runtime;
+use crate::simulator::{Factorization, Target};
+use crate::tensor::Tensor;
+
+/// One execution backend. Object-safe so the router can hold a
+/// heterogeneous `Target -> Box<dyn Engine>` registry.
+pub trait Engine: Send {
+    /// The offload target this engine serves (registry key; payload such
+    /// as factorization or thread count is informational).
+    fn target(&self) -> Target;
+
+    /// Batch sizes this engine can execute, ascending. Empty slice means
+    /// "any batch" (the native CPU engines); the PJRT engine is limited
+    /// to the AOT-compiled variants.
+    fn supported_batches(&self) -> &[usize];
+
+    /// Run a `[B, T, D]` input; returns `[B, C]` logits.
+    fn infer(&self, x: &Tensor) -> Result<Tensor>;
+
+    /// Human-readable name (wire protocol / metrics).
+    fn label(&self) -> &'static str {
+        target_label(self.target())
+    }
+}
+
+/// Do two targets name the same engine kind (ignoring payload)?
+pub fn same_kind(a: Target, b: Target) -> bool {
+    matches!(
+        (a, b),
+        (Target::Gpu(_), Target::Gpu(_))
+            | (Target::CpuSingle, Target::CpuSingle)
+            | (Target::CpuMulti(_), Target::CpuMulti(_))
+    )
+}
+
+fn check_window_shape(shape: ModelShape, x: &Tensor) -> Result<usize> {
+    let dims = x.shape();
+    if dims.len() != 3 || dims[1] != shape.seq_len || dims[2] != shape.input_dim {
+        return Err(anyhow!(
+            "input shape {dims:?} does not match model [B, {}, {}]",
+            shape.seq_len,
+            shape.input_dim
+        ));
+    }
+    Ok(dims[0])
+}
+
+/// GPU-target engine backed by the PJRT runtime's AOT-compiled variants.
+pub struct PjrtEngine {
+    runtime: Runtime,
+    shape: ModelShape,
+    batches: Vec<usize>,
+}
+
+impl PjrtEngine {
+    /// Pre-compiles every batch variant for `shape` so serving never hits
+    /// XLA compile on the hot path.
+    pub fn new(manifest: &Manifest, runtime: Runtime, shape: ModelShape) -> Result<Self> {
+        let batches = manifest.batches_for(shape);
+        if batches.is_empty() {
+            return Err(anyhow!(
+                "no compiled variants for shape {shape:?}; run `make artifacts`"
+            ));
+        }
+        for &b in &batches {
+            runtime.preload(&shape.variant_name(b))?;
+        }
+        Ok(Self { runtime, shape, batches })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn target(&self) -> Target {
+        Target::Gpu(Factorization::Coarse)
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        let batch = check_window_shape(self.shape, x)?;
+        if !self.batches.contains(&batch) {
+            return Err(anyhow!(
+                "batch {batch} not AOT-compiled (have {:?})",
+                self.batches
+            ));
+        }
+        self.runtime.execute(&self.shape.variant_name(batch), x.clone())
+    }
+}
+
+/// Single-threaded native CPU engine (the paper's "CPU" bars).
+pub struct CpuSingleEngine {
+    model: Arc<LstmModel>,
+    /// Preallocated per-engine state (§3.2 buffer reuse). `infer` takes
+    /// `&self`, so the state sits behind a mutex; the router worker is
+    /// the only caller, so it is never contended.
+    state: Mutex<InferenceState>,
+}
+
+impl CpuSingleEngine {
+    pub fn new(model: Arc<LstmModel>) -> Self {
+        let state = Mutex::new(InferenceState::new(model.shape));
+        Self { model, state }
+    }
+}
+
+impl Engine for CpuSingleEngine {
+    fn target(&self) -> Target {
+        Target::CpuSingle
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &[]
+    }
+
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        check_window_shape(self.model.shape, x)?;
+        let mut state = self.state.lock().unwrap();
+        Ok(self.model.forward_batch(x, &mut state))
+    }
+}
+
+/// Multi-threaded native CPU engine (paper §4.4) over a persistent
+/// worker pool.
+pub struct CpuMultiEngine {
+    pool: ThreadedLstm,
+    shape: ModelShape,
+}
+
+impl CpuMultiEngine {
+    pub fn new(model: Arc<LstmModel>, threads: usize) -> Self {
+        let shape = model.shape;
+        Self { pool: ThreadedLstm::new(model, threads), shape }
+    }
+}
+
+impl Engine for CpuMultiEngine {
+    fn target(&self) -> Target {
+        Target::CpuMulti(self.pool.num_threads)
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &[]
+    }
+
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        check_window_shape(self.shape, x)?;
+        Ok(self.pool.forward_batch(x))
+    }
+}
+
+/// `Target -> Box<dyn Engine>` registry with generic failover.
+///
+/// Registration order is failover order: when the engine chosen by the
+/// offload policy errors (or is absent), the remaining engines are tried
+/// in the order they were registered.
+#[derive(Default)]
+pub struct EngineRegistry {
+    engines: Vec<Box<dyn Engine>>,
+}
+
+impl EngineRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an engine; replaces any engine of the same target kind.
+    pub fn register(&mut self, engine: Box<dyn Engine>) {
+        if let Some(slot) =
+            self.engines.iter_mut().find(|e| same_kind(e.target(), engine.target()))
+        {
+            *slot = engine;
+        } else {
+            self.engines.push(engine);
+        }
+    }
+
+    /// The engine serving `target`'s kind, if any is registered.
+    pub fn get(&self, target: Target) -> Option<&dyn Engine> {
+        self.engines.iter().find(|e| same_kind(e.target(), target)).map(|e| &**e)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Engine> {
+        self.engines.iter().map(|e| &**e)
+    }
+
+    /// Registered targets, registration order.
+    pub fn targets(&self) -> Vec<Target> {
+        self.engines.iter().map(|e| e.target()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Execute `x` on the engine for `target`, failing over to every
+    /// other registered engine in registration order.
+    ///
+    /// Returns `(outcome, engine_errors)` where `outcome` carries the
+    /// logits plus the target that actually served the request, and
+    /// `engine_errors` counts engines that errored along the way (for
+    /// metrics) — on both success and total failure.
+    ///
+    /// When the engine of the requested kind serves the request, the
+    /// *requested* target is returned, not `engine.target()`: payload
+    /// like the GPU factorization or the simulated thread count is a
+    /// policy decision the engine cannot know (the PJRT engine executes
+    /// the same artifact for Fine and Coarse; only the latency model
+    /// differs). On failover to a different kind the serving engine's
+    /// own target is returned.
+    pub fn infer_with_failover(
+        &self,
+        target: Target,
+        x: &Tensor,
+    ) -> (Result<(Tensor, Target)>, u64) {
+        let mut errors = 0u64;
+        if let Some(engine) = self.get(target) {
+            match engine.infer(x) {
+                Ok(logits) => return (Ok((logits, target)), errors),
+                Err(e) => {
+                    errors += 1;
+                    eprintln!("[engine] {} failed, failing over: {e:#}", engine.label());
+                }
+            }
+        }
+        for engine in self.engines.iter().filter(|e| !same_kind(e.target(), target)) {
+            match engine.infer(x) {
+                Ok(logits) => return (Ok((logits, engine.target())), errors),
+                Err(e) => {
+                    errors += 1;
+                    eprintln!("[engine] {} failed, failing over: {e:#}", engine.label());
+                }
+            }
+        }
+        (
+            Err(anyhow!(
+                "all {} registered engines failed for target {target:?}",
+                self.engines.len()
+            )),
+            errors,
+        )
+    }
+}
+
+impl std::fmt::Debug for EngineRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EngineRegistry").field("targets", &self.targets()).finish()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Deterministic engine for tests: always predicts class 1 (or fails
+    /// on demand). No artifacts needed.
+    pub(crate) struct FixedEngine {
+        pub target: Target,
+        pub batches: Vec<usize>,
+        pub fail: bool,
+        pub num_classes: usize,
+        pub calls: Arc<AtomicUsize>,
+    }
+
+    impl FixedEngine {
+        pub(crate) fn new(target: Target) -> Self {
+            Self {
+                target,
+                batches: Vec::new(),
+                fail: false,
+                num_classes: 6,
+                calls: Arc::new(AtomicUsize::new(0)),
+            }
+        }
+
+        pub(crate) fn failing(target: Target) -> Self {
+            Self { fail: true, ..Self::new(target) }
+        }
+    }
+
+    impl Engine for FixedEngine {
+        fn target(&self) -> Target {
+            self.target
+        }
+
+        fn supported_batches(&self) -> &[usize] {
+            &self.batches
+        }
+
+        fn infer(&self, x: &Tensor) -> Result<Tensor> {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if self.fail {
+                return Err(anyhow!("FixedEngine({}) told to fail", self.label()));
+            }
+            let batch = x.shape()[0];
+            let mut data = vec![0.0f32; batch * self.num_classes];
+            for i in 0..batch {
+                data[i * self.num_classes + 1] = 1.0;
+            }
+            Ok(Tensor::new(vec![batch, self.num_classes], data))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::FixedEngine;
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn x(batch: usize) -> Tensor {
+        Tensor::zeros(vec![batch, 128, 9])
+    }
+
+    #[test]
+    fn same_kind_ignores_payload() {
+        assert!(same_kind(Target::Gpu(Factorization::Fine), Target::Gpu(Factorization::Coarse)));
+        assert!(same_kind(Target::CpuMulti(2), Target::CpuMulti(8)));
+        assert!(!same_kind(Target::CpuSingle, Target::CpuMulti(1)));
+        assert!(!same_kind(Target::Gpu(Factorization::Coarse), Target::CpuSingle));
+    }
+
+    #[test]
+    fn registry_lookup_by_kind() {
+        let mut reg = EngineRegistry::new();
+        reg.register(Box::new(FixedEngine::new(Target::Gpu(Factorization::Coarse))));
+        reg.register(Box::new(FixedEngine::new(Target::CpuSingle)));
+        assert_eq!(reg.len(), 2);
+        // Any factorization resolves to the one GPU engine.
+        assert!(reg.get(Target::Gpu(Factorization::Fine)).is_some());
+        assert!(reg.get(Target::CpuSingle).is_some());
+        assert!(reg.get(Target::CpuMulti(4)).is_none());
+    }
+
+    #[test]
+    fn register_replaces_same_kind() {
+        let mut reg = EngineRegistry::new();
+        let first = FixedEngine::new(Target::CpuMulti(2));
+        let first_calls = Arc::clone(&first.calls);
+        reg.register(Box::new(first));
+        reg.register(Box::new(FixedEngine::new(Target::CpuMulti(8))));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.targets(), vec![Target::CpuMulti(8)]);
+        let (outcome, _) = reg.infer_with_failover(Target::CpuMulti(8), &x(1));
+        outcome.unwrap();
+        assert_eq!(first_calls.load(Ordering::Relaxed), 0, "replaced engine must not run");
+    }
+
+    #[test]
+    fn served_target_preserves_requested_payload() {
+        // The policy's payload (factorization, simulated thread count) is
+        // a decision attribute: when the same-kind engine serves the
+        // request, the requested target comes back unchanged so latency
+        // simulation and wire labels stay faithful (Fine vs Coarse!).
+        let mut reg = EngineRegistry::new();
+        reg.register(Box::new(FixedEngine::new(Target::Gpu(Factorization::Coarse))));
+        let (outcome, errors) = reg.infer_with_failover(Target::Gpu(Factorization::Fine), &x(1));
+        let (_, used) = outcome.unwrap();
+        assert_eq!(used, Target::Gpu(Factorization::Fine));
+        assert_eq!(errors, 0);
+    }
+
+    #[test]
+    fn failover_to_next_engine_on_error() {
+        let mut reg = EngineRegistry::new();
+        let gpu = FixedEngine::failing(Target::Gpu(Factorization::Coarse));
+        let gpu_calls = Arc::clone(&gpu.calls);
+        reg.register(Box::new(gpu));
+        reg.register(Box::new(FixedEngine::new(Target::CpuSingle)));
+        let (outcome, errors) =
+            reg.infer_with_failover(Target::Gpu(Factorization::Coarse), &x(2));
+        let (logits, used) = outcome.unwrap();
+        assert_eq!(used, Target::CpuSingle);
+        assert_eq!(errors, 1);
+        assert_eq!(gpu_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(logits.shape(), &[2, 6]);
+    }
+
+    #[test]
+    fn missing_primary_uses_first_compatible_without_error() {
+        let mut reg = EngineRegistry::new();
+        reg.register(Box::new(FixedEngine::new(Target::CpuSingle)));
+        let (outcome, errors) =
+            reg.infer_with_failover(Target::Gpu(Factorization::Coarse), &x(1));
+        let (_, used) = outcome.unwrap();
+        assert_eq!(used, Target::CpuSingle);
+        assert_eq!(errors, 0, "absent engine is not an execution error");
+    }
+
+    #[test]
+    fn all_engines_failing_is_an_error_with_count() {
+        let mut reg = EngineRegistry::new();
+        reg.register(Box::new(FixedEngine::failing(Target::CpuSingle)));
+        reg.register(Box::new(FixedEngine::failing(Target::CpuMulti(4))));
+        let (outcome, errors) = reg.infer_with_failover(Target::CpuSingle, &x(1));
+        let err = outcome.unwrap_err();
+        assert!(err.to_string().contains("all 2"), "{err}");
+        assert_eq!(errors, 2, "every tried engine counts as one error");
+    }
+
+    #[test]
+    fn empty_registry_errors() {
+        let reg = EngineRegistry::new();
+        assert!(reg.is_empty());
+        let (outcome, errors) = reg.infer_with_failover(Target::CpuSingle, &x(1));
+        assert!(outcome.is_err());
+        assert_eq!(errors, 0);
+    }
+}

@@ -6,25 +6,32 @@
 //! ```text
 //! client ──TCP──▶ server ──▶ Router queue ──▶ Batcher (pad to compiled B)
 //!        ──▶ OffloadPolicy (reads DeviceState utilization, §4.5)
-//!        ──▶ { PJRT runtime (GPU target) | native engine (CPU target) }
+//!        ──▶ EngineRegistry: Target → Engine { PJRT | native 1t | native Nt }
 //!        ──▶ simulator charges mobile latency ──▶ reply + Metrics
 //! ```
 //!
 //! - [`batcher`]  — dynamic batching onto the AOT-compiled batch sizes
 //! - [`policy`]   — where to run: static, threshold, or cost-model driven
 //!   (the paper's conclusion that offloading must be utilization-aware)
+//! - [`engine`]   — the [`Engine`] trait + registry: one object-safe seam
+//!   over every execution backend, with generic failover (DESIGN.md §3)
 //! - [`device`]   — shared simulated-device state (background load knobs)
-//! - [`router`]   — the serving loop tying it all together
+//! - [`router`]   — the serving loop tying it all together, built via
+//!   [`RouterBuilder`]
 //! - [`metrics`]  — latency histograms + counters
 
 pub mod batcher;
 pub mod device;
+pub mod engine;
 pub mod metrics;
 pub mod policy;
 pub mod router;
 
 pub use batcher::{plan_batch, BatchCollector, BatchPlan};
 pub use device::DeviceState;
+pub use engine::{CpuMultiEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine};
 pub use metrics::{Histogram, Metrics};
-pub use policy::{DecisionCache, OffloadPolicy};
-pub use router::{Router, RouterConfig, ServeReply, ServeRequest};
+pub use policy::{parse_target, target_label, DecisionCache, OffloadPolicy};
+pub use router::{
+    ClassifyOptions, Router, RouterBuilder, ServeError, ServeReply, ServeRequest,
+};

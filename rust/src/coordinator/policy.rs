@@ -167,6 +167,20 @@ pub fn target_label(t: Target) -> &'static str {
     }
 }
 
+/// Inverse of [`target_label`] for wire/CLI target overrides. Thread
+/// count for "cpu-multi" is normalized to 4 (the label does not carry
+/// it); the engine registry matches on kind, so any count resolves to
+/// the one registered multi-thread engine.
+pub fn parse_target(s: &str) -> Option<Target> {
+    match s {
+        "gpu" | "coarse" => Some(Target::Gpu(Factorization::Coarse)),
+        "gpu-fine" | "fine" => Some(Target::Gpu(Factorization::Fine)),
+        "cpu" | "cpu-single" => Some(Target::CpuSingle),
+        "cpu-multi" | "multithread" => Some(Target::CpuMulti(4)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +288,18 @@ mod tests {
     fn labels() {
         assert_eq!(target_label(Target::Gpu(Factorization::Coarse)), "gpu");
         assert_eq!(target_label(Target::CpuMulti(4)), "cpu-multi");
+    }
+
+    #[test]
+    fn target_labels_round_trip() {
+        for t in [
+            Target::Gpu(Factorization::Coarse),
+            Target::Gpu(Factorization::Fine),
+            Target::CpuSingle,
+            Target::CpuMulti(4),
+        ] {
+            assert_eq!(parse_target(target_label(t)), Some(t), "{t:?}");
+        }
+        assert_eq!(parse_target("npu"), None);
     }
 }

@@ -1,13 +1,26 @@
-//! The serving loop: queue → batch → offload decision → execute → reply.
+//! The serving loop: queue → batch → offload decision → engine → reply.
 //!
-//! Numerics are always REAL — the PJRT artifact (GPU target) or the
-//! native Rust engine (CPU targets); only the *latency accounting* runs
-//! through the calibrated device simulator (we do not own a Nexus 5).
-//! Both numeric paths are pinned to the same trained weights and
-//! golden-tested against the JAX oracle, so the offload decision never
-//! changes the answer, only the cost — exactly the paper's setting.
+//! Numerics are always REAL — whichever [`Engine`] the offload decision
+//! selects (PJRT artifact for the GPU target, native Rust for the CPU
+//! targets); only the *latency accounting* runs through the calibrated
+//! device simulator (we do not own a Nexus 5). Every engine is pinned to
+//! the same trained weights and golden-tested against the JAX oracle, so
+//! the offload decision never changes the answer, only the cost —
+//! exactly the paper's setting (DESIGN.md §3).
+//!
+//! Construction goes through [`RouterBuilder`]:
+//!
+//! ```text
+//! let router = Router::builder()
+//!     .policy(OffloadPolicy::CostModel)
+//!     .device(device)
+//!     .max_wait(Duration::from_millis(2))
+//!     .manifest(&manifest, runtime)?   // standard engine set
+//!     .build()?;
+//! ```
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -17,25 +30,47 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::{Manifest, ModelShape};
 use crate::coordinator::batcher::BatchCollector;
 use crate::coordinator::device::DeviceState;
+use crate::coordinator::engine::{
+    CpuMultiEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{target_label, DecisionCache, LoadSnapshot, OffloadPolicy};
 use crate::har::CLASS_NAMES;
-use crate::lstm::{LstmModel, ThreadedLstm};
+use crate::lstm::{LstmModel, WeightFile};
 use crate::runtime::Runtime;
-use crate::simulator::{simulate_inference, Target};
+use crate::simulator::{simulate_inference, DeviceProfile, Target};
 use crate::tensor::Tensor;
+
+/// Per-request options for [`Router::submit_with`] / [`Router::classify_with`].
+#[derive(Debug, Clone, Default)]
+pub struct ClassifyOptions {
+    /// Caller-chosen request id, echoed in the reply (and on the wire).
+    pub id: Option<u64>,
+    /// Pin this request to a target, bypassing the offload policy. The
+    /// override applies to the whole dispatched batch (mixed batches use
+    /// the earliest override); if no engine serves it, the registry's
+    /// failover order decides.
+    pub target: Option<Target>,
+    /// Upper bound on how long the caller waits for the reply in
+    /// [`Router::classify_with`]; exceeding it yields
+    /// [`ServeError::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+}
 
 /// One classify request.
 pub struct ServeRequest {
     /// Flat `[seq_len * input_dim]` window.
     pub window: Vec<f32>,
+    pub opts: ClassifyOptions,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<ServeReply>,
+    pub reply: mpsc::Sender<Result<ServeReply, ServeError>>,
 }
 
 /// The answer sent back to the client.
 #[derive(Debug, Clone)]
 pub struct ServeReply {
+    /// Echo of [`ClassifyOptions::id`].
+    pub id: Option<u64>,
     pub class: usize,
     pub label: String,
     pub logits: Vec<f32>,
@@ -47,26 +82,25 @@ pub struct ServeReply {
     pub batch_size: usize,
 }
 
-#[derive(Debug, Clone)]
-pub struct RouterConfig {
-    pub shape: ModelShape,
-    pub policy: OffloadPolicy,
-    /// Batching deadline: how long the oldest request may wait.
-    pub max_wait: Duration,
-    /// Threads for the native multi-thread CPU path.
-    pub cpu_threads: usize,
+/// Serving-side failure delivered on the reply channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Every registered engine failed for this batch.
+    EngineFailure(String),
+    /// The caller's [`ClassifyOptions::deadline`] elapsed first.
+    DeadlineExceeded,
 }
 
-impl Default for RouterConfig {
-    fn default() -> Self {
-        Self {
-            shape: ModelShape::default(),
-            policy: OffloadPolicy::CostModel,
-            max_wait: Duration::from_millis(2),
-            cpu_threads: 4,
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
         }
     }
 }
+
+impl std::error::Error for ServeError {}
 
 /// Handle to the router thread.
 #[derive(Clone)]
@@ -74,7 +108,7 @@ pub struct Router {
     tx: mpsc::Sender<ServeRequest>,
     pub metrics: Arc<Metrics>,
     pub device: DeviceState,
-    cfg: RouterConfig,
+    shape: ModelShape,
     joiner: Arc<Joiner>,
 }
 
@@ -83,83 +117,62 @@ struct Joiner {
 }
 
 impl Router {
-    /// Start the router over a PJRT runtime + native engine.
-    pub fn start(
-        manifest: &Manifest,
-        runtime: Runtime,
-        device: DeviceState,
-        cfg: RouterConfig,
-    ) -> Result<Self> {
-        let batches = manifest.batches_for(cfg.shape);
-        if batches.is_empty() {
-            return Err(anyhow!(
-                "no compiled variants for shape {:?}; run `make artifacts`",
-                cfg.shape
-            ));
-        }
-        // Native engine shares the artifact weights with the PJRT path.
-        let weights_file = manifest
-            .variant_for(cfg.shape, batches[0])
-            .context("variant for smallest batch")?
-            .weights
-            .clone();
-        let wf = crate::lstm::WeightFile::load(manifest.path(&weights_file))?;
-        let native = Arc::new(LstmModel::from_weight_file(cfg.shape, &wf)?);
-        let pool = ThreadedLstm::new(Arc::clone(&native), cfg.cpu_threads);
-
-        // Pre-compile every batch variant so serving never hits XLA compile.
-        for &b in &batches {
-            let name = cfg.shape.variant_name(b);
-            runtime.preload(&name)?;
-        }
-
-        let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::channel::<ServeRequest>();
-        let worker = Worker {
-            rx,
-            collector: BatchCollector::new(batches, cfg.max_wait),
-            queue: VecDeque::new(),
-            runtime,
-            native,
-            pool,
-            device: device.clone(),
-            metrics: Arc::clone(&metrics),
-            cfg: cfg.clone(),
-            decisions: DecisionCache::new(),
-        };
-        let handle = std::thread::Builder::new()
-            .name("mobirnn-router".into())
-            .spawn(move || worker.run())
-            .context("spawning router")?;
-        Ok(Self {
-            tx,
-            metrics,
-            device,
-            cfg,
-            joiner: Arc::new(Joiner { handle: Mutex::new(Some(handle)) }),
-        })
+    /// Start building a router. See [`RouterBuilder`].
+    pub fn builder() -> RouterBuilder {
+        RouterBuilder::new()
     }
 
     /// Submit a window; returns the reply receiver.
-    pub fn submit(&self, window: Vec<f32>) -> Result<mpsc::Receiver<ServeReply>> {
-        let expect = self.cfg.shape.seq_len * self.cfg.shape.input_dim;
+    pub fn submit(
+        &self,
+        window: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<ServeReply, ServeError>>> {
+        self.submit_with(window, ClassifyOptions::default())
+    }
+
+    /// Submit a window with per-request options.
+    pub fn submit_with(
+        &self,
+        window: Vec<f32>,
+        opts: ClassifyOptions,
+    ) -> Result<mpsc::Receiver<Result<ServeReply, ServeError>>> {
+        let expect = self.window_len();
         if window.len() != expect {
             return Err(anyhow!("window has {} values, expected {expect}", window.len()));
         }
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(ServeRequest { window, enqueued: Instant::now(), reply: rtx })
+            .send(ServeRequest { window, opts, enqueued: Instant::now(), reply: rtx })
             .map_err(|_| anyhow!("router gone"))?;
         Ok(rrx)
     }
 
     /// Blocking classify (submit + wait).
     pub fn classify(&self, window: Vec<f32>) -> Result<ServeReply> {
-        self.submit(window)?.recv().context("router dropped reply")
+        self.classify_with(window, ClassifyOptions::default())
+    }
+
+    /// Blocking classify with per-request options (id echo, target
+    /// override, deadline).
+    pub fn classify_with(&self, window: Vec<f32>, opts: ClassifyOptions) -> Result<ServeReply> {
+        let deadline = opts.deadline;
+        let rrx = self.submit_with(window, opts)?;
+        let outcome = match deadline {
+            Some(limit) => rrx
+                .recv_timeout(limit)
+                .map_err(|_| anyhow::Error::new(ServeError::DeadlineExceeded))?,
+            None => rrx.recv().context("router dropped reply")?,
+        };
+        outcome.map_err(anyhow::Error::new)
     }
 
     pub fn shape(&self) -> ModelShape {
-        self.cfg.shape
+        self.shape
+    }
+
+    /// Flat window length (`seq_len * input_dim`) this router accepts.
+    pub fn window_len(&self) -> usize {
+        self.shape.seq_len * self.shape.input_dim
     }
 }
 
@@ -172,16 +185,164 @@ impl Drop for Joiner {
     }
 }
 
+/// Fluent constructor for [`Router`] — the only way to build one.
+///
+/// Defaults: paper-default [`ModelShape`], cost-model policy, 2 ms
+/// batching deadline, 4 CPU threads, a fresh simulated Nexus 5. At least
+/// one engine is required: either the standard set via
+/// [`RouterBuilder::manifest`] or custom ones via [`RouterBuilder::engine`].
+pub struct RouterBuilder {
+    shape: ModelShape,
+    policy: OffloadPolicy,
+    max_wait: Duration,
+    cpu_threads: usize,
+    device: Option<DeviceState>,
+    registry: EngineRegistry,
+}
+
+impl Default for RouterBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RouterBuilder {
+    pub fn new() -> Self {
+        Self {
+            shape: ModelShape::default(),
+            policy: OffloadPolicy::CostModel,
+            max_wait: Duration::from_millis(2),
+            cpu_threads: 4,
+            device: None,
+            registry: EngineRegistry::new(),
+        }
+    }
+
+    /// Model shape served by this router (set BEFORE `.manifest(..)`).
+    pub fn shape(mut self, shape: ModelShape) -> Self {
+        self.shape = shape;
+        self
+    }
+
+    /// Offload policy (default: cost model).
+    pub fn policy(mut self, policy: OffloadPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Simulated device state shared with callers (default: idle Nexus 5).
+    pub fn device(mut self, device: DeviceState) -> Self {
+        self.device = Some(device);
+        self
+    }
+
+    /// Batching deadline: how long the oldest request may wait.
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Threads for the native multi-thread CPU engine (set BEFORE
+    /// `.manifest(..)`).
+    pub fn cpu_threads(mut self, threads: usize) -> Self {
+        self.cpu_threads = threads.max(1);
+        self
+    }
+
+    /// Register a custom engine; replaces any registered engine of the
+    /// same target kind. Registration order is failover order.
+    pub fn engine(mut self, engine: Box<dyn Engine>) -> Self {
+        self.registry.register(engine);
+        self
+    }
+
+    /// Register the standard engine set from the AOT artifacts: the PJRT
+    /// GPU engine plus native single- and multi-thread CPU engines, all
+    /// sharing the artifact weights.
+    pub fn manifest(mut self, manifest: &Manifest, runtime: Runtime) -> Result<Self> {
+        let shape = self.shape;
+        let batches = manifest.batches_for(shape);
+        if batches.is_empty() {
+            return Err(anyhow!(
+                "no compiled variants for shape {shape:?}; run `make artifacts`"
+            ));
+        }
+        let weights_file = manifest
+            .variant_for(shape, batches[0])
+            .context("variant for smallest batch")?
+            .weights
+            .clone();
+        let wf = WeightFile::load(manifest.path(&weights_file))?;
+        let native = Arc::new(LstmModel::from_weight_file(shape, &wf)?);
+        let threads = self.cpu_threads;
+        self.registry.register(Box::new(PjrtEngine::new(manifest, runtime, shape)?));
+        self.registry.register(Box::new(CpuMultiEngine::new(Arc::clone(&native), threads)));
+        self.registry.register(Box::new(CpuSingleEngine::new(native)));
+        Ok(self)
+    }
+
+    /// Spawn the router thread.
+    pub fn build(self) -> Result<Router> {
+        if self.registry.is_empty() {
+            return Err(anyhow!(
+                "router needs at least one engine: call .manifest(..) or .engine(..)"
+            ));
+        }
+        let device =
+            self.device.unwrap_or_else(|| DeviceState::new(DeviceProfile::nexus5()));
+        // Batch sizes the collector may form: the union of what the
+        // engines can execute. Engines that accept any batch contribute
+        // nothing; if only such engines are registered, use a dyadic
+        // ladder so burst traffic still batches.
+        let mut batches: Vec<usize> = self
+            .registry
+            .iter()
+            .flat_map(|e| e.supported_batches().iter().copied())
+            .collect();
+        if batches.is_empty() {
+            batches = vec![1, 2, 4, 8];
+        }
+        batches.sort_unstable();
+        batches.dedup();
+
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<ServeRequest>();
+        let worker = Worker {
+            rx,
+            collector: BatchCollector::new(batches, self.max_wait),
+            queue: VecDeque::new(),
+            engines: self.registry,
+            device: device.clone(),
+            metrics: Arc::clone(&metrics),
+            shape: self.shape,
+            policy: self.policy,
+            max_wait: self.max_wait,
+            decisions: DecisionCache::new(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("mobirnn-router".into())
+            .spawn(move || worker.run())
+            .context("spawning router")?;
+        Ok(Router {
+            tx,
+            metrics,
+            device,
+            shape: self.shape,
+            joiner: Arc::new(Joiner { handle: Mutex::new(Some(handle)) }),
+        })
+    }
+}
+
 struct Worker {
     rx: mpsc::Receiver<ServeRequest>,
     collector: BatchCollector,
     queue: VecDeque<ServeRequest>,
-    runtime: Runtime,
-    native: Arc<LstmModel>,
-    pool: ThreadedLstm,
+    engines: EngineRegistry,
     device: DeviceState,
     metrics: Arc<Metrics>,
-    cfg: RouterConfig,
+    shape: ModelShape,
+    policy: OffloadPolicy,
+    max_wait: Duration,
     decisions: DecisionCache,
 }
 
@@ -214,7 +375,7 @@ impl Worker {
                     // Serve the tail (poll "in the future" so every
                     // deadline fires), then exit.
                     while self.collector.pending() > 0 {
-                        self.dispatch_once(Instant::now() + 2 * self.cfg.max_wait);
+                        self.dispatch_once(Instant::now() + 2 * self.max_wait);
                     }
                     return;
                 }
@@ -231,7 +392,7 @@ impl Worker {
         if reqs.is_empty() {
             return;
         }
-        let shape = self.cfg.shape;
+        let shape = self.shape;
         let window_len = shape.seq_len * shape.input_dim;
 
         // Build the padded [B, T, D] tensor.
@@ -242,38 +403,39 @@ impl Worker {
         data.resize(plan.padded_to * window_len, 0.0);
         let x = Tensor::new(vec![plan.padded_to, shape.seq_len, shape.input_dim], data);
 
-        // Offload decision on current load.
-        let load = LoadSnapshot {
-            gpu_util: self.device.effective_gpu_util(),
-            cpu_util: self.device.cpu_util(),
-        };
-        let target = self.decisions.decide(
-            &self.cfg.policy,
-            self.device.profile(),
-            shape,
-            plan.padded_to,
-            load,
-        );
-
-        // REAL numerics.
-        let t0 = Instant::now();
-        let logits = match target {
-            Target::Gpu(_) => {
-                let variant = shape.variant_name(plan.padded_to);
-                match self.runtime.execute(&variant, x.clone()) {
-                    Ok(l) => l,
-                    Err(e) => {
-                        eprintln!("[router] PJRT error, falling back to native: {e:#}");
-                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let mut st = crate::lstm::model::InferenceState::new(shape);
-                        self.native.forward_batch(&x, &mut st)
-                    }
-                }
+        // Offload decision: an explicit per-request override wins;
+        // otherwise the policy decides on current load.
+        let target = match reqs.iter().find_map(|r| r.opts.target) {
+            Some(t) => t,
+            None => {
+                let load = LoadSnapshot {
+                    gpu_util: self.device.effective_gpu_util(),
+                    cpu_util: self.device.cpu_util(),
+                };
+                self.decisions.decide(
+                    &self.policy,
+                    self.device.profile(),
+                    shape,
+                    plan.padded_to,
+                    load,
+                )
             }
-            Target::CpuMulti(_) => self.pool.forward_batch(&x),
-            Target::CpuSingle => {
-                let mut st = crate::lstm::model::InferenceState::new(shape);
-                self.native.forward_batch(&x, &mut st)
+        };
+
+        // REAL numerics through the engine registry; generic failover.
+        // `errors` counts engine execution failures (same unit on the
+        // partial-failover and total-failure paths).
+        let t0 = Instant::now();
+        let (outcome, engine_errors) = self.engines.infer_with_failover(target, &x);
+        self.metrics.errors.fetch_add(engine_errors, Ordering::Relaxed);
+        let (logits, target) = match outcome {
+            Ok((logits, used)) => (logits, used),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in reqs {
+                    let _ = req.reply.send(Err(ServeError::EngineFailure(msg.clone())));
+                }
+                return;
             }
         };
         let compute_ns = t0.elapsed().as_nanos() as u64;
@@ -320,7 +482,8 @@ impl Worker {
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(j, _)| j)
                 .unwrap_or(0);
-            let _ = req.reply.send(ServeReply {
+            let _ = req.reply.send(Ok(ServeReply {
+                id: req.opts.id,
                 class,
                 label: CLASS_NAMES.get(class).unwrap_or(&"?").to_string(),
                 logits: row,
@@ -328,7 +491,7 @@ impl Worker {
                 sim_ns,
                 target: target_label(target),
                 batch_size: plan.padded_to,
-            });
+            }));
         }
     }
 }
@@ -336,8 +499,9 @@ impl Worker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::testutil::FixedEngine;
     use crate::har;
-    use crate::simulator::DeviceProfile;
+    use crate::simulator::Factorization;
 
     fn setup(policy: OffloadPolicy) -> Option<(Router, Manifest)> {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -347,15 +511,101 @@ mod tests {
         }
         let man = Manifest::load(dir).unwrap();
         let rt = Runtime::start(&man).unwrap();
-        let device = DeviceState::new(DeviceProfile::nexus5());
-        let router = Router::start(
-            &man,
-            rt,
-            device,
-            RouterConfig { policy, max_wait: Duration::from_millis(1), ..Default::default() },
-        )
-        .unwrap();
+        let router = Router::builder()
+            .policy(policy)
+            .max_wait(Duration::from_millis(1))
+            .manifest(&man, rt)
+            .unwrap()
+            .build()
+            .unwrap();
         Some((router, man))
+    }
+
+    /// A router over a single fake engine — exercises the builder and the
+    /// serving loop without artifacts.
+    fn fixed_router(policy: OffloadPolicy, engines: Vec<FixedEngine>) -> Router {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let mut b = Router::builder()
+            .shape(shape)
+            .policy(policy)
+            .max_wait(Duration::from_millis(1));
+        for e in engines {
+            b = b.engine(Box::new(e));
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn builder_requires_an_engine() {
+        let err = Router::builder().build().unwrap_err().to_string();
+        assert!(err.contains("engine"), "{err}");
+    }
+
+    #[test]
+    fn fixed_engine_round_trip_without_artifacts() {
+        let router =
+            fixed_router(OffloadPolicy::CostModel, vec![FixedEngine::new(Target::CpuSingle)]);
+        let reply = router.classify(vec![0.0; 30]).unwrap();
+        assert_eq!(reply.class, 1, "FixedEngine always predicts class 1");
+        // Policy may ask for the GPU; the registry fails over to the only
+        // engine present without counting an error.
+        assert_eq!(reply.target, "cpu");
+        assert!(reply.sim_ns > 0);
+        assert_eq!(router.metrics.errors.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn engine_failover_is_generic() {
+        let router = fixed_router(
+            OffloadPolicy::Static(Target::Gpu(Factorization::Coarse)),
+            vec![
+                FixedEngine::failing(Target::Gpu(Factorization::Coarse)),
+                FixedEngine::new(Target::CpuMulti(4)),
+            ],
+        );
+        let reply = router.classify(vec![0.0; 30]).unwrap();
+        assert_eq!(reply.target, "cpu-multi", "failover must reach the next engine");
+        assert_eq!(router.metrics.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn all_engines_failing_surfaces_serve_error() {
+        let router = fixed_router(
+            OffloadPolicy::Static(Target::CpuSingle),
+            vec![FixedEngine::failing(Target::CpuSingle)],
+        );
+        let outcome = router.submit(vec![0.0; 30]).unwrap().recv().unwrap();
+        match outcome {
+            Err(ServeError::EngineFailure(msg)) => assert!(msg.contains("failed"), "{msg}"),
+            other => panic!("expected EngineFailure, got {other:?}"),
+        }
+        assert!(router.metrics.errors.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn options_carry_id_and_deadline() {
+        let router =
+            fixed_router(OffloadPolicy::CostModel, vec![FixedEngine::new(Target::CpuSingle)]);
+        let reply = router
+            .classify_with(
+                vec![0.0; 30],
+                ClassifyOptions { id: Some(99), ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(reply.id, Some(99));
+
+        // A zero deadline elapses before the 1 ms batching wait.
+        let err = router
+            .classify_with(
+                vec![0.0; 30],
+                ClassifyOptions { deadline: Some(Duration::ZERO), ..Default::default() },
+            )
+            .unwrap_err();
+        assert!(
+            err.downcast_ref::<ServeError>() == Some(&ServeError::DeadlineExceeded),
+            "{err:#}"
+        );
     }
 
     #[test]
@@ -377,22 +627,18 @@ mod tests {
         // The offload decision must not change answers: native CPU logits
         // track the XLA logits within fp tolerance.
         let Some((gpu_router, man)) = setup(OffloadPolicy::Static(Target::Gpu(
-            crate::simulator::Factorization::Coarse,
+            Factorization::Coarse,
         ))) else {
             return;
         };
         let rt = Runtime::start(&man).unwrap();
-        let cpu_router = Router::start(
-            &man,
-            rt,
-            DeviceState::new(DeviceProfile::nexus5()),
-            RouterConfig {
-                policy: OffloadPolicy::Static(Target::CpuSingle),
-                max_wait: Duration::from_millis(1),
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let cpu_router = Router::builder()
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(1))
+            .manifest(&man, rt)
+            .unwrap()
+            .build()
+            .unwrap();
         let ds = har::generate(6, 13);
         for i in 0..6 {
             let g = gpu_router.classify(ds.window(i).to_vec()).unwrap();
@@ -407,6 +653,23 @@ mod tests {
     }
 
     #[test]
+    fn per_request_target_override_beats_policy() {
+        // Idle device: the cost model would pick the GPU, but the
+        // override pins this request to the single-thread CPU engine.
+        let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
+        let ds = har::generate(2, 15);
+        let forced = router
+            .classify_with(
+                ds.window(0).to_vec(),
+                ClassifyOptions { target: Some(Target::CpuSingle), ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(forced.target, "cpu", "override must bypass the policy");
+        let free = router.classify(ds.window(1).to_vec()).unwrap();
+        assert_eq!(free.target, "gpu", "non-overridden requests still follow the policy");
+    }
+
+    #[test]
     fn high_load_switches_to_cpu() {
         let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
         router.device.set_gpu_util(0.9);
@@ -418,7 +681,8 @@ mod tests {
 
     #[test]
     fn submit_rejects_wrong_window() {
-        let Some((router, _)) = setup(OffloadPolicy::CostModel) else { return };
+        let router =
+            fixed_router(OffloadPolicy::CostModel, vec![FixedEngine::new(Target::CpuSingle)]);
         assert!(router.submit(vec![0.0; 7]).is_err());
     }
 
@@ -429,7 +693,7 @@ mod tests {
         let rxs: Vec<_> =
             (0..16).map(|i| router.submit(ds.window(i).to_vec()).unwrap()).collect();
         for rx in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().unwrap();
             assert!(r.batch_size >= 1);
         }
         let batches = router.metrics.batches.load(Ordering::Relaxed);

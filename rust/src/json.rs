@@ -7,6 +7,12 @@
 //! writer. Supports the full JSON grammar (RFC 8259) minus `\u` escapes
 //! beyond the BMP surrogate-pair handling we don't need (artifact
 //! manifests and wire messages are ASCII).
+//!
+//! On top of the tree sit the [`ToValue`]/[`FromValue`] codec traits:
+//! typed messages (the protocol-v2 `Request`/`Response` enums in
+//! [`crate::server::protocol`]) convert to and from `Value` through
+//! them, so serialization and malformed-input handling live here, in one
+//! tested place, rather than at every call site.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -35,6 +41,165 @@ impl fmt::Display for ParseError {
 }
 
 impl std::error::Error for ParseError {}
+
+/// Error produced when decoding a [`Value`] into a typed message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecError {
+    pub msg: String,
+}
+
+impl CodecError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Convenience for "field X: problem" errors.
+    pub fn field(name: &str, problem: impl fmt::Display) -> Self {
+        Self { msg: format!("field {name:?}: {problem}") }
+    }
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Types that serialize themselves into a JSON [`Value`].
+///
+/// Together with [`FromValue`] this is the codec seam the serving wire
+/// protocol is built on (DESIGN.md §7): every message the server reads or
+/// writes is a typed struct/enum implementing both traits, so field
+/// names, ids and malformed-input handling live in one tested place
+/// instead of being assembled ad hoc at each call site.
+pub trait ToValue {
+    fn to_value(&self) -> Value;
+}
+
+/// Types that parse themselves out of a JSON [`Value`].
+pub trait FromValue: Sized {
+    fn from_value(v: &Value) -> Result<Self, CodecError>;
+}
+
+impl ToValue for Value {
+    fn to_value(&self) -> Value {
+        self.clone()
+    }
+}
+
+impl FromValue for Value {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        Ok(v.clone())
+    }
+}
+
+impl ToValue for bool {
+    fn to_value(&self) -> Value {
+        Value::Bool(*self)
+    }
+}
+
+impl FromValue for bool {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_bool().ok_or_else(|| CodecError::new("expected bool"))
+    }
+}
+
+impl ToValue for f64 {
+    fn to_value(&self) -> Value {
+        Value::Num(*self)
+    }
+}
+
+impl FromValue for f64 {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_f64().ok_or_else(|| CodecError::new("expected number"))
+    }
+}
+
+impl ToValue for f32 {
+    fn to_value(&self) -> Value {
+        Value::Num(*self as f64)
+    }
+}
+
+impl FromValue for f32 {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_f64().map(|n| n as f32).ok_or_else(|| CodecError::new("expected number"))
+    }
+}
+
+impl ToValue for usize {
+    fn to_value(&self) -> Value {
+        Value::Num(*self as f64)
+    }
+}
+
+impl FromValue for usize {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_usize().ok_or_else(|| CodecError::new("expected non-negative integer"))
+    }
+}
+
+impl ToValue for u64 {
+    fn to_value(&self) -> Value {
+        Value::Num(*self as f64)
+    }
+}
+
+impl FromValue for u64 {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_usize().map(|u| u as u64).ok_or_else(|| CodecError::new("expected non-negative integer"))
+    }
+}
+
+impl ToValue for String {
+    fn to_value(&self) -> Value {
+        Value::Str(self.clone())
+    }
+}
+
+impl FromValue for String {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_str().map(str::to_string).ok_or_else(|| CodecError::new("expected string"))
+    }
+}
+
+impl<T: ToValue> ToValue for Vec<T> {
+    fn to_value(&self) -> Value {
+        Value::Arr(self.iter().map(ToValue::to_value).collect())
+    }
+}
+
+impl<T: FromValue> FromValue for Vec<T> {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        v.as_arr()
+            .ok_or_else(|| CodecError::new("expected array"))?
+            .iter()
+            .map(T::from_value)
+            .collect()
+    }
+}
+
+impl<T: ToValue> ToValue for Option<T> {
+    fn to_value(&self) -> Value {
+        match self {
+            Some(t) => t.to_value(),
+            None => Value::Null,
+        }
+    }
+}
+
+impl<T: FromValue> FromValue for Option<T> {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        match v {
+            Value::Null => Ok(None),
+            other => T::from_value(other).map(Some),
+        }
+    }
+}
 
 impl Value {
     // ---- accessors -------------------------------------------------
@@ -118,7 +283,12 @@ impl Value {
             Value::Bool(false) => out.push_str("false"),
             Value::Num(n) => {
                 use std::fmt::Write;
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no Inf/NaN; null is the least-surprising
+                    // lowering (mirrors serde_json's arbitrary-precision
+                    // behaviour). The parser refuses to produce them.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else if (*n as f32) as f64 == *n {
                     // Exactly representable as f32 (the common case: our
@@ -361,7 +531,12 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>().map(Value::Num).map_err(|_| self.err("bad number"))
+        let n: f64 = text.parse().map_err(|_| self.err("bad number"))?;
+        // "1e999" parses to +inf in Rust; JSON numbers must stay finite.
+        if !n.is_finite() {
+            return Err(self.err("number overflows f64"));
+        }
+        Ok(Value::Num(n))
     }
 
     fn array(&mut self) -> Result<Value, ParseError> {
@@ -520,6 +695,96 @@ mod tests {
     fn obj_builder() {
         let v = obj([("x", Value::from(1usize)), ("y", Value::from("z"))]);
         assert_eq!(v.to_json(), r#"{"x":1,"y":"z"}"#);
+    }
+
+    #[test]
+    fn number_edge_cases() {
+        // -0 parses, compares equal to 0, and survives a round-trip.
+        let neg_zero = parse("-0").unwrap();
+        assert_eq!(neg_zero, Value::Num(0.0));
+        assert_eq!(parse(&neg_zero.to_json()).unwrap(), neg_zero);
+        assert_eq!(parse("-0.0").unwrap().as_f64(), Some(0.0));
+
+        // Exponent forms.
+        assert_eq!(parse("1e3").unwrap(), Value::Num(1000.0));
+        assert_eq!(parse("1E3").unwrap(), Value::Num(1000.0));
+        assert_eq!(parse("2.5e-2").unwrap(), Value::Num(0.025));
+        assert_eq!(parse("-1.25E+2").unwrap(), Value::Num(-125.0));
+        let big = parse("1e308").unwrap().as_f64().unwrap();
+        assert!(big.is_finite());
+
+        // Overflow to infinity is a parse error, not a silent inf.
+        assert!(parse("1e999").is_err());
+        assert!(parse("-1e999").is_err());
+        assert!(parse("[1, 1e999]").is_err());
+
+        // Malformed exponents rejected by f64::parse.
+        assert!(parse("1e").is_err());
+        assert!(parse("-").is_err());
+    }
+
+    #[test]
+    fn non_finite_values_write_as_null() {
+        assert_eq!(Value::Num(f64::INFINITY).to_json(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_json(), "null");
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        // And the result is still valid JSON.
+        assert!(parse(&Value::Arr(vec![Value::Num(f64::NAN)]).to_json()).is_ok());
+    }
+
+    #[test]
+    fn escape_sequence_roundtrips() {
+        // Every escape the writer can emit must parse back to itself.
+        for s in [
+            "plain",
+            "quote\"inside",
+            "back\\slash",
+            "new\nline tab\t cr\r",
+            "control\u{1}\u{1f}chars",
+            "unicode héllo 世界 → ∞",
+            "", // empty string
+        ] {
+            let v = Value::Str(s.to_string());
+            let rt = parse(&v.to_json()).unwrap();
+            assert_eq!(rt.as_str(), Some(s), "escaping broke {s:?}");
+        }
+        // \u escapes and solidus parse (writer never emits them for these).
+        assert_eq!(parse(r#""A\/""#).unwrap().as_str(), Some("A/"));
+    }
+
+    #[test]
+    fn codec_primitive_roundtrips() {
+        fn rt<T: ToValue + FromValue + PartialEq + std::fmt::Debug>(x: T) {
+            // Through the Value tree...
+            assert_eq!(T::from_value(&x.to_value()).unwrap(), x);
+            // ...and through the wire text.
+            let text = x.to_value().to_json();
+            assert_eq!(T::from_value(&parse(&text).unwrap()).unwrap(), x);
+        }
+        rt(true);
+        rt(42.5f64);
+        rt(0.55f32);
+        rt(7usize);
+        rt(7u64);
+        rt("hello \"quoted\"".to_string());
+        rt(vec![1.0f64, -2.5, 0.0]);
+        rt(Some(3usize));
+        rt(Option::<usize>::None);
+        rt(vec![vec![1u64, 2], vec![]]);
+    }
+
+    #[test]
+    fn codec_type_mismatches_error() {
+        assert!(f64::from_value(&Value::Str("x".into())).is_err());
+        assert!(bool::from_value(&Value::Num(1.0)).is_err());
+        assert!(String::from_value(&Value::Null).is_err());
+        assert!(usize::from_value(&Value::Num(-1.0)).is_err());
+        assert!(usize::from_value(&Value::Num(1.5)).is_err());
+        assert!(Vec::<f64>::from_value(&Value::Num(1.0)).is_err());
+        // One bad element poisons the whole array decode.
+        assert!(Vec::<f64>::from_value(&Value::Arr(vec![Value::Num(1.0), Value::Null])).is_err());
+        let e = f64::from_value(&Value::Null).unwrap_err();
+        assert!(format!("{e}").contains("number"));
     }
 
     #[test]

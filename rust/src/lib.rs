@@ -11,13 +11,17 @@
 //!
 //! - [`tensor`]     — minimal dense f32 tensor used across the crate
 //! - [`config`]     — model/variant/manifest configuration
-//! - [`lstm`]       — native Rust LSTM engine (CPU path) + MRNW weights
+//! - [`json`]       — in-crate JSON tree + the `ToValue`/`FromValue`
+//!   codec traits the wire protocol is typed through
+//! - [`lstm`]       — native Rust LSTM forward pass (CPU engines) + MRNW weights
 //! - [`har`]        — synthetic HAR dataset substrate (MRNH loader + generator)
 //! - [`simulator`]  — DES mobile-SoC simulator (GPU slots, launch overhead,
 //!   shared bandwidth, background load; Fine vs Coarse factorization)
 //! - [`runtime`]    — PJRT runtime: HLO-text artifacts -> compile -> execute
-//! - [`coordinator`]— router, dynamic batcher, utilization-aware offload policy
-//! - [`server`]     — tokio TCP JSON-lines serving front-end
+//! - [`coordinator`]— `RouterBuilder`/router, dynamic batcher, the `Engine`
+//!   registry over all execution backends, utilization-aware offload policy
+//! - [`server`]     — std::net TCP front-end speaking the typed JSON-lines
+//!   protocol v2 (`Request`/`Response` enums)
 //! - [`figures`]    — harnesses that regenerate paper Figs 2–7
 //! - [`util`]       — deterministic RNG + stats helpers
 

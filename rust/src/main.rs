@@ -3,12 +3,15 @@
 //! ```text
 //! mobirnn figures [--fig 2|3|4|5|6|7] [--all]     regenerate paper figures
 //! mobirnn serve   [--addr A] [--policy P] [--device D] [--max-wait-ms N]
-//! mobirnn classify [--n N] [--policy P] [--device D] [--gpu-load U]
+//! mobirnn classify [--n N] [--policy P] [--device D] [--gpu-load U] [--target T]
 //! mobirnn info                                      artifact manifest summary
 //! ```
 //!
 //! (The vendored crate set has no clap; parsing is a small hand-rolled
-//! flag walker — see `Args`.)
+//! flag walker — see `Args`. Unknown flags are rejected, value flags
+//! always consume the next token — even one that starts with `-`, e.g.
+//! `--gpu-load -0.5` — and a value flag at the end of the line is a
+//! "missing value" error instead of being silently swallowed.)
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -16,12 +19,38 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use mobirnn::config::Manifest;
-use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::coordinator::{parse_target, ClassifyOptions, DeviceState, OffloadPolicy, Router};
 use mobirnn::figures;
 use mobirnn::har;
 use mobirnn::runtime::Runtime;
 use mobirnn::server::Server;
 use mobirnn::simulator::DeviceProfile;
+
+/// Per-command flag specification: which `--key value` flags and which
+/// bare `--flag` switches a command accepts.
+fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
+    match cmd {
+        "figures" => (&["fig"], &["all"]),
+        "serve" => (
+            &["addr", "policy", "device", "max-wait-ms", "cpu-threads", "gpu-load", "cpu-load"],
+            &[],
+        ),
+        "classify" => (
+            &[
+                "n",
+                "policy",
+                "device",
+                "max-wait-ms",
+                "cpu-threads",
+                "gpu-load",
+                "cpu-load",
+                "target",
+            ],
+            &[],
+        ),
+        _ => (&[], &[]),
+    }
+}
 
 /// Tiny flag parser: `--key value` and `--flag` pairs after a subcommand.
 struct Args {
@@ -30,23 +59,37 @@ struct Args {
 }
 
 impl Args {
-    fn parse() -> Self {
+    fn parse() -> Result<Self> {
         let mut argv = std::env::args().skip(1);
         let cmd = argv.next().unwrap_or_else(|| "help".into());
-        let mut flags = HashMap::new();
         let rest: Vec<String> = argv.collect();
+        Self::from_parts(&cmd, &rest)
+    }
+
+    /// Walk `rest` against the command's flag spec. Testable without env.
+    fn from_parts(cmd: &str, rest: &[String]) -> Result<Self> {
+        let (value_flags, bool_flags) = flag_spec(cmd);
+        let mut flags = HashMap::new();
         let mut i = 0;
         while i < rest.len() {
-            let k = rest[i].trim_start_matches('-').to_string();
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                flags.insert(k, rest[i + 1].clone());
+            let arg = &rest[i];
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {arg:?} (flags start with --)"))?;
+            if value_flags.iter().any(|f| *f == name) {
+                let value = rest
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{name} requires a value"))?;
+                flags.insert(name.to_string(), value.clone());
                 i += 2;
-            } else {
-                flags.insert(k, "true".into());
+            } else if bool_flags.iter().any(|f| *f == name) {
+                flags.insert(name.to_string(), "true".into());
                 i += 1;
+            } else {
+                return Err(anyhow!("unknown flag --{name} for {cmd:?} (see --help)"));
             }
         }
-        Self { cmd, flags }
+        Ok(Self { cmd: cmd.to_string(), flags })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -58,8 +101,24 @@ impl Args {
     }
 }
 
+/// Parse a `--gpu-load`/`--cpu-load` value; must be a utilization in [0, 1].
+fn parse_util(flag: &str, raw: &str) -> Result<f64> {
+    let u: f64 = raw.parse().with_context(|| format!("--{flag} {raw:?}"))?;
+    if !(0.0..=1.0).contains(&u) {
+        return Err(anyhow!("--{flag} {u} outside [0, 1]"));
+    }
+    Ok(u)
+}
+
 fn main() {
-    let args = Args::parse();
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            print_help();
+            eprintln!("\nerror: {e:#}");
+            std::process::exit(2);
+        }
+    };
     let r = match args.cmd.as_str() {
         "figures" => cmd_figures(&args),
         "serve" => cmd_serve(&args),
@@ -90,8 +149,10 @@ fn print_help() {
          \x20 figures   regenerate paper figures   [--fig N | --all]\n\
          \x20 serve     TCP serving front-end      [--addr 127.0.0.1:7878] [--policy cost-model]\n\
          \x20                                      [--device nexus5|nexus6p] [--max-wait-ms 2]\n\
+         \x20                                      [--cpu-threads 4] [--gpu-load U] [--cpu-load U]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
+         \x20                                      [--target gpu|cpu|cpu-multi]\n\
          \x20 info      print the artifact manifest summary\n\
          \n\
          POLICIES: gpu | fine | cpu | cpu-multi | threshold:<0..1> | cost-model"
@@ -122,24 +183,23 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
     let policy = OffloadPolicy::parse(&args.get_or("policy", "cost-model"))
         .ok_or_else(|| anyhow!("bad --policy (see --help)"))?;
     let max_wait: u64 = args.get_or("max-wait-ms", "2").parse().context("--max-wait-ms")?;
+    let cpu_threads: usize =
+        args.get_or("cpu-threads", "4").parse().context("--cpu-threads")?;
     let device = DeviceState::new(profile);
-    if let Some(u) = args.get("gpu-load") {
-        device.set_gpu_util(u.parse().context("--gpu-load")?);
+    if let Some(raw) = args.get("gpu-load") {
+        device.set_gpu_util(parse_util("gpu-load", raw)?);
     }
-    if let Some(u) = args.get("cpu-load") {
-        device.set_cpu_util(u.parse().context("--cpu-load")?);
+    if let Some(raw) = args.get("cpu-load") {
+        device.set_cpu_util(parse_util("cpu-load", raw)?);
     }
     let runtime = Runtime::start(&manifest)?;
-    let router = Router::start(
-        &manifest,
-        runtime,
-        device,
-        RouterConfig {
-            policy,
-            max_wait: Duration::from_millis(max_wait),
-            ..Default::default()
-        },
-    )?;
+    let router = Router::builder()
+        .policy(policy)
+        .device(device)
+        .max_wait(Duration::from_millis(max_wait))
+        .cpu_threads(cpu_threads)
+        .manifest(&manifest, runtime)?
+        .build()?;
     Ok((router, manifest))
 }
 
@@ -148,11 +208,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (router, manifest) = build_router(args)?;
     let server = Server::bind(&addr, router)?;
     println!(
-        "mobirnn serving {} on {} (policy {}, device {}) — JSON lines; Ctrl-C to stop",
+        "mobirnn serving {} on {} (policy {}, device {}) — JSON lines, protocol v{}; Ctrl-C to stop",
         manifest.default_variant,
         server.addr(),
         args.get_or("policy", "cost-model"),
         args.get_or("device", "nexus5"),
+        mobirnn::server::PROTOCOL_VERSION,
     );
     // Serve forever.
     loop {
@@ -162,6 +223,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_classify(args: &Args) -> Result<()> {
     let n: usize = args.get_or("n", "10").parse().context("--n")?;
+    let target = match args.get("target") {
+        Some(t) => {
+            Some(parse_target(t).ok_or_else(|| anyhow!("unknown --target {t:?} (see --help)"))?)
+        }
+        None => None,
+    };
     let (router, manifest) = build_router(args)?;
     let ds = har::HarDataset::load(manifest.path(&manifest.har_test.file))?;
     let n = n.min(ds.len());
@@ -169,7 +236,8 @@ fn cmd_classify(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     let mut correct = 0;
     for i in 0..n {
-        let reply = router.classify(ds.window(i).to_vec())?;
+        let opts = ClassifyOptions { id: Some(i as u64), target, ..Default::default() };
+        let reply = router.classify_with(ds.window(i).to_vec(), opts)?;
         let gold = ds.labels[i] as usize;
         if reply.class == gold {
             correct += 1;
@@ -221,4 +289,78 @@ fn cmd_info() -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn value_flag_consumes_dash_values() {
+        // `--gpu-load -0.5` must parse as key/value, not as two flags.
+        let a = Args::from_parts("classify", &argv(&["--gpu-load", "-0.5"])).unwrap();
+        assert_eq!(a.get("gpu-load"), Some("-0.5"));
+        // (The range check then rejects it downstream.)
+        assert!(parse_util("gpu-load", "-0.5").is_err());
+    }
+
+    #[test]
+    fn trailing_value_flag_is_missing_value_not_bool() {
+        let err = Args::from_parts("classify", &argv(&["--n"])).unwrap_err().to_string();
+        assert!(err.contains("requires a value"), "{err}");
+        // Also when another flag follows immediately in the old buggy
+        // pattern: `--target --n 5` consumes "--n" as target's value and
+        // then errors on the dangling "5" (a non-flag argument).
+        let err =
+            Args::from_parts("classify", &argv(&["--target", "--n", "5"])).unwrap_err().to_string();
+        assert!(err.contains("unexpected argument"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let err =
+            Args::from_parts("classify", &argv(&["--bogus", "1"])).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --bogus"), "{err}");
+        // A flag valid for one command is unknown for another.
+        let err = Args::from_parts("figures", &argv(&["--addr", "x"])).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --addr"), "{err}");
+    }
+
+    #[test]
+    fn bool_and_value_flags_mix() {
+        let a =
+            Args::from_parts("figures", &argv(&["--all"])).unwrap();
+        assert_eq!(a.get("all"), Some("true"));
+        let a = Args::from_parts("figures", &argv(&["--fig", "7"])).unwrap();
+        assert_eq!(a.get("fig"), Some("7"));
+        let a = Args::from_parts(
+            "serve",
+            &argv(&["--addr", "127.0.0.1:0", "--max-wait-ms", "5", "--gpu-load", "0.3"]),
+        )
+        .unwrap();
+        assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
+        assert_eq!(a.get("max-wait-ms"), Some("5"));
+        assert_eq!(a.get("gpu-load"), Some("0.3"));
+    }
+
+    #[test]
+    fn positional_arguments_are_rejected() {
+        let err = Args::from_parts("classify", &argv(&["5"])).unwrap_err().to_string();
+        assert!(err.contains("unexpected argument"), "{err}");
+    }
+
+    #[test]
+    fn util_range_enforced() {
+        assert_eq!(parse_util("gpu-load", "0.5").unwrap(), 0.5);
+        assert_eq!(parse_util("gpu-load", "0").unwrap(), 0.0);
+        assert_eq!(parse_util("gpu-load", "1").unwrap(), 1.0);
+        assert!(parse_util("gpu-load", "1.5").is_err());
+        assert!(parse_util("gpu-load", "-0.1").is_err());
+        assert!(parse_util("gpu-load", "nan").is_err());
+        assert!(parse_util("gpu-load", "abc").is_err());
+    }
 }

@@ -1,24 +1,35 @@
-//! TCP JSON-lines serving front-end.
+//! TCP JSON-lines serving front-end (wire protocol v2).
 //!
 //! The image's vendor set has no tokio, so this is a classic std::net
 //! threaded server: one acceptor, one handler thread per connection,
-//! all feeding the shared [`Router`]. The protocol is newline-delimited
-//! JSON (one object per line):
+//! all feeding the shared [`crate::coordinator::Router`]. The protocol
+//! is newline-delimited JSON, one typed message per line; every message
+//! is a [`protocol::Request`]/[`protocol::Response`] variant converted
+//! through the [`crate::json::ToValue`]/[`crate::json::FromValue`]
+//! codecs (full catalogue: DESIGN.md §7):
 //!
 //! ```text
 //! → {"type":"classify","id":7,"window":[... 1152 floats ...]}
-//! ← {"type":"result","id":7,"class":3,"label":"sitting",
+//! ← {"type":"result","v":2,"id":7,"class":3,"label":"sitting",
 //!    "sim_latency_us":36123.4,"wall_latency_us":812.0,
 //!    "target":"gpu","batch_size":2}
+//! → {"type":"classify_batch","id":8,"windows":[[...],[...]]}
+//! ← {"type":"batch_result","v":2,"id":8,"results":[{...},{...}]}
 //! → {"type":"set_load","gpu":0.8,"cpu":0.5}      ← Fig 7 knobs
-//! ← {"type":"ok"}
+//! ← {"type":"load_set","v":2,"gpu":0.8,"cpu":0.5}
+//! → {"type":"set_load","gpu":7.0}
+//! ← {"type":"error","v":2,"code":"invalid_load","message":"..."}
 //! → {"type":"stats"}
-//! ← {"type":"stats", ...Metrics::to_json()...}
-//! → {"type":"ping"}   ← {"type":"pong"}
+//! ← {"type":"stats","v":2,"gpu_util":...,"cpu_util":...,"metrics":{...}}
+//! → {"type":"ping"}   ← {"type":"pong","v":2}
+//! → {"type":"quit"}   ← {"type":"bye","v":2}    (connection closes)
 //! ```
 
 pub mod protocol;
 pub mod tcp;
 
-pub use protocol::{handle_message, Response};
+pub use protocol::{
+    handle_line, handle_request, ClassifyOutcome, ErrorCode, Request, Response,
+    PROTOCOL_VERSION,
+};
 pub use tcp::{Client, Server};

@@ -1,172 +1,770 @@
-//! Wire protocol: parse request lines, produce response values.
+//! Wire protocol v2: typed [`Request`]/[`Response`] messages.
 //!
-//! Pure functions over [`crate::json::Value`] so the protocol is testable
-//! without sockets; [`super::tcp`] adds the transport.
+//! Every message is a variant of the two enums below, converted to and
+//! from JSON through the [`ToValue`]/[`FromValue`] codec traits — no
+//! call site assembles protocol JSON by hand, and malformed input is
+//! handled in exactly one tested place. Responses carry the protocol
+//! version (`"v": 2`); requests may state a version and are rejected
+//! when it does not match. The full message catalogue is documented in
+//! DESIGN.md §7.
+//!
+//! Pure functions over [`crate::json::Value`] so the protocol is
+//! testable without sockets; [`super::tcp`] adds the transport.
 
-use crate::coordinator::Router;
-use crate::json::{obj, Value};
+use std::time::Duration;
 
-/// A response line plus whether the connection should close.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Response {
-    pub value: Value,
-    pub close: bool,
+use crate::coordinator::{parse_target, ClassifyOptions, Router, ServeError, ServeReply};
+use crate::json::{obj, CodecError, FromValue, ToValue, Value};
+use crate::simulator::Target;
+
+/// Version stamped on every response; requests carrying a different
+/// `"v"` are rejected with [`ErrorCode::UnsupportedVersion`].
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Machine-readable error class carried by [`Response::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not valid JSON.
+    BadJson,
+    /// Valid JSON, but not a well-formed request (unknown type, missing
+    /// or mistyped fields, wrong window length, empty batch, ...).
+    BadRequest,
+    /// The request declared a protocol version we do not speak.
+    UnsupportedVersion,
+    /// `set_load` utilization outside `[0, 1]`.
+    InvalidLoad,
+    /// The caller's deadline elapsed before a reply was ready.
+    Deadline,
+    /// Execution failed in every registered engine.
+    Engine,
 }
 
-fn err_response(id: Option<&Value>, msg: &str) -> Response {
-    let mut fields = vec![
-        ("type", Value::from("error")),
-        ("message", Value::from(msg)),
-    ];
-    if let Some(id) = id {
-        fields.push(("id", id.clone()));
-    }
-    Response { value: obj(fields), close: false }
-}
-
-/// Handle one request line against the router. Never panics on malformed
-/// input — protocol errors become `{"type":"error"}` lines.
-pub fn handle_message(router: &Router, line: &str) -> Response {
-    let msg = match crate::json::parse(line) {
-        Ok(v) => v,
-        Err(e) => return err_response(None, &format!("bad json: {e}")),
-    };
-    let id = msg.as_obj().and_then(|o| o.get("id")).cloned();
-    let id_ref = id.as_ref();
-    match msg.get("type").as_str() {
-        Some("ping") => Response { value: obj([("type", Value::from("pong"))]), close: false },
-        Some("quit") => Response { value: obj([("type", Value::from("bye"))]), close: true },
-        Some("stats") => {
-            let mut v = router.metrics.to_json();
-            if let Value::Obj(o) = &mut v {
-                o.insert("type".into(), Value::from("stats"));
-                o.insert("gpu_util".into(), Value::Num(router.device.gpu_util()));
-                o.insert("cpu_util".into(), Value::Num(router.device.cpu_util()));
-            }
-            Response { value: v, close: false }
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadJson => "bad_json",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::InvalidLoad => "invalid_load",
+            ErrorCode::Deadline => "deadline",
+            ErrorCode::Engine => "engine",
         }
-        Some("set_load") => {
-            if let Some(g) = msg.get("gpu").as_f64() {
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "bad_json" => Some(ErrorCode::BadJson),
+            "bad_request" => Some(ErrorCode::BadRequest),
+            "unsupported_version" => Some(ErrorCode::UnsupportedVersion),
+            "invalid_load" => Some(ErrorCode::InvalidLoad),
+            "deadline" => Some(ErrorCode::Deadline),
+            "engine" => Some(ErrorCode::Engine),
+            _ => None,
+        }
+    }
+}
+
+/// A client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Quit,
+    Stats,
+    /// Set background device utilization (the Fig 7 knobs). Values must
+    /// lie in `[0, 1]`; out-of-range input is rejected with a typed
+    /// error, never silently accepted.
+    SetLoad { id: Option<u64>, gpu: Option<f64>, cpu: Option<f64> },
+    /// Classify one flat `[seq_len * input_dim]` window.
+    Classify {
+        id: Option<u64>,
+        window: Vec<f32>,
+        /// Per-request target override ("gpu" | "cpu" | "cpu-multi" | ...).
+        target: Option<Target>,
+        /// Reply deadline in milliseconds.
+        deadline_ms: Option<u64>,
+    },
+    /// Classify several windows in one round trip; they enter the
+    /// batcher together.
+    ClassifyBatch { id: Option<u64>, windows: Vec<Vec<f32>> },
+}
+
+/// A server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    /// Connection will close after this line.
+    Bye,
+    /// `set_load` applied; echoes the utilizations now in effect.
+    LoadSet { id: Option<u64>, gpu: f64, cpu: f64 },
+    Stats { gpu_util: f64, cpu_util: f64, metrics: Value },
+    Result { id: Option<u64>, outcome: ClassifyOutcome },
+    BatchResult { id: Option<u64>, outcomes: Vec<ClassifyOutcome> },
+    Error { id: Option<u64>, code: ErrorCode, message: String },
+}
+
+/// One classification result as carried on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassifyOutcome {
+    pub class: usize,
+    pub label: String,
+    pub sim_latency_us: f64,
+    pub wall_latency_us: f64,
+    pub target: String,
+    pub batch_size: usize,
+}
+
+impl ClassifyOutcome {
+    pub fn from_reply(r: &ServeReply) -> Self {
+        Self {
+            class: r.class,
+            label: r.label.clone(),
+            sim_latency_us: r.sim_ns as f64 / 1e3,
+            wall_latency_us: r.wall_ns as f64 / 1e3,
+            target: r.target.to_string(),
+            batch_size: r.batch_size,
+        }
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("class", Value::from(self.class)),
+            ("label", Value::from(self.label.clone())),
+            ("sim_latency_us", Value::Num(self.sim_latency_us)),
+            ("wall_latency_us", Value::Num(self.wall_latency_us)),
+            ("target", Value::from(self.target.clone())),
+            ("batch_size", Value::from(self.batch_size)),
+        ]
+    }
+}
+
+impl ToValue for ClassifyOutcome {
+    fn to_value(&self) -> Value {
+        obj(self.fields())
+    }
+}
+
+impl FromValue for ClassifyOutcome {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        Ok(Self {
+            class: field(v, "class")?,
+            label: field(v, "label")?,
+            sim_latency_us: field(v, "sim_latency_us")?,
+            wall_latency_us: field(v, "wall_latency_us")?,
+            target: field(v, "target")?,
+            batch_size: field(v, "batch_size")?,
+        })
+    }
+}
+
+// ---- field helpers ---------------------------------------------------
+
+/// Decode object field `key` through its [`FromValue`] codec, wrapping
+/// failures with the field name. Absent fields decode as `Value::Null`,
+/// so `Option<T>` makes a field optional and a bare `T` requires it.
+fn field<T: FromValue>(v: &Value, key: &str) -> Result<T, CodecError> {
+    T::from_value(v.get(key)).map_err(|e| CodecError::field(key, e))
+}
+
+/// Best-effort id for echoing on error responses built before a request
+/// decoded; strict decoding uses `field::<Option<u64>>(v, "id")`.
+fn read_id(v: &Value) -> Option<u64> {
+    v.get("id").as_usize().map(|u| u as u64)
+}
+
+fn envelope(ty: &'static str, id: Option<u64>) -> Vec<(&'static str, Value)> {
+    let mut fields = vec![("type", Value::from(ty)), ("v", Value::from(PROTOCOL_VERSION))];
+    if let Some(id) = id {
+        fields.push(("id", Value::from(id)));
+    }
+    fields
+}
+
+// ---- Request codec ---------------------------------------------------
+
+impl ToValue for Request {
+    fn to_value(&self) -> Value {
+        match self {
+            Request::Ping => obj(envelope("ping", None)),
+            Request::Quit => obj(envelope("quit", None)),
+            Request::Stats => obj(envelope("stats", None)),
+            Request::SetLoad { id, gpu, cpu } => {
+                let mut fields = envelope("set_load", *id);
+                if let Some(g) = gpu {
+                    fields.push(("gpu", Value::Num(*g)));
+                }
+                if let Some(c) = cpu {
+                    fields.push(("cpu", Value::Num(*c)));
+                }
+                obj(fields)
+            }
+            Request::Classify { id, window, target, deadline_ms } => {
+                let mut fields = envelope("classify", *id);
+                fields.push(("window", window.to_value()));
+                if let Some(t) = target {
+                    fields.push(("target", Value::from(crate::coordinator::target_label(*t))));
+                }
+                if let Some(d) = deadline_ms {
+                    fields.push(("deadline_ms", Value::from(*d)));
+                }
+                obj(fields)
+            }
+            Request::ClassifyBatch { id, windows } => {
+                let mut fields = envelope("classify_batch", *id);
+                fields.push(("windows", windows.to_value()));
+                obj(fields)
+            }
+        }
+    }
+}
+
+impl FromValue for Request {
+    // Version enforcement lives in `handle_line` (the transport), which
+    // checks `"v"` before decoding so the mismatch gets its own typed
+    // error code; the codec itself is version-agnostic.
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        let ty = v
+            .get("type")
+            .as_str()
+            .ok_or_else(|| CodecError::new("missing 'type' field"))?;
+        match ty {
+            "ping" => Ok(Request::Ping),
+            "quit" => Ok(Request::Quit),
+            "stats" => Ok(Request::Stats),
+            "set_load" => Ok(Request::SetLoad {
+                id: field(v, "id")?,
+                gpu: field(v, "gpu")?,
+                cpu: field(v, "cpu")?,
+            }),
+            "classify" => {
+                let target = match v.get("target") {
+                    Value::Null => None,
+                    t => {
+                        let label = t
+                            .as_str()
+                            .ok_or_else(|| CodecError::field("target", "expected a string"))?;
+                        Some(parse_target(label).ok_or_else(|| {
+                            CodecError::field("target", format!("unknown target {label:?}"))
+                        })?)
+                    }
+                };
+                Ok(Request::Classify {
+                    id: field(v, "id")?,
+                    window: field(v, "window")?,
+                    target,
+                    deadline_ms: field(v, "deadline_ms")?,
+                })
+            }
+            "classify_batch" => Ok(Request::ClassifyBatch {
+                id: field(v, "id")?,
+                windows: field(v, "windows")?,
+            }),
+            other => Err(CodecError::new(format!("unknown type {other:?}"))),
+        }
+    }
+}
+
+// ---- Response codec --------------------------------------------------
+
+impl ToValue for Response {
+    fn to_value(&self) -> Value {
+        match self {
+            Response::Pong => obj(envelope("pong", None)),
+            Response::Bye => obj(envelope("bye", None)),
+            Response::LoadSet { id, gpu, cpu } => {
+                let mut fields = envelope("load_set", *id);
+                fields.push(("gpu", Value::Num(*gpu)));
+                fields.push(("cpu", Value::Num(*cpu)));
+                obj(fields)
+            }
+            Response::Stats { gpu_util, cpu_util, metrics } => {
+                let mut fields = envelope("stats", None);
+                fields.push(("gpu_util", Value::Num(*gpu_util)));
+                fields.push(("cpu_util", Value::Num(*cpu_util)));
+                fields.push(("metrics", metrics.clone()));
+                obj(fields)
+            }
+            Response::Result { id, outcome } => {
+                let mut fields = envelope("result", *id);
+                fields.extend(outcome.fields());
+                obj(fields)
+            }
+            Response::BatchResult { id, outcomes } => {
+                let mut fields = envelope("batch_result", *id);
+                fields.push(("results", outcomes.to_value()));
+                obj(fields)
+            }
+            Response::Error { id, code, message } => {
+                let mut fields = envelope("error", *id);
+                fields.push(("code", Value::from(code.as_str())));
+                fields.push(("message", Value::from(message.clone())));
+                obj(fields)
+            }
+        }
+    }
+}
+
+impl FromValue for Response {
+    fn from_value(v: &Value) -> Result<Self, CodecError> {
+        let ty = v
+            .get("type")
+            .as_str()
+            .ok_or_else(|| CodecError::new("missing 'type' field"))?;
+        match ty {
+            "pong" => Ok(Response::Pong),
+            "bye" => Ok(Response::Bye),
+            "load_set" => Ok(Response::LoadSet {
+                id: field(v, "id")?,
+                gpu: field(v, "gpu")?,
+                cpu: field(v, "cpu")?,
+            }),
+            "stats" => {
+                let metrics = v.get("metrics");
+                if metrics.as_obj().is_none() {
+                    return Err(CodecError::field("metrics", "expected an object"));
+                }
+                Ok(Response::Stats {
+                    gpu_util: field(v, "gpu_util")?,
+                    cpu_util: field(v, "cpu_util")?,
+                    metrics: metrics.clone(),
+                })
+            }
+            "result" => Ok(Response::Result {
+                id: read_id(v),
+                outcome: ClassifyOutcome::from_value(v)?,
+            }),
+            "batch_result" => Ok(Response::BatchResult {
+                id: read_id(v),
+                outcomes: Vec::<ClassifyOutcome>::from_value(v.get("results"))
+                    .map_err(|e| CodecError::field("results", e))?,
+            }),
+            "error" => {
+                let code_str: String = field(v, "code")?;
+                let code = ErrorCode::parse(&code_str)
+                    .ok_or_else(|| CodecError::field("code", format!("unknown code {code_str:?}")))?;
+                Ok(Response::Error { id: read_id(v), code, message: field(v, "message")? })
+            }
+            other => Err(CodecError::new(format!("unknown type {other:?}"))),
+        }
+    }
+}
+
+// ---- server-side execution -------------------------------------------
+
+/// Handle one wire line against the router. Never panics on malformed
+/// input — protocol and execution errors become typed
+/// [`Response::Error`] lines.
+pub fn handle_line(router: &Router, line: &str) -> Response {
+    let v = match crate::json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Response::Error {
+                id: None,
+                code: ErrorCode::BadJson,
+                message: format!("bad json: {e}"),
+            }
+        }
+    };
+    let id = read_id(&v);
+    if let Some(ver) = v.get("v").as_usize() {
+        if ver as u64 != PROTOCOL_VERSION {
+            return Response::Error {
+                id,
+                code: ErrorCode::UnsupportedVersion,
+                message: format!(
+                    "protocol version {ver} not supported (server speaks v{PROTOCOL_VERSION})"
+                ),
+            };
+        }
+    }
+    match Request::from_value(&v) {
+        Ok(req) => handle_request(router, req),
+        Err(e) => Response::Error { id, code: ErrorCode::BadRequest, message: e.to_string() },
+    }
+}
+
+/// Execute a typed request against the router.
+pub fn handle_request(router: &Router, req: Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Quit => Response::Bye,
+        Request::Stats => Response::Stats {
+            gpu_util: router.device.gpu_util(),
+            cpu_util: router.device.cpu_util(),
+            metrics: router.metrics.to_json(),
+        },
+        Request::SetLoad { id, gpu, cpu } => {
+            for u in [gpu, cpu].into_iter().flatten() {
+                if !(0.0..=1.0).contains(&u) {
+                    return Response::Error {
+                        id,
+                        code: ErrorCode::InvalidLoad,
+                        message: format!("utilization {u} outside [0, 1]"),
+                    };
+                }
+            }
+            if let Some(g) = gpu {
                 router.device.set_gpu_util(g);
             }
-            if let Some(c) = msg.get("cpu").as_f64() {
+            if let Some(c) = cpu {
                 router.device.set_cpu_util(c);
             }
-            Response { value: obj([("type", Value::from("ok"))]), close: false }
+            Response::LoadSet {
+                id,
+                gpu: router.device.gpu_util(),
+                cpu: router.device.cpu_util(),
+            }
         }
-        Some("classify") => {
-            let Some(arr) = msg.get("window").as_arr() else {
-                return err_response(id_ref, "classify requires a 'window' array");
+        Request::Classify { id, window, target, deadline_ms } => {
+            let expect = router.window_len();
+            if window.len() != expect {
+                return Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!("window has {} values, expected {expect}", window.len()),
+                };
+            }
+            let opts = ClassifyOptions {
+                id,
+                target,
+                deadline: deadline_ms.map(Duration::from_millis),
             };
-            let mut window = Vec::with_capacity(arr.len());
-            for v in arr {
-                match v.as_f64() {
-                    Some(f) => window.push(f as f32),
-                    None => return err_response(id_ref, "window must contain only numbers"),
-                }
-            }
-            match router.classify(window) {
+            match router.classify_with(window, opts) {
                 Ok(reply) => {
-                    let mut fields = vec![
-                        ("type", Value::from("result")),
-                        ("class", Value::from(reply.class)),
-                        ("label", Value::from(reply.label.clone())),
-                        ("sim_latency_us", Value::Num(reply.sim_ns as f64 / 1e3)),
-                        ("wall_latency_us", Value::Num(reply.wall_ns as f64 / 1e3)),
-                        ("target", Value::from(reply.target)),
-                        ("batch_size", Value::from(reply.batch_size)),
-                    ];
-                    if let Some(id) = id_ref {
-                        fields.push(("id", id.clone()));
-                    }
-                    Response { value: obj(fields), close: false }
+                    Response::Result { id, outcome: ClassifyOutcome::from_reply(&reply) }
                 }
-                Err(e) => err_response(id_ref, &format!("{e:#}")),
+                Err(e) => {
+                    let code = match e.downcast_ref::<ServeError>() {
+                        Some(ServeError::DeadlineExceeded) => ErrorCode::Deadline,
+                        _ => ErrorCode::Engine,
+                    };
+                    Response::Error { id, code, message: format!("{e:#}") }
+                }
             }
         }
-        Some(other) => err_response(id_ref, &format!("unknown type {other:?}")),
-        None => err_response(id_ref, "missing 'type' field"),
+        Request::ClassifyBatch { id, windows } => {
+            if windows.is_empty() {
+                return Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: "classify_batch requires at least one window".into(),
+                };
+            }
+            let expect = router.window_len();
+            if let Some(w) = windows.iter().find(|w| w.len() != expect) {
+                return Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!("window has {} values, expected {expect}", w.len()),
+                };
+            }
+            // Submit everything first so the windows batch together.
+            let mut rxs = Vec::with_capacity(windows.len());
+            for w in windows {
+                match router.submit(w) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(e) => {
+                        return Response::Error {
+                            id,
+                            code: ErrorCode::Engine,
+                            message: format!("{e:#}"),
+                        }
+                    }
+                }
+            }
+            let mut outcomes = Vec::with_capacity(rxs.len());
+            for rx in rxs {
+                match rx.recv() {
+                    Ok(Ok(reply)) => outcomes.push(ClassifyOutcome::from_reply(&reply)),
+                    Ok(Err(e)) => {
+                        return Response::Error {
+                            id,
+                            code: ErrorCode::Engine,
+                            message: e.to_string(),
+                        }
+                    }
+                    Err(_) => {
+                        return Response::Error {
+                            id,
+                            code: ErrorCode::Engine,
+                            message: "router dropped reply".into(),
+                        }
+                    }
+                }
+            }
+            Response::BatchResult { id, outcomes }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Manifest;
-    use crate::coordinator::{DeviceState, OffloadPolicy, RouterConfig};
-    use crate::runtime::Runtime;
-    use crate::simulator::DeviceProfile;
-    use std::time::Duration;
+    use crate::config::ModelShape;
+    use crate::coordinator::engine::testutil::FixedEngine;
+    use crate::coordinator::OffloadPolicy;
+    use crate::simulator::Factorization;
 
-    fn router() -> Option<Router> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
+    /// Protocol tests run against a fake-engine router — no artifacts
+    /// needed, so they always execute.
+    fn router() -> Router {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(crate::simulator::Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(crate::simulator::Target::CpuSingle)))
+            .build()
+            .unwrap()
+    }
+
+    fn window_json(n: usize) -> String {
+        let vals: Vec<String> = (0..n).map(|i| format!("{}", i as f64 / 10.0)).collect();
+        format!("[{}]", vals.join(","))
+    }
+
+    #[test]
+    fn every_request_variant_round_trips() {
+        let cases = vec![
+            Request::Ping,
+            Request::Quit,
+            Request::Stats,
+            Request::SetLoad { id: Some(11), gpu: Some(0.5), cpu: None },
+            Request::SetLoad { id: None, gpu: None, cpu: Some(1.0) },
+            Request::Classify {
+                id: Some(7),
+                window: vec![0.25, -1.5, 0.0],
+                target: Some(crate::simulator::Target::CpuMulti(4)),
+                deadline_ms: Some(250),
+            },
+            Request::Classify { id: None, window: vec![], target: None, deadline_ms: None },
+            Request::ClassifyBatch {
+                id: Some(1),
+                windows: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            },
+        ];
+        for req in cases {
+            // Value round-trip.
+            assert_eq!(Request::from_value(&req.to_value()).unwrap(), req, "{req:?}");
+            // Wire-text round-trip.
+            let line = req.to_value().to_json();
+            let back = Request::from_value(&crate::json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, req, "{line}");
         }
-        let man = Manifest::load(dir).unwrap();
-        let rt = Runtime::start(&man).unwrap();
-        Some(
-            Router::start(
-                &man,
-                rt,
-                DeviceState::new(DeviceProfile::nexus5()),
-                RouterConfig {
-                    policy: OffloadPolicy::CostModel,
-                    max_wait: Duration::from_millis(1),
-                    ..Default::default()
-                },
-            )
-            .unwrap(),
-        )
+    }
+
+    #[test]
+    fn every_response_variant_round_trips() {
+        let outcome = ClassifyOutcome {
+            class: 3,
+            label: "sitting".into(),
+            sim_latency_us: 1234.5,
+            wall_latency_us: 88.25,
+            target: "gpu".into(),
+            batch_size: 4,
+        };
+        let cases = vec![
+            Response::Pong,
+            Response::Bye,
+            Response::LoadSet { id: Some(4), gpu: 0.75, cpu: 0.25 },
+            Response::LoadSet { id: None, gpu: 0.0, cpu: 1.0 },
+            Response::Stats {
+                gpu_util: 0.5,
+                cpu_util: 0.0,
+                metrics: obj([("requests", Value::from(4usize))]),
+            },
+            Response::Result { id: Some(9), outcome: outcome.clone() },
+            Response::Result { id: None, outcome: outcome.clone() },
+            Response::BatchResult { id: Some(2), outcomes: vec![outcome.clone(), outcome] },
+            Response::Error {
+                id: Some(5),
+                code: ErrorCode::InvalidLoad,
+                message: "utilization 7 outside [0, 1]".into(),
+            },
+        ];
+        for resp in cases {
+            assert_eq!(Response::from_value(&resp.to_value()).unwrap(), resp, "{resp:?}");
+            let line = resp.to_value().to_json();
+            let back = Response::from_value(&crate::json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, resp, "{line}");
+        }
+    }
+
+    #[test]
+    fn responses_carry_protocol_version() {
+        for resp in [Response::Pong, Response::Bye] {
+            assert_eq!(resp.to_value().get("v").as_usize(), Some(PROTOCOL_VERSION as usize));
+        }
     }
 
     #[test]
     fn ping_pong_and_quit() {
-        let Some(r) = router() else { return };
-        let pong = handle_message(&r, r#"{"type":"ping"}"#);
-        assert_eq!(pong.value.get("type").as_str(), Some("pong"));
-        assert!(!pong.close);
-        let bye = handle_message(&r, r#"{"type":"quit"}"#);
-        assert!(bye.close);
+        let r = router();
+        let pong = handle_line(&r, r#"{"type":"ping"}"#);
+        assert_eq!(pong, Response::Pong);
+        let bye = handle_line(&r, r#"{"type":"quit","v":2}"#);
+        assert_eq!(bye, Response::Bye);
+    }
+
+    #[test]
+    fn version_mismatch_is_a_typed_error() {
+        let r = router();
+        let resp = handle_line(&r, r#"{"type":"ping","v":1,"id":3}"#);
+        match resp {
+            Response::Error { id, code, .. } => {
+                assert_eq!(code, ErrorCode::UnsupportedVersion);
+                assert_eq!(id, Some(3), "errors echo the request id");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
     }
 
     #[test]
     fn malformed_lines_are_errors_not_panics() {
-        let Some(r) = router() else { return };
-        for bad in ["", "not json", "{}", r#"{"type":"nope"}"#,
-                    r#"{"type":"classify"}"#,
-                    r#"{"type":"classify","window":["a"]}"#,
-                    r#"{"type":"classify","window":[1,2,3]}"#] {
-            let resp = handle_message(&r, bad);
-            assert_eq!(resp.value.get("type").as_str(), Some("error"), "{bad}");
-            assert!(!resp.close);
+        let r = router();
+        for (bad, want) in [
+            ("", ErrorCode::BadJson),
+            ("not json", ErrorCode::BadJson),
+            ("{}", ErrorCode::BadRequest),
+            (r#"{"type":"nope"}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify"}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify","window":["a"]}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify","window":[1,2,3]}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify","window":[],"target":"npu"}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify_batch","windows":[]}"#, ErrorCode::BadRequest),
+        ] {
+            match handle_line(&r, bad) {
+                Response::Error { code, .. } => assert_eq!(code, want, "{bad}"),
+                other => panic!("{bad}: expected error, got {other:?}"),
+            }
         }
     }
 
     #[test]
     fn classify_round_trip_with_id() {
-        let Some(r) = router() else { return };
-        let ds = crate::har::generate(1, 23);
-        let window: Vec<String> = ds.window(0).iter().map(|v| format!("{v}")).collect();
-        let line = format!(
-            r#"{{"type":"classify","id":42,"window":[{}]}}"#,
-            window.join(",")
-        );
-        let resp = handle_message(&r, &line);
-        assert_eq!(resp.value.get("type").as_str(), Some("result"), "{:?}", resp.value);
-        assert_eq!(resp.value.get("id").as_usize(), Some(42));
-        assert!(resp.value.get("class").as_usize().unwrap() < 6);
-        assert!(resp.value.get("sim_latency_us").as_f64().unwrap() > 0.0);
+        let r = router();
+        let line = format!(r#"{{"type":"classify","id":42,"window":{}}}"#, window_json(30));
+        match handle_line(&r, &line) {
+            Response::Result { id, outcome } => {
+                assert_eq!(id, Some(42));
+                assert_eq!(outcome.class, 1, "FixedEngine predicts class 1");
+                assert!(outcome.sim_latency_us > 0.0);
+                assert_eq!(outcome.target, "cpu");
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_batch_returns_one_outcome_per_window() {
+        let r = router();
+        let w = window_json(30);
+        let line = format!(r#"{{"type":"classify_batch","id":5,"windows":[{w},{w},{w}]}}"#);
+        match handle_line(&r, &line) {
+            Response::BatchResult { id, outcomes } => {
+                assert_eq!(id, Some(5));
+                assert_eq!(outcomes.len(), 3);
+                assert!(outcomes.iter().all(|o| o.class == 1));
+            }
+            other => panic!("expected batch_result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn set_load_validates_range() {
+        let r = router();
+        // In-range: applied and echoed (with the request id).
+        match handle_line(&r, r#"{"type":"set_load","id":8,"gpu":0.75,"cpu":0.2}"#) {
+            Response::LoadSet { id, gpu, cpu } => {
+                assert_eq!(id, Some(8));
+                assert!((gpu - 0.75).abs() < 1e-9);
+                assert!((cpu - 0.2).abs() < 1e-9);
+            }
+            other => panic!("expected load_set, got {other:?}"),
+        }
+        // Out of range: typed error carrying the id, nothing applied.
+        match handle_line(&r, r#"{"type":"set_load","id":9,"gpu":7.0}"#) {
+            Response::Error { id, code, message } => {
+                assert_eq!(id, Some(9), "invalid_load must echo the request id");
+                assert_eq!(code, ErrorCode::InvalidLoad);
+                assert!(message.contains("outside"), "{message}");
+            }
+            other => panic!("expected invalid_load, got {other:?}"),
+        }
+        assert!((r.device.gpu_util() - 0.75).abs() < 1e-9, "rejected load must not apply");
+        for bad in [r#"{"type":"set_load","cpu":-0.1}"#, r#"{"type":"set_load","gpu":1.0001}"#] {
+            match handle_line(&r, bad) {
+                Response::Error { code, .. } => assert_eq!(code, ErrorCode::InvalidLoad, "{bad}"),
+                other => panic!("{bad}: expected error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn non_integer_ids_are_rejected_loudly() {
+        // v2 types ids as non-negative integers; anything else is a
+        // bad_request, never a silent drop of the id echo.
+        let r = router();
+        for bad in [
+            r#"{"type":"classify","id":"req-17","window":[]}"#,
+            r#"{"type":"set_load","id":-1,"gpu":0.5}"#,
+            r#"{"type":"classify_batch","id":1.5,"windows":[[1]]}"#,
+        ] {
+            match handle_line(&r, bad) {
+                Response::Error { code, message, .. } => {
+                    assert_eq!(code, ErrorCode::BadRequest, "{bad}");
+                    assert!(message.contains("id"), "{bad}: {message}");
+                }
+                other => panic!("{bad}: expected error, got {other:?}"),
+            }
+        }
     }
 
     #[test]
     fn set_load_then_stats_reflects() {
-        let Some(r) = router() else { return };
-        let ok = handle_message(&r, r#"{"type":"set_load","gpu":0.75,"cpu":0.2}"#);
-        assert_eq!(ok.value.get("type").as_str(), Some("ok"));
-        let stats = handle_message(&r, r#"{"type":"stats"}"#);
-        assert_eq!(stats.value.get("gpu_util").as_f64(), Some(0.75));
-        assert_eq!(stats.value.get("cpu_util").as_f64(), Some(0.2));
+        let r = router();
+        handle_request(&r, Request::SetLoad { id: None, gpu: Some(0.75), cpu: Some(0.2) });
+        match handle_request(&r, Request::Stats) {
+            Response::Stats { gpu_util, cpu_util, metrics } => {
+                assert!((gpu_util - 0.75).abs() < 1e-9);
+                assert!((cpu_util - 0.2).abs() < 1e-9);
+                assert!(metrics.get("requests").as_usize().is_some());
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_zero_yields_deadline_error() {
+        let r = router();
+        let line =
+            format!(r#"{{"type":"classify","id":1,"window":{},"deadline_ms":0}}"#, window_json(30));
+        match handle_line(&r, &line) {
+            Response::Error { id, code, .. } => {
+                assert_eq!(code, ErrorCode::Deadline);
+                assert_eq!(id, Some(1));
+            }
+            other => panic!("expected deadline error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_failure_surfaces_as_engine_error() {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let r = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(crate::simulator::Target::Gpu(
+                Factorization::Coarse,
+            )))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::failing(crate::simulator::Target::CpuSingle)))
+            .build()
+            .unwrap();
+        let line = format!(r#"{{"type":"classify","window":{}}}"#, window_json(30));
+        match handle_line(&r, &line) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Engine),
+            other => panic!("expected engine error, got {other:?}"),
+        }
     }
 }

@@ -1,14 +1,19 @@
-//! Threaded TCP transport for the JSON-lines protocol.
+//! Threaded TCP transport for the JSON-lines protocol (v2).
+//!
+//! The transport is deliberately thin: it reads lines, hands them to
+//! [`protocol::handle_line`], writes back the typed [`Response`]'s wire
+//! form, and closes when the response says so ([`Response::Bye`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::Router;
-use crate::server::protocol::handle_message;
+use crate::json::{FromValue, ToValue, Value};
+use crate::server::protocol::{self, ClassifyOutcome, Request, Response};
 
 /// A running server; drop or call [`Server::stop`] to shut down.
 pub struct Server {
@@ -86,18 +91,21 @@ fn handle_connection(stream: TcpStream, router: Router) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_message(&router, &line);
-        let mut out = resp.value.to_json();
+        let resp = protocol::handle_line(&router, &line);
+        let close = matches!(resp, Response::Bye);
+        let mut out = resp.to_value().to_json();
         out.push('\n');
         writer.write_all(out.as_bytes())?;
-        if resp.close {
+        if close {
             break;
         }
     }
     Ok(())
 }
 
-/// Minimal blocking client for tests, examples and the CLI.
+/// Minimal blocking client for tests, examples and the CLI. Speaks the
+/// typed protocol: requests go out as [`Request`], replies come back as
+/// [`Response`].
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -111,8 +119,15 @@ impl Client {
         Ok(Self { reader: BufReader::new(stream), writer })
     }
 
-    /// Send one JSON line, read one JSON line back.
-    pub fn call(&mut self, msg: &crate::json::Value) -> Result<crate::json::Value> {
+    /// Send one typed request, read back the typed response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        let v = self.call_raw(&req.to_value())?;
+        Response::from_value(&v).map_err(Into::into)
+    }
+
+    /// Send one raw JSON line, read one JSON line back. Escape hatch for
+    /// protocol tests; typed callers use [`Client::call`].
+    pub fn call_raw(&mut self, msg: &Value) -> Result<Value> {
         let mut line = msg.to_json();
         line.push('\n');
         self.writer.write_all(line.as_bytes())?;
@@ -121,83 +136,107 @@ impl Client {
         crate::json::parse(resp.trim()).map_err(Into::into)
     }
 
-    /// Classify a window; returns (class, sim_latency_us, target).
-    pub fn classify(&mut self, window: &[f32], id: usize) -> Result<(usize, f64, String)> {
-        use crate::json::{obj, Value};
-        let msg = obj([
-            ("type", Value::from("classify")),
-            ("id", Value::from(id)),
-            ("window", Value::Arr(window.iter().map(|&v| Value::Num(v as f64)).collect())),
-        ]);
-        let resp = self.call(&msg)?;
-        if resp.get("type").as_str() != Some("result") {
-            return Err(anyhow::anyhow!("server error: {}", resp.to_json()));
+    /// Classify a window; returns the typed outcome.
+    pub fn classify(&mut self, window: &[f32], id: u64) -> Result<ClassifyOutcome> {
+        let req = Request::Classify {
+            id: Some(id),
+            window: window.to_vec(),
+            target: None,
+            deadline_ms: None,
+        };
+        match self.call(&req)? {
+            Response::Result { outcome, .. } => Ok(outcome),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server error ({}): {message}", code.as_str()))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
         }
-        Ok((
-            resp.get("class").as_usize().context("class")?,
-            resp.get("sim_latency_us").as_f64().context("sim_latency_us")?,
-            resp.get("target").as_str().unwrap_or("?").to_string(),
-        ))
+    }
+
+    /// Set background device utilization; errors on rejection.
+    pub fn set_load(&mut self, gpu: f64, cpu: f64) -> Result<()> {
+        match self.call(&Request::SetLoad { id: None, gpu: Some(gpu), cpu: Some(cpu) })? {
+            Response::LoadSet { .. } => Ok(()),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server error ({}): {message}", code.as_str()))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Fetch server metrics: (gpu_util, cpu_util, metrics object).
+    pub fn stats(&mut self) -> Result<(f64, f64, Value)> {
+        match self.call(&Request::Stats)? {
+            Response::Stats { gpu_util, cpu_util, metrics } => Ok((gpu_util, cpu_util, metrics)),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Ask the server to close this connection.
+    pub fn quit(&mut self) -> Result<()> {
+        match self.call(&Request::Quit)? {
+            Response::Bye => Ok(()),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Manifest;
-    use crate::coordinator::{DeviceState, OffloadPolicy, RouterConfig};
-    use crate::json::{obj, Value};
-    use crate::runtime::Runtime;
-    use crate::simulator::DeviceProfile;
-    use std::time::Duration;
+    use crate::config::ModelShape;
+    use crate::coordinator::engine::testutil::FixedEngine;
+    use crate::coordinator::OffloadPolicy;
+    use crate::simulator::Target;
 
-    fn server() -> Option<Server> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        let man = Manifest::load(dir).unwrap();
-        let rt = Runtime::start(&man).unwrap();
-        let router = Router::start(
-            &man,
-            rt,
-            DeviceState::new(DeviceProfile::nexus5()),
-            RouterConfig {
-                policy: OffloadPolicy::CostModel,
-                max_wait: Duration::from_millis(1),
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        Some(Server::bind("127.0.0.1:0", router).unwrap())
+    /// Server over a fake-engine router — transport tests need no
+    /// artifacts.
+    fn server() -> Server {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap();
+        Server::bind("127.0.0.1:0", router).unwrap()
+    }
+
+    fn window() -> Vec<f32> {
+        (0..30).map(|i| i as f32 / 30.0).collect()
     }
 
     #[test]
     fn tcp_round_trip() {
-        let Some(srv) = server() else { return };
+        let srv = server();
         let mut client = Client::connect(srv.addr()).unwrap();
-        let pong = client.call(&obj([("type", Value::from("ping"))])).unwrap();
-        assert_eq!(pong.get("type").as_str(), Some("pong"));
+        client.ping().unwrap();
 
-        let ds = crate::har::generate(2, 31);
-        let (class, sim_us, target) = client.classify(ds.window(0), 1).unwrap();
-        assert!(class < 6);
-        assert!(sim_us > 0.0);
-        assert_eq!(target, "gpu");
+        let outcome = client.classify(&window(), 1).unwrap();
+        assert_eq!(outcome.class, 1, "FixedEngine predicts class 1");
+        assert!(outcome.sim_latency_us > 0.0);
+        assert_eq!(outcome.target, "cpu");
     }
 
     #[test]
     fn multiple_clients() {
-        let Some(srv) = server() else { return };
-        let ds = crate::har::generate(4, 37);
+        let srv = server();
         let addr = srv.addr();
         let handles: Vec<_> = (0..4)
             .map(|i| {
-                let w = ds.window(i).to_vec();
+                let w = window();
                 std::thread::spawn(move || {
                     let mut c = Client::connect(addr).unwrap();
-                    c.classify(&w, i).unwrap().0
+                    c.classify(&w, i).unwrap().class
                 })
             })
             .collect();
@@ -208,18 +247,37 @@ mod tests {
     }
 
     #[test]
-    fn quit_closes_connection() {
-        let Some(srv) = server() else { return };
+    fn typed_stats_over_tcp() {
+        let srv = server();
         let mut client = Client::connect(srv.addr()).unwrap();
-        let bye = client.call(&obj([("type", Value::from("quit"))])).unwrap();
-        assert_eq!(bye.get("type").as_str(), Some("bye"));
+        client.set_load(0.4, 0.1).unwrap();
+        let _ = client.classify(&window(), 0).unwrap();
+        let (gpu_util, cpu_util, metrics) = client.stats().unwrap();
+        assert!((gpu_util - 0.4).abs() < 1e-9);
+        assert!((cpu_util - 0.1).abs() < 1e-9);
+        assert_eq!(metrics.get("requests").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn invalid_load_is_rejected_over_tcp() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let err = client.set_load(7.0, 0.0).unwrap_err().to_string();
+        assert!(err.contains("invalid_load"), "{err}");
+    }
+
+    #[test]
+    fn quit_closes_connection() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.quit().unwrap();
         // Subsequent reads hit EOF -> call errors out.
-        assert!(client.call(&obj([("type", Value::from("ping"))])).is_err());
+        assert!(client.ping().is_err());
     }
 
     #[test]
     fn stop_is_idempotent() {
-        let Some(mut srv) = server() else { return };
+        let mut srv = server();
         srv.stop();
         srv.stop();
     }

@@ -1,15 +1,15 @@
 //! End-to-end serving integration: TCP server + concurrent clients +
-//! load knobs, against the real trained artifacts.
+//! load knobs, against the real trained artifacts, through the typed
+//! protocol-v2 client.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use mobirnn::config::Manifest;
-use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router, RouterConfig};
+use mobirnn::coordinator::{DeviceState, OffloadPolicy, Router};
 use mobirnn::har;
-use mobirnn::json::{obj, Value};
 use mobirnn::runtime::Runtime;
-use mobirnn::server::{Client, Server};
+use mobirnn::server::{Client, Request, Response, Server};
 use mobirnn::simulator::DeviceProfile;
 
 fn start_server(policy: OffloadPolicy) -> Option<(Server, DeviceState)> {
@@ -21,13 +21,14 @@ fn start_server(policy: OffloadPolicy) -> Option<(Server, DeviceState)> {
     let man = Manifest::load(dir).unwrap();
     let rt = Runtime::start(&man).unwrap();
     let device = DeviceState::new(DeviceProfile::nexus5());
-    let router = Router::start(
-        &man,
-        rt,
-        device.clone(),
-        RouterConfig { policy, max_wait: Duration::from_millis(1), ..Default::default() },
-    )
-    .unwrap();
+    let router = Router::builder()
+        .policy(policy)
+        .device(device.clone())
+        .max_wait(Duration::from_millis(1))
+        .manifest(&man, rt)
+        .unwrap()
+        .build()
+        .unwrap();
     Some((Server::bind("127.0.0.1:0", router).unwrap(), device))
 }
 
@@ -44,11 +45,11 @@ fn end_to_end_accuracy_over_tcp() {
     let n = 64;
     let mut correct = 0;
     for i in 0..n {
-        let (class, sim_us, _target) = client.classify(ds.window(i), i).unwrap();
-        if class == ds.labels[i] as usize {
+        let outcome = client.classify(ds.window(i), i as u64).unwrap();
+        if outcome.class == ds.labels[i] as usize {
             correct += 1;
         }
-        assert!(sim_us > 0.0);
+        assert!(outcome.sim_latency_us > 0.0);
     }
     let acc = correct as f64 / n as f64;
     assert!(acc > 0.6, "TCP-served accuracy {acc} too low (train report says ~0.8)");
@@ -66,8 +67,8 @@ fn concurrent_clients_get_batched() {
                 let mut client = Client::connect(addr).unwrap();
                 for i in 0..4 {
                     let idx = c * 4 + i;
-                    let (class, _, _) = client.classify(ds.window(idx), idx).unwrap();
-                    assert!(class < har::NUM_CLASSES);
+                    let outcome = client.classify(ds.window(idx), idx as u64).unwrap();
+                    assert!(outcome.class < har::NUM_CLASSES);
                 }
             })
         })
@@ -77,12 +78,31 @@ fn concurrent_clients_get_batched() {
     }
     // Ask the server for its stats and check batching happened.
     let mut client = Client::connect(addr).unwrap();
-    let stats = client.call(&obj([("type", Value::from("stats"))])).unwrap();
-    let requests = stats.get("requests").as_usize().unwrap();
-    let batches = stats.get("batches").as_usize().unwrap();
+    let (_, _, metrics) = client.stats().unwrap();
+    let requests = metrics.get("requests").as_usize().unwrap();
+    let batches = metrics.get("batches").as_usize().unwrap();
     assert_eq!(requests, 32);
     assert!(batches <= requests);
-    assert!(stats.get("mean_batch_size").as_f64().unwrap() >= 1.0);
+    assert!(metrics.get("mean_batch_size").as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn batch_request_serves_all_windows_in_one_round_trip() {
+    let Some((srv, _)) = start_server(OffloadPolicy::CostModel) else { return };
+    let ds = har::generate(4, 7);
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let windows: Vec<Vec<f32>> = (0..4).map(|i| ds.window(i).to_vec()).collect();
+    match client.call(&Request::ClassifyBatch { id: Some(1), windows }).unwrap() {
+        Response::BatchResult { id, outcomes } => {
+            assert_eq!(id, Some(1));
+            assert_eq!(outcomes.len(), 4);
+            for o in &outcomes {
+                assert!(o.class < har::NUM_CLASSES);
+                assert!(o.sim_latency_us > 0.0);
+            }
+        }
+        other => panic!("expected batch_result, got {other:?}"),
+    }
 }
 
 #[test]
@@ -92,32 +112,44 @@ fn load_knob_flips_offload_target_live() {
     let mut client = Client::connect(srv.addr()).unwrap();
 
     // Idle: GPU.
-    let (_, _, target) = client.classify(ds.window(0), 0).unwrap();
-    assert_eq!(target, "gpu");
+    let outcome = client.classify(ds.window(0), 0).unwrap();
+    assert_eq!(outcome.target, "gpu");
 
     // Saturate the device via the wire protocol, like a co-running game.
-    let ok = client
-        .call(&obj([
-            ("type", Value::from("set_load")),
-            ("gpu", Value::Num(0.9)),
-            ("cpu", Value::Num(0.9)),
-        ]))
-        .unwrap();
-    assert_eq!(ok.get("type").as_str(), Some("ok"));
+    client.set_load(0.9, 0.9).unwrap();
+    let outcome = client.classify(ds.window(1), 1).unwrap();
+    assert_ne!(outcome.target, "gpu", "§4.5: high load must steer off the GPU");
 
-    let (_, _, target) = client.classify(ds.window(1), 1).unwrap();
-    assert_ne!(target, "gpu", "§4.5: high load must steer off the GPU");
+    // Out-of-range load is rejected with a typed error and not applied.
+    let err = client.set_load(7.0, 0.0).unwrap_err().to_string();
+    assert!(err.contains("invalid_load"), "{err}");
 
     // And back.
-    client
-        .call(&obj([
-            ("type", Value::from("set_load")),
-            ("gpu", Value::Num(0.0)),
-            ("cpu", Value::Num(0.0)),
-        ]))
-        .unwrap();
-    let (_, _, target) = client.classify(ds.window(0), 2).unwrap();
-    assert_eq!(target, "gpu");
+    client.set_load(0.0, 0.0).unwrap();
+    let outcome = client.classify(ds.window(0), 2).unwrap();
+    assert_eq!(outcome.target, "gpu");
+}
+
+#[test]
+fn per_request_override_over_the_wire() {
+    let Some((srv, _)) = start_server(OffloadPolicy::CostModel) else { return };
+    let ds = har::generate(1, 11);
+    let mut client = Client::connect(srv.addr()).unwrap();
+    // Idle device: the policy would pick the GPU; the wire override pins
+    // this request to the single-thread CPU engine.
+    let req = Request::Classify {
+        id: Some(3),
+        window: ds.window(0).to_vec(),
+        target: Some(mobirnn::simulator::Target::CpuSingle),
+        deadline_ms: None,
+    };
+    match client.call(&req).unwrap() {
+        Response::Result { id, outcome } => {
+            assert_eq!(id, Some(3));
+            assert_eq!(outcome.target, "cpu", "wire target override must be honored");
+        }
+        other => panic!("expected result, got {other:?}"),
+    }
 }
 
 #[test]
@@ -132,8 +164,8 @@ fn fine_policy_reports_higher_sim_latency() {
     let mut c1 = Client::connect(coarse_srv.addr()).unwrap();
     let mut c2 = Client::connect(fine_srv.addr()).unwrap();
     for i in 0..3 {
-        let (_, coarse_us, _) = c1.classify(ds.window(i), i).unwrap();
-        let (_, fine_us, _) = c2.classify(ds.window(i), i).unwrap();
+        let coarse_us = c1.classify(ds.window(i), i as u64).unwrap().sim_latency_us;
+        let fine_us = c2.classify(ds.window(i), i as u64).unwrap().sim_latency_us;
         assert!(
             fine_us > 5.0 * coarse_us,
             "fine {fine_us}µs should dwarf coarse {coarse_us}µs"
@@ -151,9 +183,10 @@ fn malformed_traffic_does_not_kill_server() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("error"));
+    assert!(line.contains("bad_json"), "typed error code on the wire: {line}");
     // Server still answers a well-formed request on a fresh connection.
     let ds = har::generate(1, 33);
     let mut client = Client::connect(srv.addr()).unwrap();
-    let (class, _, _) = client.classify(ds.window(0), 0).unwrap();
-    assert!(class < har::NUM_CLASSES);
+    let outcome = client.classify(ds.window(0), 0).unwrap();
+    assert!(outcome.class < har::NUM_CLASSES);
 }
