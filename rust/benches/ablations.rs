@@ -1,7 +1,11 @@
 //! Ablation benches (DESIGN.md A1–A3): each §3.2/§3.3 optimization
 //! toggled off, on the simulated Nexus 5 — quantifying what each buys.
+//! Plus A4, measured for REAL on this host: the per-row GEMV path vs the
+//! batched time-major plan (DESIGN.md §8) at B ∈ {1, 2, 4, 8} — the
+//! work-unit coarsening applied to the batch dimension. Results land in
+//! EXPERIMENTS.md §Perf.
 
-use mobirnn::bench::bench_auto;
+use mobirnn::bench::{bench_auto, bench_per_row_vs_batched};
 use mobirnn::config::ModelShape;
 use mobirnn::simulator::{simulate_gpu_with_opts, DeviceProfile, Factorization, TraceOpts};
 
@@ -36,4 +40,10 @@ fn main() {
             ));
         });
     }
+
+    // A4: per-row GEMV path vs the batched time-major plan, measured for
+    // real on this host (2l/32h, 128x9 windows, random weights) — the
+    // same fixture the hotpath bench records into BENCH_hotpath.json.
+    println!("\n== A4: per-row vs batched native plan (real host timing) ==");
+    let _ = bench_per_row_vs_batched("ablation", 60.0);
 }

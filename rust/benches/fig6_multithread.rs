@@ -7,8 +7,7 @@ use std::sync::Arc;
 use mobirnn::bench::bench_auto;
 use mobirnn::config::{Manifest, ModelShape};
 use mobirnn::figures;
-use mobirnn::lstm::model::InferenceState;
-use mobirnn::lstm::{LstmModel, ThreadedLstm, WeightFile};
+use mobirnn::lstm::{BatchArena, LstmModel, ThreadedLstm, WeightFile};
 use mobirnn::simulator::DeviceProfile;
 use mobirnn::tensor::Tensor;
 
@@ -35,9 +34,9 @@ fn main() {
         (0..8).flat_map(|i| ds.window(i).to_vec()).collect(),
     );
 
-    let mut st = InferenceState::new(shape);
+    let mut arena = BatchArena::with_capacity(shape, 8);
     bench_auto("fig6/native_single_b8", 100.0, || {
-        std::hint::black_box(model.forward_batch(&x, &mut st));
+        std::hint::black_box(model.forward_batch(&x, &mut arena));
     });
     for threads in [2usize, 4] {
         let pool = ThreadedLstm::new(Arc::clone(&model), threads);

@@ -3,18 +3,26 @@
 //! before/after optimization:
 //!
 //!   - native LSTM cell + full-window forward (CPU serving target)
+//!   - per-row GEMV path vs the batched time-major plan at B ∈ {1,2,4,8}
+//!     (artifact-free: random weights, so it runs on every host)
 //!   - PJRT execute (GPU serving target) at batch 1 and 8
 //!   - batch planning, policy decision, JSON wire codec, histogram record
+//!
+//! Every case also lands in `BENCH_hotpath.json` next to Cargo.toml —
+//! the machine-readable seed of the perf trajectory (mean/stddev ns per
+//! case; schema documented in EXPERIMENTS.md §Perf).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use mobirnn::bench::{bench, bench_auto};
+use mobirnn::bench::{bench, bench_auto, bench_per_row_vs_batched, BenchResult};
 use mobirnn::config::{Manifest, ModelShape};
 use mobirnn::coordinator::metrics::Histogram;
 use mobirnn::coordinator::plan_batch;
 use mobirnn::coordinator::policy::{LoadSnapshot, OffloadPolicy};
 use mobirnn::har;
+use mobirnn::json::Value;
 use mobirnn::lstm::cell::{lstm_cell, CellScratch};
 use mobirnn::lstm::model::InferenceState;
 use mobirnn::lstm::{LstmModel, WeightFile};
@@ -22,7 +30,36 @@ use mobirnn::runtime::Runtime;
 use mobirnn::simulator::DeviceProfile;
 use mobirnn::tensor::Tensor;
 
+/// Serialize every case to `<manifest dir>/BENCH_hotpath.json`.
+/// `artifacts_present` marks partial runs: without `rust/artifacts/`
+/// the artifact-gated cases (native cell/forward_window, pjrt) are
+/// absent, and the flag keeps that from reading as a dropped case.
+fn write_bench_json(results: &[BenchResult], artifacts_present: bool) {
+    let mut cases = BTreeMap::new();
+    for r in results {
+        let mut entry = BTreeMap::new();
+        entry.insert("mean_ns".to_string(), Value::Num(r.mean_ns()));
+        entry.insert("stddev_ns".to_string(), Value::Num(r.stats.stddev()));
+        entry.insert("samples".to_string(), Value::Num(r.stats.len() as f64));
+        entry.insert(
+            "iters_per_sample".to_string(),
+            Value::Num(r.iters_per_sample as f64),
+        );
+        cases.insert(r.name.clone(), Value::Obj(entry));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("format".to_string(), Value::from("mobirnn-bench"));
+    root.insert("version".to_string(), Value::from(1usize));
+    root.insert("bench".to_string(), Value::from("hotpath"));
+    root.insert("artifacts_present".to_string(), Value::from(artifacts_present));
+    root.insert("cases".to_string(), Value::Obj(cases));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    std::fs::write(&path, Value::Obj(root).to_json()).expect("write BENCH_hotpath.json");
+    println!("wrote {}", path.display());
+}
+
 fn main() {
+    let mut all: Vec<BenchResult> = Vec::new();
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let man = if dir.join("manifest.json").exists() {
         Some(Manifest::load(dir).unwrap())
@@ -33,7 +70,7 @@ fn main() {
     let shape = ModelShape::default();
     let ds = har::generate(8, 1);
 
-    // --- native engine ---
+    // --- native engine (trained weights, artifact-gated) ---
     if let Some(man) = &man {
         let wf = WeightFile::load(man.path("weights_L2_H32.mrnw")).unwrap();
         let model = Arc::new(LstmModel::from_weight_file(shape, &wf).unwrap());
@@ -45,13 +82,13 @@ fn main() {
         let mut h = vec![0.0f32; shape.hidden];
         let mut c = vec![0.0f32; shape.hidden];
         let mut scratch = CellScratch::new(shape.hidden);
-        bench("hotpath/native_cell_step", 100, 20, 10_000, || {
+        all.push(bench("hotpath/native_cell_step", 100, 20, 10_000, || {
             lstm_cell(&layer0, &window[..9], &mut h, &mut c, &mut scratch);
-        });
+        }));
 
-        bench_auto("hotpath/native_forward_window", 100.0, || {
+        all.push(bench_auto("hotpath/native_forward_window", 100.0, || {
             std::hint::black_box(model.forward_window(&window, &mut st));
-        });
+        }));
 
         // Allocation discipline check: forward_window must not allocate
         // per call beyond the logits vec (ablation of §3.2 on CPU).
@@ -65,6 +102,12 @@ fn main() {
         );
     }
 
+    // --- per-row path vs batched time-major plan (artifact-free) ---
+    // The tentpole ablation: the same math as B forward_window calls vs
+    // one pass through the BatchArena plan (DESIGN.md §8). The batched
+    // numbers must be no slower at B=1 and faster at B=8.
+    all.extend(bench_per_row_vs_batched("hotpath", 80.0));
+
     // --- PJRT path ---
     if let Some(man) = &man {
         let rt = Runtime::start(man).unwrap();
@@ -76,9 +119,9 @@ fn main() {
                 data.extend_from_slice(ds.window(i));
             }
             let x = Tensor::new(vec![batch, shape.seq_len, shape.input_dim], data);
-            bench_auto(&format!("hotpath/pjrt_execute_b{batch}"), 150.0, || {
+            all.push(bench_auto(&format!("hotpath/pjrt_execute_b{batch}"), 150.0, || {
                 std::hint::black_box(rt.execute(&name, x.clone()).unwrap());
-            });
+            }));
         }
         println!(
             "hotpath/pjrt_mean_exec_reported: {:.1} µs",
@@ -87,11 +130,11 @@ fn main() {
     }
 
     // --- coordinator components ---
-    bench("hotpath/plan_batch", 100, 20, 100_000, || {
+    all.push(bench("hotpath/plan_batch", 100, 20, 100_000, || {
         std::hint::black_box(plan_batch(5, &[1, 2, 4, 8]));
-    });
+    }));
     let profile = DeviceProfile::nexus5();
-    bench("hotpath/policy_threshold", 100, 20, 100_000, || {
+    all.push(bench("hotpath/policy_threshold", 100, 20, 100_000, || {
         std::hint::black_box(
             OffloadPolicy::Threshold { gpu_threshold: 0.6 }.decide(
                 &profile,
@@ -100,17 +143,17 @@ fn main() {
                 LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
             ),
         );
-    });
-    bench("hotpath/policy_cost_model", 10, 20, 100, || {
+    }));
+    all.push(bench("hotpath/policy_cost_model", 10, 20, 100, || {
         std::hint::black_box(OffloadPolicy::CostModel.decide(
             &profile,
             shape,
             1,
             LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
         ));
-    });
+    }));
     let mut cache = mobirnn::coordinator::DecisionCache::new();
-    bench("hotpath/policy_cost_model_cached", 100, 20, 100_000, || {
+    all.push(bench("hotpath/policy_cost_model_cached", 100, 20, 100_000, || {
         std::hint::black_box(cache.decide(
             &OffloadPolicy::CostModel,
             &profile,
@@ -118,11 +161,11 @@ fn main() {
             1,
             LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
         ));
-    });
+    }));
     let hist = Histogram::new();
-    bench("hotpath/histogram_record", 100, 20, 100_000, || {
+    all.push(bench("hotpath/histogram_record", 100, 20, 100_000, || {
         hist.record(12_345);
-    });
+    }));
 
     // --- wire codec (1152-float classify line, protocol v2) ---
     let window = ds.window(0);
@@ -139,11 +182,13 @@ fn main() {
         .to_json()
     };
     println!("hotpath/wire_line_bytes: {}", line.len());
-    bench_auto("hotpath/json_parse_classify", 50.0, || {
+    all.push(bench_auto("hotpath/json_parse_classify", 50.0, || {
         std::hint::black_box(mobirnn::json::parse(&line).unwrap());
-    });
+    }));
     let parsed = mobirnn::json::parse(&line).unwrap();
-    bench_auto("hotpath/json_serialize_classify", 50.0, || {
+    all.push(bench_auto("hotpath/json_serialize_classify", 50.0, || {
         std::hint::black_box(parsed.to_json());
-    });
+    }));
+
+    write_bench_json(&all, man.is_some());
 }

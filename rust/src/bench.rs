@@ -7,7 +7,47 @@
 
 use std::time::Instant;
 
-use crate::util::Stats;
+use crate::config::ModelShape;
+use crate::lstm::model::InferenceState;
+use crate::lstm::{BatchArena, LstmCellWeights, LstmModel};
+use crate::tensor::Tensor;
+use crate::util::{Rng, Stats};
+
+/// Random weights for one LSTM layer, drawn from `rng` — the canonical
+/// fixture shared by unit tests, benches and integration tests.
+pub fn random_cell_weights(rng: &mut Rng, input_dim: usize, hidden: usize) -> LstmCellWeights {
+    let wn = (input_dim + hidden) * 4 * hidden;
+    let w: Vec<f32> = (0..wn).map(|_| rng.uniform(-0.2, 0.2)).collect();
+    let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    LstmCellWeights::new(
+        Tensor::new(vec![input_dim + hidden, 4 * hidden], w),
+        Tensor::new(vec![4 * hidden], b),
+        input_dim,
+        hidden,
+    )
+}
+
+/// Deterministic random-weight [`LstmModel`] — the shared fixture for
+/// benches and integration tests that must run without trained
+/// artifacts (kernel/loop-structure comparisons, parity and chunking
+/// properties). Same seed, same model, on every host.
+pub fn random_model(shape: ModelShape, seed: u64) -> LstmModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut in_dim = shape.input_dim;
+    for _ in 0..shape.num_layers {
+        layers.push(random_cell_weights(&mut rng, in_dim, shape.hidden));
+        in_dim = shape.hidden;
+    }
+    let w_out: Vec<f32> =
+        (0..shape.hidden * shape.num_classes).map(|_| rng.uniform(-0.3, 0.3)).collect();
+    LstmModel::new(
+        shape,
+        layers,
+        Tensor::new(vec![shape.hidden, shape.num_classes], w_out),
+        Tensor::new(vec![shape.num_classes], vec![0.0; shape.num_classes]),
+    )
+}
 
 /// Timing result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -32,6 +72,40 @@ impl BenchResult {
             self.iters_per_sample,
         )
     }
+}
+
+/// The per-row-GEMV vs batched-plan comparison at B ∈ {1, 2, 4, 8}
+/// (EXPERIMENTS.md §Perf / A4), shared by the hotpath and ablations
+/// benches so both always measure the identical fixture. Prints one
+/// speedup line per batch size; returns the per-case results, per-row
+/// then batched for each B.
+pub fn bench_per_row_vs_batched(prefix: &str, target_ms: f64) -> Vec<BenchResult> {
+    let shape = ModelShape::default();
+    let model = random_model(shape, 42);
+    let mut st = InferenceState::new(shape);
+    let mut arena = BatchArena::with_capacity(shape, 8);
+    let window_floats = shape.seq_len * shape.input_dim;
+    let mut rng = Rng::new(9);
+    let mut results = Vec::new();
+    for &b in &[1usize, 2, 4, 8] {
+        let data: Vec<f32> = (0..b * window_floats).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = Tensor::new(vec![b, shape.seq_len, shape.input_dim], data);
+        let per_row = bench_auto(&format!("{prefix}/native_per_row_b{b}"), target_ms, || {
+            for i in 0..b {
+                std::hint::black_box(model.forward_window(x.slab(i), &mut st));
+            }
+        });
+        let batched = bench_auto(&format!("{prefix}/native_batched_b{b}"), target_ms, || {
+            std::hint::black_box(model.forward_batch(&x, &mut arena));
+        });
+        println!(
+            "{prefix}/native_batched_speedup_b{b}: {:.2}x",
+            per_row.mean_ns() / batched.mean_ns()
+        );
+        results.push(per_row);
+        results.push(batched);
+    }
+    results
 }
 
 /// Run `f` repeatedly: `warmup` unmeasured calls, then `samples` timed

@@ -12,6 +12,7 @@
 //! [`plan_batch`] is pure and exhaustively property-tested; the
 //! [`BatchCollector`] adds the deadline mechanics.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// The batching decision for `pending` requests.
@@ -46,12 +47,17 @@ pub fn plan_batch(pending: usize, compiled: &[usize]) -> Option<BatchPlan> {
 }
 
 /// Deadline-driven collector around [`plan_batch`].
+///
+/// Per-request arrival times are kept in a FIFO (dispatch takes from the
+/// front), so after a partial dispatch the leftover requests keep their
+/// TRUE arrival instants — the deadline clock for requests that already
+/// waited must not restart from zero, or a request left over across k
+/// partial dispatches could wait up to (k+1)·max_wait.
 #[derive(Debug)]
 pub struct BatchCollector {
     compiled: Vec<usize>,
     max_wait: Duration,
-    oldest: Option<Instant>,
-    pending: usize,
+    arrivals: VecDeque<Instant>,
 }
 
 impl BatchCollector {
@@ -59,7 +65,7 @@ impl BatchCollector {
         compiled.sort_unstable();
         compiled.dedup();
         assert!(!compiled.is_empty(), "need at least one compiled batch size");
-        Self { compiled, max_wait, oldest: None, pending: 0 }
+        Self { compiled, max_wait, arrivals: VecDeque::new() }
     }
 
     pub fn compiled_sizes(&self) -> &[usize] {
@@ -67,41 +73,34 @@ impl BatchCollector {
     }
 
     pub fn pending(&self) -> usize {
-        self.pending
+        self.arrivals.len()
     }
 
     /// A request arrived at `now`.
     pub fn push(&mut self, now: Instant) {
-        if self.pending == 0 {
-            self.oldest = Some(now);
-        }
-        self.pending += 1;
+        self.arrivals.push_back(now);
     }
 
-    /// Should we dispatch at `now`? Returns the plan and resets state for
-    /// the taken requests.
+    /// Should we dispatch at `now`? Returns the plan and consumes the
+    /// oldest `take` arrivals; leftovers keep their arrival instants.
     pub fn poll(&mut self, now: Instant) -> Option<BatchPlan> {
-        if self.pending == 0 {
+        let Some(&oldest) = self.arrivals.front() else {
             return None;
-        }
+        };
         let max = *self.compiled.last().unwrap();
-        let deadline_hit = self
-            .oldest
-            .map(|t| now.duration_since(t) >= self.max_wait)
-            .unwrap_or(false);
-        if self.pending >= max || deadline_hit {
-            let plan = plan_batch(self.pending, &self.compiled)?;
-            self.pending -= plan.take;
-            self.oldest = if self.pending > 0 { Some(now) } else { None };
+        let deadline_hit = now.duration_since(oldest) >= self.max_wait;
+        if self.arrivals.len() >= max || deadline_hit {
+            let plan = plan_batch(self.arrivals.len(), &self.compiled)?;
+            self.arrivals.drain(..plan.take);
             return Some(plan);
         }
         None
     }
 
     /// Time until the current deadline fires (for recv_timeout), or None
-    /// when idle.
+    /// when idle. Driven by the oldest still-pending arrival.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        self.oldest.map(|t| {
+        self.arrivals.front().map(|&t| {
             let elapsed = now.duration_since(t);
             self.max_wait.checked_sub(elapsed).unwrap_or(Duration::ZERO)
         })
@@ -228,6 +227,48 @@ mod tests {
         assert!(ttd <= Duration::from_millis(6));
         let ttd2 = c.time_to_deadline(t0 + Duration::from_millis(60)).unwrap();
         assert_eq!(ttd2, Duration::ZERO);
+    }
+
+    #[test]
+    fn leftovers_keep_their_original_deadline() {
+        // Regression: a partial dispatch must NOT restart the leftover
+        // requests' deadline clock — they already waited.
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![1, 2], Duration::from_millis(5));
+        for _ in 0..3 {
+            c.push(t0);
+        }
+        // Size-triggered partial dispatch at t0+3ms takes 2; the leftover
+        // arrived at t0 and has 2ms of budget left, not a fresh 5ms.
+        let p = c.poll(t0 + Duration::from_millis(3)).unwrap();
+        assert_eq!(p.take, 2);
+        assert_eq!(c.pending(), 1);
+        assert_eq!(
+            c.time_to_deadline(t0 + Duration::from_millis(3)).unwrap(),
+            Duration::from_millis(2),
+            "leftover deadline restarted from zero"
+        );
+        // At t0+5ms the leftover's original deadline fires.
+        let p2 = c.poll(t0 + Duration::from_millis(5)).unwrap();
+        assert_eq!((p2.take, p2.padded_to), (1, 1));
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_pending_not_newest() {
+        // Two staggered arrivals: after the older one dispatches, the
+        // deadline is the SECOND request's own arrival + max_wait.
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![1], Duration::from_millis(10));
+        c.push(t0);
+        c.push(t0 + Duration::from_millis(4));
+        let p = c.poll(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(p.take, 1);
+        // Leftover arrived at t0+4ms -> deadline t0+14ms, so 2ms left at
+        // t0+12ms (the buggy reset would have reported a full 8ms).
+        assert_eq!(
+            c.time_to_deadline(t0 + Duration::from_millis(12)).unwrap(),
+            Duration::from_millis(2)
+        );
     }
 
     #[test]

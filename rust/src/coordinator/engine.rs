@@ -19,8 +19,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Manifest, ModelShape};
 use crate::coordinator::policy::target_label;
-use crate::lstm::model::InferenceState;
-use crate::lstm::{LstmModel, ThreadedLstm};
+use crate::lstm::{BatchArena, LstmModel, ThreadedLstm};
 use crate::runtime::Runtime;
 use crate::simulator::{Factorization, Target};
 use crate::tensor::Tensor;
@@ -113,19 +112,21 @@ impl Engine for PjrtEngine {
     }
 }
 
-/// Single-threaded native CPU engine (the paper's "CPU" bars).
+/// Single-threaded native CPU engine (the paper's "CPU" bars), executing
+/// whole batches through the time-major plan (DESIGN.md §8) so the
+/// batches the `BatchCollector` forms actually amortize weight traffic.
 pub struct CpuSingleEngine {
     model: Arc<LstmModel>,
-    /// Preallocated per-engine state (§3.2 buffer reuse). `infer` takes
-    /// `&self`, so the state sits behind a mutex; the router worker is
-    /// the only caller, so it is never contended.
-    state: Mutex<InferenceState>,
+    /// Preallocated per-engine batch arena (§3.2 buffer reuse, batch-
+    /// wide). `infer` takes `&self`, so the arena sits behind a mutex;
+    /// the router worker is the only caller, so it is never contended.
+    arena: Mutex<BatchArena>,
 }
 
 impl CpuSingleEngine {
     pub fn new(model: Arc<LstmModel>) -> Self {
-        let state = Mutex::new(InferenceState::new(model.shape));
-        Self { model, state }
+        let arena = Mutex::new(BatchArena::new(model.shape));
+        Self { model, arena }
     }
 }
 
@@ -140,13 +141,13 @@ impl Engine for CpuSingleEngine {
 
     fn infer(&self, x: &Tensor) -> Result<Tensor> {
         check_window_shape(self.model.shape, x)?;
-        let mut state = self.state.lock().unwrap();
-        Ok(self.model.forward_batch(x, &mut state))
+        let mut arena = self.arena.lock().unwrap();
+        Ok(self.model.forward_batch(x, &mut arena))
     }
 }
 
 /// Multi-threaded native CPU engine (paper §4.4) over a persistent
-/// worker pool.
+/// worker pool, chunking each batch across workers (DESIGN.md §8).
 pub struct CpuMultiEngine {
     pool: ThreadedLstm,
     shape: ModelShape,

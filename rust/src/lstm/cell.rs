@@ -9,7 +9,7 @@
 //! - caller-provided scratch so the serving loop never allocates
 //!   (§3.2's "preallocate and reuse c/h" on the CPU path).
 
-use crate::tensor::Tensor;
+use crate::tensor::{gemv_into, Tensor};
 
 /// TensorFlow BasicLSTMCell forget-gate bias, as trained (ref.py).
 pub const FORGET_BIAS: f32 = 1.0;
@@ -32,7 +32,7 @@ impl LstmCellWeights {
 }
 
 #[inline(always)]
-fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     // Numerically-stable logistic, matching ref.py's select form.
     if x >= 0.0 {
         1.0 / (1.0 + (-x).exp())
@@ -52,43 +52,6 @@ pub struct CellScratch {
 impl CellScratch {
     pub fn new(hidden: usize) -> Self {
         Self { gates: vec![0.0; 4 * hidden] }
-    }
-}
-
-/// `gates[k] += Σ_r v[r] * W[row0+r][k]`, rows blocked in quads.
-///
-/// `w_rows` must hold at least `(row0 + v.len()) * gates.len()` values in
-/// row-major layout. The quad blocking keeps the accumulator in registers
-/// / L1 across four weight rows, which is the hot-loop win on this GEMV
-/// (the whole serving CPU path is this function).
-#[inline]
-fn gemv_rows_into(gates: &mut [f32], w_rows: &[f32], row0: usize, v: &[f32]) {
-    let width = gates.len();
-    let mut r = 0;
-    while r + 4 <= v.len() {
-        let (v0, v1, v2, v3) = (v[r], v[r + 1], v[r + 2], v[r + 3]);
-        let base = (row0 + r) * width;
-        let row0s = &w_rows[base..base + width];
-        let row1s = &w_rows[base + width..base + 2 * width];
-        let row2s = &w_rows[base + 2 * width..base + 3 * width];
-        let row3s = &w_rows[base + 3 * width..base + 4 * width];
-        for ((((gk, w0), w1), w2), w3) in
-            gates.iter_mut().zip(row0s).zip(row1s).zip(row2s).zip(row3s)
-        {
-            *gk += v0 * w0 + v1 * w1 + v2 * w2 + v3 * w3;
-        }
-        r += 4;
-    }
-    while r < v.len() {
-        let vr = v[r];
-        if vr != 0.0 {
-            let base = (row0 + r) * width;
-            let row = &w_rows[base..base + width];
-            for (gk, wk) in gates.iter_mut().zip(row) {
-                *gk += vr * wk;
-            }
-        }
-        r += 1;
     }
 }
 
@@ -115,12 +78,14 @@ pub fn lstm_cell(
     gates.copy_from_slice(b);
     // Row-major W: row r holds the 4H outputs for input feature r, so the
     // GEMV walks W exactly once, row by row — this is the "combined
-    // inputs and weights" single pass (paper §3.3). Rows are processed
-    // FOUR at a time so the `gates` accumulator is read/written once per
-    // quad instead of once per row (≈4× less accumulator traffic; see
-    // EXPERIMENTS.md §Perf — ~2.3× on the full window forward).
-    gemv_rows_into(gates, w, 0, x);
-    gemv_rows_into(gates, &w[in_dim * 4 * hid..], 0, h);
+    // inputs and weights" single pass (paper §3.3). `gemv_into` processes
+    // rows FOUR at a time so the `gates` accumulator is read/written once
+    // per quad instead of once per row (≈4× less accumulator traffic; see
+    // EXPERIMENTS.md §Perf — ~2.3× on the full window forward). The
+    // batched plan (`lstm::plan`) runs the same math through
+    // `tensor::matmul_into` with the identical per-element order.
+    gemv_into(gates, w, x);
+    gemv_into(gates, &w[in_dim * 4 * hid..], h);
 
     // Fused point-wise tail (i, g, f, o), writing h/c in place.
     let (ig, rest) = gates.split_at(hid);
@@ -136,19 +101,8 @@ pub fn lstm_cell(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench::random_cell_weights as rand_weights;
     use crate::util::Rng;
-
-    fn rand_weights(rng: &mut Rng, input_dim: usize, hidden: usize) -> LstmCellWeights {
-        let wn = (input_dim + hidden) * 4 * hidden;
-        let w: Vec<f32> = (0..wn).map(|_| rng.uniform(-0.2, 0.2)).collect();
-        let b: Vec<f32> = (0..4 * hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
-        LstmCellWeights::new(
-            Tensor::new(vec![input_dim + hidden, 4 * hidden], w),
-            Tensor::new(vec![4 * hidden], b),
-            input_dim,
-            hidden,
-        )
-    }
 
     /// Unoptimized oracle: explicit concat + naive matmul, textbook gates.
     fn cell_oracle(w: &LstmCellWeights, x: &[f32], h: &[f32], c: &[f32]) -> (Vec<f32>, Vec<f32>) {

@@ -5,10 +5,15 @@
 //! (`python/compile/kernels/ref.py`) bit-for-bit in layout and gate order
 //! (i, g, f, o over a combined `[x;h] @ W + b` GEMM, forget bias 1.0).
 //!
-//! Two execution flavours:
-//! - [`model::LstmModel::forward`] — single-threaded (paper's "CPU" bars)
-//! - [`threaded::ThreadedLstm`]    — multi-threaded over the batch
-//!   (paper §4.4's "multi-threaded RNN on the CPU")
+//! Three execution flavours:
+//! - [`model::LstmModel::forward_window`] — per-row GEMVs, one window at
+//!   a time (paper's "CPU" bars; the parity oracle)
+//! - [`model::LstmModel::forward_batch`] — the whole batch time-major
+//!   through the preallocated [`plan::BatchArena`] execution plan
+//!   (DESIGN.md §8), one blocked GEMM per `(t, layer)` step
+//! - [`threaded::ThreadedLstm`]    — the batched plan data-parallelized
+//!   over contiguous sub-batch chunks (paper §4.4's "multi-threaded RNN
+//!   on the CPU")
 //!
 //! Weights come from MRNW files written by `python/compile/aot.py`
 //! ([`weights`]), so the native engine and the PJRT artifact execute the
@@ -17,10 +22,12 @@
 
 pub mod cell;
 pub mod model;
+pub mod plan;
 pub mod threaded;
 pub mod weights;
 
 pub use cell::{lstm_cell, LstmCellWeights, FORGET_BIAS};
 pub use model::LstmModel;
+pub use plan::{step_rows, BatchArena};
 pub use threaded::ThreadedLstm;
 pub use weights::WeightFile;

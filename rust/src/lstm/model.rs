@@ -1,18 +1,27 @@
 //! Stacked-LSTM classifier — the native (CPU) forward pass.
 //!
-//! Mirrors `python/compile/model.py::forward` + head. The per-request
-//! state (`h`/`c` per layer and the gate scratch) lives in a reusable
-//! [`InferenceState`], so steady-state serving performs ZERO heap
-//! allocations per inference — the Rust-CPU incarnation of the paper's
-//! §3.2 "preallocate and reuse c/h" optimization (see the ablation bench
-//! `ablations.rs::mempool`).
+//! Mirrors `python/compile/model.py::forward` + head. Two entry points:
+//!
+//! - [`LstmModel::forward_window`] — one window through per-row GEMVs
+//!   with a reusable [`InferenceState`]. The B=1 specialization and the
+//!   parity oracle for the batched plan.
+//! - [`LstmModel::forward_batch`] / [`LstmModel::forward_rows`] — the
+//!   whole batch advanced timestep-by-timestep through the time-major
+//!   execution plan (`lstm::plan`, DESIGN.md §8), amortizing each
+//!   weight-matrix traversal across batch rows.
+//!
+//! Both keep the paper's §3.2 discipline: state lives in a reusable
+//! [`InferenceState`] / [`BatchArena`], so steady-state serving performs
+//! ZERO heap allocations per inference beyond the logits buffer (see the
+//! ablation bench `ablations.rs::mempool`).
 
 use anyhow::Result;
 
 use crate::config::ModelShape;
 use crate::lstm::cell::{lstm_cell, CellScratch, LstmCellWeights};
+use crate::lstm::plan::BatchArena;
 use crate::lstm::weights::WeightFile;
-use crate::tensor::Tensor;
+use crate::tensor::{argmax_slice, Tensor};
 
 /// A loaded model: per-layer weights + classifier head.
 #[derive(Debug, Clone)]
@@ -102,27 +111,45 @@ impl LstmModel {
         logits
     }
 
-    /// Classify a `[B, T, D]` batch tensor; returns `[B, C]` logits.
-    pub fn forward_batch(&self, x: &Tensor, state: &mut InferenceState) -> Tensor {
+    /// Classify a `[B, T, D]` batch tensor through the batched time-major
+    /// plan; returns `[B, C]` logits, bit-for-bit equal to running each
+    /// window through [`Self::forward_window`].
+    pub fn forward_batch(&self, x: &Tensor, arena: &mut BatchArena) -> Tensor {
         let s = self.shape;
         assert_eq!(x.shape(), &[x.shape()[0], s.seq_len, s.input_dim]);
         let batch = x.shape()[0];
-        let mut out = Vec::with_capacity(batch * s.num_classes);
-        for i in 0..batch {
-            out.extend(self.forward_window(x.slab(i), state));
-        }
-        Tensor::new(vec![batch, s.num_classes], out)
+        let logits = self.forward_rows(x.data(), batch, arena);
+        Tensor::new(vec![batch, s.num_classes], logits)
     }
 
-    /// Predicted class for one window.
-    pub fn predict(&self, window: &[f32], state: &mut InferenceState) -> usize {
-        let logits = self.forward_window(window, state);
+    /// Classify `rows` windows given as flat `[rows, T, D]` data — the
+    /// slice-level entry the threaded pool feeds contiguous sub-batch
+    /// chunks through without copying. Returns flat `[rows, C]` logits.
+    pub fn forward_rows(&self, windows: &[f32], rows: usize, arena: &mut BatchArena) -> Vec<f32> {
+        let s = self.shape;
+        assert_eq!(arena.shape(), s, "arena built for a different model shape");
+        let h_last = arena.run(&self.layers, windows, rows);
+        // Head per row: logits = h_last @ W_out + b_out, accumulated in
+        // the same order as forward_window's head (bit-for-bit parity).
+        let mut logits = vec![0.0f32; rows * s.num_classes];
+        for (hrow, lrow) in
+            h_last.chunks_exact(s.hidden).zip(logits.chunks_exact_mut(s.num_classes))
+        {
+            lrow.copy_from_slice(self.b_out.data());
+            for (r, &hv) in hrow.iter().enumerate() {
+                for (l, wv) in lrow.iter_mut().zip(self.w_out.row(r)) {
+                    *l += hv * wv;
+                }
+            }
+        }
         logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+    }
+
+    /// Predicted class for one window, under the crate-wide "first finite
+    /// max" argmax rule ([`argmax_slice`]): NaN/±inf logits are skipped
+    /// rather than panicking, an all-non-finite row maps to class 0.
+    pub fn predict(&self, window: &[f32], state: &mut InferenceState) -> usize {
+        argmax_slice(&self.forward_window(window, state))
     }
 }
 
@@ -132,31 +159,9 @@ pub(crate) mod tests {
     use crate::util::Rng;
 
     pub(crate) fn random_model(shape: ModelShape, seed: u64) -> LstmModel {
-        let mut rng = Rng::new(seed);
-        let mut layers = Vec::new();
-        let mut in_dim = shape.input_dim;
-        for _ in 0..shape.num_layers {
-            let wn = (in_dim + shape.hidden) * 4 * shape.hidden;
-            let w: Vec<f32> = (0..wn).map(|_| rng.uniform(-0.2, 0.2)).collect();
-            let b: Vec<f32> = (0..4 * shape.hidden).map(|_| rng.uniform(-0.1, 0.1)).collect();
-            layers.push(LstmCellWeights::new(
-                Tensor::new(vec![in_dim + shape.hidden, 4 * shape.hidden], w),
-                Tensor::new(vec![4 * shape.hidden], b),
-                in_dim,
-                shape.hidden,
-            ));
-            in_dim = shape.hidden;
-        }
-        let w_out: Vec<f32> = (0..shape.hidden * shape.num_classes)
-            .map(|_| rng.uniform(-0.3, 0.3))
-            .collect();
-        let b_out = vec![0.0; shape.num_classes];
-        LstmModel::new(
-            shape,
-            layers,
-            Tensor::new(vec![shape.hidden, shape.num_classes], w_out),
-            Tensor::new(vec![shape.num_classes], b_out),
-        )
+        // The canonical fixture lives in bench.rs so benches and
+        // integration tests share it; same seed -> same model.
+        crate::bench::random_model(shape, seed)
     }
 
     fn tiny_shape() -> ModelShape {
@@ -191,15 +196,34 @@ pub(crate) mod tests {
 
     #[test]
     fn batch_equals_window_loop() {
+        // The batched plan vs the per-window oracle, bit-for-bit.
         let m = random_model(tiny_shape(), 4);
         let mut rng = Rng::new(5);
         let data: Vec<f32> = (0..3 * 30).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let x = Tensor::new(vec![3, 10, 3], data.clone());
+        let mut arena = BatchArena::new(m.shape);
+        let batch = m.forward_batch(&x, &mut arena);
         let mut st = InferenceState::new(m.shape);
-        let batch = m.forward_batch(&x, &mut st);
         for i in 0..3 {
             let single = m.forward_window(&data[i * 30..(i + 1) * 30], &mut st);
             assert_eq!(batch.row(i), &single[..]);
+        }
+    }
+
+    #[test]
+    fn forward_rows_slices_match_batch() {
+        // forward_rows over a sub-range of the flat data (the threaded
+        // pool's chunk entry) must match the corresponding batch rows.
+        let m = random_model(tiny_shape(), 9);
+        let mut rng = Rng::new(10);
+        let data: Vec<f32> = (0..5 * 30).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = Tensor::new(vec![5, 10, 3], data.clone());
+        let mut arena = BatchArena::new(m.shape);
+        let full = m.forward_batch(&x, &mut arena);
+        let chunk = m.forward_rows(&data[2 * 30..5 * 30], 3, &mut arena);
+        let c = m.shape.num_classes;
+        for i in 0..3 {
+            assert_eq!(full.row(2 + i), &chunk[i * c..(i + 1) * c]);
         }
     }
 

@@ -1,0 +1,281 @@
+//! Batched time-major execution plan for the native LSTM stack
+//! (DESIGN.md §8).
+//!
+//! The per-window path (`model::forward_window`) runs one GEMV per
+//! timestep per layer, re-reading every layer's `[I+H, 4H]` weight
+//! matrix B times per batch. This module restructures the same math into
+//! coarser work units — MobiRNN §3.3's work-unit factorization applied
+//! to the batch dimension: at each `(t, layer)` step the WHOLE batch
+//! advances through one blocked GEMM (`tensor::matmul_into`), so each
+//! quad of weight rows is loaded once and feeds four batch rows.
+//!
+//! Two pieces:
+//!
+//! - [`BatchArena`] — the preallocated state of one in-flight batch:
+//!   `[B, H]` h/c planes per layer, one `[B, 4H]` gate buffer shared by
+//!   all layers, and a `[B, I]` staging plane for the current timestep's
+//!   layer-0 input. Planes grow monotonically and are reused across
+//!   batches, extending the paper's §3.2 "preallocate and reuse c/h"
+//!   discipline from one window to a whole batch.
+//! - [`step_rows`] — the batched cell kernel: one LSTM step for `rows`
+//!   batch rows at once, numerically bit-for-bit with `rows` calls to
+//!   [`lstm_cell`](crate::lstm::cell::lstm_cell) (same per-element
+//!   accumulation order; asserted by `rust/tests/batched_plan.rs`).
+//!
+//! Loop order is TIME-MAJOR, layer inner (`for t { for layer }`), the
+//! same order as the per-window path: each step's GEMM input is the
+//! previous layer's freshly-written `[rows, H]` h-plane, so layers chain
+//! in place with zero copies; only layer 0 needs a gather from the
+//! `[B, T, D]` input into the `[rows, I]` staging plane.
+
+use crate::config::ModelShape;
+use crate::lstm::cell::{sigmoid, LstmCellWeights, FORGET_BIAS};
+use crate::tensor::matmul_into;
+
+/// Preallocated per-batch state: every buffer the time-major plan writes.
+///
+/// Owned by whoever drives batches — `CpuSingleEngine` holds one behind
+/// its mutex, every `ThreadedLstm` worker owns one, benches hold one per
+/// thread of measurement. Never shared across concurrent batches.
+#[derive(Debug, Clone)]
+pub struct BatchArena {
+    shape: ModelShape,
+    /// Rows the planes currently hold; grows monotonically, never shrinks.
+    capacity: usize,
+    /// Per layer: a row-major `[capacity, H]` plane.
+    h: Vec<Vec<f32>>,
+    c: Vec<Vec<f32>>,
+    /// `[capacity, 4H]` gate buffer, shared by all layers within a step.
+    gates: Vec<f32>,
+    /// `[capacity, I]` staging plane for the current timestep's gathered
+    /// layer-0 input (`x[:, t, :]` is strided in the `[B, T, D]` window
+    /// data; the GEMM wants it contiguous).
+    xt: Vec<f32>,
+}
+
+impl BatchArena {
+    /// An arena sized for one row; grows on first bigger batch.
+    pub fn new(shape: ModelShape) -> Self {
+        Self::with_capacity(shape, 1)
+    }
+
+    /// An arena pre-sized for `rows` batch rows.
+    pub fn with_capacity(shape: ModelShape, rows: usize) -> Self {
+        let mut arena = Self {
+            shape,
+            capacity: 0,
+            h: vec![Vec::new(); shape.num_layers],
+            c: vec![Vec::new(); shape.num_layers],
+            gates: Vec::new(),
+            xt: Vec::new(),
+        };
+        arena.reserve_rows(rows.max(1));
+        arena
+    }
+
+    pub fn shape(&self) -> ModelShape {
+        self.shape
+    }
+
+    /// Batch rows the planes can hold without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Grow every plane to hold `rows` batch rows (no-op when they fit).
+    /// The only allocation site in the batched hot path — steady-state
+    /// serving at a stable max batch never allocates.
+    pub fn reserve_rows(&mut self, rows: usize) {
+        if rows <= self.capacity {
+            return;
+        }
+        let s = self.shape;
+        for plane in self.h.iter_mut().chain(self.c.iter_mut()) {
+            plane.resize(rows * s.hidden, 0.0);
+        }
+        self.gates.resize(rows * 4 * s.hidden, 0.0);
+        self.xt.resize(rows * s.input_dim, 0.0);
+        self.capacity = rows;
+    }
+
+    /// Zero the first `rows` rows of every h/c plane (fresh batch).
+    fn reset(&mut self, rows: usize) {
+        self.reserve_rows(rows);
+        let n = rows * self.shape.hidden;
+        for plane in self.h.iter_mut().chain(self.c.iter_mut()) {
+            plane[..n].fill(0.0);
+        }
+    }
+
+    /// Advance `rows` windows (`windows` is flat `[rows, T, D]` data)
+    /// time-major through the stacked layers. Returns the last layer's
+    /// `[rows, H]` h-plane for the caller's head computation.
+    ///
+    /// Allocation-free once the arena has grown to `rows`.
+    pub fn run(&mut self, layers: &[LstmCellWeights], windows: &[f32], rows: usize) -> &[f32] {
+        let s = self.shape;
+        assert_eq!(layers.len(), s.num_layers, "layer count");
+        assert_eq!(windows.len(), rows * s.seq_len * s.input_dim, "window data");
+        self.reset(rows);
+        let window_len = s.seq_len * s.input_dim;
+        let hn = rows * s.hidden;
+        for t in 0..s.seq_len {
+            // Gather x[:, t, :] into the contiguous [rows, I] staging plane.
+            for (b, dst) in self.xt[..rows * s.input_dim].chunks_exact_mut(s.input_dim).enumerate()
+            {
+                let at = b * window_len + t * s.input_dim;
+                dst.copy_from_slice(&windows[at..at + s.input_dim]);
+            }
+            for li in 0..s.num_layers {
+                if li == 0 {
+                    step_rows(
+                        &layers[0],
+                        &self.xt[..rows * s.input_dim],
+                        &mut self.h[0][..hn],
+                        &mut self.c[0][..hn],
+                        &mut self.gates,
+                        rows,
+                    );
+                } else {
+                    // The previous layer's fresh h-plane IS this layer's
+                    // input — split-borrow, zero copies.
+                    let (prev, cur) = self.h.split_at_mut(li);
+                    step_rows(
+                        &layers[li],
+                        &prev[li - 1][..hn],
+                        &mut cur[0][..hn],
+                        &mut self.c[li][..hn],
+                        &mut self.gates,
+                        rows,
+                    );
+                }
+            }
+        }
+        &self.h[s.num_layers - 1][..hn]
+    }
+}
+
+/// One LSTM step for `rows` batch rows at once, in place: reads `xs`
+/// (`[rows, I]`), overwrites `h`/`c` (`[rows, H]`) with the next state.
+/// `gates` must hold at least `rows * 4H` values.
+///
+/// The gate pre-activations for ALL rows come from two blocked GEMMs
+/// over the combined weight matrix — the per-row GEMV pair of
+/// [`lstm_cell`](crate::lstm::cell::lstm_cell) widened so each loaded
+/// quad of weight rows feeds four batch rows. The point-wise tail stays
+/// fused per row. Bit-for-bit equal to `rows` independent `lstm_cell`
+/// calls.
+pub fn step_rows(
+    weights: &LstmCellWeights,
+    xs: &[f32],
+    h: &mut [f32],
+    c: &mut [f32],
+    gates: &mut [f32],
+    rows: usize,
+) {
+    let hid = weights.hidden;
+    let in_dim = weights.input_dim;
+    debug_assert_eq!(xs.len(), rows * in_dim);
+    debug_assert_eq!(h.len(), rows * hid);
+    debug_assert_eq!(c.len(), rows * hid);
+    debug_assert!(gates.len() >= rows * 4 * hid);
+    let gates = &mut gates[..rows * 4 * hid];
+    let w = weights.w.data();
+    let b = weights.b.data();
+
+    // gates[r] = b (broadcast init), then one pass over each W half.
+    for grow in gates.chunks_exact_mut(4 * hid) {
+        grow.copy_from_slice(b);
+    }
+    matmul_into(gates, xs, w, rows, in_dim, 4 * hid);
+    matmul_into(gates, h, &w[in_dim * 4 * hid..], rows, hid, 4 * hid);
+
+    // Fused point-wise tail (i, g, f, o) per row, writing h/c in place.
+    for ((grow, hrow), crow) in gates
+        .chunks_exact(4 * hid)
+        .zip(h.chunks_exact_mut(hid))
+        .zip(c.chunks_exact_mut(hid))
+    {
+        let (ig, rest) = grow.split_at(hid);
+        let (gg, rest) = rest.split_at(hid);
+        let (fg, og) = rest.split_at(hid);
+        for k in 0..hid {
+            let c_next = sigmoid(fg[k] + FORGET_BIAS) * crow[k] + sigmoid(ig[k]) * gg[k].tanh();
+            crow[k] = c_next;
+            hrow[k] = sigmoid(og[k]) * c_next.tanh();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::random_cell_weights as rand_weights;
+    use crate::lstm::cell::{lstm_cell, CellScratch};
+    use crate::util::Rng;
+
+    #[test]
+    fn step_rows_bitwise_matches_per_row_cell() {
+        let mut rng = Rng::new(51);
+        for &(rows, in_dim, hid) in
+            &[(1usize, 9usize, 32usize), (3, 9, 32), (4, 5, 8), (7, 3, 17), (8, 32, 32)]
+        {
+            let w = rand_weights(&mut rng, in_dim, hid);
+            let xs: Vec<f32> = (0..rows * in_dim).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let h0: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c0: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+            let mut h = h0.clone();
+            let mut c = c0.clone();
+            let mut gates = vec![0.0f32; rows * 4 * hid];
+            step_rows(&w, &xs, &mut h, &mut c, &mut gates, rows);
+
+            let mut scratch = CellScratch::new(hid);
+            for r in 0..rows {
+                let mut hr = h0[r * hid..(r + 1) * hid].to_vec();
+                let mut cr = c0[r * hid..(r + 1) * hid].to_vec();
+                lstm_cell(&w, &xs[r * in_dim..(r + 1) * in_dim], &mut hr, &mut cr, &mut scratch);
+                assert_eq!(&h[r * hid..(r + 1) * hid], &hr[..], "h row {r} ({rows},{in_dim},{hid})");
+                assert_eq!(&c[r * hid..(r + 1) * hid], &cr[..], "c row {r} ({rows},{in_dim},{hid})");
+            }
+        }
+    }
+
+    #[test]
+    fn arena_grows_monotonically_and_is_reusable() {
+        let shape = ModelShape { num_layers: 2, hidden: 8, input_dim: 3, seq_len: 4, num_classes: 4 };
+        let mut rng = Rng::new(52);
+        let layers: Vec<LstmCellWeights> = {
+            let mut v = Vec::new();
+            let mut in_dim = shape.input_dim;
+            for _ in 0..shape.num_layers {
+                v.push(rand_weights(&mut rng, in_dim, shape.hidden));
+                in_dim = shape.hidden;
+            }
+            v
+        };
+        let mut arena = BatchArena::new(shape);
+        assert_eq!(arena.capacity(), 1);
+        let windows: Vec<f32> =
+            (0..5 * shape.seq_len * shape.input_dim).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let first = arena.run(&layers, &windows, 5).to_vec();
+        assert_eq!(arena.capacity(), 5);
+        // Re-running the same batch through the reused arena must give
+        // identical results (full h/c reset, no state leak).
+        let second = arena.run(&layers, &windows, 5).to_vec();
+        assert_eq!(first, second);
+        // A smaller batch must not shrink capacity.
+        let _ = arena.run(&layers, &windows[..2 * shape.seq_len * shape.input_dim], 2);
+        assert_eq!(arena.capacity(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_rejects_wrong_window_len() {
+        let shape = ModelShape { num_layers: 1, hidden: 4, input_dim: 2, seq_len: 3, num_classes: 2 };
+        let mut rng = Rng::new(53);
+        let layers = vec![rand_weights(&mut rng, 2, 4)];
+        let mut arena = BatchArena::new(shape);
+        let _ = arena.run(&layers, &[0.0; 5], 1);
+    }
+}

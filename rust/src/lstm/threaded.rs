@@ -3,9 +3,17 @@
 //! The paper's observation: when RenderScript's GPU driver is disabled,
 //! the same data-parallel decomposition runs on CPU threads and captures
 //! ≥70.5% of the GPU's benefit. Here the analogous design point is a
-//! persistent worker pool that data-parallelizes a batch of windows
-//! across threads, each worker owning its own preallocated
-//! [`InferenceState`] (the §3.2 buffer-reuse discipline, per thread).
+//! persistent worker pool that data-parallelizes a batch across threads
+//! in contiguous SUB-BATCH CHUNKS — the paper's work-unit factorization
+//! applied to the batch dimension. Each chunk advances through the
+//! batched time-major plan (`lstm::plan`, DESIGN.md §8) on a worker that
+//! owns its own preallocated [`BatchArena`] (the §3.2 buffer-reuse
+//! discipline, per thread).
+//!
+//! Chunks index into ONE shared `Arc<Tensor>` of the whole batch —
+//! rows are outermost in `[B, T, D]`, so a chunk is a contiguous slice
+//! and no per-window copies happen (the old per-window jobs cloned every
+//! window into its job).
 //!
 //! Wall-clock speedup on this 1-core CI image is obviously ~1×; the
 //! *scaling* behaviour the paper measures is reproduced by the simulator
@@ -17,12 +25,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::lstm::model::{InferenceState, LstmModel};
+use crate::lstm::model::LstmModel;
+use crate::lstm::plan::BatchArena;
 use crate::tensor::Tensor;
 
 enum Job {
-    /// (window index, flat [T*D] data, result slot sender)
-    Window(usize, Vec<f32>, mpsc::Sender<(usize, Vec<f32>)>),
+    /// (first row, row count, shared [B, T, D] batch, result sender).
+    /// Results are sent as (first row, flat [rows, C] logits).
+    Chunk(usize, usize, Arc<Tensor>, mpsc::Sender<(usize, Vec<f32>)>),
     Shutdown,
 }
 
@@ -32,7 +42,7 @@ pub struct ThreadedLstm {
     tx: mpsc::Sender<Job>,
     workers: Vec<JoinHandle<()>>,
     pub num_threads: usize,
-    jobs_done: Arc<AtomicUsize>,
+    windows_done: Arc<AtomicUsize>,
 }
 
 impl ThreadedLstm {
@@ -40,58 +50,83 @@ impl ThreadedLstm {
         assert!(num_threads >= 1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let jobs_done = Arc::new(AtomicUsize::new(0));
+        let windows_done = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(num_threads);
         for _ in 0..num_threads {
             let rx = Arc::clone(&rx);
             let model = Arc::clone(&model);
-            let done = Arc::clone(&jobs_done);
+            let done = Arc::clone(&windows_done);
             workers.push(std::thread::spawn(move || {
-                // One preallocated state per worker, reused for every job.
-                let mut state = InferenceState::new(model.shape);
+                // One preallocated arena per worker, reused for every job.
+                let mut arena = BatchArena::new(model.shape);
+                let window_len = model.shape.seq_len * model.shape.input_dim;
                 loop {
                     let job = { rx.lock().unwrap().recv() };
                     match job {
-                        Ok(Job::Window(idx, data, out)) => {
-                            let logits = model.forward_window(&data, &mut state);
-                            done.fetch_add(1, Ordering::Relaxed);
+                        Ok(Job::Chunk(start, rows, x, out)) => {
+                            let data = &x.data()[start * window_len..(start + rows) * window_len];
+                            let logits = model.forward_rows(data, rows, &mut arena);
+                            done.fetch_add(rows, Ordering::Relaxed);
                             // Receiver may have gone away on cancel; fine.
-                            let _ = out.send((idx, logits));
+                            let _ = out.send((start, logits));
                         }
                         Ok(Job::Shutdown) | Err(_) => break,
                     }
                 }
             }));
         }
-        Self { model, tx, workers, num_threads, jobs_done }
+        Self { model, tx, workers, num_threads, windows_done }
     }
 
     /// Run a `[B, T, D]` batch across the pool; returns `[B, C]` logits in
-    /// input order.
+    /// input order. Default chunking policy: `ceil(B / num_threads)` rows
+    /// per chunk, so every worker gets at most one chunk per batch.
     pub fn forward_batch(&self, x: &Tensor) -> Tensor {
-        let shape = self.model.shape;
         let batch = x.shape()[0];
+        self.forward_batch_chunked(x, batch.div_ceil(self.num_threads).max(1))
+    }
+
+    /// Same, with an explicit chunk size (rows per job) — the chunking
+    /// policy knob. Results are independent of `chunk_rows` (order and
+    /// values; property-tested in `rust/tests/batched_plan.rs`).
+    pub fn forward_batch_chunked(&self, x: &Tensor, chunk_rows: usize) -> Tensor {
+        assert!(chunk_rows >= 1, "chunk_rows must be positive");
+        let shape = self.model.shape;
+        assert_eq!(
+            &x.shape()[1..],
+            &[shape.seq_len, shape.input_dim],
+            "input must be [B, T, D] for this model"
+        );
+        let batch = x.shape()[0];
+        // One clone of the whole batch shared by every chunk job (the
+        // pool's threads outlive this borrow), instead of B per-window
+        // copies.
+        let shared = Arc::new(x.clone());
         let (otx, orx) = mpsc::channel();
-        for i in 0..batch {
+        let mut start = 0;
+        while start < batch {
+            let rows = chunk_rows.min(batch - start);
             self.tx
-                .send(Job::Window(i, x.slab(i).to_vec(), otx.clone()))
+                .send(Job::Chunk(start, rows, Arc::clone(&shared), otx.clone()))
                 .expect("worker pool alive");
+            start += rows;
         }
         drop(otx);
-        let mut rows: Vec<Option<Vec<f32>>> = vec![None; batch];
-        for (idx, logits) in orx {
-            rows[idx] = Some(logits);
+        let mut out = vec![0.0f32; batch * shape.num_classes];
+        let mut received = 0;
+        for (start, logits) in orx {
+            received += logits.len() / shape.num_classes;
+            out[start * shape.num_classes..start * shape.num_classes + logits.len()]
+                .copy_from_slice(&logits);
         }
-        let mut out = Vec::with_capacity(batch * shape.num_classes);
-        for row in rows {
-            out.extend(row.expect("every window completed"));
-        }
+        assert_eq!(received, batch, "every chunk completed");
         Tensor::new(vec![batch, shape.num_classes], out)
     }
 
-    /// Total jobs completed by all workers since construction.
-    pub fn jobs_completed(&self) -> usize {
-        self.jobs_done.load(Ordering::Relaxed)
+    /// Total windows (batch rows) completed by all workers since
+    /// construction.
+    pub fn windows_completed(&self) -> usize {
+        self.windows_done.load(Ordering::Relaxed)
     }
 }
 
@@ -124,12 +159,24 @@ mod tests {
     #[test]
     fn threaded_matches_single() {
         let (model, x) = tiny();
-        let mut st = InferenceState::new(model.shape);
-        let expected = model.forward_batch(&x, &mut st);
+        let mut arena = BatchArena::new(model.shape);
+        let expected = model.forward_batch(&x, &mut arena);
         for threads in [1, 2, 4] {
             let pool = ThreadedLstm::new(Arc::clone(&model), threads);
             let got = pool.forward_batch(&x);
             assert_eq!(got, expected, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_results() {
+        let (model, x) = tiny();
+        let mut arena = BatchArena::new(model.shape);
+        let expected = model.forward_batch(&x, &mut arena);
+        let pool = ThreadedLstm::new(Arc::clone(&model), 3);
+        for chunk in 1..=8 {
+            let got = pool.forward_batch_chunked(&x, chunk);
+            assert_eq!(got, expected, "chunk={chunk}");
         }
     }
 
@@ -150,7 +197,7 @@ mod tests {
         for _ in 0..5 {
             let _ = pool.forward_batch(&x);
         }
-        assert_eq!(pool.jobs_completed(), 5 * 7);
+        assert_eq!(pool.windows_completed(), 5 * 7);
     }
 
     #[test]

@@ -1,12 +1,181 @@
-//! Minimal dense f32 tensor.
+//! Minimal dense f32 tensor + the blocked GEMV/GEMM kernels the native
+//! engine is built on.
 //!
 //! The native LSTM engine, the PJRT marshalling layer and the serving
 //! protocol all move `[B, T, D]`-ish dense f32 data; this small row-major
 //! container is all they need. It is deliberately not a general ndarray:
 //! no broadcasting, no strides — shape + contiguous data + the couple of
 //! ops the engine uses, each with debug-mode shape checks.
+//!
+//! [`gemv_into`] and [`matmul_into`] are the two accumulation kernels
+//! behind every native forward pass (`lstm::cell`, `lstm::plan`). Both
+//! traverse `W` row-major exactly once and block the K dimension in
+//! quads; `matmul_into` additionally blocks output rows in quads so one
+//! loaded quad of `W` rows feeds four accumulator rows — the batch-level
+//! weight-reuse step (MobiRNN §3.3's coarser work units applied to the
+//! batch dimension). Per output element both kernels perform the exact
+//! same float operations in the exact same order, so batched and
+//! per-row forwards agree bit-for-bit (asserted in
+//! `rust/tests/batched_plan.rs`).
 
 use std::fmt;
+
+/// `acc[j] += Σ_r v[r] * W[r][j]` over a row-major `[v.len(), acc.len()]`
+/// prefix of `w` — the quad-K blocked GEMV.
+///
+/// Rows of `W` are processed four at a time so the `acc` accumulator is
+/// read/written once per quad instead of once per row (≈4× less
+/// accumulator traffic; see EXPERIMENTS.md §Perf).
+pub fn gemv_into(acc: &mut [f32], w: &[f32], v: &[f32]) {
+    let width = acc.len();
+    debug_assert!(w.len() >= v.len() * width, "W too small: {} < {}", w.len(), v.len() * width);
+    let mut r = 0;
+    while r + 4 <= v.len() {
+        let (v0, v1, v2, v3) = (v[r], v[r + 1], v[r + 2], v[r + 3]);
+        let base = r * width;
+        let w0 = &w[base..base + width];
+        let w1 = &w[base + width..base + 2 * width];
+        let w2 = &w[base + 2 * width..base + 3 * width];
+        let w3 = &w[base + 3 * width..base + 4 * width];
+        for ((((a, x0), x1), x2), x3) in acc.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3) {
+            *a += v0 * x0 + v1 * x1 + v2 * x2 + v3 * x3;
+        }
+        r += 4;
+    }
+    while r < v.len() {
+        let vr = v[r];
+        if vr != 0.0 {
+            let base = r * width;
+            for (a, x0) in acc.iter_mut().zip(&w[base..base + width]) {
+                *a += vr * x0;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// `out[m][j] += Σ_r a[m][r] * W[r][j]` — row-major `[m, k] @ [k, n]`
+/// accumulated into a row-major `[m, n]` buffer.
+///
+/// This is [`gemv_into`]'s quad-K blocking generalized to multiple output
+/// rows: output rows are ALSO blocked in quads, so each quad of `W` rows
+/// is loaded once and feeds four accumulator rows (16 multiply-adds per 4
+/// `W` loads instead of 4 per 4). `W` is traversed once per *quad* of
+/// batch rows instead of once per row — the weight-traffic amortization
+/// that makes the batched plan beat the per-row path. A duo-row block
+/// catches 2–3 row tails (half the reuse), then single rows fall back to
+/// [`gemv_into`]. Per output element the accumulation order is identical
+/// to [`gemv_into`], so results are bit-for-bit equal to m independent
+/// GEMVs.
+pub fn matmul_into(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n, "out shape");
+    debug_assert_eq!(a.len(), m * k, "a shape");
+    debug_assert!(w.len() >= k * n, "W too small");
+    let mut mi = 0;
+    while mi + 4 <= m {
+        let (o01, o23) = out[mi * n..(mi + 4) * n].split_at_mut(2 * n);
+        let (o0, o1) = o01.split_at_mut(n);
+        let (o2, o3) = o23.split_at_mut(n);
+        let a0 = &a[mi * k..(mi + 1) * k];
+        let a1 = &a[(mi + 1) * k..(mi + 2) * k];
+        let a2 = &a[(mi + 2) * k..(mi + 3) * k];
+        let a3 = &a[(mi + 3) * k..(mi + 4) * k];
+        let mut r = 0;
+        while r + 4 <= k {
+            let base = r * n;
+            let w0 = &w[base..base + n];
+            let w1 = &w[base + n..base + 2 * n];
+            let w2 = &w[base + 2 * n..base + 3 * n];
+            let w3 = &w[base + 3 * n..base + 4 * n];
+            // 16 input scalars stay in registers across the whole j sweep.
+            let (a00, a01, a02, a03) = (a0[r], a0[r + 1], a0[r + 2], a0[r + 3]);
+            let (a10, a11, a12, a13) = (a1[r], a1[r + 1], a1[r + 2], a1[r + 3]);
+            let (a20, a21, a22, a23) = (a2[r], a2[r + 1], a2[r + 2], a2[r + 3]);
+            let (a30, a31, a32, a33) = (a3[r], a3[r + 1], a3[r + 2], a3[r + 3]);
+            for j in 0..n {
+                let (x0, x1, x2, x3) = (w0[j], w1[j], w2[j], w3[j]);
+                o0[j] += a00 * x0 + a01 * x1 + a02 * x2 + a03 * x3;
+                o1[j] += a10 * x0 + a11 * x1 + a12 * x2 + a13 * x3;
+                o2[j] += a20 * x0 + a21 * x1 + a22 * x2 + a23 * x3;
+                o3[j] += a30 * x0 + a31 * x1 + a32 * x2 + a33 * x3;
+            }
+            r += 4;
+        }
+        while r < k {
+            let base = r * n;
+            let wr = &w[base..base + n];
+            for (orow, arow) in [(&mut *o0, a0), (&mut *o1, a1), (&mut *o2, a2), (&mut *o3, a3)] {
+                let vr = arow[r];
+                if vr != 0.0 {
+                    for (oj, wj) in orow.iter_mut().zip(wr) {
+                        *oj += vr * wj;
+                    }
+                }
+            }
+            r += 1;
+        }
+        mi += 4;
+    }
+    // Duo-M block for a 2–3 row tail (and for 2–3 row batches/chunks):
+    // half the reuse of the quad block, still 2× better than row-wise.
+    if mi + 2 <= m {
+        let (o0, o1) = out[mi * n..(mi + 2) * n].split_at_mut(n);
+        let a0 = &a[mi * k..(mi + 1) * k];
+        let a1 = &a[(mi + 1) * k..(mi + 2) * k];
+        let mut r = 0;
+        while r + 4 <= k {
+            let base = r * n;
+            let w0 = &w[base..base + n];
+            let w1 = &w[base + n..base + 2 * n];
+            let w2 = &w[base + 2 * n..base + 3 * n];
+            let w3 = &w[base + 3 * n..base + 4 * n];
+            let (a00, a01, a02, a03) = (a0[r], a0[r + 1], a0[r + 2], a0[r + 3]);
+            let (a10, a11, a12, a13) = (a1[r], a1[r + 1], a1[r + 2], a1[r + 3]);
+            for j in 0..n {
+                let (x0, x1, x2, x3) = (w0[j], w1[j], w2[j], w3[j]);
+                o0[j] += a00 * x0 + a01 * x1 + a02 * x2 + a03 * x3;
+                o1[j] += a10 * x0 + a11 * x1 + a12 * x2 + a13 * x3;
+            }
+            r += 4;
+        }
+        while r < k {
+            let base = r * n;
+            let wr = &w[base..base + n];
+            for (orow, arow) in [(&mut *o0, a0), (&mut *o1, a1)] {
+                let vr = arow[r];
+                if vr != 0.0 {
+                    for (oj, wj) in orow.iter_mut().zip(wr) {
+                        *oj += vr * wj;
+                    }
+                }
+            }
+            r += 1;
+        }
+        mi += 2;
+    }
+    while mi < m {
+        gemv_into(&mut out[mi * n..(mi + 1) * n], w, &a[mi * k..(mi + 1) * k]);
+        mi += 1;
+    }
+}
+
+/// Index of the "first finite max" of a slice: the first occurrence of
+/// the largest *finite* value. Non-finite entries (NaN, ±inf) are
+/// skipped; a slice with no finite value at all maps to 0. This is the
+/// crate-wide argmax rule — total, panic-free, and deterministic on NaN
+/// logits (which `partial_cmp().unwrap()` was not). +inf is excluded
+/// deliberately: any non-finite logit signals numerical breakage
+/// upstream, and the rule prefers a defined answer drawn from the
+/// values that are still meaningful over amplifying the breakage.
+pub fn argmax_slice(row: &[f32]) -> usize {
+    let mut best: Option<(usize, f32)> = None;
+    for (j, &v) in row.iter().enumerate() {
+        if v.is_finite() && best.is_none_or(|(_, bv)| v > bv) {
+            best = Some((j, v));
+        }
+    }
+    best.map_or(0, |(j, _)| j)
+}
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, PartialEq)]
@@ -84,21 +253,13 @@ impl Tensor {
         &self.data[i * n..(i + 1) * n]
     }
 
-    /// Index of the max element per row of a 2-D tensor (argmax, axis=1).
+    /// Index of the max element per row of a 2-D tensor (argmax, axis=1),
+    /// under the [`argmax_slice`] "first finite max" rule: NaN/±inf
+    /// entries are skipped, ties take the first index, and an all-
+    /// non-finite row maps to 0.
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.ndim(), 2);
-        (0..self.shape[0])
-            .map(|i| {
-                let row = self.row(i);
-                let mut best = 0;
-                for (j, &v) in row.iter().enumerate() {
-                    if v > row[best] {
-                        best = j;
-                    }
-                }
-                best
-            })
-            .collect()
+        (0..self.shape[0]).map(|i| argmax_slice(self.row(i))).collect()
     }
 
     /// Max |a - b| over all elements; shapes must match.
@@ -164,6 +325,103 @@ mod tests {
     fn argmax_rows_ties_take_first() {
         let t = Tensor::new(vec![2, 3], vec![0.0, 5.0, 5.0, 7.0, 1.0, 2.0]);
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_first_finite_max_rule() {
+        // NaN anywhere (including position 0) is skipped, not propagated.
+        assert_eq!(argmax_slice(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax_slice(&[1.0, f32::NAN, 0.5]), 0);
+        // ±inf is not finite: the largest FINITE value wins.
+        assert_eq!(argmax_slice(&[f32::INFINITY, 3.0, f32::NEG_INFINITY]), 1);
+        // No finite value at all -> 0 (a defined answer, never a panic).
+        assert_eq!(argmax_slice(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_slice(&[f32::INFINITY, f32::NAN]), 0);
+        assert_eq!(argmax_slice(&[]), 0);
+        // Ties still take the first occurrence.
+        assert_eq!(argmax_slice(&[2.0, f32::NAN, 2.0]), 0);
+        let t = Tensor::new(vec![2, 2], vec![f32::NAN, 4.0, f32::NAN, f32::NAN]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    /// Naive triple-loop reference for the GEMM kernels.
+    fn matmul_naive(a: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for mi in 0..m {
+            for r in 0..k {
+                for j in 0..n {
+                    out[mi * n + j] += a[mi * k + r] * w[r * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemv_into_matches_naive() {
+        let mut rng = crate::util::Rng::new(31);
+        for &(k, n) in &[(1usize, 1usize), (4, 8), (9, 128), (17, 5), (64, 128)] {
+            let v: Vec<f32> = (0..k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut acc = vec![0.0f32; n];
+            gemv_into(&mut acc, &w, &v);
+            let expected = matmul_naive(&v, &w, 1, k, n);
+            for (a, e) in acc.iter().zip(&expected) {
+                assert!((a - e).abs() < 1e-4, "k={k} n={n}: {a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_matches_naive_and_accumulates() {
+        let mut rng = crate::util::Rng::new(32);
+        for &(m, k, n) in &[
+            (1usize, 9usize, 128usize),
+            (2, 3, 4),
+            (4, 32, 128),
+            (5, 7, 6),
+            (8, 41, 128),
+            (11, 4, 9),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let bias = rng.uniform(-0.5, 0.5);
+            let mut out = vec![bias; m * n];
+            matmul_into(&mut out, &a, &w, m, k, n);
+            let expected = matmul_naive(&a, &w, m, k, n);
+            for (o, e) in out.iter().zip(&expected) {
+                assert!((o - (e + bias)).abs() < 1e-3, "m={m} k={k} n={n}: {o} vs {}", e + bias);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_bitwise_equals_row_gemvs() {
+        // The quad-M kernel performs the same per-element float ops in
+        // the same order as m independent GEMVs — the invariant the
+        // batched-vs-per-window parity test relies on.
+        let mut rng = crate::util::Rng::new(33);
+        // m values cover every block mix: gemv only (1), duo (2), duo+gemv
+        // (3), quad (8), quad+duo (6), quad+gemv (9), quad+duo+gemv (7).
+        for &(m, k, n) in &[
+            (1usize, 9usize, 16usize),
+            (2, 9, 12),
+            (3, 9, 16),
+            (8, 41, 128),
+            (6, 64, 128),
+            (9, 5, 7),
+            (7, 13, 20),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut out = vec![0.25f32; m * n];
+            matmul_into(&mut out, &a, &w, m, k, n);
+            for mi in 0..m {
+                let mut row = vec![0.25f32; n];
+                gemv_into(&mut row, &w, &a[mi * k..(mi + 1) * k]);
+                assert_eq!(&out[mi * n..(mi + 1) * n], &row[..], "row {mi} m={m} k={k} n={n}");
+            }
+        }
     }
 
     #[test]

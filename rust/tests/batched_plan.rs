@@ -1,0 +1,109 @@
+//! Golden parity and chunking properties for the batched time-major
+//! execution plan (DESIGN.md §8) — artifact-free, runs on every CI.
+//!
+//! The batched plan re-orders the LOOPS of the native forward pass, not
+//! its arithmetic: per output element it performs the exact same float
+//! operations in the same order as the per-window oracle, so parity here
+//! is asserted BIT-FOR-BIT, not within a tolerance. If a future kernel
+//! change re-associates the accumulation (SIMD, different blocking),
+//! relax these to a 1e-6 max-abs-diff envelope — consciously, in the
+//! same commit that changes the summation order.
+
+use std::sync::Arc;
+
+use mobirnn::bench::random_model;
+use mobirnn::config::ModelShape;
+use mobirnn::lstm::model::InferenceState;
+use mobirnn::lstm::{BatchArena, ThreadedLstm};
+use mobirnn::tensor::Tensor;
+use mobirnn::util::Rng;
+
+fn random_windows(shape: ModelShape, batch: usize, rng: &mut Rng) -> Tensor {
+    let n = batch * shape.seq_len * shape.input_dim;
+    let data: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    Tensor::new(vec![batch, shape.seq_len, shape.input_dim], data)
+}
+
+#[test]
+fn batched_plan_matches_per_window_oracle_bit_for_bit() {
+    // Shapes chosen to exercise every kernel path: quad-M main blocks
+    // (B=8), M remainders (B=1, 3), quad-K remainders (I=3, 5; H=17),
+    // single layer, deep stacks, and the paper-default 2l/32h.
+    let shapes = [
+        ModelShape { num_layers: 1, hidden: 8, input_dim: 3, seq_len: 5, num_classes: 4 },
+        ModelShape { num_layers: 2, hidden: 32, input_dim: 9, seq_len: 16, num_classes: 6 },
+        ModelShape { num_layers: 3, hidden: 17, input_dim: 5, seq_len: 7, num_classes: 3 },
+    ];
+    for (si, &shape) in shapes.iter().enumerate() {
+        let model = random_model(shape, 100 + si as u64);
+        let mut st = InferenceState::new(shape);
+        let mut arena = BatchArena::new(shape);
+        let mut rng = Rng::new(200 + si as u64);
+        for &b in &[1usize, 3, 8] {
+            let x = random_windows(shape, b, &mut rng);
+            let batched = model.forward_batch(&x, &mut arena);
+            assert_eq!(batched.shape(), &[b, shape.num_classes]);
+            for i in 0..b {
+                let oracle = model.forward_window(x.slab(i), &mut st);
+                assert_eq!(
+                    batched.row(i),
+                    &oracle[..],
+                    "shape #{si} {shape:?} B={b}: batched row {i} != per-window oracle"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_plan_handles_zero_padding_windows() {
+    // The batcher pads short batches with all-zero windows; the plan
+    // must produce the same logits for a zero window as the oracle and
+    // not disturb its neighbours.
+    let shape = ModelShape { num_layers: 2, hidden: 32, input_dim: 9, seq_len: 16, num_classes: 6 };
+    let model = random_model(shape, 7);
+    let mut rng = Rng::new(8);
+    let real = random_windows(shape, 2, &mut rng);
+    let window_len = shape.seq_len * shape.input_dim;
+    let mut padded = real.data().to_vec();
+    padded.resize(4 * window_len, 0.0);
+    let x = Tensor::new(vec![4, shape.seq_len, shape.input_dim], padded);
+    let mut arena = BatchArena::new(shape);
+    let batched = model.forward_batch(&x, &mut arena);
+    let mut st = InferenceState::new(shape);
+    for i in 0..4 {
+        let oracle = model.forward_window(x.slab(i), &mut st);
+        assert_eq!(batched.row(i), &oracle[..], "row {i} (rows 2/3 are zero padding)");
+    }
+}
+
+#[test]
+fn prop_threaded_chunking_preserves_order_and_equality() {
+    // Random batch sizes x thread counts x chunk sizes: the chunked pool
+    // must return exactly the per-window oracle's logits, in input
+    // order, for EVERY chunking. Failure messages carry the full case.
+    let shape = ModelShape { num_layers: 2, hidden: 8, input_dim: 3, seq_len: 6, num_classes: 4 };
+    let model = Arc::new(random_model(shape, 31));
+    let mut rng = Rng::new(32);
+    let mut st = InferenceState::new(shape);
+    for case in 0..25 {
+        let batch = 1 + rng.below(13) as usize;
+        let x = random_windows(shape, batch, &mut rng);
+        let mut expected = Vec::with_capacity(batch * shape.num_classes);
+        for i in 0..batch {
+            expected.extend(model.forward_window(x.slab(i), &mut st));
+        }
+        let expected = Tensor::new(vec![batch, shape.num_classes], expected);
+
+        let threads = 1 + rng.below(4) as usize;
+        let pool = ThreadedLstm::new(Arc::clone(&model), threads);
+        // Chunk sizes from 1 (one row per job) past the batch size
+        // (single job), plus the default policy.
+        let chunk = 1 + rng.below(batch as u64 + 2) as usize;
+        let got = pool.forward_batch_chunked(&x, chunk);
+        assert_eq!(got, expected, "case {case}: batch={batch} threads={threads} chunk={chunk}");
+        let got_default = pool.forward_batch(&x);
+        assert_eq!(got_default, expected, "case {case}: default chunking, threads={threads}");
+        assert_eq!(pool.windows_completed(), 2 * batch, "case {case}: row accounting");
+    }
+}

@@ -9,7 +9,7 @@
 
 use mobirnn::config::Manifest;
 use mobirnn::lstm::model::InferenceState;
-use mobirnn::lstm::{LstmModel, WeightFile};
+use mobirnn::lstm::{BatchArena, LstmModel, WeightFile};
 use mobirnn::runtime::Runtime;
 use mobirnn::tensor::Tensor;
 
@@ -62,14 +62,21 @@ fn native_engine_matches_jax_golden() {
     let info = man.variant(&man.golden.variant).unwrap();
     let wf = WeightFile::load(man.path(&info.weights)).unwrap();
     let model = LstmModel::from_weight_file(info.shape(), &wf).unwrap();
-    let mut st = InferenceState::new(model.shape);
-    let got = model.forward_batch(&x, &mut st);
+    let mut arena = BatchArena::new(model.shape);
+    let got = model.forward_batch(&x, &mut arena);
     let diff = got.max_abs_diff(&expected);
     // Different accumulation order than XLA: allow a slightly wider but
     // still tight envelope over 128 recurrent steps.
     assert!(diff < 2e-3, "native engine drifted from JAX golden: max|Δ| = {diff}");
     // Predictions must agree exactly.
     assert_eq!(got.argmax_rows(), expected.argmax_rows());
+    // The per-window oracle must agree with the batched plan bit-for-bit
+    // on the trained weights too, not just on random ones.
+    let mut st = InferenceState::new(model.shape);
+    for i in 0..x.shape()[0] {
+        let single = model.forward_window(x.slab(i), &mut st);
+        assert_eq!(got.row(i), &single[..], "batched plan drifted from oracle at row {i}");
+    }
 }
 
 #[test]
