@@ -34,7 +34,7 @@ fn main() {
     let mut regret_static_gpu = 0.0f64;
     for step in 0..=19 {
         let util = step as f64 / 20.0;
-        let load = LoadSnapshot { gpu_util: util, cpu_util: util };
+        let load = LoadSnapshot { gpu_util: util, cpu_util: util, ..Default::default() };
         print!("{util:<6.2}");
         let mut row = Vec::new();
         for (_, policy) in &policies {

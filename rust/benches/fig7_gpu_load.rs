@@ -18,8 +18,8 @@ fn main() {
 
     let shape = ModelShape::default();
     for (name, load) in [
-        ("idle", LoadSnapshot { gpu_util: 0.0, cpu_util: 0.0 }),
-        ("high", LoadSnapshot { gpu_util: 0.85, cpu_util: 0.85 }),
+        ("idle", LoadSnapshot::default()),
+        ("high", LoadSnapshot { gpu_util: 0.85, cpu_util: 0.85, ..Default::default() }),
     ] {
         bench_auto(&format!("fig7/cost_model_decide_{name}"), 20.0, || {
             std::hint::black_box(OffloadPolicy::CostModel.decide(&n6p, shape, 1, load));

@@ -140,7 +140,7 @@ fn main() {
                 &profile,
                 shape,
                 1,
-                LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
+                LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1, ..Default::default() },
             ),
         );
     }));
@@ -149,7 +149,7 @@ fn main() {
             &profile,
             shape,
             1,
-            LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
+            LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1, ..Default::default() },
         ));
     }));
     let mut cache = mobirnn::coordinator::DecisionCache::new();
@@ -159,7 +159,7 @@ fn main() {
             &profile,
             shape,
             1,
-            LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1 },
+            LoadSnapshot { gpu_util: 0.3, cpu_util: 0.1, ..Default::default() },
         ));
     }));
     let hist = Histogram::new();

@@ -1,0 +1,230 @@
+//! §Serving end-to-end throughput bench: N concurrent TCP clients
+//! driving the full stack — server, scheduler, engine pools — and
+//! emitting machine-readable `BENCH_serving.json` (throughput, p50/p99
+//! wall latency, shed rate). Artifact-free: the engines are the native
+//! CPU paths over the shared random-weight fixture, so the bench runs
+//! on every host.
+//!
+//! Two scenarios frame the pipelined-dispatch change (DESIGN.md §9):
+//!
+//! - `single_pool` — every request pinned to one engine, so batches
+//!   serialize through one worker: the old single-thread router's
+//!   behavior, measured on the new code.
+//! - `dual_pool`  — requests alternate between the single- and
+//!   multi-thread CPU pools, so batches overlap in time: the win the
+//!   scheduler/pool split exists to unlock.
+//!
+//! ```bash
+//! cargo bench --bench serving_throughput              # full run
+//! cargo bench --bench serving_throughput -- --smoke   # CI: tiny N,
+//! #   asserts completion (a deadlock here hangs CI), ignores timings
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mobirnn::bench::random_model;
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::{CpuMultiEngine, CpuSingleEngine, OffloadPolicy, Router};
+use mobirnn::json::Value;
+use mobirnn::server::{Client, Request, Response, Server};
+use mobirnn::simulator::Target;
+use mobirnn::util::Stats;
+
+struct ScenarioResult {
+    name: &'static str,
+    requests: usize,
+    wall: Duration,
+    wall_ms: Stats,
+    shed: usize,
+    expired: usize,
+    mean_batch: f64,
+}
+
+impl ScenarioResult {
+    fn rps(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Window fixture: deterministic pseudo-data, one flat window per index.
+fn window(shape: ModelShape, i: usize) -> Vec<f32> {
+    let n = shape.seq_len * shape.input_dim;
+    (0..n).map(|j| ((i * 31 + j * 7) % 97) as f32 / 97.0 - 0.5).collect()
+}
+
+/// Drive `total` classify calls from `n_clients` concurrent TCP
+/// clients. `targets` rotates per request; empty means "let the policy
+/// decide".
+fn run_scenario(
+    name: &'static str,
+    addr: std::net::SocketAddr,
+    shape: ModelShape,
+    n_clients: usize,
+    total: usize,
+    targets: &[Target],
+) -> ScenarioResult {
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|_| {
+            let next = Arc::clone(&next);
+            let targets = targets.to_vec();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut served = 0usize;
+                let mut shed = 0usize;
+                let mut walls = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let req = Request::Classify {
+                        id: Some(i as u64),
+                        window: window(shape, i),
+                        target: targets.get(i % targets.len().max(1)).copied(),
+                        deadline_ms: None,
+                    };
+                    let c0 = Instant::now();
+                    match client.call(&req).expect("call") {
+                        Response::Result { outcome, .. } => {
+                            assert!(outcome.class < shape.num_classes, "bad class");
+                            served += 1;
+                            walls.push(c0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        Response::Error { code, .. } => {
+                            assert_eq!(code.as_str(), "overloaded", "unexpected error");
+                            shed += 1;
+                        }
+                        other => panic!("unexpected response {other:?}"),
+                    }
+                }
+                (served, shed, walls)
+            })
+        })
+        .collect();
+    let mut requests = 0;
+    let mut shed = 0;
+    let mut wall_ms = Stats::new();
+    for h in handles {
+        let (s, e, walls) = h.join().expect("client thread");
+        requests += s;
+        shed += e;
+        for w in walls {
+            wall_ms.push(w);
+        }
+    }
+    let wall = t0.elapsed();
+
+    // Server-side counters for the emitted record.
+    let mut client = Client::connect(addr).expect("stats connect");
+    let (_, _, metrics) = client.stats().expect("stats");
+    let expired = metrics.get("expired").as_usize().unwrap_or(0);
+    let mean_batch = metrics.get("mean_batch_size").as_f64().unwrap_or(0.0);
+    ScenarioResult { name, requests, wall, wall_ms, shed, expired, mean_batch }
+}
+
+fn print_scenario(r: &ScenarioResult) {
+    println!(
+        "serving/{:<12} {:>7.0} req/s  p50 {:>6.2} ms  p99 {:>6.2} ms  \
+         shed {}  expired {}  mean_batch {:.2}",
+        r.name,
+        r.rps(),
+        r.wall_ms.percentile(50.0),
+        r.wall_ms.percentile(99.0),
+        r.shed,
+        r.expired,
+        r.mean_batch,
+    );
+}
+
+fn scenario_json(r: &ScenarioResult) -> Value {
+    let mut entry = BTreeMap::new();
+    entry.insert("requests".to_string(), Value::Num(r.requests as f64));
+    entry.insert("throughput_rps".to_string(), Value::Num(r.rps()));
+    entry.insert("p50_wall_ms".to_string(), Value::Num(r.wall_ms.percentile(50.0)));
+    entry.insert("p99_wall_ms".to_string(), Value::Num(r.wall_ms.percentile(99.0)));
+    entry.insert("shed".to_string(), Value::Num(r.shed as f64));
+    entry.insert("expired".to_string(), Value::Num(r.expired as f64));
+    entry.insert("mean_batch_size".to_string(), Value::Num(r.mean_batch));
+    Value::Obj(entry)
+}
+
+/// One server over the two native CPU engines (single- and multi-
+/// thread pools) sharing the random-weight model.
+fn start_server(shape: ModelShape) -> Server {
+    let model = Arc::new(random_model(shape, 42));
+    let router = Router::builder()
+        .shape(shape)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(2))
+        .engine(Box::new(CpuMultiEngine::new(Arc::clone(&model), 4)))
+        .engine(Box::new(CpuSingleEngine::new(model)))
+        .build()
+        .expect("router");
+    Server::bind("127.0.0.1:0", router).expect("bind")
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var_os("MOBIRNN_BENCH_SMOKE").is_some();
+    let shape = ModelShape::default();
+    let (n_clients, total) = if smoke { (2, 8) } else { (8, 400) };
+
+    // Scenario 1: everything through ONE pool — the serialized baseline.
+    let single_srv = start_server(shape);
+    let single = run_scenario(
+        "single_pool",
+        single_srv.addr(),
+        shape,
+        n_clients,
+        total,
+        &[Target::CpuSingle],
+    );
+    print_scenario(&single);
+    drop(single_srv);
+
+    // Scenario 2: alternate pools — batches overlap across workers.
+    let dual_srv = start_server(shape);
+    let dual = run_scenario(
+        "dual_pool",
+        dual_srv.addr(),
+        shape,
+        n_clients,
+        total,
+        &[Target::CpuSingle, Target::CpuMulti(4)],
+    );
+    print_scenario(&dual);
+    drop(dual_srv);
+
+    println!(
+        "serving/dual_pool_speedup: {:.2}x (pipelined vs serialized dispatch)",
+        dual.rps() / single.rps().max(1e-9)
+    );
+
+    if smoke {
+        // Functional gate for CI: every request completed (no deadlock,
+        // no shed at tiny N) and both pools actually served traffic.
+        assert_eq!(single.requests, total, "smoke: all single-pool requests served");
+        assert_eq!(dual.requests, total, "smoke: all dual-pool requests served");
+        assert_eq!(single.shed + dual.shed, 0, "smoke: no shed at tiny N");
+        println!("serving/smoke: OK ({total} requests per scenario, timings ignored)");
+        return;
+    }
+
+    let mut cases = BTreeMap::new();
+    cases.insert("serving/single_pool".to_string(), scenario_json(&single));
+    cases.insert("serving/dual_pool".to_string(), scenario_json(&dual));
+    let mut root = BTreeMap::new();
+    root.insert("format".to_string(), Value::from("mobirnn-bench"));
+    root.insert("version".to_string(), Value::from(1usize));
+    root.insert("bench".to_string(), Value::from("serving"));
+    root.insert("n_clients".to_string(), Value::Num(n_clients as f64));
+    root.insert("cases".to_string(), Value::Obj(cases));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serving.json");
+    std::fs::write(&path, Value::Obj(root).to_json()).expect("write BENCH_serving.json");
+    println!("wrote {}", path.display());
+}

@@ -97,6 +97,17 @@ impl BatchCollector {
         None
     }
 
+    /// Put polled arrivals back at the FRONT of the FIFO, in their
+    /// original order. Used when a planned batch could not dispatch
+    /// (every engine pool's queue was full): the requests re-enter the
+    /// queue with their TRUE arrival instants, so deadline accounting is
+    /// untouched and the retry fires immediately.
+    pub fn restore(&mut self, arrivals: impl DoubleEndedIterator<Item = Instant>) {
+        for t in arrivals.rev() {
+            self.arrivals.push_front(t);
+        }
+    }
+
     /// Time until the current deadline fires (for recv_timeout), or None
     /// when idle. Driven by the oldest still-pending arrival.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
@@ -289,5 +300,40 @@ mod tests {
     #[should_panic]
     fn collector_rejects_empty_sizes() {
         BatchCollector::new(vec![], Duration::from_millis(1));
+    }
+
+    #[test]
+    fn restore_preserves_order_and_deadlines() {
+        // A dispatch that could not be placed puts its arrivals back at
+        // the front, original order, original instants.
+        let t0 = Instant::now();
+        let mut c = BatchCollector::new(vec![1, 2], Duration::from_millis(5));
+        let a = t0;
+        let b = t0 + Duration::from_millis(1);
+        let d = t0 + Duration::from_millis(2);
+        c.push(a);
+        c.push(b);
+        c.push(d);
+        let p = c.poll(t0 + Duration::from_millis(6)).unwrap();
+        assert_eq!(p.take, 2, "size-2 dispatch takes the two oldest");
+        assert_eq!(c.pending(), 1);
+        // Pools full: put the polled pair back.
+        c.restore([a, b].into_iter());
+        assert_eq!(c.pending(), 3);
+        // The oldest arrival is `a` again, so its (long-past) deadline
+        // re-fires immediately with the same pair.
+        assert_eq!(
+            c.time_to_deadline(t0 + Duration::from_millis(6)).unwrap(),
+            Duration::ZERO
+        );
+        let p2 = c.poll(t0 + Duration::from_millis(6)).unwrap();
+        assert_eq!(p2.take, 2);
+        // The untouched third arrival is the front again afterwards.
+        assert_eq!(c.pending(), 1);
+        assert_eq!(
+            c.time_to_deadline(t0 + Duration::from_millis(3)).unwrap(),
+            Duration::from_millis(4),
+            "leftover keeps its own arrival instant"
+        );
     }
 }

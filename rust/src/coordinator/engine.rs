@@ -12,17 +12,30 @@
 //!
 //! All engines are pinned to the same trained weights and golden-tested
 //! against the JAX oracle, so failover changes cost, never answers.
+//!
+//! At serving time the registry is spawned into [`EnginePools`]: one
+//! executor worker (thread + bounded work queue) per registered engine,
+//! so batches for different targets execute CONCURRENTLY instead of
+//! head-of-line-blocking each other in the router thread (DESIGN.md §9).
+//! Workers send [`ServeReply`]s directly; a pool-level failure
+//! re-enqueues the batch on the next pool in failover order.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Manifest, ModelShape};
+use crate::coordinator::device::DeviceState;
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::target_label;
+use crate::coordinator::router::{ServeError, ServeReply, ServeRequest};
+use crate::har::CLASS_NAMES;
 use crate::lstm::{BatchArena, LstmModel, ThreadedLstm};
 use crate::runtime::Runtime;
-use crate::simulator::{Factorization, Target};
-use crate::tensor::Tensor;
+use crate::simulator::{simulate_inference, Factorization, Target};
+use crate::tensor::{argmax_slice, Tensor};
 
 /// One execution backend. Object-safe so the router can hold a
 /// heterogeneous `Target -> Box<dyn Engine>` registry.
@@ -223,6 +236,12 @@ impl EngineRegistry {
         self.engines.is_empty()
     }
 
+    /// Consume the registry into its engines, registration order (the
+    /// transition from build-time collection to [`EnginePools`]).
+    pub fn into_engines(self) -> Vec<Box<dyn Engine>> {
+        self.engines
+    }
+
     /// Execute `x` on the engine for `target`, failing over to every
     /// other registered engine in registration order.
     ///
@@ -278,6 +297,313 @@ impl std::fmt::Debug for EngineRegistry {
     }
 }
 
+// ---- engine pools (scheduler + per-engine workers, DESIGN.md §9) -----
+
+/// One batch handed from the scheduler to an engine pool. Carries
+/// everything the worker needs to execute and REPLY on its own: the
+/// padded tensor, the member requests, the requested target (payload
+/// preserved for latency simulation and wire labels) and the bitmask of
+/// pools that already tried — and failed — to execute it.
+pub(crate) struct BatchJob {
+    pub x: Tensor,
+    pub reqs: Vec<ServeRequest>,
+    pub target: Target,
+    pub padded_to: usize,
+    pub tried: u32,
+}
+
+/// A message on a pool's work queue.
+pub(crate) enum PoolMsg {
+    Job(BatchJob),
+    /// Drain-and-exit marker; queued jobs ahead of it still execute.
+    Shutdown,
+}
+
+/// Cloneable handle to one engine's executor worker: the target it
+/// serves plus the bounded sender feeding its queue.
+#[derive(Clone)]
+pub(crate) struct EnginePool {
+    target: Target,
+    tx: mpsc::SyncSender<PoolMsg>,
+}
+
+impl EnginePool {
+    /// Try to hand `job` to this pool, keeping the in-flight gauge
+    /// consistent: up BEFORE the send (so the worker's decrement can
+    /// never be observed first), back down if the queue is full or the
+    /// worker is gone. Returns the job on refusal. Shared by scheduler
+    /// dispatch and worker failover so the gauge protocol lives in
+    /// exactly one place.
+    fn offer(&self, job: BatchJob, metrics: &Metrics) -> Result<(), BatchJob> {
+        metrics.inflight.slot(self.target).fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(PoolMsg::Job(job)) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(m)) | Err(mpsc::TrySendError::Disconnected(m)) => {
+                metrics.inflight.slot(self.target).fetch_sub(1, Ordering::Relaxed);
+                let PoolMsg::Job(j) = m else { unreachable!("we only send jobs here") };
+                Err(j)
+            }
+        }
+    }
+}
+
+/// The spawned form of [`EngineRegistry`]: one worker thread + bounded
+/// work queue per registered engine. The scheduler dispatches batches
+/// here and moves on — execution, latency simulation, metrics and the
+/// replies all happen on the pool worker, so batches for different
+/// targets overlap in time. Failover order is registration order, same
+/// as [`EngineRegistry::infer_with_failover`].
+pub(crate) struct EnginePools {
+    pools: Vec<EnginePool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Pool indices in dispatch order for `target`: the pool of the same
+/// kind first (if any), then the rest in registration order.
+fn pool_order(pools: &[EnginePool], target: Target) -> impl Iterator<Item = usize> + '_ {
+    let primary = pools.iter().position(|p| same_kind(p.target, target));
+    primary.into_iter().chain((0..pools.len()).filter(move |&i| Some(i) != primary))
+}
+
+impl EnginePools {
+    /// Spawn one executor worker per registered engine. `depth` bounds
+    /// each pool's work queue (in batches); the scheduler's `try_send`
+    /// fails instead of blocking when a pool is saturated.
+    pub(crate) fn start(
+        registry: EngineRegistry,
+        device: DeviceState,
+        metrics: Arc<Metrics>,
+        shape: ModelShape,
+        depth: usize,
+    ) -> Result<Self> {
+        let engines = registry.into_engines();
+        if engines.is_empty() {
+            return Err(anyhow!("engine pools need at least one engine"));
+        }
+        debug_assert!(engines.len() <= 32, "tried-mask is a u32");
+        let depth = depth.max(1);
+        let mut pools = Vec::with_capacity(engines.len());
+        let mut rxs = Vec::with_capacity(engines.len());
+        for engine in &engines {
+            let (tx, rx) = mpsc::sync_channel(depth);
+            pools.push(EnginePool { target: engine.target(), tx });
+            rxs.push(rx);
+        }
+        let mut handles = Vec::with_capacity(engines.len());
+        for (index, (engine, rx)) in engines.into_iter().zip(rxs).enumerate() {
+            let name = format!("mobirnn-pool-{}", engine.label());
+            let worker = PoolWorker {
+                index,
+                engine,
+                rx,
+                peers: pools.clone(),
+                device: device.clone(),
+                metrics: Arc::clone(&metrics),
+                shape,
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || worker.run())
+                    .context("spawning engine pool worker")?,
+            );
+        }
+        Ok(Self { pools, handles })
+    }
+
+    /// Offer `job` to the pool serving its target's kind, then to every
+    /// other pool in registration order. `Ok(())` once a queue accepted
+    /// it; `Err(job)` when every pool is saturated (the caller keeps the
+    /// requests queued — admission control sheds overflow, not this).
+    pub(crate) fn dispatch(&self, mut job: BatchJob, metrics: &Metrics) -> Result<(), BatchJob> {
+        for i in pool_order(&self.pools, job.target) {
+            match self.pools[i].offer(job, metrics) {
+                Ok(()) => return Ok(()),
+                Err(j) => job = j,
+            }
+        }
+        Err(job)
+    }
+
+    /// Stop every worker: each pool finishes the jobs already queued,
+    /// then honors the shutdown marker; joins happen after every marker
+    /// is enqueued so cross-pool failover cannot deadlock the exit.
+    pub(crate) fn shutdown(&mut self) {
+        for pool in &self.pools {
+            // Blocking send: queued jobs drain first. Err means the
+            // worker is already gone, which is fine.
+            let _ = pool.tx.send(PoolMsg::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for EnginePools {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One engine's executor: owns the engine, drains its queue, executes
+/// batches and replies. On engine error it re-enqueues the batch on the
+/// next untried pool (never blocking — a saturated or stopped peer is
+/// skipped) and only fails the requests when no pool is left.
+struct PoolWorker {
+    index: usize,
+    engine: Box<dyn Engine>,
+    rx: mpsc::Receiver<PoolMsg>,
+    peers: Vec<EnginePool>,
+    device: DeviceState,
+    metrics: Arc<Metrics>,
+    shape: ModelShape,
+}
+
+impl PoolWorker {
+    fn run(mut self) {
+        while let Ok(msg) = self.rx.recv() {
+            match msg {
+                PoolMsg::Job(job) => self.execute(job),
+                PoolMsg::Shutdown => break,
+            }
+        }
+        // A peer can fail a batch over into this queue AFTER our
+        // shutdown marker (failover-during-shutdown): fail those
+        // requests loudly instead of dropping their reply senders, and
+        // keep the in-flight gauge balanced. (A forward landing after
+        // this drain still gets a channel-disconnect error at the
+        // caller, never a hang.)
+        while let Ok(msg) = self.rx.try_recv() {
+            if let PoolMsg::Job(job) = msg {
+                self.metrics
+                    .inflight
+                    .slot(self.engine.target())
+                    .fetch_sub(1, Ordering::Relaxed);
+                let reason = "engine pools shut down before this batch could run".to_string();
+                for req in job.reqs {
+                    let _ = req.reply.send(Err(ServeError::EngineFailure(reason.clone())));
+                }
+            }
+        }
+    }
+
+    fn execute(&mut self, mut job: BatchJob) {
+        let kind = self.engine.target();
+        let t0 = Instant::now();
+        let outcome = self.engine.infer(&job.x);
+        self.metrics.inflight.slot(kind).fetch_sub(1, Ordering::Relaxed);
+        match outcome {
+            Ok(logits) => {
+                // Same-kind execution preserves the REQUESTED payload
+                // (factorization / simulated thread count are policy
+                // attributes); cross-kind failover reports the engine's
+                // own target. Mirrors `infer_with_failover`.
+                let used = if same_kind(job.target, kind) { job.target } else { kind };
+                let compute_ns = t0.elapsed().as_nanos() as u64;
+                complete_batch(
+                    job,
+                    &logits,
+                    used,
+                    compute_ns,
+                    &self.device,
+                    &self.metrics,
+                    self.shape,
+                );
+            }
+            Err(e) => {
+                self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[pool] {} failed, re-enqueueing on next pool: {e:#}",
+                    self.engine.label()
+                );
+                job.tried |= 1 << self.index;
+                self.fail_over(job, e);
+            }
+        }
+    }
+
+    fn fail_over(&self, mut job: BatchJob, err: anyhow::Error) {
+        for i in pool_order(&self.peers, job.target) {
+            if job.tried & (1 << i) != 0 {
+                continue;
+            }
+            match self.peers[i].offer(job, &self.metrics) {
+                Ok(()) => return,
+                Err(j) => job = j,
+            }
+        }
+        let msg = format!("all engine pools failed or were saturated (last: {err:#})");
+        for req in job.reqs {
+            let _ = req.reply.send(Err(ServeError::EngineFailure(msg.clone())));
+        }
+    }
+}
+
+/// Success tail of a batch: simulated-device accounting, metrics, and
+/// one [`ServeReply`] per member request — everything the old router
+/// thread did after the engine returned, now on the pool worker.
+fn complete_batch(
+    job: BatchJob,
+    logits: &Tensor,
+    used: Target,
+    compute_ns: u64,
+    device: &DeviceState,
+    metrics: &Metrics,
+    shape: ModelShape,
+) {
+    // SIMULATED device latency. The paper's measurement is CLOSED-LOOP
+    // (inferences run back-to-back on the phone), so each GPU batch's
+    // device time elapses on the virtual clock before this pool's next
+    // batch: enqueue + advance drains the queue exactly, keeping
+    // sim_ns = work_ns for sequential batches while still charging
+    // queueing delay when dispatches overlap.
+    let util = match used {
+        Target::Gpu(_) => device.gpu_util(),
+        _ => device.cpu_util(),
+    };
+    let work_ns = simulate_inference(device.profile(), shape, job.padded_to, used, util);
+    let sim_ns = match used {
+        Target::Gpu(_) => {
+            let latency = device.enqueue_gpu(work_ns);
+            device.advance_virtual(work_ns);
+            latency
+        }
+        _ => work_ns,
+    };
+
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.requests.fetch_add(job.reqs.len() as u64, Ordering::Relaxed);
+    metrics.padded_slots.fetch_add((job.padded_to - job.reqs.len()) as u64, Ordering::Relaxed);
+    metrics.compute_latency.record(compute_ns);
+    metrics.sim_latency.record(sim_ns);
+    match used {
+        Target::Gpu(_) => metrics.gpu_dispatches.fetch_add(1, Ordering::Relaxed),
+        _ => metrics.cpu_dispatches.fetch_add(1, Ordering::Relaxed),
+    };
+
+    let done = Instant::now();
+    let batch_size = job.padded_to;
+    for (i, req) in job.reqs.into_iter().enumerate() {
+        let wall_ns = done.duration_since(req.enqueued).as_nanos() as u64;
+        metrics.wall_latency.record(wall_ns);
+        let row = logits.row(i).to_vec();
+        // NaN-robust "first finite max" rule (tensor.rs) — a broken
+        // engine must yield a defined class, never a panic in the pool.
+        let class = argmax_slice(&row);
+        let _ = req.reply.send(Ok(ServeReply {
+            id: req.opts.id,
+            class,
+            label: CLASS_NAMES.get(class).unwrap_or(&"?").to_string(),
+            logits: row,
+            wall_ns,
+            sim_ns,
+            target: target_label(used),
+            batch_size,
+        }));
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -329,6 +655,76 @@ pub(crate) mod testutil {
                 data[i * self.num_classes + 1] = 1.0;
             }
             Ok(Tensor::new(vec![batch, self.num_classes], data))
+        }
+    }
+
+    /// Engine that sleeps `delay` per batch and records each execution's
+    /// wall-clock span — the fixture for proving that batches on
+    /// different pools overlap in time.
+    pub(crate) struct SlowEngine {
+        pub target: Target,
+        pub delay: std::time::Duration,
+        pub spans: Arc<Mutex<Vec<(Instant, Instant)>>>,
+    }
+
+    impl SlowEngine {
+        pub(crate) fn new(target: Target, delay: std::time::Duration) -> Self {
+            Self { target, delay, spans: Arc::new(Mutex::new(Vec::new())) }
+        }
+    }
+
+    impl Engine for SlowEngine {
+        fn target(&self) -> Target {
+            self.target
+        }
+
+        fn supported_batches(&self) -> &[usize] {
+            &[]
+        }
+
+        fn infer(&self, x: &Tensor) -> Result<Tensor> {
+            let start = Instant::now();
+            std::thread::sleep(self.delay);
+            let batch = x.shape()[0];
+            let mut data = vec![0.0f32; batch * 6];
+            for i in 0..batch {
+                data[i * 6 + 1] = 1.0;
+            }
+            self.spans.lock().unwrap().push((start, Instant::now()));
+            Ok(Tensor::new(vec![batch, 6], data))
+        }
+    }
+
+    /// Engine that emits NaN-poisoned logits: `[NaN, 1.0, 7.0, 0.5,
+    /// NaN, 0.0]` per row. Under the "first finite max" rule the class
+    /// must come out as 2 — and never panic the pool worker.
+    pub(crate) struct NanEngine {
+        pub target: Target,
+    }
+
+    impl NanEngine {
+        pub(crate) fn new(target: Target) -> Self {
+            Self { target }
+        }
+    }
+
+    impl Engine for NanEngine {
+        fn target(&self) -> Target {
+            self.target
+        }
+
+        fn supported_batches(&self) -> &[usize] {
+            &[]
+        }
+
+        fn infer(&self, x: &Tensor) -> Result<Tensor> {
+            let batch = x.shape()[0];
+            let row = [f32::NAN, 1.0, 7.0, 0.5, f32::NAN, 0.0];
+            let mut data = Vec::with_capacity(batch * 6);
+            for _ in 0..batch {
+                data.extend_from_slice(&row);
+            }
+            Ok(Tensor::new(vec![batch, 6], data))
         }
     }
 }

@@ -6,6 +6,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::json::{obj, Value};
+use crate::simulator::Target;
 
 /// Log₂-bucketed histogram over nanoseconds: bucket i covers
 /// `[2^i, 2^(i+1))`, clamped to 64 buckets (≈ up to 584 years).
@@ -88,6 +89,43 @@ impl Histogram {
     }
 }
 
+/// One `AtomicU64` per engine-pool kind (gpu / cpu / cpu-multi),
+/// addressed by [`Target`] ignoring the payload — the same kind rule the
+/// engine registry uses. Used for the per-target in-flight gauges the
+/// scheduler steers on (DESIGN.md §9).
+#[derive(Debug, Default)]
+pub struct PerTarget {
+    pub gpu: AtomicU64,
+    pub cpu: AtomicU64,
+    pub cpu_multi: AtomicU64,
+}
+
+impl PerTarget {
+    /// The gauge for `t`'s kind.
+    pub fn slot(&self, t: Target) -> &AtomicU64 {
+        match t {
+            Target::Gpu(_) => &self.gpu,
+            Target::CpuSingle => &self.cpu,
+            Target::CpuMulti(_) => &self.cpu_multi,
+        }
+    }
+
+    /// Sum over every kind.
+    pub fn total(&self) -> u64 {
+        self.gpu.load(Ordering::Relaxed)
+            + self.cpu.load(Ordering::Relaxed)
+            + self.cpu_multi.load(Ordering::Relaxed)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("gpu", Value::from(self.gpu.load(Ordering::Relaxed))),
+            ("cpu", Value::from(self.cpu.load(Ordering::Relaxed))),
+            ("cpu_multi", Value::from(self.cpu_multi.load(Ordering::Relaxed))),
+        ])
+    }
+}
+
 /// Top-level serving metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -103,6 +141,19 @@ pub struct Metrics {
     pub cpu_dispatches: AtomicU64,
     pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
+    /// Batches queued or executing per engine pool (gauge): incremented
+    /// at dispatch, decremented when the pool finishes or forwards the
+    /// batch. This is the real serving state behind
+    /// `LoadSnapshot::{gpu,cpu}_inflight` (DESIGN.md §9).
+    pub inflight: PerTarget,
+    /// Requests sitting in the scheduler queue (gauge).
+    pub queue_depth: AtomicU64,
+    /// Requests rejected at admission (`RouterBuilder::max_queue`
+    /// exceeded → `ServeError::Overloaded`).
+    pub shed: AtomicU64,
+    /// Requests dropped at dispatch because their deadline had already
+    /// elapsed while they sat in the queue.
+    pub expired: AtomicU64,
 }
 
 impl Metrics {
@@ -128,6 +179,10 @@ impl Metrics {
             ("cpu_dispatches", Value::from(self.cpu_dispatches.load(Ordering::Relaxed))),
             ("padded_slots", Value::from(self.padded_slots.load(Ordering::Relaxed))),
             ("errors", Value::from(self.errors.load(Ordering::Relaxed))),
+            ("shed", Value::from(self.shed.load(Ordering::Relaxed))),
+            ("expired", Value::from(self.expired.load(Ordering::Relaxed))),
+            ("queue_depth", Value::from(self.queue_depth.load(Ordering::Relaxed))),
+            ("inflight", self.inflight.to_json()),
             ("wall_latency", self.wall_latency.to_json()),
             ("sim_latency", self.sim_latency.to_json()),
             ("compute_latency", self.compute_latency.to_json()),
@@ -187,13 +242,36 @@ mod tests {
         m.requests.fetch_add(10, Ordering::Relaxed);
         m.batches.fetch_add(4, Ordering::Relaxed);
         m.wall_latency.record(5_000);
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.expired.fetch_add(2, Ordering::Relaxed);
+        m.queue_depth.store(7, Ordering::Relaxed);
+        m.inflight.gpu.fetch_add(1, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.get("requests").as_usize(), Some(10));
         assert_eq!(j.get("mean_batch_size").as_f64(), Some(2.5));
         assert_eq!(j.get("wall_latency").get("count").as_usize(), Some(1));
+        assert_eq!(j.get("shed").as_usize(), Some(3));
+        assert_eq!(j.get("expired").as_usize(), Some(2));
+        assert_eq!(j.get("queue_depth").as_usize(), Some(7));
+        assert_eq!(j.get("inflight").get("gpu").as_usize(), Some(1));
+        assert_eq!(j.get("inflight").get("cpu").as_usize(), Some(0));
         // Serializes without panic and round-trips.
         let text = j.to_json();
         assert!(crate::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn per_target_slots_by_kind() {
+        use crate::simulator::Factorization;
+        let g = PerTarget::default();
+        g.slot(Target::Gpu(Factorization::Fine)).fetch_add(2, Ordering::Relaxed);
+        g.slot(Target::Gpu(Factorization::Coarse)).fetch_add(1, Ordering::Relaxed);
+        g.slot(Target::CpuMulti(4)).fetch_add(1, Ordering::Relaxed);
+        // Payload is ignored: both factorizations land on the one gpu gauge.
+        assert_eq!(g.gpu.load(Ordering::Relaxed), 3);
+        assert_eq!(g.cpu.load(Ordering::Relaxed), 0);
+        assert_eq!(g.cpu_multi.load(Ordering::Relaxed), 1);
+        assert_eq!(g.total(), 4);
     }
 
     #[test]

@@ -1,24 +1,30 @@
 //! L3 coordinator — the serving control plane (the paper's system
 //! contribution, recast as a first-class scheduler).
 //!
-//! Request path (Python never on it):
+//! Request path (Python never on it). Since the pipelined-dispatch
+//! refactor (DESIGN.md §9) the router thread is a pure SCHEDULER and
+//! every engine executes on its own pool worker, so batches for
+//! different targets overlap in time:
 //!
 //! ```text
-//! client ──TCP──▶ server ──▶ Router queue ──▶ Batcher (pad to compiled B)
-//!        ──▶ OffloadPolicy (reads DeviceState utilization, §4.5)
-//!        ──▶ EngineRegistry: Target → Engine { PJRT | native 1t | native Nt }
-//!        ──▶ simulator charges mobile latency ──▶ reply + Metrics
+//! client ──TCP──▶ server ──▶ Scheduler: bounded admission (max_queue,
+//!        overflow ⇒ Overloaded) ──▶ Batcher (pad to compiled B, drop
+//!        expired) ──▶ OffloadPolicy (DeviceState utilization + per-pool
+//!        in-flight depth, §4.5)
+//!        ──▶ EnginePools: Target → worker { PJRT | native 1t | native Nt }
+//!            (bounded queue each; failure re-enqueues on the next pool)
+//!        ──▶ pool worker: simulator charges mobile latency ──▶ reply
 //! ```
 //!
 //! - [`batcher`]  — dynamic batching onto the AOT-compiled batch sizes
 //! - [`policy`]   — where to run: static, threshold, or cost-model driven
 //!   (the paper's conclusion that offloading must be utilization-aware)
-//! - [`engine`]   — the [`Engine`] trait + registry: one object-safe seam
-//!   over every execution backend, with generic failover (DESIGN.md §3)
+//! - [`engine`]   — the [`Engine`] trait + registry + the per-engine
+//!   executor pools, with generic failover (DESIGN.md §3, §9)
 //! - [`device`]   — shared simulated-device state (background load knobs)
-//! - [`router`]   — the serving loop tying it all together, built via
+//! - [`router`]   — the scheduler tying it all together, built via
 //!   [`RouterBuilder`]
-//! - [`metrics`]  — latency histograms + counters
+//! - [`metrics`]  — latency histograms, counters, per-target gauges
 
 pub mod batcher;
 pub mod device;
@@ -30,8 +36,10 @@ pub mod router;
 pub use batcher::{plan_batch, BatchCollector, BatchPlan};
 pub use device::DeviceState;
 pub use engine::{CpuMultiEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine};
-pub use metrics::{Histogram, Metrics};
-pub use policy::{parse_target, target_label, DecisionCache, OffloadPolicy};
+pub use metrics::{Histogram, Metrics, PerTarget};
+pub use policy::{
+    inflight_pressure, parse_target, target_label, DecisionCache, LoadSnapshot, OffloadPolicy,
+};
 pub use router::{
     ClassifyOptions, Router, RouterBuilder, ServeError, ServeReply, ServeRequest,
 };

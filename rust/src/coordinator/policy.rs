@@ -15,10 +15,41 @@ use crate::config::ModelShape;
 use crate::simulator::{simulate_inference, DeviceProfile, Factorization, Target};
 
 /// Utilization snapshot the policy decides on.
+///
+/// `gpu_util`/`cpu_util` are the externally-set background knobs (the
+/// paper's co-running apps, §4.5). The `*_inflight` fields are REAL
+/// serving state: batches currently queued or executing on the engine
+/// pools (DESIGN.md §9), so the cost model steers away from an engine
+/// that is already saturated by our own dispatches — not just by the
+/// simulated background load.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LoadSnapshot {
     pub gpu_util: f64,
     pub cpu_util: f64,
+    /// Batches queued or executing on the GPU engine pool.
+    pub gpu_inflight: u64,
+    /// Batches queued or executing on the CPU engine pools (single +
+    /// multi combined — they share the simulated CPU complex).
+    pub cpu_inflight: u64,
+}
+
+impl LoadSnapshot {
+    /// Utilization the policy prices target `t` at: the background knob
+    /// plus [`inflight_pressure`] from batches already in flight on the
+    /// pool that would serve it, clamped to 1.
+    pub fn effective_util(&self, t: Target) -> f64 {
+        let (util, depth) = match t {
+            Target::Gpu(_) => (self.gpu_util, self.gpu_inflight),
+            _ => (self.cpu_util, self.cpu_inflight),
+        };
+        (util + inflight_pressure(depth)).min(1.0)
+    }
+}
+
+/// Extra effective utilization charged per in-flight batch (0.15 each,
+/// saturating at +0.6 — four deep batches read as a fully busy engine).
+pub fn inflight_pressure(depth: u64) -> f64 {
+    (depth as f64 * 0.15).min(0.6)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -52,7 +83,9 @@ impl OffloadPolicy {
         match *self {
             OffloadPolicy::Static(t) => t,
             OffloadPolicy::Threshold { gpu_threshold } => {
-                if load.gpu_util < gpu_threshold {
+                // In-flight depth counts against the cutoff like render
+                // load does: a backed-up GPU pool is a busy GPU (§4.5).
+                if load.effective_util(Target::Gpu(Factorization::Coarse)) < gpu_threshold {
                     Target::Gpu(Factorization::Coarse)
                 } else {
                     Target::CpuMulti(profile.cpu_cores)
@@ -62,11 +95,8 @@ impl OffloadPolicy {
                 let mut best = Target::CpuSingle;
                 let mut best_ns = u64::MAX;
                 for t in Self::candidates(profile) {
-                    let util = match t {
-                        Target::Gpu(_) => load.gpu_util,
-                        _ => load.cpu_util,
-                    };
-                    let ns = simulate_inference(profile, shape, batch, t, util);
+                    let ns =
+                        simulate_inference(profile, shape, batch, t, load.effective_util(t));
                     if ns < best_ns {
                         best_ns = ns;
                         best = t;
@@ -99,12 +129,13 @@ impl OffloadPolicy {
 /// The cost model runs three full device simulations per decision
 /// (~50–80 µs) — measurable against sub-millisecond batches. Decisions
 /// only depend on (batch, load), and load is quantized to 2% buckets
-/// (well inside the simulator's calibration error), so a small hash map
-/// turns the steady-state decision into a ~100 ns lookup
+/// (well inside the simulator's calibration error) plus the in-flight
+/// depths saturated at 4 (where [`inflight_pressure`] tops out), so a
+/// small hash map turns the steady-state decision into a ~100 ns lookup
 /// (EXPERIMENTS.md §Perf).
 #[derive(Debug, Default)]
 pub struct DecisionCache {
-    map: std::collections::HashMap<(usize, u16, u16), Target>,
+    map: std::collections::HashMap<(usize, u16, u16, u16, u16), Target>,
 }
 
 impl DecisionCache {
@@ -115,6 +146,12 @@ impl DecisionCache {
     /// Quantize a utilization to a 2%-wide bucket id.
     fn bucket(util: f64) -> u16 {
         (util.clamp(0.0, 1.0) * 50.0).round() as u16
+    }
+
+    /// Quantize an in-flight depth: pressure saturates at 4 batches, so
+    /// deeper queues share one bucket.
+    fn depth_bucket(depth: u64) -> u16 {
+        depth.min(4) as u16
     }
 
     pub fn decide(
@@ -131,7 +168,13 @@ impl DecisionCache {
                 policy.decide(profile, shape, batch, load)
             }
             OffloadPolicy::CostModel => {
-                let key = (batch, Self::bucket(load.gpu_util), Self::bucket(load.cpu_util));
+                let key = (
+                    batch,
+                    Self::bucket(load.gpu_util),
+                    Self::bucket(load.cpu_util),
+                    Self::depth_bucket(load.gpu_inflight),
+                    Self::depth_bucket(load.cpu_inflight),
+                );
                 if let Some(&t) = self.map.get(&key) {
                     return t;
                 }
@@ -140,6 +183,8 @@ impl DecisionCache {
                 let centered = LoadSnapshot {
                     gpu_util: key.1 as f64 / 50.0,
                     cpu_util: key.2 as f64 / 50.0,
+                    gpu_inflight: key.3 as u64,
+                    cpu_inflight: key.4 as u64,
                 };
                 let t = policy.decide(profile, shape, batch, centered);
                 self.map.insert(key, t);
@@ -193,7 +238,8 @@ mod tests {
     fn static_policy_is_constant() {
         let p = OffloadPolicy::Static(Target::CpuSingle);
         for util in [0.0, 0.5, 0.9] {
-            let t = p.decide(&n5(), ModelShape::default(), 1, LoadSnapshot { gpu_util: util, cpu_util: 0.0 });
+            let load = LoadSnapshot { gpu_util: util, ..Default::default() };
+            let t = p.decide(&n5(), ModelShape::default(), 1, load);
             assert_eq!(t, Target::CpuSingle);
         }
     }
@@ -201,8 +247,10 @@ mod tests {
     #[test]
     fn threshold_switches_at_cutoff() {
         let p = OffloadPolicy::Threshold { gpu_threshold: 0.6 };
-        let lo = p.decide(&n5(), ModelShape::default(), 1, LoadSnapshot { gpu_util: 0.3, cpu_util: 0.0 });
-        let hi = p.decide(&n5(), ModelShape::default(), 1, LoadSnapshot { gpu_util: 0.8, cpu_util: 0.0 });
+        let low = LoadSnapshot { gpu_util: 0.3, ..Default::default() };
+        let high = LoadSnapshot { gpu_util: 0.8, ..Default::default() };
+        let lo = p.decide(&n5(), ModelShape::default(), 1, low);
+        let hi = p.decide(&n5(), ModelShape::default(), 1, high);
         assert_eq!(lo, Target::Gpu(Factorization::Coarse));
         assert_eq!(hi, Target::CpuMulti(4));
     }
@@ -214,7 +262,8 @@ mod tests {
         let shape = ModelShape::default();
         let idle = p.decide(&n5(), shape, 1, LoadSnapshot::default());
         assert_eq!(idle, Target::Gpu(Factorization::Coarse), "idle device: GPU wins (Fig 4)");
-        let loaded = p.decide(&n5(), shape, 1, LoadSnapshot { gpu_util: 0.85, cpu_util: 0.85 });
+        let busy = LoadSnapshot { gpu_util: 0.85, cpu_util: 0.85, ..Default::default() };
+        let loaded = p.decide(&n5(), shape, 1, busy);
         assert!(
             matches!(loaded, Target::CpuSingle | Target::CpuMulti(_)),
             "high load: CPU wins (Fig 7), got {loaded:?}"
@@ -231,7 +280,8 @@ mod tests {
         let mut flips = 0;
         for i in 0..=20 {
             let u = i as f64 / 20.0;
-            let t = p.decide(&n5(), shape, 1, LoadSnapshot { gpu_util: u, cpu_util: u });
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u, ..Default::default() };
+            let t = p.decide(&n5(), shape, 1, load);
             let is_gpu = matches!(t, Target::Gpu(_));
             if is_gpu != last_gpu {
                 flips += 1;
@@ -259,7 +309,7 @@ mod tests {
         for i in 0..=50 {
             // Bucket centers: cached and uncached must agree exactly.
             let u = i as f64 / 50.0;
-            let load = LoadSnapshot { gpu_util: u, cpu_util: u };
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u, ..Default::default() };
             let direct = p.decide(&n5(), shape, 1, load);
             let cached = cache.decide(&p, &n5(), shape, 1, load);
             assert_eq!(direct, cached, "util {u}");
@@ -269,10 +319,64 @@ mod tests {
         let before = cache.len();
         for i in 0..=50 {
             let u = i as f64 / 50.0;
-            let load = LoadSnapshot { gpu_util: u, cpu_util: u };
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u, ..Default::default() };
             let _ = cache.decide(&p, &n5(), shape, 1, load);
         }
         assert_eq!(cache.len(), before);
+    }
+
+    #[test]
+    fn inflight_pressure_saturates() {
+        assert_eq!(inflight_pressure(0), 0.0);
+        assert!((inflight_pressure(1) - 0.15).abs() < 1e-12);
+        assert!((inflight_pressure(4) - 0.6).abs() < 1e-12);
+        assert!((inflight_pressure(100) - 0.6).abs() < 1e-12, "pressure must saturate");
+    }
+
+    #[test]
+    fn threshold_steers_away_from_backed_up_gpu() {
+        // Same background load, different pool depth: the in-flight
+        // batches alone must push the effective utilization past the
+        // cutoff (the §4.5 behavior driven by real serving state).
+        let p = OffloadPolicy::Threshold { gpu_threshold: 0.5 };
+        let shape = ModelShape::default();
+        let idle = LoadSnapshot { gpu_util: 0.2, ..Default::default() };
+        let backed_up = LoadSnapshot { gpu_util: 0.2, gpu_inflight: 4, ..Default::default() };
+        assert_eq!(p.decide(&n5(), shape, 1, idle), Target::Gpu(Factorization::Coarse));
+        assert_eq!(p.decide(&n5(), shape, 1, backed_up), Target::CpuMulti(4));
+    }
+
+    #[test]
+    fn cost_model_prices_targets_at_effective_util() {
+        // The decision must equal the hand-computed argmin over the
+        // candidates at their in-flight-adjusted utilizations.
+        let shape = ModelShape::default();
+        let load = LoadSnapshot { gpu_util: 0.2, cpu_util: 0.1, gpu_inflight: 3, cpu_inflight: 1 };
+        let decided = OffloadPolicy::CostModel.decide(&n5(), shape, 2, load);
+        let best = OffloadPolicy::candidates(&n5())
+            .iter()
+            .copied()
+            .min_by_key(|&t| simulate_inference(&n5(), shape, 2, t, load.effective_util(t)))
+            .unwrap();
+        assert_eq!(decided, best);
+    }
+
+    #[test]
+    fn cache_keys_include_inflight_depth() {
+        let mut cache = DecisionCache::new();
+        let p = OffloadPolicy::CostModel;
+        let shape = ModelShape::default();
+        let idle = LoadSnapshot::default();
+        let backed_up = LoadSnapshot { gpu_inflight: 4, ..Default::default() };
+        let _ = cache.decide(&p, &n5(), shape, 1, idle);
+        let n = cache.len();
+        let _ = cache.decide(&p, &n5(), shape, 1, backed_up);
+        assert!(cache.len() > n, "distinct in-flight depths must not share a cache entry");
+        // Depths beyond the saturation point share the saturated bucket.
+        let deeper = LoadSnapshot { gpu_inflight: 40, ..Default::default() };
+        let m = cache.len();
+        let _ = cache.decide(&p, &n5(), shape, 1, deeper);
+        assert_eq!(cache.len(), m, "saturated depths share one bucket");
     }
 
     #[test]

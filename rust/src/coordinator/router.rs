@@ -1,4 +1,16 @@
-//! The serving loop: queue → batch → offload decision → engine → reply.
+//! The serving SCHEDULER: admit → batch → offload decision → dispatch.
+//!
+//! Since the pipelined-dispatch refactor (DESIGN.md §9) the router
+//! thread no longer executes anything: it is a pure scheduler that
+//! admits requests against a bounded queue ([`RouterBuilder::max_queue`];
+//! overflow is shed immediately as [`ServeError::Overloaded`]), forms
+//! batches, decides targets — steering away from pools that are already
+//! deep in flight, the paper's §4.5 behavior driven by real serving
+//! state — and hands each batch to the per-engine worker pools in
+//! `coordinator/engine.rs`. Execution, latency simulation and the
+//! replies happen on the pool workers, so a GPU-target batch and a
+//! CPU-target batch run CONCURRENTLY instead of head-of-line-blocking
+//! each other.
 //!
 //! Numerics are always REAL — whichever [`Engine`] the offload decision
 //! selects (PJRT artifact for the GPU target, native Rust for the CPU
@@ -15,6 +27,7 @@
 //!     .policy(OffloadPolicy::CostModel)
 //!     .device(device)
 //!     .max_wait(Duration::from_millis(2))
+//!     .max_queue(256)                  // admission bound (default)
 //!     .manifest(&manifest, runtime)?   // standard engine set
 //!     .build()?;
 //! ```
@@ -28,18 +41,21 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Manifest, ModelShape};
-use crate::coordinator::batcher::BatchCollector;
+use crate::coordinator::batcher::{plan_batch, BatchCollector};
 use crate::coordinator::device::DeviceState;
 use crate::coordinator::engine::{
-    CpuMultiEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine,
+    BatchJob, CpuMultiEngine, CpuSingleEngine, Engine, EnginePools, EngineRegistry, PjrtEngine,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::policy::{target_label, DecisionCache, LoadSnapshot, OffloadPolicy};
-use crate::har::CLASS_NAMES;
+use crate::coordinator::policy::{DecisionCache, LoadSnapshot, OffloadPolicy};
 use crate::lstm::{LstmModel, WeightFile};
 use crate::runtime::Runtime;
-use crate::simulator::{simulate_inference, DeviceProfile, Target};
+use crate::simulator::{DeviceProfile, Target};
 use crate::tensor::Tensor;
+
+/// How long the scheduler backs off when every engine pool's queue is
+/// full before retrying the blocked batch.
+const POOL_FULL_BACKOFF: Duration = Duration::from_micros(200);
 
 /// Per-request options for [`Router::submit_with`] / [`Router::classify_with`].
 #[derive(Debug, Clone, Default)]
@@ -89,6 +105,11 @@ pub enum ServeError {
     EngineFailure(String),
     /// The caller's [`ClassifyOptions::deadline`] elapsed first.
     DeadlineExceeded,
+    /// Admission control rejected the request: the scheduler queue was
+    /// already at [`RouterBuilder::max_queue`]. Shed immediately — a
+    /// request that would only time out in the queue costs everyone
+    /// else latency (the paper's §4.5 logic applied to overload).
+    Overloaded,
 }
 
 impl fmt::Display for ServeError {
@@ -96,6 +117,7 @@ impl fmt::Display for ServeError {
         match self {
             ServeError::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
             ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::Overloaded => write!(f, "overloaded: scheduler queue full"),
         }
     }
 }
@@ -188,14 +210,17 @@ impl Drop for Joiner {
 /// Fluent constructor for [`Router`] — the only way to build one.
 ///
 /// Defaults: paper-default [`ModelShape`], cost-model policy, 2 ms
-/// batching deadline, 4 CPU threads, a fresh simulated Nexus 5. At least
-/// one engine is required: either the standard set via
+/// batching deadline, 4 CPU threads, a 256-request admission bound, a
+/// 4-batch work queue per engine pool, a fresh simulated Nexus 5. At
+/// least one engine is required: either the standard set via
 /// [`RouterBuilder::manifest`] or custom ones via [`RouterBuilder::engine`].
 pub struct RouterBuilder {
     shape: ModelShape,
     policy: OffloadPolicy,
     max_wait: Duration,
     cpu_threads: usize,
+    max_queue: usize,
+    pool_depth: usize,
     device: Option<DeviceState>,
     registry: EngineRegistry,
 }
@@ -213,6 +238,8 @@ impl RouterBuilder {
             policy: OffloadPolicy::CostModel,
             max_wait: Duration::from_millis(2),
             cpu_threads: 4,
+            max_queue: 256,
+            pool_depth: 4,
             device: None,
             registry: EngineRegistry::new(),
         }
@@ -239,6 +266,22 @@ impl RouterBuilder {
     /// Batching deadline: how long the oldest request may wait.
     pub fn max_wait(mut self, max_wait: Duration) -> Self {
         self.max_wait = max_wait;
+        self
+    }
+
+    /// Admission bound: requests beyond this many pending in the
+    /// scheduler queue are rejected immediately with
+    /// [`ServeError::Overloaded`] (default 256).
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = max_queue.max(1);
+        self
+    }
+
+    /// Bound on each engine pool's work queue, in batches (default 4).
+    /// When every pool is saturated the scheduler keeps batches queued
+    /// (deadlines ticking) and lets admission shed the overflow.
+    pub fn pool_depth(mut self, pool_depth: usize) -> Self {
+        self.pool_depth = pool_depth.max(1);
         self
     }
 
@@ -281,7 +324,7 @@ impl RouterBuilder {
         Ok(self)
     }
 
-    /// Spawn the router thread.
+    /// Spawn the engine pools and the scheduler thread.
     pub fn build(self) -> Result<Router> {
         if self.registry.is_empty() {
             return Err(anyhow!(
@@ -306,23 +349,31 @@ impl RouterBuilder {
         batches.dedup();
 
         let metrics = Arc::new(Metrics::new());
+        let pools = EnginePools::start(
+            self.registry,
+            device.clone(),
+            Arc::clone(&metrics),
+            self.shape,
+            self.pool_depth,
+        )?;
         let (tx, rx) = mpsc::channel::<ServeRequest>();
-        let worker = Worker {
+        let scheduler = Scheduler {
             rx,
             collector: BatchCollector::new(batches, self.max_wait),
             queue: VecDeque::new(),
-            engines: self.registry,
+            pools,
             device: device.clone(),
             metrics: Arc::clone(&metrics),
             shape: self.shape,
             policy: self.policy,
             max_wait: self.max_wait,
+            max_queue: self.max_queue,
             decisions: DecisionCache::new(),
         };
         let handle = std::thread::Builder::new()
-            .name("mobirnn-router".into())
-            .spawn(move || worker.run())
-            .context("spawning router")?;
+            .name("mobirnn-scheduler".into())
+            .spawn(move || scheduler.run())
+            .context("spawning scheduler")?;
         Ok(Router {
             tx,
             metrics,
@@ -333,20 +384,24 @@ impl RouterBuilder {
     }
 }
 
-struct Worker {
+/// The scheduler: the router thread's entire job since the pipelined
+/// refactor. Never executes a batch — it admits, batches, decides, and
+/// dispatches to the engine pools.
+struct Scheduler {
     rx: mpsc::Receiver<ServeRequest>,
     collector: BatchCollector,
     queue: VecDeque<ServeRequest>,
-    engines: EngineRegistry,
+    pools: EnginePools,
     device: DeviceState,
     metrics: Arc<Metrics>,
     shape: ModelShape,
     policy: OffloadPolicy,
     max_wait: Duration,
+    max_queue: usize,
     decisions: DecisionCache,
 }
 
-impl Worker {
+impl Scheduler {
     fn run(mut self) {
         let mut last_tick = Instant::now();
         loop {
@@ -362,136 +417,127 @@ impl Worker {
                 .unwrap_or(Duration::from_millis(50));
             match self.rx.recv_timeout(timeout) {
                 Ok(req) => {
-                    self.collector.push(req.enqueued);
-                    self.queue.push_back(req);
+                    self.admit(req);
                     // Opportunistically drain whatever is already queued.
                     while let Ok(req) = self.rx.try_recv() {
-                        self.collector.push(req.enqueued);
-                        self.queue.push_back(req);
+                        self.admit(req);
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     // Serve the tail (poll "in the future" so every
-                    // deadline fires), then exit.
+                    // deadline fires), then stop the pools — they drain
+                    // their queues before honoring the shutdown marker.
                     while self.collector.pending() > 0 {
-                        self.dispatch_once(Instant::now() + 2 * self.max_wait);
+                        if !self.dispatch_once(Instant::now() + 2 * self.max_wait) {
+                            std::thread::sleep(POOL_FULL_BACKOFF);
+                        }
                     }
+                    self.metrics.queue_depth.store(0, Ordering::Relaxed);
+                    self.pools.shutdown();
                     return;
                 }
             }
-            self.dispatch_once(Instant::now());
+            if !self.dispatch_once(Instant::now()) {
+                // Every pool is saturated: back off briefly instead of
+                // spinning on the already-due batching deadline.
+                std::thread::sleep(POOL_FULL_BACKOFF);
+            }
         }
     }
 
-    fn dispatch_once(&mut self, now: Instant) {
-        let Some(plan) = self.collector.poll(now) else { return };
-
-        let reqs: Vec<ServeRequest> =
-            (0..plan.take).filter_map(|_| self.queue.pop_front()).collect();
-        if reqs.is_empty() {
+    /// Bounded admission: beyond `max_queue` pending requests the
+    /// overflow is shed NOW with a typed error, not queued to die.
+    fn admit(&mut self, req: ServeRequest) {
+        if self.queue.len() >= self.max_queue {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = req.reply.send(Err(ServeError::Overloaded));
             return;
         }
-        let shape = self.shape;
-        let window_len = shape.seq_len * shape.input_dim;
+        self.collector.push(req.enqueued);
+        self.queue.push_back(req);
+        self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Form and dispatch at most one batch. Returns `false` when a
+    /// formed batch could not be placed because every pool's queue was
+    /// full (the batch is restored, the caller backs off).
+    fn dispatch_once(&mut self, now: Instant) -> bool {
+        let Some(plan) = self.collector.poll(now) else { return true };
+
+        // Pop the batch members, dropping the ones whose caller has
+        // already timed out: the scheduler knows `enqueued` and the
+        // deadline, so computing a dead batch slot would be pure waste.
+        let mut live: Vec<ServeRequest> = Vec::with_capacity(plan.take);
+        for _ in 0..plan.take {
+            let Some(req) = self.queue.pop_front() else { break };
+            let expired =
+                req.opts.deadline.is_some_and(|d| now.duration_since(req.enqueued) >= d);
+            if expired {
+                self.metrics.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(ServeError::DeadlineExceeded));
+            } else {
+                live.push(req);
+            }
+        }
+        self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+        if live.is_empty() {
+            return true;
+        }
+
+        // Re-plan padding for the survivors (expiry may have shrunk the
+        // batch below the planned compiled size).
+        let padded_to = plan_batch(live.len(), self.collector.compiled_sizes())
+            .map_or(live.len(), |p| p.padded_to);
 
         // Build the padded [B, T, D] tensor.
-        let mut data = Vec::with_capacity(plan.padded_to * window_len);
-        for r in &reqs {
+        let shape = self.shape;
+        let window_len = shape.seq_len * shape.input_dim;
+        let mut data = Vec::with_capacity(padded_to * window_len);
+        for r in &live {
             data.extend_from_slice(&r.window);
         }
-        data.resize(plan.padded_to * window_len, 0.0);
-        let x = Tensor::new(vec![plan.padded_to, shape.seq_len, shape.input_dim], data);
+        data.resize(padded_to * window_len, 0.0);
+        let x = Tensor::new(vec![padded_to, shape.seq_len, shape.input_dim], data);
 
         // Offload decision: an explicit per-request override wins;
-        // otherwise the policy decides on current load.
-        let target = match reqs.iter().find_map(|r| r.opts.target) {
+        // otherwise the policy decides on current load — background
+        // knobs plus the REAL per-pool in-flight depth, so the cost
+        // model steers away from an engine that is already saturated.
+        let target = match live.iter().find_map(|r| r.opts.target) {
             Some(t) => t,
             None => {
                 let load = LoadSnapshot {
                     gpu_util: self.device.effective_gpu_util(),
                     cpu_util: self.device.cpu_util(),
+                    gpu_inflight: self.metrics.inflight.gpu.load(Ordering::Relaxed),
+                    cpu_inflight: self.metrics.inflight.cpu.load(Ordering::Relaxed)
+                        + self.metrics.inflight.cpu_multi.load(Ordering::Relaxed),
                 };
                 self.decisions.decide(
                     &self.policy,
                     self.device.profile(),
                     shape,
-                    plan.padded_to,
+                    padded_to,
                     load,
                 )
             }
         };
 
-        // REAL numerics through the engine registry; generic failover.
-        // `errors` counts engine execution failures (same unit on the
-        // partial-failover and total-failure paths).
-        let t0 = Instant::now();
-        let (outcome, engine_errors) = self.engines.infer_with_failover(target, &x);
-        self.metrics.errors.fetch_add(engine_errors, Ordering::Relaxed);
-        let (logits, target) = match outcome {
-            Ok((logits, used)) => (logits, used),
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in reqs {
-                    let _ = req.reply.send(Err(ServeError::EngineFailure(msg.clone())));
+        let job = BatchJob { x, reqs: live, target, padded_to, tried: 0 };
+        match self.pools.dispatch(job, &self.metrics) {
+            Ok(()) => true,
+            Err(job) => {
+                // Every pool saturated: the requests go back to the
+                // FRONT of the queue with their true arrival instants
+                // (deadlines keep ticking); admission sheds overflow.
+                self.collector.restore(job.reqs.iter().map(|r| r.enqueued));
+                for req in job.reqs.into_iter().rev() {
+                    self.queue.push_front(req);
                 }
-                return;
+                self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+                false
             }
-        };
-        let compute_ns = t0.elapsed().as_nanos() as u64;
-
-        // SIMULATED device latency. The paper's measurement is CLOSED-LOOP
-        // (inferences run back-to-back on the phone), so each batch's
-        // device time elapses on the virtual clock before the next
-        // dispatch: enqueue + advance drains the queue exactly, keeping
-        // sim_ns = work_ns for sequential batches while still charging
-        // queueing delay if dispatches ever overlap.
-        let util = match target {
-            Target::Gpu(_) => self.device.gpu_util(),
-            _ => self.device.cpu_util(),
-        };
-        let work_ns =
-            simulate_inference(self.device.profile(), shape, plan.padded_to, target, util);
-        let sim_ns = match target {
-            Target::Gpu(_) => {
-                let latency = self.device.enqueue_gpu(work_ns);
-                self.device.advance_virtual(work_ns);
-                latency
-            }
-            _ => work_ns,
-        };
-
-        // Account + reply.
-        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
-        self.metrics.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-        self.metrics.padded_slots.fetch_add(plan.padding() as u64, Ordering::Relaxed);
-        self.metrics.compute_latency.record(compute_ns);
-        self.metrics.sim_latency.record(sim_ns);
-        match target {
-            Target::Gpu(_) => self.metrics.gpu_dispatches.fetch_add(1, Ordering::Relaxed),
-            _ => self.metrics.cpu_dispatches.fetch_add(1, Ordering::Relaxed),
-        };
-        let done = Instant::now();
-        for (i, req) in reqs.into_iter().enumerate() {
-            let wall_ns = done.duration_since(req.enqueued).as_nanos() as u64;
-            self.metrics.wall_latency.record(wall_ns);
-            let row = logits.row(i).to_vec();
-            let class = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap_or(0);
-            let _ = req.reply.send(Ok(ServeReply {
-                id: req.opts.id,
-                class,
-                label: CLASS_NAMES.get(class).unwrap_or(&"?").to_string(),
-                logits: row,
-                wall_ns,
-                sim_ns,
-                target: target_label(target),
-                batch_size: plan.padded_to,
-            }));
         }
     }
 }
@@ -499,7 +545,7 @@ impl Worker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::testutil::FixedEngine;
+    use crate::coordinator::engine::testutil::{FixedEngine, NanEngine, SlowEngine};
     use crate::har;
     use crate::simulator::Factorization;
 
@@ -521,19 +567,28 @@ mod tests {
         Some((router, man))
     }
 
-    /// A router over a single fake engine — exercises the builder and the
-    /// serving loop without artifacts.
-    fn fixed_router(policy: OffloadPolicy, engines: Vec<FixedEngine>) -> Router {
-        let shape =
-            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+    fn small_shape() -> ModelShape {
+        ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 }
+    }
+
+    /// A router over arbitrary fake engines — exercises the builder, the
+    /// scheduler and the engine pools without artifacts.
+    fn boxed_router(policy: OffloadPolicy, engines: Vec<Box<dyn Engine>>) -> Router {
         let mut b = Router::builder()
-            .shape(shape)
+            .shape(small_shape())
             .policy(policy)
             .max_wait(Duration::from_millis(1));
         for e in engines {
-            b = b.engine(Box::new(e));
+            b = b.engine(e);
         }
         b.build().unwrap()
+    }
+
+    fn fixed_router(policy: OffloadPolicy, engines: Vec<FixedEngine>) -> Router {
+        boxed_router(
+            policy,
+            engines.into_iter().map(|e| Box::new(e) as Box<dyn Engine>).collect(),
+        )
     }
 
     #[test]
@@ -699,5 +754,163 @@ mod tests {
         let batches = router.metrics.batches.load(Ordering::Relaxed);
         assert!(batches < 16, "burst should batch: {batches} batches for 16 reqs");
         assert_eq!(router.metrics.requests.load(Ordering::Relaxed), 16);
+    }
+
+    // ---- pipelined dispatch (scheduler + engine pools, DESIGN.md §9) --
+
+    #[test]
+    fn nan_logits_never_panic_and_follow_first_finite_max() {
+        // Regression: the reply path used max_by(partial_cmp().unwrap()),
+        // which PANICS on NaN logits. The pool must apply the crate-wide
+        // "first finite max" rule instead.
+        let router = boxed_router(
+            OffloadPolicy::Static(Target::CpuSingle),
+            vec![Box::new(NanEngine::new(Target::CpuSingle))],
+        );
+        let reply = router.classify(vec![0.0; 30]).unwrap();
+        assert_eq!(reply.class, 2, "first finite max of [NaN,1,7,0.5,NaN,0]");
+        assert!(reply.logits[0].is_nan(), "raw logits pass through untouched");
+    }
+
+    #[test]
+    fn gpu_and_cpu_batches_execute_concurrently() {
+        // The acceptance bar: with two engines registered, a GPU-target
+        // batch and a CPU-target batch provably overlap in time. The old
+        // single-thread router serialized them (~2 × delay end-to-end).
+        let delay = Duration::from_millis(150);
+        let gpu = SlowEngine::new(Target::Gpu(Factorization::Coarse), delay);
+        let cpu = SlowEngine::new(Target::CpuSingle, delay);
+        let gpu_spans = Arc::clone(&gpu.spans);
+        let cpu_spans = Arc::clone(&cpu.spans);
+        let router =
+            boxed_router(OffloadPolicy::CostModel, vec![Box::new(gpu), Box::new(cpu)]);
+
+        let rx_gpu = router
+            .submit_with(
+                vec![0.0; 30],
+                ClassifyOptions {
+                    target: Some(Target::Gpu(Factorization::Coarse)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        // Let the first batch form (1 ms max_wait) and start executing,
+        // then send the CPU-target request while the GPU pool is busy.
+        std::thread::sleep(Duration::from_millis(30));
+        let rx_cpu = router
+            .submit_with(
+                vec![0.0; 30],
+                ClassifyOptions { target: Some(Target::CpuSingle), ..Default::default() },
+            )
+            .unwrap();
+        rx_gpu.recv().unwrap().unwrap();
+        rx_cpu.recv().unwrap().unwrap();
+
+        let (g0, g1) = gpu_spans.lock().unwrap()[0];
+        let (c0, c1) = cpu_spans.lock().unwrap()[0];
+        assert!(
+            g0 < c1 && c0 < g1,
+            "GPU and CPU batches must overlap: gpu {:?} cpu {:?}",
+            g1.duration_since(g0),
+            c1.duration_since(c0),
+        );
+    }
+
+    #[test]
+    fn admission_bound_sheds_with_overloaded() {
+        // Flood a tiny queue in front of a slow engine: overflow must be
+        // rejected NOW as Overloaded while admitted requests still serve.
+        let router = Router::builder()
+            .shape(small_shape())
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(1))
+            .max_queue(2)
+            .pool_depth(1)
+            .engine(Box::new(SlowEngine::new(
+                Target::CpuSingle,
+                Duration::from_millis(100),
+            )))
+            .build()
+            .unwrap();
+        let rxs: Vec<_> = (0..32).map(|_| router.submit(vec![0.0; 30]).unwrap()).collect();
+        let mut shed = 0u64;
+        let mut served = 0u64;
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Ok(reply) => {
+                    assert_eq!(reply.class, 1);
+                    served += 1;
+                }
+                Err(ServeError::Overloaded) => shed += 1,
+                Err(other) => panic!("unexpected error: {other:?}"),
+            }
+        }
+        assert!(shed > 0, "32 requests against max_queue=2 must shed");
+        assert!(served > 0, "admitted requests must still be served");
+        assert_eq!(router.metrics.shed.load(Ordering::Relaxed), shed);
+        assert_eq!(router.metrics.requests.load(Ordering::Relaxed), served);
+    }
+
+    #[test]
+    fn failover_re_enqueues_across_pools() {
+        // A pool-level failure re-enqueues the batch on the next pool in
+        // failover order — twice here — instead of failing inline.
+        let router = boxed_router(
+            OffloadPolicy::Static(Target::Gpu(Factorization::Coarse)),
+            vec![
+                Box::new(FixedEngine::failing(Target::Gpu(Factorization::Coarse))),
+                Box::new(FixedEngine::failing(Target::CpuMulti(4))),
+                Box::new(FixedEngine::new(Target::CpuSingle)),
+            ],
+        );
+        let reply = router.classify(vec![0.0; 30]).unwrap();
+        assert_eq!(reply.target, "cpu", "job must hop gpu → cpu-multi → cpu");
+        assert_eq!(router.metrics.errors.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_at_dispatch() {
+        // max_wait 50 ms means a lone request dispatches at +50 ms; its
+        // 5 ms deadline has long elapsed by then, so the scheduler must
+        // drop it before tensor assembly — no batch, no engine call.
+        let router = Router::builder()
+            .shape(small_shape())
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(50))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap();
+        let rx = router
+            .submit_with(
+                vec![0.0; 30],
+                ClassifyOptions {
+                    deadline: Some(Duration::from_millis(5)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded) => {}
+            other => panic!("expected deadline drop, got {other:?}"),
+        }
+        assert_eq!(router.metrics.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            router.metrics.batches.load(Ordering::Relaxed),
+            0,
+            "no batch may form for an expired request"
+        );
+        assert_eq!(router.metrics.requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn inflight_gauges_return_to_zero() {
+        let router =
+            fixed_router(OffloadPolicy::CostModel, vec![FixedEngine::new(Target::CpuSingle)]);
+        for _ in 0..4 {
+            router.classify(vec![0.0; 30]).unwrap();
+        }
+        // classify() is synchronous, so nothing is in flight afterwards.
+        assert_eq!(router.metrics.inflight.total(), 0);
+        assert_eq!(router.metrics.queue_depth.load(Ordering::Relaxed), 0);
     }
 }

@@ -32,7 +32,17 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
     match cmd {
         "figures" => (&["fig"], &["all"]),
         "serve" => (
-            &["addr", "policy", "device", "max-wait-ms", "cpu-threads", "gpu-load", "cpu-load"],
+            &[
+                "addr",
+                "policy",
+                "device",
+                "max-wait-ms",
+                "cpu-threads",
+                "gpu-load",
+                "cpu-load",
+                "max-queue",
+                "max-connections",
+            ],
             &[],
         ),
         "classify" => (
@@ -45,6 +55,7 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "gpu-load",
                 "cpu-load",
                 "target",
+                "max-queue",
             ],
             &[],
         ),
@@ -150,6 +161,7 @@ fn print_help() {
          \x20 serve     TCP serving front-end      [--addr 127.0.0.1:7878] [--policy cost-model]\n\
          \x20                                      [--device nexus5|nexus6p] [--max-wait-ms 2]\n\
          \x20                                      [--cpu-threads 4] [--gpu-load U] [--cpu-load U]\n\
+         \x20                                      [--max-queue 256] [--max-connections 64]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
          \x20                                      [--target gpu|cpu|cpu-multi]\n\
@@ -185,6 +197,7 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
     let max_wait: u64 = args.get_or("max-wait-ms", "2").parse().context("--max-wait-ms")?;
     let cpu_threads: usize =
         args.get_or("cpu-threads", "4").parse().context("--cpu-threads")?;
+    let max_queue: usize = args.get_or("max-queue", "256").parse().context("--max-queue")?;
     let device = DeviceState::new(profile);
     if let Some(raw) = args.get("gpu-load") {
         device.set_gpu_util(parse_util("gpu-load", raw)?);
@@ -198,6 +211,7 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
         .device(device)
         .max_wait(Duration::from_millis(max_wait))
         .cpu_threads(cpu_threads)
+        .max_queue(max_queue)
         .manifest(&manifest, runtime)?
         .build()?;
     Ok((router, manifest))
@@ -205,8 +219,10 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
+    let max_connections: usize =
+        args.get_or("max-connections", "64").parse().context("--max-connections")?;
     let (router, manifest) = build_router(args)?;
-    let server = Server::bind(&addr, router)?;
+    let server = Server::builder().max_connections(max_connections).bind(&addr, router)?;
     println!(
         "mobirnn serving {} on {} (policy {}, device {}) — JSON lines, protocol v{}; Ctrl-C to stop",
         manifest.default_variant,
@@ -345,6 +361,23 @@ mod tests {
         assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
         assert_eq!(a.get("max-wait-ms"), Some("5"));
         assert_eq!(a.get("gpu-load"), Some("0.3"));
+    }
+
+    #[test]
+    fn serve_admission_flags_parse() {
+        let a = Args::from_parts(
+            "serve",
+            &argv(&["--max-queue", "32", "--max-connections", "8"]),
+        )
+        .unwrap();
+        assert_eq!(a.get("max-queue"), Some("32"));
+        assert_eq!(a.get("max-connections"), Some("8"));
+        // classify takes max-queue but not the transport-level cap.
+        assert!(Args::from_parts("classify", &argv(&["--max-queue", "16"])).is_ok());
+        let err = Args::from_parts("classify", &argv(&["--max-connections", "8"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag"), "{err}");
     }
 
     #[test]

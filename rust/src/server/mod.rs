@@ -32,4 +32,4 @@ pub use protocol::{
     handle_line, handle_request, ClassifyOutcome, ErrorCode, Request, Response,
     PROTOCOL_VERSION,
 };
-pub use tcp::{Client, Server};
+pub use tcp::{Client, Server, ServerBuilder};

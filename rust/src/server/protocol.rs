@@ -37,6 +37,9 @@ pub enum ErrorCode {
     Deadline,
     /// Execution failed in every registered engine.
     Engine,
+    /// Load shed: the scheduler's admission queue (or the server's
+    /// connection cap) was full; retry later or elsewhere.
+    Overloaded,
 }
 
 impl ErrorCode {
@@ -48,6 +51,7 @@ impl ErrorCode {
             ErrorCode::InvalidLoad => "invalid_load",
             ErrorCode::Deadline => "deadline",
             ErrorCode::Engine => "engine",
+            ErrorCode::Overloaded => "overloaded",
         }
     }
 
@@ -59,8 +63,18 @@ impl ErrorCode {
             "invalid_load" => Some(ErrorCode::InvalidLoad),
             "deadline" => Some(ErrorCode::Deadline),
             "engine" => Some(ErrorCode::Engine),
+            "overloaded" => Some(ErrorCode::Overloaded),
             _ => None,
         }
+    }
+}
+
+/// The typed wire code for a serving-side failure.
+fn serve_error_code(e: &ServeError) -> ErrorCode {
+    match e {
+        ServeError::DeadlineExceeded => ErrorCode::Deadline,
+        ServeError::Overloaded => ErrorCode::Overloaded,
+        ServeError::EngineFailure(_) => ErrorCode::Engine,
     }
 }
 
@@ -433,10 +447,9 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
                     Response::Result { id, outcome: ClassifyOutcome::from_reply(&reply) }
                 }
                 Err(e) => {
-                    let code = match e.downcast_ref::<ServeError>() {
-                        Some(ServeError::DeadlineExceeded) => ErrorCode::Deadline,
-                        _ => ErrorCode::Engine,
-                    };
+                    let code = e
+                        .downcast_ref::<ServeError>()
+                        .map_or(ErrorCode::Engine, serve_error_code);
                     Response::Error { id, code, message: format!("{e:#}") }
                 }
             }
@@ -478,7 +491,7 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
                     Ok(Err(e)) => {
                         return Response::Error {
                             id,
-                            code: ErrorCode::Engine,
+                            code: serve_error_code(&e),
                             message: e.to_string(),
                         }
                     }
@@ -581,6 +594,11 @@ mod tests {
                 code: ErrorCode::InvalidLoad,
                 message: "utilization 7 outside [0, 1]".into(),
             },
+            Response::Error {
+                id: Some(6),
+                code: ErrorCode::Overloaded,
+                message: "overloaded: scheduler queue full".into(),
+            },
         ];
         for resp in cases {
             assert_eq!(Response::from_value(&resp.to_value()).unwrap(), resp, "{resp:?}");
@@ -588,6 +606,18 @@ mod tests {
             let back = Response::from_value(&crate::json::parse(&line).unwrap()).unwrap();
             assert_eq!(back, resp, "{line}");
         }
+    }
+
+    #[test]
+    fn serve_errors_map_to_typed_codes() {
+        assert_eq!(serve_error_code(&ServeError::DeadlineExceeded), ErrorCode::Deadline);
+        assert_eq!(serve_error_code(&ServeError::Overloaded), ErrorCode::Overloaded);
+        assert_eq!(
+            serve_error_code(&ServeError::EngineFailure("x".into())),
+            ErrorCode::Engine
+        );
+        assert_eq!(ErrorCode::parse("overloaded"), Some(ErrorCode::Overloaded));
+        assert_eq!(ErrorCode::Overloaded.as_str(), "overloaded");
     }
 
     #[test]

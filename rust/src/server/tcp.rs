@@ -3,36 +3,95 @@
 //! The transport is deliberately thin: it reads lines, hands them to
 //! [`protocol::handle_line`], writes back the typed [`Response`]'s wire
 //! form, and closes when the response says so ([`Response::Bye`]).
+//!
+//! Connection discipline (DESIGN.md §9): every handler thread is
+//! TRACKED — [`Server::stop`] force-closes the live sockets and joins
+//! every `mobirnn-conn` thread, so stop is clean under load — and the
+//! acceptor caps live connections at [`ServerBuilder::max_connections`],
+//! refusing the overflow with a typed `overloaded` error line.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::Router;
 use crate::json::{FromValue, ToValue, Value};
-use crate::server::protocol::{self, ClassifyOutcome, Request, Response};
+use crate::server::protocol::{self, ClassifyOutcome, ErrorCode, Request, Response};
+
+/// One tracked connection: the handle to join, plus a clone of the
+/// stream so `stop` can force the handler's blocking read to return.
+struct ConnSlot {
+    stream: TcpStream,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// Transport knobs; build with [`Server::builder`].
+pub struct ServerBuilder {
+    max_connections: usize,
+}
+
+impl ServerBuilder {
+    pub fn new() -> Self {
+        Self { max_connections: 64 }
+    }
+
+    /// Cap on concurrently served connections (default 64). Clients
+    /// beyond the cap receive one typed `overloaded` error line and are
+    /// disconnected — bounded admission at the transport layer, the
+    /// sibling of the scheduler's `max_queue`.
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n.max(1);
+        self
+    }
+
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
+    /// `router` until stopped.
+    pub fn bind(self, addr: &str, router: Router) -> Result<Server> {
+        Server::start(addr, router, self.max_connections)
+    }
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// A running server; drop or call [`Server::stop`] to shut down.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     connections: Arc<AtomicU64>,
+    refused: Arc<AtomicU64>,
+    conns: Arc<Mutex<Vec<ConnSlot>>>,
     acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
-    /// `router` until stopped.
+    /// Start configuring a server (connection cap etc.).
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    /// [`ServerBuilder::bind`] with default knobs.
     pub fn bind(addr: &str, router: Router) -> Result<Self> {
+        Self::builder().bind(addr, router)
+    }
+
+    fn start(addr: &str, router: Router, max_connections: usize) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let connections = Arc::new(AtomicU64::new(0));
+        let refused = Arc::new(AtomicU64::new(0));
+        let conns: Arc<Mutex<Vec<ConnSlot>>> = Arc::new(Mutex::new(Vec::new()));
         let stop2 = Arc::clone(&stop);
-        let conns2 = Arc::clone(&connections);
+        let accepted2 = Arc::clone(&connections);
+        let refused2 = Arc::clone(&refused);
+        let conns2 = Arc::clone(&conns);
         // Poll-accept so the stop flag is honored promptly.
         listener.set_nonblocking(true)?;
         let acceptor = std::thread::Builder::new()
@@ -41,13 +100,42 @@ impl Server {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            conns2.fetch_add(1, Ordering::Relaxed);
+                            // Reap finished handlers so the cap counts
+                            // live connections only.
+                            let live = {
+                                let mut conns = conns2.lock().unwrap();
+                                conns.retain(|c| !c.handle.is_finished());
+                                conns.len()
+                            };
+                            if live >= max_connections {
+                                refused2.fetch_add(1, Ordering::Relaxed);
+                                refuse_connection(stream, max_connections);
+                                continue;
+                            }
+                            // An untrackable connection would be
+                            // invisible to the cap and un-joinable by
+                            // stop(): refuse it rather than leak it.
+                            let peer = match stream.try_clone() {
+                                Ok(p) => p,
+                                Err(_) => {
+                                    refused2.fetch_add(1, Ordering::Relaxed);
+                                    refuse_connection(stream, max_connections);
+                                    continue;
+                                }
+                            };
+                            accepted2.fetch_add(1, Ordering::Relaxed);
                             let router = router.clone();
-                            let _ = std::thread::Builder::new()
+                            let spawned = std::thread::Builder::new()
                                 .name("mobirnn-conn".into())
                                 .spawn(move || {
                                     let _ = handle_connection(stream, router);
                                 });
+                            if let Ok(handle) = spawned {
+                                conns2
+                                    .lock()
+                                    .unwrap()
+                                    .push(ConnSlot { stream: peer, handle });
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -57,7 +145,7 @@ impl Server {
                 }
             })
             .context("spawning acceptor")?;
-        Ok(Self { addr: local, stop, connections, acceptor: Some(acceptor) })
+        Ok(Self { addr: local, stop, connections, refused, conns, acceptor: Some(acceptor) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -68,10 +156,25 @@ impl Server {
         self.connections.load(Ordering::Relaxed)
     }
 
+    /// Connections turned away at the `max_connections` cap.
+    pub fn connections_refused(&self) -> u64 {
+        self.refused.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, force-close every live connection, and join all
+    /// handler threads. Previously only the acceptor was joined, leaking
+    /// live `mobirnn-conn` threads past stop.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
+        }
+        let slots: Vec<ConnSlot> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for slot in slots {
+            // Shutdown unblocks the handler's read (EOF/error); a
+            // NotConnected error just means it already exited.
+            let _ = slot.stream.shutdown(std::net::Shutdown::Both);
+            let _ = slot.handle.join();
         }
     }
 }
@@ -79,6 +182,31 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+/// Tell an over-cap client why it is being dropped: one typed error
+/// line, a write-side FIN, a brief drain of whatever the client already
+/// sent, then close. The drain matters: dropping a socket with unread
+/// bytes in the receive buffer sends RST, which can destroy the error
+/// line before the client reads it.
+fn refuse_connection(mut stream: TcpStream, max_connections: usize) {
+    let resp = Response::Error {
+        id: None,
+        code: ErrorCode::Overloaded,
+        message: format!("server at max_connections={max_connections}"),
+    };
+    let mut line = resp.to_value().to_json();
+    line.push('\n');
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(50)));
+    let mut sink = [0u8; 512];
+    for _ in 0..8 {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
     }
 }
 
@@ -256,6 +384,12 @@ mod tests {
         assert!((gpu_util - 0.4).abs() < 1e-9);
         assert!((cpu_util - 0.1).abs() < 1e-9);
         assert_eq!(metrics.get("requests").as_usize(), Some(1));
+        // The pipelined-dispatch stats surface on the wire.
+        assert_eq!(metrics.get("shed").as_usize(), Some(0));
+        assert_eq!(metrics.get("expired").as_usize(), Some(0));
+        assert_eq!(metrics.get("queue_depth").as_usize(), Some(0));
+        assert_eq!(metrics.get("inflight").get("gpu").as_usize(), Some(0));
+        assert_eq!(metrics.get("inflight").get("cpu").as_usize(), Some(0));
     }
 
     #[test]
@@ -280,5 +414,82 @@ mod tests {
         let mut srv = server();
         srv.stop();
         srv.stop();
+    }
+
+    #[test]
+    fn stop_joins_connection_threads_with_live_clients() {
+        // Regression: stop used to join only the acceptor, leaking live
+        // mobirnn-conn threads. Now it force-closes tracked sockets and
+        // joins — it must return even though this client never hangs up.
+        let mut srv = server();
+        let _client = Client::connect(srv.addr()).unwrap();
+        // Let the acceptor register the connection before stopping.
+        while srv.connections_accepted() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn connection_cap_refuses_with_typed_error() {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap();
+        let mut srv =
+            Server::builder().max_connections(1).bind("127.0.0.1:0", router).unwrap();
+        let _c1 = Client::connect(srv.addr()).unwrap();
+        // The second connection is refused with one typed error line.
+        let mut c2 = Client::connect(srv.addr()).unwrap();
+        match c2.call(&Request::Ping).unwrap() {
+            crate::server::Response::Error { code, message, .. } => {
+                assert_eq!(code, crate::server::ErrorCode::Overloaded);
+                assert!(message.contains("max_connections"), "{message}");
+            }
+            other => panic!("expected overloaded refusal, got {other:?}"),
+        }
+        while srv.connections_refused() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(srv.connections_accepted(), 1);
+        drop(c2);
+        srv.stop();
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_error_over_tcp() {
+        use crate::coordinator::engine::testutil::SlowEngine;
+        // A tiny admission queue in front of a slow engine: flooding 32
+        // windows through one classify_batch must surface the typed
+        // `overloaded` code end-to-end on the wire.
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .max_queue(2)
+            .pool_depth(1)
+            .engine(Box::new(SlowEngine::new(
+                Target::CpuSingle,
+                std::time::Duration::from_millis(200),
+            )))
+            .build()
+            .unwrap();
+        let srv = Server::bind("127.0.0.1:0", router).unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let windows: Vec<Vec<f32>> = (0..32).map(|_| window()).collect();
+        match client.call(&Request::ClassifyBatch { id: Some(1), windows }).unwrap() {
+            crate::server::Response::Error { id, code, .. } => {
+                assert_eq!(code, crate::server::ErrorCode::Overloaded, "typed code on the wire");
+                assert_eq!(id, Some(1));
+            }
+            other => panic!("expected overloaded error, got {other:?}"),
+        }
     }
 }

@@ -84,6 +84,12 @@ fn concurrent_clients_get_batched() {
     assert_eq!(requests, 32);
     assert!(batches <= requests);
     assert!(metrics.get("mean_batch_size").as_f64().unwrap() >= 1.0);
+    // The pipelined-dispatch counters surface on the wire and stayed
+    // clean under this well-behaved load.
+    assert_eq!(metrics.get("shed").as_usize(), Some(0));
+    assert_eq!(metrics.get("expired").as_usize(), Some(0));
+    assert_eq!(metrics.get("queue_depth").as_usize(), Some(0));
+    assert!(metrics.get("inflight").get("gpu").as_usize().is_some());
 }
 
 #[test]
