@@ -5,7 +5,7 @@
 //! work-unit coarsening applied to the batch dimension. Results land in
 //! EXPERIMENTS.md §Perf.
 
-use mobirnn::bench::{bench_auto, bench_per_row_vs_batched};
+use mobirnn::bench::{bench_auto, bench_per_row_vs_batched, bench_quant_vs_f32};
 use mobirnn::config::ModelShape;
 use mobirnn::simulator::{simulate_gpu_with_opts, DeviceProfile, Factorization, TraceOpts};
 
@@ -45,5 +45,12 @@ fn main() {
     // real on this host (2l/32h, 128x9 windows, random weights) — the
     // same fixture the hotpath bench records into BENCH_hotpath.json.
     println!("\n== A4: per-row vs batched native plan (real host timing) ==");
-    let _ = bench_per_row_vs_batched("ablation", 60.0);
+    let a4 = bench_per_row_vs_batched("ablation", 60.0);
+
+    // A5: the f32 batched plan vs the int8 quantized plan (DESIGN.md
+    // §10), same fixture — the quantization ablation EXPERIMENTS.md
+    // §Ablations tracks (precision tier as an optimization knob); the
+    // speedup lines reuse A4's native_batched_b* timings.
+    println!("\n== A5: f32 batched vs int8 quantized plan (real host timing) ==");
+    let _ = bench_quant_vs_f32("ablation", 60.0, &a4);
 }

@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use mobirnn::bench::{bench, bench_auto, bench_per_row_vs_batched, BenchResult};
+use mobirnn::bench::{bench, bench_auto, bench_per_row_vs_batched, bench_quant_vs_f32, BenchResult};
 use mobirnn::config::{Manifest, ModelShape};
 use mobirnn::coordinator::metrics::Histogram;
 use mobirnn::coordinator::plan_batch;
@@ -106,7 +106,15 @@ fn main() {
     // The tentpole ablation: the same math as B forward_window calls vs
     // one pass through the BatchArena plan (DESIGN.md §8). The batched
     // numbers must be no slower at B=1 and faster at B=8.
-    all.extend(bench_per_row_vs_batched("hotpath", 80.0));
+    let per_row_vs_batched = bench_per_row_vs_batched("hotpath", 80.0);
+
+    // --- int8 quantized path vs the f32 batched plan (artifact-free) ---
+    // DESIGN.md §10: pre-packed per-channel int8 weights, integer GEMMs,
+    // fast rational tail; the speedup lines reuse the native_batched_b*
+    // timings above. Acceptance gate tracked in EXPERIMENTS.md §Perf:
+    // native_quant_b8 mean ≤ 0.6× native_batched_b8.
+    all.extend(bench_quant_vs_f32("hotpath", 80.0, &per_row_vs_batched));
+    all.extend(per_row_vs_batched);
 
     // --- PJRT path ---
     if let Some(man) = &man {
@@ -176,6 +184,7 @@ fn main() {
             id: Some(7),
             window: window.to_vec(),
             target: None,
+            precision: None,
             deadline_ms: None,
         }
         .to_value()

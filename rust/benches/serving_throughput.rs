@@ -14,6 +14,11 @@
 //!   multi-thread CPU pools, so batches overlap in time: the win the
 //!   scheduler/pool split exists to unlock.
 //!
+//! A third scenario, `quant_pool`, pins every request to the int8
+//! quantized engine (DESIGN.md §10) so the quantize → integer GEMM →
+//! requantize serving path is driven end to end over TCP — in `--smoke`
+//! mode this is the CI gate that keeps the quant engine wired in.
+//!
 //! ```bash
 //! cargo bench --bench serving_throughput              # full run
 //! cargo bench --bench serving_throughput -- --smoke   # CI: tiny N,
@@ -27,7 +32,9 @@ use std::time::{Duration, Instant};
 
 use mobirnn::bench::random_model;
 use mobirnn::config::ModelShape;
-use mobirnn::coordinator::{CpuMultiEngine, CpuSingleEngine, OffloadPolicy, Router};
+use mobirnn::coordinator::{
+    CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, OffloadPolicy, Router,
+};
 use mobirnn::json::Value;
 use mobirnn::server::{Client, Request, Response, Server};
 use mobirnn::simulator::Target;
@@ -86,6 +93,7 @@ fn run_scenario(
                         id: Some(i as u64),
                         window: window(shape, i),
                         target: targets.get(i % targets.len().max(1)).copied(),
+                        precision: None,
                         deadline_ms: None,
                     };
                     let c0 = Instant::now();
@@ -153,8 +161,9 @@ fn scenario_json(r: &ScenarioResult) -> Value {
     Value::Obj(entry)
 }
 
-/// One server over the two native CPU engines (single- and multi-
-/// thread pools) sharing the random-weight model.
+/// One server over the three native CPU engines — single-thread,
+/// multi-thread, and int8 quantized pools — sharing the random-weight
+/// model (the quant engine packs it once at registration).
 fn start_server(shape: ModelShape) -> Server {
     let model = Arc::new(random_model(shape, 42));
     let router = Router::builder()
@@ -162,6 +171,7 @@ fn start_server(shape: ModelShape) -> Server {
         .policy(OffloadPolicy::Static(Target::CpuSingle))
         .max_wait(Duration::from_millis(2))
         .engine(Box::new(CpuMultiEngine::new(Arc::clone(&model), 4)))
+        .engine(Box::new(CpuQuantEngine::from_f32(&model)))
         .engine(Box::new(CpuSingleEngine::new(model)))
         .build()
         .expect("router");
@@ -200,17 +210,39 @@ fn main() {
     print_scenario(&dual);
     drop(dual_srv);
 
+    // Scenario 3: every request pinned to the int8 quantized pool
+    // (DESIGN.md §10) — the full TCP → scheduler → quant-engine →
+    // requantized-reply path, exercised end to end. In --smoke this is
+    // the CI gate that keeps the quant engine wired into serving.
+    let quant_srv = start_server(shape);
+    let quant = run_scenario(
+        "quant_pool",
+        quant_srv.addr(),
+        shape,
+        n_clients,
+        total,
+        &[Target::CpuQuant],
+    );
+    print_scenario(&quant);
+    drop(quant_srv);
+
     println!(
         "serving/dual_pool_speedup: {:.2}x (pipelined vs serialized dispatch)",
         dual.rps() / single.rps().max(1e-9)
     );
+    println!(
+        "serving/quant_pool_speedup: {:.2}x (int8 pool vs f32 single pool)",
+        quant.rps() / single.rps().max(1e-9)
+    );
 
     if smoke {
         // Functional gate for CI: every request completed (no deadlock,
-        // no shed at tiny N) and both pools actually served traffic.
+        // no shed at tiny N) and every pool actually served traffic —
+        // including the quantized one.
         assert_eq!(single.requests, total, "smoke: all single-pool requests served");
         assert_eq!(dual.requests, total, "smoke: all dual-pool requests served");
-        assert_eq!(single.shed + dual.shed, 0, "smoke: no shed at tiny N");
+        assert_eq!(quant.requests, total, "smoke: all quant-pool requests served");
+        assert_eq!(single.shed + dual.shed + quant.shed, 0, "smoke: no shed at tiny N");
         println!("serving/smoke: OK ({total} requests per scenario, timings ignored)");
         return;
     }
@@ -218,6 +250,7 @@ fn main() {
     let mut cases = BTreeMap::new();
     cases.insert("serving/single_pool".to_string(), scenario_json(&single));
     cases.insert("serving/dual_pool".to_string(), scenario_json(&dual));
+    cases.insert("serving/quant_pool".to_string(), scenario_json(&quant));
     let mut root = BTreeMap::new();
     root.insert("format".to_string(), Value::from("mobirnn-bench"));
     root.insert("version".to_string(), Value::from(1usize));

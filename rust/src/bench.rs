@@ -108,6 +108,47 @@ pub fn bench_per_row_vs_batched(prefix: &str, target_ms: f64) -> Vec<BenchResult
     results
 }
 
+/// The f32-batched vs int8-quantized comparison at B ∈ {1, 2, 4, 8}
+/// (EXPERIMENTS.md §Perf quantization rows), shared by the hotpath and
+/// ablations benches: same random-weight fixture and windows as
+/// [`bench_per_row_vs_batched`], the quantized model packed once from
+/// it. The f32 side is NOT re-timed: `f32_results` is the per-row
+/// comparison's output, and each `native_quant_speedup_b{B}` line reads
+/// the matching `native_batched_b{B}` case from it (identical fixture
+/// and windows, so the ratio is like-for-like). Returns the quantized
+/// cases.
+pub fn bench_quant_vs_f32(
+    prefix: &str,
+    target_ms: f64,
+    f32_results: &[BenchResult],
+) -> Vec<BenchResult> {
+    let shape = ModelShape::default();
+    let qmodel = random_model(shape, 42).quantize();
+    let mut arena = BatchArena::with_capacity(shape, 8);
+    let window_floats = shape.seq_len * shape.input_dim;
+    let mut rng = Rng::new(9);
+    let mut results = Vec::new();
+    for &b in &[1usize, 2, 4, 8] {
+        let data: Vec<f32> = (0..b * window_floats).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = Tensor::new(vec![b, shape.seq_len, shape.input_dim], data);
+        let quant = bench_auto(&format!("{prefix}/native_quant_b{b}"), target_ms, || {
+            std::hint::black_box(qmodel.forward_batch_quant(&x, &mut arena));
+        });
+        let reference = f32_results
+            .iter()
+            .find(|r| r.name.ends_with(&format!("/native_batched_b{b}")))
+            .map(BenchResult::mean_ns);
+        if let Some(f32_ns) = reference {
+            println!(
+                "{prefix}/native_quant_speedup_b{b}: {:.2}x",
+                f32_ns / quant.mean_ns()
+            );
+        }
+        results.push(quant);
+    }
+    results
+}
+
 /// Run `f` repeatedly: `warmup` unmeasured calls, then `samples` timed
 /// samples of `iters` calls each. Reports per-iteration nanoseconds.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, iters: usize, mut f: F) -> BenchResult {

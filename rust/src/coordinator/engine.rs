@@ -32,7 +32,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::target_label;
 use crate::coordinator::router::{ServeError, ServeReply, ServeRequest};
 use crate::har::CLASS_NAMES;
-use crate::lstm::{BatchArena, LstmModel, ThreadedLstm};
+use crate::lstm::{BatchArena, LstmModel, QuantizedLstmModel, ThreadedLstm};
 use crate::runtime::Runtime;
 use crate::simulator::{simulate_inference, Factorization, Target};
 use crate::tensor::{argmax_slice, Tensor};
@@ -65,7 +65,19 @@ pub fn same_kind(a: Target, b: Target) -> bool {
         (Target::Gpu(_), Target::Gpu(_))
             | (Target::CpuSingle, Target::CpuSingle)
             | (Target::CpuMulti(_), Target::CpuMulti(_))
+            | (Target::CpuQuant, Target::CpuQuant)
     )
+}
+
+/// May a request aimed at `target` fail over to an engine of
+/// `candidate`'s kind? Failover normally changes cost, never answers —
+/// every f32 engine is pinned to the same weights. The int8 engine
+/// breaks that symmetry: its answers are approximate, so a batch that
+/// did NOT ask for reduced precision must never land there. The
+/// converse is allowed — an int8-target batch failing over to an f32
+/// engine only gains fidelity (DESIGN.md §10).
+fn failover_allowed(target: Target, candidate: Target) -> bool {
+    !matches!(candidate, Target::CpuQuant) || matches!(target, Target::CpuQuant)
 }
 
 fn check_window_shape(shape: ModelShape, x: &Tensor) -> Result<usize> {
@@ -156,6 +168,51 @@ impl Engine for CpuSingleEngine {
         check_window_shape(self.model.shape, x)?;
         let mut arena = self.arena.lock().unwrap();
         Ok(self.model.forward_batch(x, &mut arena))
+    }
+}
+
+/// Int8 quantized CPU engine (DESIGN.md §10): the batched time-major
+/// plan over pre-packed per-output-channel int8 weights — integer
+/// GEMMs, f32 requantization into the gate buffer, fast rational tail.
+/// Registered alongside the f32 engines but entered only by explicit
+/// request (`precision: int8` on the wire / `--precision int8`), never
+/// by the offload policy or by another batch's failover
+/// ([`failover_allowed`]): the path is approximate, gated by argmax
+/// parity with the f32 oracle (`rust/tests/quant.rs`), and precision is
+/// a caller-visible contract.
+pub struct CpuQuantEngine {
+    model: Arc<QuantizedLstmModel>,
+    /// Preallocated per-engine batch arena (shared discipline with
+    /// [`CpuSingleEngine`]); the pool worker is the only caller.
+    arena: Mutex<BatchArena>,
+}
+
+impl CpuQuantEngine {
+    pub fn new(model: Arc<QuantizedLstmModel>) -> Self {
+        let arena = Mutex::new(BatchArena::new(model.shape));
+        Self { model, arena }
+    }
+
+    /// Pack an f32 model and build the engine over it (the common
+    /// construction: quantization happens once, at registration).
+    pub fn from_f32(model: &LstmModel) -> Self {
+        Self::new(Arc::new(model.quantize()))
+    }
+}
+
+impl Engine for CpuQuantEngine {
+    fn target(&self) -> Target {
+        Target::CpuQuant
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &[]
+    }
+
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        check_window_shape(self.model.shape, x)?;
+        let mut arena = self.arena.lock().unwrap();
+        Ok(self.model.forward_batch_quant(x, &mut arena))
     }
 }
 
@@ -272,7 +329,11 @@ impl EngineRegistry {
                 }
             }
         }
-        for engine in self.engines.iter().filter(|e| !same_kind(e.target(), target)) {
+        for engine in self
+            .engines
+            .iter()
+            .filter(|e| !same_kind(e.target(), target) && failover_allowed(target, e.target()))
+        {
             match engine.infer(x) {
                 Ok(logits) => return (Ok((logits, engine.target())), errors),
                 Err(e) => {
@@ -359,10 +420,14 @@ pub(crate) struct EnginePools {
 }
 
 /// Pool indices in dispatch order for `target`: the pool of the same
-/// kind first (if any), then the rest in registration order.
+/// kind first (if any), then the rest in registration order — skipping
+/// pools that [`failover_allowed`] forbids (a batch that did not ask
+/// for int8 never lands on the quant pool).
 fn pool_order(pools: &[EnginePool], target: Target) -> impl Iterator<Item = usize> + '_ {
     let primary = pools.iter().position(|p| same_kind(p.target, target));
-    primary.into_iter().chain((0..pools.len()).filter(move |&i| Some(i) != primary))
+    primary.into_iter().chain((0..pools.len()).filter(move |&i| {
+        Some(i) != primary && failover_allowed(target, pools[i].target)
+    }))
 }
 
 impl EnginePools {
@@ -743,8 +808,57 @@ mod tests {
     fn same_kind_ignores_payload() {
         assert!(same_kind(Target::Gpu(Factorization::Fine), Target::Gpu(Factorization::Coarse)));
         assert!(same_kind(Target::CpuMulti(2), Target::CpuMulti(8)));
+        assert!(same_kind(Target::CpuQuant, Target::CpuQuant));
         assert!(!same_kind(Target::CpuSingle, Target::CpuMulti(1)));
         assert!(!same_kind(Target::Gpu(Factorization::Coarse), Target::CpuSingle));
+        assert!(!same_kind(Target::CpuQuant, Target::CpuSingle));
+    }
+
+    #[test]
+    fn quant_engine_never_receives_failover_traffic() {
+        // An f32-target batch must NOT land on the int8 engine when its
+        // own engine fails — failover may change cost, never answers.
+        let mut reg = EngineRegistry::new();
+        let quant = FixedEngine::new(Target::CpuQuant);
+        let quant_calls = Arc::clone(&quant.calls);
+        reg.register(Box::new(FixedEngine::failing(Target::CpuSingle)));
+        reg.register(Box::new(quant));
+        let (outcome, errors) = reg.infer_with_failover(Target::CpuSingle, &x(1));
+        assert!(outcome.is_err(), "quant is not an acceptable f32 substitute");
+        assert_eq!(errors, 1);
+        assert_eq!(quant_calls.load(Ordering::Relaxed), 0, "quant engine must stay untouched");
+    }
+
+    #[test]
+    fn quant_target_fails_over_to_f32() {
+        // The converse is allowed: failing over int8 -> f32 only gains
+        // fidelity.
+        let mut reg = EngineRegistry::new();
+        reg.register(Box::new(FixedEngine::failing(Target::CpuQuant)));
+        reg.register(Box::new(FixedEngine::new(Target::CpuSingle)));
+        let (outcome, errors) = reg.infer_with_failover(Target::CpuQuant, &x(1));
+        let (_, used) = outcome.unwrap();
+        assert_eq!(used, Target::CpuSingle);
+        assert_eq!(errors, 1);
+    }
+
+    #[test]
+    fn cpu_quant_engine_serves_batches() {
+        let shape = crate::config::ModelShape {
+            num_layers: 1,
+            hidden: 4,
+            input_dim: 3,
+            seq_len: 10,
+            num_classes: 6,
+        };
+        let model = crate::bench::random_model(shape, 5);
+        let engine = CpuQuantEngine::from_f32(&model);
+        assert_eq!(engine.target(), Target::CpuQuant);
+        assert_eq!(engine.label(), "cpu-quant");
+        let logits = engine.infer(&Tensor::zeros(vec![2, 10, 3])).unwrap();
+        assert_eq!(logits.shape(), &[2, 6]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+        assert!(engine.infer(&Tensor::zeros(vec![1, 9, 3])).is_err(), "shape checked");
     }
 
     #[test]

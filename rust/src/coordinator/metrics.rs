@@ -89,15 +89,16 @@ impl Histogram {
     }
 }
 
-/// One `AtomicU64` per engine-pool kind (gpu / cpu / cpu-multi),
-/// addressed by [`Target`] ignoring the payload — the same kind rule the
-/// engine registry uses. Used for the per-target in-flight gauges the
-/// scheduler steers on (DESIGN.md §9).
+/// One `AtomicU64` per engine-pool kind (gpu / cpu / cpu-multi /
+/// cpu-quant), addressed by [`Target`] ignoring the payload — the same
+/// kind rule the engine registry uses. Used for the per-target
+/// in-flight gauges the scheduler steers on (DESIGN.md §9).
 #[derive(Debug, Default)]
 pub struct PerTarget {
     pub gpu: AtomicU64,
     pub cpu: AtomicU64,
     pub cpu_multi: AtomicU64,
+    pub cpu_quant: AtomicU64,
 }
 
 impl PerTarget {
@@ -107,6 +108,7 @@ impl PerTarget {
             Target::Gpu(_) => &self.gpu,
             Target::CpuSingle => &self.cpu,
             Target::CpuMulti(_) => &self.cpu_multi,
+            Target::CpuQuant => &self.cpu_quant,
         }
     }
 
@@ -115,6 +117,7 @@ impl PerTarget {
         self.gpu.load(Ordering::Relaxed)
             + self.cpu.load(Ordering::Relaxed)
             + self.cpu_multi.load(Ordering::Relaxed)
+            + self.cpu_quant.load(Ordering::Relaxed)
     }
 
     pub fn to_json(&self) -> Value {
@@ -122,6 +125,7 @@ impl PerTarget {
             ("gpu", Value::from(self.gpu.load(Ordering::Relaxed))),
             ("cpu", Value::from(self.cpu.load(Ordering::Relaxed))),
             ("cpu_multi", Value::from(self.cpu_multi.load(Ordering::Relaxed))),
+            ("cpu_quant", Value::from(self.cpu_quant.load(Ordering::Relaxed))),
         ])
     }
 }
@@ -267,11 +271,13 @@ mod tests {
         g.slot(Target::Gpu(Factorization::Fine)).fetch_add(2, Ordering::Relaxed);
         g.slot(Target::Gpu(Factorization::Coarse)).fetch_add(1, Ordering::Relaxed);
         g.slot(Target::CpuMulti(4)).fetch_add(1, Ordering::Relaxed);
+        g.slot(Target::CpuQuant).fetch_add(2, Ordering::Relaxed);
         // Payload is ignored: both factorizations land on the one gpu gauge.
         assert_eq!(g.gpu.load(Ordering::Relaxed), 3);
         assert_eq!(g.cpu.load(Ordering::Relaxed), 0);
         assert_eq!(g.cpu_multi.load(Ordering::Relaxed), 1);
-        assert_eq!(g.total(), 4);
+        assert_eq!(g.cpu_quant.load(Ordering::Relaxed), 2);
+        assert_eq!(g.total(), 6);
     }
 
     #[test]

@@ -35,10 +35,13 @@ pub mod router;
 
 pub use batcher::{plan_batch, BatchCollector, BatchPlan};
 pub use device::DeviceState;
-pub use engine::{CpuMultiEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine};
+pub use engine::{
+    CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine,
+};
 pub use metrics::{Histogram, Metrics, PerTarget};
 pub use policy::{
     inflight_pressure, parse_target, target_label, DecisionCache, LoadSnapshot, OffloadPolicy,
+    Precision,
 };
 pub use router::{
     ClassifyOptions, Router, RouterBuilder, ServeError, ServeReply, ServeRequest,

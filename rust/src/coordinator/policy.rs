@@ -29,7 +29,7 @@ pub struct LoadSnapshot {
     /// Batches queued or executing on the GPU engine pool.
     pub gpu_inflight: u64,
     /// Batches queued or executing on the CPU engine pools (single +
-    /// multi combined — they share the simulated CPU complex).
+    /// multi + quant combined — they share the simulated CPU complex).
     pub cpu_inflight: u64,
 }
 
@@ -63,7 +63,12 @@ pub enum OffloadPolicy {
 }
 
 impl OffloadPolicy {
-    /// Candidate targets the cost model ranks.
+    /// Candidate targets the cost model ranks. [`Target::CpuQuant`] is
+    /// deliberately NOT a candidate even though the simulator prices it
+    /// below the f32 CPU (see `cpu_run_int8`): the int8 path is
+    /// approximate, and precision is a caller-visible contract
+    /// ([`Precision`]) — the policy must never trade answer fidelity
+    /// for latency on its own (DESIGN.md §10).
     pub fn candidates(profile: &DeviceProfile) -> [Target; 3] {
         [
             Target::Gpu(Factorization::Coarse),
@@ -209,6 +214,7 @@ pub fn target_label(t: Target) -> &'static str {
         Target::Gpu(Factorization::Fine) => "gpu-fine",
         Target::CpuSingle => "cpu",
         Target::CpuMulti(_) => "cpu-multi",
+        Target::CpuQuant => "cpu-quant",
     }
 }
 
@@ -222,7 +228,37 @@ pub fn parse_target(s: &str) -> Option<Target> {
         "gpu-fine" | "fine" => Some(Target::Gpu(Factorization::Fine)),
         "cpu" | "cpu-single" => Some(Target::CpuSingle),
         "cpu-multi" | "multithread" => Some(Target::CpuMulti(4)),
+        "cpu-quant" => Some(Target::CpuQuant),
         _ => None,
+    }
+}
+
+/// Numeric precision a request may pin (protocol v2 `precision` field,
+/// `ClassifyOptions::precision`, CLI `--precision`). `Int8` routes the
+/// batch to the quantized engine ([`Target::CpuQuant`], DESIGN.md §10);
+/// `F32` (and the default, absent) keeps the request on the exact
+/// engines the offload policy ranks. The policy itself never picks int8:
+/// precision is a contract the caller opts into, not a latency knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "float32" => Some(Precision::F32),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
     }
 }
 
@@ -401,9 +437,49 @@ mod tests {
             Target::Gpu(Factorization::Fine),
             Target::CpuSingle,
             Target::CpuMulti(4),
+            Target::CpuQuant,
         ] {
             assert_eq!(parse_target(target_label(t)), Some(t), "{t:?}");
         }
         assert_eq!(parse_target("npu"), None);
+    }
+
+    #[test]
+    fn precision_labels_round_trip() {
+        for p in [Precision::F32, Precision::Int8] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p), "{p:?}");
+        }
+        assert_eq!(Precision::parse("i8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("fp16"), None);
+    }
+
+    #[test]
+    fn cost_model_prices_quant_below_f32_cpu_but_never_picks_it() {
+        // The simulator must price the int8 path cheaper per element
+        // than the f32 CPU at every load level — and the policy must
+        // still never choose it on its own: precision is a caller
+        // contract, not a scheduling degree of freedom (DESIGN.md §10).
+        let shape = ModelShape::default();
+        for util in [0.0, 0.5, 0.9] {
+            let quant = simulate_inference(&n5(), shape, 4, Target::CpuQuant, util);
+            let f32cpu = simulate_inference(&n5(), shape, 4, Target::CpuSingle, util);
+            assert!(quant < f32cpu, "util {util}: quant {quant} !< cpu {f32cpu}");
+        }
+        for i in 0..=10 {
+            let u = i as f64 / 10.0;
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u, ..Default::default() };
+            let t = OffloadPolicy::CostModel.decide(&n5(), shape, 1, load);
+            assert_ne!(t, Target::CpuQuant, "policy must not silently drop precision");
+        }
+    }
+
+    #[test]
+    fn quant_effective_util_uses_cpu_pressure() {
+        // CpuQuant shares the CPU complex: its effective utilization is
+        // the CPU knob plus the CPU in-flight pressure.
+        let load =
+            LoadSnapshot { gpu_util: 0.9, cpu_util: 0.2, cpu_inflight: 2, ..Default::default() };
+        let expect = 0.2 + inflight_pressure(2);
+        assert!((load.effective_util(Target::CpuQuant) - expect).abs() < 1e-12);
     }
 }

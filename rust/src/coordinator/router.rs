@@ -44,10 +44,11 @@ use crate::config::{Manifest, ModelShape};
 use crate::coordinator::batcher::{plan_batch, BatchCollector};
 use crate::coordinator::device::DeviceState;
 use crate::coordinator::engine::{
-    BatchJob, CpuMultiEngine, CpuSingleEngine, Engine, EnginePools, EngineRegistry, PjrtEngine,
+    BatchJob, CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, Engine, EnginePools,
+    EngineRegistry, PjrtEngine,
 };
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::policy::{DecisionCache, LoadSnapshot, OffloadPolicy};
+use crate::coordinator::policy::{DecisionCache, LoadSnapshot, OffloadPolicy, Precision};
 use crate::lstm::{LstmModel, WeightFile};
 use crate::runtime::Runtime;
 use crate::simulator::{DeviceProfile, Target};
@@ -67,6 +68,14 @@ pub struct ClassifyOptions {
     /// the earliest override); if no engine serves it, the registry's
     /// failover order decides.
     pub target: Option<Target>,
+    /// Numeric precision for this request (DESIGN.md §10): `Int8` routes
+    /// to the quantized engine, `F32` (or absent) stays on the exact
+    /// engines the policy ranks. Unlike `target` (where every engine
+    /// computes the same answers), precision changes numerics, so the
+    /// scheduler never mixes classes in one batch — an int8 request
+    /// batches only with other int8 requests. An explicit `target`
+    /// override beats `precision`.
+    pub precision: Option<Precision>,
     /// Upper bound on how long the caller waits for the reply in
     /// [`Router::classify_with`]; exceeding it yields
     /// [`ServeError::DeadlineExceeded`].
@@ -300,8 +309,11 @@ impl RouterBuilder {
     }
 
     /// Register the standard engine set from the AOT artifacts: the PJRT
-    /// GPU engine plus native single- and multi-thread CPU engines, all
-    /// sharing the artifact weights.
+    /// GPU engine, native single- and multi-thread CPU engines, and the
+    /// int8 quantized CPU engine (packed once here), all sharing the
+    /// artifact weights. The quant engine is reachable only through an
+    /// explicit `precision: int8` / target override — never by policy
+    /// or by another batch's failover.
     pub fn manifest(mut self, manifest: &Manifest, runtime: Runtime) -> Result<Self> {
         let shape = self.shape;
         let batches = manifest.batches_for(shape);
@@ -320,6 +332,7 @@ impl RouterBuilder {
         let threads = self.cpu_threads;
         self.registry.register(Box::new(PjrtEngine::new(manifest, runtime, shape)?));
         self.registry.register(Box::new(CpuMultiEngine::new(Arc::clone(&native), threads)));
+        self.registry.register(Box::new(CpuQuantEngine::from_f32(&native)));
         self.registry.register(Box::new(CpuSingleEngine::new(native)));
         Ok(self)
     }
@@ -480,13 +493,37 @@ impl Scheduler {
                 live.push(req);
             }
         }
-        self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
         if live.is_empty() {
+            self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
             return true;
         }
 
-        // Re-plan padding for the survivors (expiry may have shrunk the
-        // batch below the planned compiled size).
+        // Precision is a caller contract (DESIGN.md §10): a batch must
+        // never mix exact and int8 members, or the earliest member
+        // would silently decide the numerics for the rest. A request is
+        // int8-class through EITHER knob — the precision field or an
+        // explicit cpu-quant target override. Keep the head run of one
+        // class; the tail goes back to the queue FRONT (original
+        // arrival instants — deadlines keep ticking) and forms its own
+        // batch on the next cycle.
+        let wants_int8 = |r: &ServeRequest| {
+            matches!(r.opts.precision, Some(Precision::Int8))
+                || matches!(r.opts.target, Some(Target::CpuQuant))
+        };
+        let head_int8 = wants_int8(&live[0]);
+        let split =
+            live.iter().position(|r| wants_int8(r) != head_int8).unwrap_or(live.len());
+        if split < live.len() {
+            let rest = live.split_off(split);
+            self.collector.restore(rest.iter().map(|r| r.enqueued));
+            for req in rest.into_iter().rev() {
+                self.queue.push_front(req);
+            }
+        }
+        self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+
+        // Re-plan padding for the survivors (expiry or the precision
+        // split may have shrunk the batch below the planned size).
         let padded_to = plan_batch(live.len(), self.collector.compiled_sizes())
             .map_or(live.len(), |p| p.padded_to);
 
@@ -500,19 +537,24 @@ impl Scheduler {
         data.resize(padded_to * window_len, 0.0);
         let x = Tensor::new(vec![padded_to, shape.seq_len, shape.input_dim], data);
 
-        // Offload decision: an explicit per-request override wins;
-        // otherwise the policy decides on current load — background
-        // knobs plus the REAL per-pool in-flight depth, so the cost
-        // model steers away from an engine that is already saturated.
+        // Offload decision: an explicit per-request target override
+        // wins; next an int8 batch (uniform by the split above) pins
+        // the quantized engine (the policy never picks it on its own —
+        // DESIGN.md §10); otherwise the policy decides on current load
+        // — background knobs plus the REAL per-pool in-flight depth,
+        // so the cost model steers away from an engine that is already
+        // saturated.
         let target = match live.iter().find_map(|r| r.opts.target) {
             Some(t) => t,
+            None if head_int8 => Target::CpuQuant,
             None => {
                 let load = LoadSnapshot {
                     gpu_util: self.device.effective_gpu_util(),
                     cpu_util: self.device.cpu_util(),
                     gpu_inflight: self.metrics.inflight.gpu.load(Ordering::Relaxed),
                     cpu_inflight: self.metrics.inflight.cpu.load(Ordering::Relaxed)
-                        + self.metrics.inflight.cpu_multi.load(Ordering::Relaxed),
+                        + self.metrics.inflight.cpu_multi.load(Ordering::Relaxed)
+                        + self.metrics.inflight.cpu_quant.load(Ordering::Relaxed),
                 };
                 self.decisions.decide(
                     &self.policy,
@@ -900,6 +942,139 @@ mod tests {
             "no batch may form for an expired request"
         );
         assert_eq!(router.metrics.requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn int8_precision_routes_to_quant_engine() {
+        // precision: int8 pins the batch to the quant pool; requests
+        // without it keep following the policy/override path. Uses fake
+        // engines so only ROUTING is under test here (numeric parity is
+        // tests/quant.rs's job).
+        let quant = FixedEngine::new(Target::CpuQuant);
+        let quant_calls = Arc::clone(&quant.calls);
+        let f32e = FixedEngine::new(Target::CpuSingle);
+        let f32_calls = Arc::clone(&f32e.calls);
+        let router = fixed_router(
+            OffloadPolicy::Static(Target::CpuSingle),
+            vec![f32e, quant],
+        );
+        let reply = router
+            .classify_with(
+                vec![0.0; 30],
+                ClassifyOptions { precision: Some(Precision::Int8), ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(reply.target, "cpu-quant");
+        assert_eq!(quant_calls.load(Ordering::Relaxed), 1);
+        let reply = router.classify(vec![0.0; 30]).unwrap();
+        assert_eq!(reply.target, "cpu", "default precision keeps the policy's engine");
+        assert_eq!(f32_calls.load(Ordering::Relaxed), 1);
+        // Explicit f32 precision is a no-op relative to the default.
+        let reply = router
+            .classify_with(
+                vec![0.0; 30],
+                ClassifyOptions { precision: Some(Precision::F32), ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(reply.target, "cpu");
+    }
+
+    #[test]
+    fn mixed_precision_batch_splits_instead_of_contaminating() {
+        // An f32 request and an int8 request arriving in the same
+        // batching window must NOT share a batch: the f32 caller never
+        // opted into approximate answers. The scheduler splits the
+        // formed batch on the precision boundary and re-queues the tail.
+        let router = Router::builder()
+            .shape(small_shape())
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(40))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .engine(Box::new(FixedEngine::new(Target::CpuQuant)))
+            .build()
+            .unwrap();
+        let rx_f = router.submit(vec![0.0; 30]).unwrap();
+        let rx_q = router
+            .submit_with(
+                vec![0.0; 30],
+                ClassifyOptions { precision: Some(Precision::Int8), ..Default::default() },
+            )
+            .unwrap();
+        let f = rx_f.recv().unwrap().unwrap();
+        let q = rx_q.recv().unwrap().unwrap();
+        assert_eq!(f.target, "cpu", "f32 request must never be served by the quant engine");
+        assert_eq!(q.target, "cpu-quant", "int8 request still reaches the quant engine");
+        assert_eq!(
+            router.metrics.batches.load(Ordering::Relaxed),
+            2,
+            "mixed-precision arrivals must form two batches"
+        );
+    }
+
+    #[test]
+    fn quant_target_override_also_splits_from_f32_batch() {
+        // The int8 class is reachable through the target knob too: a
+        // cpu-quant TARGET override in the same window as a plain
+        // request must not drag the plain request onto the quant
+        // engine (the batch-wide target override would otherwise apply
+        // to both).
+        let router = Router::builder()
+            .shape(small_shape())
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(40))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .engine(Box::new(FixedEngine::new(Target::CpuQuant)))
+            .build()
+            .unwrap();
+        let rx_f = router.submit(vec![0.0; 30]).unwrap();
+        let rx_q = router
+            .submit_with(
+                vec![0.0; 30],
+                ClassifyOptions { target: Some(Target::CpuQuant), ..Default::default() },
+            )
+            .unwrap();
+        let f = rx_f.recv().unwrap().unwrap();
+        let q = rx_q.recv().unwrap().unwrap();
+        assert_eq!(f.target, "cpu", "plain request must not ride a cpu-quant override");
+        assert_eq!(q.target, "cpu-quant");
+        assert_eq!(router.metrics.batches.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn target_override_beats_precision() {
+        let router = fixed_router(
+            OffloadPolicy::CostModel,
+            vec![FixedEngine::new(Target::CpuSingle), FixedEngine::new(Target::CpuQuant)],
+        );
+        let reply = router
+            .classify_with(
+                vec![0.0; 30],
+                ClassifyOptions {
+                    target: Some(Target::CpuSingle),
+                    precision: Some(Precision::Int8),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(reply.target, "cpu", "explicit target wins over precision");
+    }
+
+    #[test]
+    fn f32_batch_never_fails_over_to_quant_pool() {
+        // The f32 engine fails and only the quant pool remains: the
+        // batch must FAIL, not silently serve approximate answers.
+        let quant = FixedEngine::new(Target::CpuQuant);
+        let quant_calls = Arc::clone(&quant.calls);
+        let router = fixed_router(
+            OffloadPolicy::Static(Target::CpuSingle),
+            vec![FixedEngine::failing(Target::CpuSingle), quant],
+        );
+        let outcome = router.submit(vec![0.0; 30]).unwrap().recv().unwrap();
+        assert!(
+            matches!(outcome, Err(ServeError::EngineFailure(_))),
+            "expected failure, got {outcome:?}"
+        );
+        assert_eq!(quant_calls.load(Ordering::Relaxed), 0, "quant pool must stay untouched");
     }
 
     #[test]

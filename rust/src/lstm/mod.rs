@@ -5,7 +5,7 @@
 //! (`python/compile/kernels/ref.py`) bit-for-bit in layout and gate order
 //! (i, g, f, o over a combined `[x;h] @ W + b` GEMM, forget bias 1.0).
 //!
-//! Three execution flavours:
+//! Four execution flavours:
 //! - [`model::LstmModel::forward_window`] — per-row GEMVs, one window at
 //!   a time (paper's "CPU" bars; the parity oracle)
 //! - [`model::LstmModel::forward_batch`] — the whole batch time-major
@@ -14,6 +14,9 @@
 //! - [`threaded::ThreadedLstm`]    — the batched plan data-parallelized
 //!   over contiguous sub-batch chunks (paper §4.4's "multi-threaded RNN
 //!   on the CPU")
+//! - [`quant::QuantizedLstmModel::forward_batch_quant`] — the batched
+//!   plan on pre-packed int8 weights: integer GEMMs + fast rational
+//!   tail, gated by argmax parity with the f32 oracle (DESIGN.md §10)
 //!
 //! Weights come from MRNW files written by `python/compile/aot.py`
 //! ([`weights`]), so the native engine and the PJRT artifact execute the
@@ -23,11 +26,16 @@
 pub mod cell;
 pub mod model;
 pub mod plan;
+pub mod quant;
 pub mod threaded;
 pub mod weights;
 
 pub use cell::{lstm_cell, LstmCellWeights, FORGET_BIAS};
 pub use model::LstmModel;
 pub use plan::{step_rows, BatchArena};
+pub use quant::{
+    fast_sigmoid, fast_tanh, QuantizedCellWeights, QuantizedLstmModel, SIGMOID_MAX_ABS_ERR,
+    TANH_MAX_ABS_ERR,
+};
 pub use threaded::ThreadedLstm;
 pub use weights::WeightFile;

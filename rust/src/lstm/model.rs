@@ -20,6 +20,7 @@ use anyhow::Result;
 use crate::config::ModelShape;
 use crate::lstm::cell::{lstm_cell, CellScratch, LstmCellWeights};
 use crate::lstm::plan::BatchArena;
+use crate::lstm::quant::{QuantizedCellWeights, QuantizedLstmModel};
 use crate::lstm::weights::WeightFile;
 use crate::tensor::{argmax_slice, Tensor};
 
@@ -150,6 +151,19 @@ impl LstmModel {
     /// rather than panicking, an all-non-finite row maps to class 0.
     pub fn predict(&self, window: &[f32], state: &mut InferenceState) -> usize {
         argmax_slice(&self.forward_window(window, state))
+    }
+
+    /// Pack this model for the int8 quantized path (DESIGN.md §10):
+    /// symmetric per-output-channel weight quantization per layer, head
+    /// kept f32. One-time cost at load; the result drives
+    /// [`QuantizedLstmModel::forward_batch_quant`].
+    pub fn quantize(&self) -> QuantizedLstmModel {
+        QuantizedLstmModel::new(
+            self.shape,
+            self.layers.iter().map(QuantizedCellWeights::quantize).collect(),
+            self.w_out.clone(),
+            self.b_out.clone(),
+        )
     }
 }
 

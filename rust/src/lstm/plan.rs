@@ -30,6 +30,7 @@
 
 use crate::config::ModelShape;
 use crate::lstm::cell::{sigmoid, LstmCellWeights, FORGET_BIAS};
+use crate::lstm::quant::{step_rows_quant, QuantScratch, QuantizedCellWeights};
 use crate::tensor::matmul_into;
 
 /// Preallocated per-batch state: every buffer the time-major plan writes.
@@ -51,6 +52,9 @@ pub struct BatchArena {
     /// layer-0 input (`x[:, t, :]` is strided in the `[B, T, D]` window
     /// data; the GEMM wants it contiguous).
     xt: Vec<f32>,
+    /// Int8-path scratch (DESIGN.md §10): empty until the first
+    /// [`BatchArena::run_quant`], so pure-f32 serving pays nothing.
+    quant: QuantScratch,
 }
 
 impl BatchArena {
@@ -68,6 +72,7 @@ impl BatchArena {
             c: vec![Vec::new(); shape.num_layers],
             gates: Vec::new(),
             xt: Vec::new(),
+            quant: QuantScratch::default(),
         };
         arena.reserve_rows(rows.max(1));
         arena
@@ -113,10 +118,44 @@ impl BatchArena {
     ///
     /// Allocation-free once the arena has grown to `rows`.
     pub fn run(&mut self, layers: &[LstmCellWeights], windows: &[f32], rows: usize) -> &[f32] {
+        self.run_impl(Layers::F32(layers), windows, rows)
+    }
+
+    /// [`BatchArena::run`]'s int8 mirror (DESIGN.md §10): the SAME
+    /// time-major driver, with the per-`(t, layer)` step swapped for
+    /// [`step_rows_quant`]'s quantize → integer GEMM → requantize →
+    /// fast-tail sequence. The h/c planes stay f32 (the recurrence input
+    /// of the next step), so error does not compound across timesteps.
+    ///
+    /// Allocation-free once the arena (and its lazily-grown quant
+    /// scratch) has seen `rows`.
+    pub fn run_quant(
+        &mut self,
+        layers: &[QuantizedCellWeights],
+        windows: &[f32],
+        rows: usize,
+    ) -> &[f32] {
+        self.run_impl(Layers::Quant(layers), windows, rows)
+    }
+
+    /// The one time-major driver behind both precisions: gather
+    /// `x[:, t, :]` into the contiguous staging plane, then chain the
+    /// layers in place — each layer's input is layer 0's staging plane
+    /// or the previous layer's freshly-written h-plane (split-borrow,
+    /// zero copies).
+    fn run_impl(&mut self, layers: Layers<'_>, windows: &[f32], rows: usize) -> &[f32] {
         let s = self.shape;
-        assert_eq!(layers.len(), s.num_layers, "layer count");
+        let n_layers = match layers {
+            Layers::F32(l) => l.len(),
+            Layers::Quant(l) => l.len(),
+        };
+        assert_eq!(n_layers, s.num_layers, "layer count");
         assert_eq!(windows.len(), rows * s.seq_len * s.input_dim, "window data");
         self.reset(rows);
+        if let Layers::Quant(l) = layers {
+            let kp_max = l.iter().map(QuantizedCellWeights::k_padded_max).max().unwrap_or(4);
+            self.quant.reserve(rows, kp_max, 4 * s.hidden);
+        }
         let window_len = s.seq_len * s.input_dim;
         let hn = rows * s.hidden;
         for t in 0..s.seq_len {
@@ -127,32 +166,45 @@ impl BatchArena {
                 dst.copy_from_slice(&windows[at..at + s.input_dim]);
             }
             for li in 0..s.num_layers {
-                if li == 0 {
-                    step_rows(
-                        &layers[0],
-                        &self.xt[..rows * s.input_dim],
-                        &mut self.h[0][..hn],
-                        &mut self.c[0][..hn],
-                        &mut self.gates,
-                        rows,
-                    );
+                // split_at_mut(0) leaves `prev` empty and `cur[0]` the
+                // first h-plane, so layer 0 needs no special borrow.
+                let (prev, cur) = self.h.split_at_mut(li);
+                let input: &[f32] = if li == 0 {
+                    &self.xt[..rows * s.input_dim]
                 } else {
-                    // The previous layer's fresh h-plane IS this layer's
-                    // input — split-borrow, zero copies.
-                    let (prev, cur) = self.h.split_at_mut(li);
-                    step_rows(
-                        &layers[li],
-                        &prev[li - 1][..hn],
+                    &prev[li - 1][..hn]
+                };
+                match layers {
+                    Layers::F32(l) => step_rows(
+                        &l[li],
+                        input,
                         &mut cur[0][..hn],
                         &mut self.c[li][..hn],
                         &mut self.gates,
                         rows,
-                    );
+                    ),
+                    Layers::Quant(l) => step_rows_quant(
+                        &l[li],
+                        input,
+                        &mut cur[0][..hn],
+                        &mut self.c[li][..hn],
+                        &mut self.gates,
+                        &mut self.quant,
+                        rows,
+                    ),
                 }
             }
         }
         &self.h[s.num_layers - 1][..hn]
     }
+}
+
+/// The two precision tiers [`BatchArena::run_impl`] can drive — same
+/// loop, different per-step kernel.
+#[derive(Clone, Copy)]
+enum Layers<'a> {
+    F32(&'a [LstmCellWeights]),
+    Quant(&'a [QuantizedCellWeights]),
 }
 
 /// One LSTM step for `rows` batch rows at once, in place: reads `xs`

@@ -1,0 +1,687 @@
+//! Int8 quantized execution path for the native LSTM stack
+//! (DESIGN.md §10).
+//!
+//! The f32 batched plan (DESIGN.md §8) spends its time in two places:
+//! the blocked GEMMs over each layer's `[I+H, 4H]` weight matrix, and
+//! the `exp`/`tanh` point-wise tail. This module attacks both:
+//!
+//! - **Weights** are quantized once at load time — symmetric, per
+//!   OUTPUT channel (one scale per gate column `j` per GEMM half,
+//!   `s_j = max_r |W[r][j]| / 127`) — into [`PackedQuantMatrix`]es: a
+//!   row-major int8 image whose K dimension is padded to a multiple of
+//!   4 AT PACK TIME, so [`quant_matmul_into`] runs pure quad-K blocks
+//!   with no remainder path (the padding rows are zero and contribute
+//!   nothing).
+//! - **Activations** are quantized per batch row per step (dynamic
+//!   symmetric), multiplied in `i8×i8→i32`, and REQUANTIZED back to f32
+//!   while being written into the existing gate buffer:
+//!   `gates[m][j] = b[j] + acc_x · s_x[m] · s_xj + acc_h · s_h[m] · s_hj`.
+//!   The step runs TWO integer GEMMs — input half, then recurrent half
+//!   — exactly like the f32 cell's two `matmul_into` calls, and for a
+//!   precision reason too: `x` (raw sensor data, range ~±2.5) and `h`
+//!   (bounded by 1) get SEPARATE dynamic scales, so the wide input
+//!   range cannot crush the recurrent state's resolution. Everything
+//!   downstream of the GEMMs — the gate tail, h/c state, the classifier
+//!   head — stays f32: the LSTM recurrence feeds h back into the next
+//!   step's GEMM input, and keeping state in f32 stops quantization
+//!   error from compounding across the 128 timesteps (DESIGN.md §10 has
+//!   the error budget).
+//! - **The tail** uses [`fast_sigmoid`]/[`fast_tanh`]: a clamped Padé
+//!   (5,4) rational approximation (no `exp`, division instead), with
+//!   documented max-abs-error bounds ([`TANH_MAX_ABS_ERR`],
+//!   [`SIGMOID_MAX_ABS_ERR`]) asserted over a dense sweep of [-10, 10]
+//!   by `rust/tests/quant.rs`.
+//!
+//! The kernel mirrors `tensor::matmul_into`'s blocking exactly —
+//! quad-M output rows over quad-K weight rows, duo/single M tails — so
+//! the weight-reuse argument (one loaded quad of `W` rows feeds four
+//! batch rows) carries over unchanged; the int8 image is 4× denser, so
+//! the same traversal moves a quarter of the bytes.
+//!
+//! Accuracy gate: this path is NOT bit-exact with f32 and never claims
+//! to be. Its contract is argmax parity — ≥ 99% agreement with the f32
+//! oracle on HAR-shaped inputs — plus the per-channel half-step bound
+//! on the weight round-trip, both asserted in `rust/tests/quant.rs`.
+
+use crate::config::ModelShape;
+use crate::lstm::cell::{LstmCellWeights, FORGET_BIAS};
+use crate::lstm::plan::BatchArena;
+use crate::tensor::{argmax_slice, Tensor};
+
+/// Documented bound: `|fast_tanh(x) - tanh(x)| < 1.5e-3` on [-10, 10].
+/// The true maximum is ≈ 1.07e-3, at the ±3.5 clamp boundary.
+pub const TANH_MAX_ABS_ERR: f32 = 1.5e-3;
+
+/// Documented bound: `|fast_sigmoid(x) - σ(x)| < 8e-4` on [-10, 10]
+/// (half the tanh bound, since σ(x) = (1 + tanh(x/2)) / 2).
+pub const SIGMOID_MAX_ABS_ERR: f32 = 8.0e-4;
+
+/// Fast `tanh`: the Padé (5,4) truncation of the continued fraction
+/// `x/(1+x²/(3+x²/(5+x²/(7+x²/9))))`, input-clamped to ±3.5 where the
+/// rational part reads 0.999239 (true tanh: 0.998178). Branch-free and
+/// division-for-exp, so the point-wise tail vectorizes; max abs error
+/// ≈ 1.07e-3 at the clamp (see [`TANH_MAX_ABS_ERR`]), monotone
+/// non-decreasing, saturating at ±0.999239.
+#[inline(always)]
+pub fn fast_tanh(x: f32) -> f32 {
+    let x = x.clamp(-3.5, 3.5);
+    let x2 = x * x;
+    let p = x * (945.0 + x2 * (105.0 + x2));
+    let q = 945.0 + x2 * (420.0 + 15.0 * x2);
+    p / q
+}
+
+/// Fast logistic via [`fast_tanh`]: `σ(x) = (1 + tanh(x/2)) / 2`.
+/// Max abs error ≈ 5.4e-4 (see [`SIGMOID_MAX_ABS_ERR`]); monotone
+/// non-decreasing; saturates at 3.8e-4 / 0.99962 beyond |x| = 7.
+#[inline(always)]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    0.5 + 0.5 * fast_tanh(0.5 * x)
+}
+
+/// Round `k` up to the next multiple of 4 (the kernel's K quad).
+#[inline]
+pub fn pad_to_quad(k: usize) -> usize {
+    (k + 3) & !3
+}
+
+/// A weight matrix quantized symmetrically per output channel and
+/// pre-packed for [`quant_matmul_into`]: row-major `[k_padded, n]` int8
+/// with `k_padded = pad_to_quad(k)`; the padding rows are zero, so the
+/// kernel needs no K remainder path.
+#[derive(Debug, Clone)]
+pub struct PackedQuantMatrix {
+    data: Vec<i8>,
+    /// Logical row count of the source matrix.
+    pub k: usize,
+    /// Stored row count (quad-padded; the tail rows are all-zero).
+    pub k_padded: usize,
+    /// Output channels (columns).
+    pub n: usize,
+    /// Per-output-channel dequantization scale: `w[r][j] ≈ q[r][j]·s[j]`.
+    pub scales: Vec<f32>,
+}
+
+impl PackedQuantMatrix {
+    /// Quantize a row-major `[k, n]` f32 matrix. Symmetric per-channel:
+    /// `s_j = max_r |w[r][j]| / 127`, `q = round(w / s_j)`; an all-zero
+    /// channel gets scale 0 (its products dequantize to exactly 0).
+    pub fn pack(w: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n, "matrix shape");
+        let mut scales = vec![0.0f32; n];
+        for row in w.chunks_exact(n) {
+            for (s, &v) in scales.iter_mut().zip(row) {
+                *s = s.max(v.abs());
+            }
+        }
+        for s in &mut scales {
+            *s /= 127.0;
+        }
+        let k_padded = pad_to_quad(k);
+        let mut data = vec![0i8; k_padded * n];
+        for (qrow, row) in data.chunks_exact_mut(n).zip(w.chunks_exact(n)) {
+            for ((q, &v), &s) in qrow.iter_mut().zip(row).zip(&scales) {
+                if s > 0.0 {
+                    *q = (v / s).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        Self { data, k, k_padded, n, scales }
+    }
+
+    /// Dequantize back to a row-major `[k, n]` f32 matrix (padding rows
+    /// dropped) — the round-trip side of the half-step error bound.
+    pub fn unpack(&self) -> Vec<f32> {
+        self.data[..self.k * self.n]
+            .chunks_exact(self.n)
+            .flat_map(|qrow| qrow.iter().zip(&self.scales).map(|(&q, &s)| q as f32 * s))
+            .collect()
+    }
+
+    /// The packed int8 image, row-major `[k_padded, n]`.
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+}
+
+/// `acc[m][j] += Σ_r a[m][r] · w[r][j]` in `i8×i8→i32` — the integer
+/// mirror of `tensor::matmul_into`: output rows blocked in quads (each
+/// loaded quad of packed weight rows feeds four accumulator rows), K
+/// blocked in quads with NO remainder (packing padded K), a duo-M block
+/// for 2–3 row tails, single rows last. `a` is row-major
+/// `[m, w.k_padded]` with the padding lanes zero.
+pub fn quant_matmul_into(acc: &mut [i32], a: &[i8], w: &PackedQuantMatrix, m: usize) {
+    let n = w.n;
+    let kp = w.k_padded;
+    debug_assert_eq!(acc.len(), m * n, "acc shape");
+    debug_assert_eq!(a.len(), m * kp, "a shape");
+    // i8·i8 ≤ 127² = 16129 per term: kp below ~133k rows cannot overflow
+    // the i32 accumulator even if every product saturates.
+    debug_assert!(kp < (i32::MAX as usize) / (127 * 127), "K too large for i32 acc");
+    let wd = &w.data;
+    let mut mi = 0;
+    while mi + 4 <= m {
+        let (o01, o23) = acc[mi * n..(mi + 4) * n].split_at_mut(2 * n);
+        let (o0, o1) = o01.split_at_mut(n);
+        let (o2, o3) = o23.split_at_mut(n);
+        let a0 = &a[mi * kp..(mi + 1) * kp];
+        let a1 = &a[(mi + 1) * kp..(mi + 2) * kp];
+        let a2 = &a[(mi + 2) * kp..(mi + 3) * kp];
+        let a3 = &a[(mi + 3) * kp..(mi + 4) * kp];
+        let mut r = 0;
+        while r < kp {
+            let base = r * n;
+            let w0 = &wd[base..base + n];
+            let w1 = &wd[base + n..base + 2 * n];
+            let w2 = &wd[base + 2 * n..base + 3 * n];
+            let w3 = &wd[base + 3 * n..base + 4 * n];
+            let (a00, a01v, a02, a03) =
+                (a0[r] as i32, a0[r + 1] as i32, a0[r + 2] as i32, a0[r + 3] as i32);
+            let (a10, a11, a12, a13) =
+                (a1[r] as i32, a1[r + 1] as i32, a1[r + 2] as i32, a1[r + 3] as i32);
+            let (a20, a21, a22, a23) =
+                (a2[r] as i32, a2[r + 1] as i32, a2[r + 2] as i32, a2[r + 3] as i32);
+            let (a30, a31, a32, a33) =
+                (a3[r] as i32, a3[r + 1] as i32, a3[r + 2] as i32, a3[r + 3] as i32);
+            for j in 0..n {
+                let (x0, x1, x2, x3) = (w0[j] as i32, w1[j] as i32, w2[j] as i32, w3[j] as i32);
+                o0[j] += a00 * x0 + a01v * x1 + a02 * x2 + a03 * x3;
+                o1[j] += a10 * x0 + a11 * x1 + a12 * x2 + a13 * x3;
+                o2[j] += a20 * x0 + a21 * x1 + a22 * x2 + a23 * x3;
+                o3[j] += a30 * x0 + a31 * x1 + a32 * x2 + a33 * x3;
+            }
+            r += 4;
+        }
+        mi += 4;
+    }
+    if mi + 2 <= m {
+        let (o0, o1) = acc[mi * n..(mi + 2) * n].split_at_mut(n);
+        let a0 = &a[mi * kp..(mi + 1) * kp];
+        let a1 = &a[(mi + 1) * kp..(mi + 2) * kp];
+        let mut r = 0;
+        while r < kp {
+            let base = r * n;
+            let w0 = &wd[base..base + n];
+            let w1 = &wd[base + n..base + 2 * n];
+            let w2 = &wd[base + 2 * n..base + 3 * n];
+            let w3 = &wd[base + 3 * n..base + 4 * n];
+            let (a00, a01v, a02, a03) =
+                (a0[r] as i32, a0[r + 1] as i32, a0[r + 2] as i32, a0[r + 3] as i32);
+            let (a10, a11, a12, a13) =
+                (a1[r] as i32, a1[r + 1] as i32, a1[r + 2] as i32, a1[r + 3] as i32);
+            for j in 0..n {
+                let (x0, x1, x2, x3) = (w0[j] as i32, w1[j] as i32, w2[j] as i32, w3[j] as i32);
+                o0[j] += a00 * x0 + a01v * x1 + a02 * x2 + a03 * x3;
+                o1[j] += a10 * x0 + a11 * x1 + a12 * x2 + a13 * x3;
+            }
+            r += 4;
+        }
+        mi += 2;
+    }
+    while mi < m {
+        let orow = &mut acc[mi * n..(mi + 1) * n];
+        let arow = &a[mi * kp..(mi + 1) * kp];
+        let mut r = 0;
+        while r < kp {
+            let base = r * n;
+            let w0 = &wd[base..base + n];
+            let w1 = &wd[base + n..base + 2 * n];
+            let w2 = &wd[base + 2 * n..base + 3 * n];
+            let w3 = &wd[base + 3 * n..base + 4 * n];
+            let (a00, a01v, a02, a03) =
+                (arow[r] as i32, arow[r + 1] as i32, arow[r + 2] as i32, arow[r + 3] as i32);
+            for j in 0..n {
+                orow[j] += a00 * w0[j] as i32
+                    + a01v * w1[j] as i32
+                    + a02 * w2[j] as i32
+                    + a03 * w3[j] as i32;
+            }
+            r += 4;
+        }
+        mi += 1;
+    }
+}
+
+/// One layer's weights on the quantized path: the `[I+H, 4H]` matrix
+/// packed as its two GEMM halves — input rows (`[I, 4H]`) and recurrent
+/// rows (`[H, 4H]`), each with its own per-output-channel scales — plus
+/// the f32 bias (biases are tiny and enter AFTER the integer GEMMs, at
+/// requantization — quantizing them would only add error for zero win).
+#[derive(Debug, Clone)]
+pub struct QuantizedCellWeights {
+    /// Input half: rows `0..I` of the combined matrix.
+    pub wx: PackedQuantMatrix,
+    /// Recurrent half: rows `I..I+H`.
+    pub wh: PackedQuantMatrix,
+    pub b: Vec<f32>,
+    pub input_dim: usize,
+    pub hidden: usize,
+}
+
+impl QuantizedCellWeights {
+    /// Pack one f32 layer. The split mirrors the f32 cell's two
+    /// `matmul_into` calls over the halves of `W`; quantization-wise it
+    /// buys each half (and each activation kind) its own resolution.
+    pub fn quantize(weights: &LstmCellWeights) -> Self {
+        let n = 4 * weights.hidden;
+        let split = weights.input_dim * n;
+        Self {
+            wx: PackedQuantMatrix::pack(&weights.w.data()[..split], weights.input_dim, n),
+            wh: PackedQuantMatrix::pack(&weights.w.data()[split..], weights.hidden, n),
+            b: weights.b.data().to_vec(),
+            input_dim: weights.input_dim,
+            hidden: weights.hidden,
+        }
+    }
+
+    /// The larger of the two packed K extents (scratch sizing).
+    pub fn k_padded_max(&self) -> usize {
+        self.wx.k_padded.max(self.wh.k_padded)
+    }
+}
+
+/// Quantize one f32 slice into an int8 row (symmetric, one dynamic
+/// scale for the row), zeroing the quad-padding tail. Returns the
+/// dequantization scale (`v ≈ q · scale`); an all-zero row returns
+/// scale 0 with all-zero lanes.
+fn quantize_row(part: &[f32], out: &mut [i8]) -> f32 {
+    let mut amax = 0.0f32;
+    for &v in part {
+        amax = amax.max(v.abs());
+    }
+    if amax == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / amax;
+    for (&v, q) in part.iter().zip(out.iter_mut()) {
+        *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    out[part.len()..].fill(0);
+    amax / 127.0
+}
+
+/// Reusable buffers of the quantized step: the int8 activation staging
+/// plane, the i32 accumulator plane and the per-row dequantization
+/// scales. Owned by [`BatchArena`] (lazily sized — a pure-f32 arena
+/// never allocates them) so steady-state quantized serving performs
+/// zero heap allocations per step, same discipline as the f32 planes.
+#[derive(Debug, Clone, Default)]
+pub struct QuantScratch {
+    /// `[rows, k_padded_max]` quantized `[x;h]` rows (padding lanes 0).
+    pub qa: Vec<i8>,
+    /// `[rows, 4H]` integer GEMM accumulator.
+    pub qacc: Vec<i32>,
+    /// One dynamic dequantization scale per batch row.
+    pub qscale: Vec<f32>,
+}
+
+impl QuantScratch {
+    /// Grow every buffer to hold `rows` rows (no-op when they fit).
+    pub fn reserve(&mut self, rows: usize, k_padded_max: usize, gate_width: usize) {
+        if self.qa.len() < rows * k_padded_max {
+            self.qa.resize(rows * k_padded_max, 0);
+        }
+        if self.qacc.len() < rows * gate_width {
+            self.qacc.resize(rows * gate_width, 0);
+        }
+        if self.qscale.len() < rows {
+            self.qscale.resize(rows, 0.0);
+        }
+    }
+}
+
+/// One half of the quantized gate computation: quantize each row of
+/// `act` (`[rows, k]` f32) with its own dynamic scale, run the integer
+/// GEMM against `w`, and fold the dequantized contribution into
+/// `gates`. `init` seeds each gate row from the bias (the x half);
+/// otherwise contributions accumulate (the h half).
+fn quant_gemm_half(
+    w: &PackedQuantMatrix,
+    act: &[f32],
+    bias: &[f32],
+    gates: &mut [f32],
+    scratch: &mut QuantScratch,
+    rows: usize,
+    init: bool,
+) {
+    let k = w.k;
+    let kp = w.k_padded;
+    let n = w.n;
+    debug_assert_eq!(act.len(), rows * k);
+    debug_assert_eq!(gates.len(), rows * n);
+    let qa = &mut scratch.qa[..rows * kp];
+    let qacc = &mut scratch.qacc[..rows * n];
+    let qscale = &mut scratch.qscale[..rows];
+
+    for ((arow, qrow), s) in
+        act.chunks_exact(k).zip(qa.chunks_exact_mut(kp)).zip(qscale.iter_mut())
+    {
+        *s = quantize_row(arow, qrow);
+    }
+    qacc.fill(0);
+    quant_matmul_into(qacc, qa, w, rows);
+    for ((grow, arow), &s_row) in
+        gates.chunks_exact_mut(n).zip(qacc.chunks_exact(n)).zip(qscale.iter())
+    {
+        if init {
+            for (((g, &acc), &b), &s_ch) in
+                grow.iter_mut().zip(arow).zip(bias).zip(&w.scales)
+            {
+                *g = b + acc as f32 * (s_row * s_ch);
+            }
+        } else {
+            for ((g, &acc), &s_ch) in grow.iter_mut().zip(arow).zip(&w.scales) {
+                *g += acc as f32 * (s_row * s_ch);
+            }
+        }
+    }
+}
+
+/// One quantized LSTM step for `rows` batch rows, in place: the int8
+/// mirror of `plan::step_rows`. Reads `xs` (`[rows, I]`, f32),
+/// overwrites `h`/`c` (`[rows, H]`, f32). `gates` is the same `[rows,
+/// 4H]` f32 buffer the f32 path uses; `scratch` must be
+/// [`QuantScratch::reserve`]d for `rows`.
+///
+/// Per step: two quantize → integer-GEMM → requantize passes (input
+/// half seeding the gates from the bias, recurrent half accumulating —
+/// the f32 cell's two `matmul_into` calls, mirrored), then the fused
+/// point-wise tail on [`fast_sigmoid`]/[`fast_tanh`].
+pub fn step_rows_quant(
+    weights: &QuantizedCellWeights,
+    xs: &[f32],
+    h: &mut [f32],
+    c: &mut [f32],
+    gates: &mut [f32],
+    scratch: &mut QuantScratch,
+    rows: usize,
+) {
+    let hid = weights.hidden;
+    let in_dim = weights.input_dim;
+    debug_assert_eq!(weights.wx.k, in_dim);
+    debug_assert_eq!(weights.wh.k, hid);
+    debug_assert_eq!(xs.len(), rows * in_dim);
+    debug_assert_eq!(h.len(), rows * hid);
+    debug_assert_eq!(c.len(), rows * hid);
+    debug_assert!(gates.len() >= rows * 4 * hid);
+    debug_assert!(scratch.qa.len() >= rows * weights.k_padded_max());
+    debug_assert!(scratch.qacc.len() >= rows * 4 * hid);
+    debug_assert!(scratch.qscale.len() >= rows);
+    let gates = &mut gates[..rows * 4 * hid];
+
+    quant_gemm_half(&weights.wx, xs, &weights.b, gates, scratch, rows, true);
+    quant_gemm_half(&weights.wh, h, &weights.b, gates, scratch, rows, false);
+
+    // Fused point-wise tail on the fast approximations.
+    for ((grow, hrow), crow) in gates
+        .chunks_exact(4 * hid)
+        .zip(h.chunks_exact_mut(hid))
+        .zip(c.chunks_exact_mut(hid))
+    {
+        let (ig, rest) = grow.split_at(hid);
+        let (gg, rest) = rest.split_at(hid);
+        let (fg, og) = rest.split_at(hid);
+        for k in 0..hid {
+            let c_next = fast_sigmoid(fg[k] + FORGET_BIAS) * crow[k]
+                + fast_sigmoid(ig[k]) * fast_tanh(gg[k]);
+            crow[k] = c_next;
+            hrow[k] = fast_sigmoid(og[k]) * fast_tanh(c_next);
+        }
+    }
+}
+
+/// A fully packed model for the int8 path: quantized layer weights plus
+/// the f32 classifier head (the head is one tiny `[H, C]` GEMV per
+/// window — quantizing it would save nothing measurable and the logits
+/// are the accuracy-bearing output).
+#[derive(Debug, Clone)]
+pub struct QuantizedLstmModel {
+    pub shape: ModelShape,
+    layers: Vec<QuantizedCellWeights>,
+    w_out: Tensor,
+    b_out: Tensor,
+}
+
+impl QuantizedLstmModel {
+    pub fn new(
+        shape: ModelShape,
+        layers: Vec<QuantizedCellWeights>,
+        w_out: Tensor,
+        b_out: Tensor,
+    ) -> Self {
+        assert_eq!(layers.len(), shape.num_layers);
+        Self { shape, layers, w_out, b_out }
+    }
+
+    pub fn layers(&self) -> &[QuantizedCellWeights] {
+        &self.layers
+    }
+
+    /// Classify a `[B, T, D]` batch through the quantized time-major
+    /// plan; returns `[B, C]` logits. Same driver contract as
+    /// `LstmModel::forward_batch`, reusing the same [`BatchArena`].
+    pub fn forward_batch_quant(&self, x: &Tensor, arena: &mut BatchArena) -> Tensor {
+        let s = self.shape;
+        assert_eq!(x.shape(), &[x.shape()[0], s.seq_len, s.input_dim]);
+        let batch = x.shape()[0];
+        let logits = self.forward_rows_quant(x.data(), batch, arena);
+        Tensor::new(vec![batch, s.num_classes], logits)
+    }
+
+    /// Classify `rows` windows given as flat `[rows, T, D]` data through
+    /// the quantized plan. The head runs in f32, accumulated in the same
+    /// order as the f32 path's head.
+    pub fn forward_rows_quant(
+        &self,
+        windows: &[f32],
+        rows: usize,
+        arena: &mut BatchArena,
+    ) -> Vec<f32> {
+        let s = self.shape;
+        assert_eq!(arena.shape(), s, "arena built for a different model shape");
+        let h_last = arena.run_quant(&self.layers, windows, rows);
+        let mut logits = vec![0.0f32; rows * s.num_classes];
+        for (hrow, lrow) in
+            h_last.chunks_exact(s.hidden).zip(logits.chunks_exact_mut(s.num_classes))
+        {
+            lrow.copy_from_slice(self.b_out.data());
+            for (r, &hv) in hrow.iter().enumerate() {
+                for (l, wv) in lrow.iter_mut().zip(self.w_out.row(r)) {
+                    *l += hv * wv;
+                }
+            }
+        }
+        logits
+    }
+
+    /// Predicted class for one window under the crate-wide "first finite
+    /// max" argmax rule — the quantized counterpart of
+    /// `LstmModel::predict`.
+    pub fn predict(&self, window: &[f32], arena: &mut BatchArena) -> usize {
+        argmax_slice(&self.forward_rows_quant(window, 1, arena))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::{random_cell_weights, random_model};
+    use crate::lstm::model::InferenceState;
+    use crate::util::Rng;
+
+    /// Naive i32 reference for the packed kernel.
+    fn quant_matmul_naive(a: &[i8], w: &PackedQuantMatrix, m: usize) -> Vec<i32> {
+        let (kp, n) = (w.k_padded, w.n);
+        let mut out = vec![0i32; m * n];
+        for mi in 0..m {
+            for r in 0..kp {
+                for j in 0..n {
+                    out[mi * n + j] += a[mi * kp + r] as i32 * w.data()[r * n + j] as i32;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_pads_k_to_quads_with_zero_rows() {
+        for &(k, n) in &[(1usize, 4usize), (4, 8), (5, 4), (7, 12), (41, 128)] {
+            let mut rng = Rng::new(71);
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let p = PackedQuantMatrix::pack(&w, k, n);
+            assert_eq!(p.k_padded % 4, 0);
+            assert!(p.k_padded >= k && p.k_padded < k + 4);
+            assert_eq!(p.data().len(), p.k_padded * n);
+            assert!(p.data()[k * n..].iter().all(|&q| q == 0), "padding rows must be zero");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_within_half_step() {
+        let mut rng = Rng::new(72);
+        let (k, n) = (37, 64);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-0.4, 0.4)).collect();
+        let p = PackedQuantMatrix::pack(&w, k, n);
+        let back = p.unpack();
+        assert_eq!(back.len(), w.len());
+        for (i, (&orig, &deq)) in w.iter().zip(&back).enumerate() {
+            let s = p.scales[i % n];
+            assert!(
+                (orig - deq).abs() <= 0.5 * s + 1e-7,
+                "elem {i}: |{orig} - {deq}| > s/2 = {}",
+                0.5 * s
+            );
+        }
+    }
+
+    #[test]
+    fn zero_channel_gets_zero_scale_and_zero_codes() {
+        // Column 1 all-zero: scale 0, codes 0, dequantizes to exactly 0.
+        let w = vec![0.5, 0.0, -0.25, 0.0, 1.0, 0.0];
+        let p = PackedQuantMatrix::pack(&w, 3, 2);
+        assert_eq!(p.scales[1], 0.0);
+        let back = p.unpack();
+        assert_eq!(back[1], 0.0);
+        assert_eq!(back[3], 0.0);
+        assert_eq!(back[5], 0.0);
+    }
+
+    #[test]
+    fn quant_matmul_matches_naive_across_block_mixes() {
+        let mut rng = Rng::new(73);
+        // m covers quad/duo/single mixes; k covers padded and exact quads.
+        for &(m, k, n) in &[
+            (1usize, 5usize, 8usize),
+            (2, 8, 12),
+            (3, 9, 16),
+            (4, 16, 8),
+            (6, 41, 128),
+            (7, 13, 20),
+            (8, 64, 128),
+            (9, 6, 7),
+        ] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let p = PackedQuantMatrix::pack(&w, k, n);
+            let a: Vec<i8> = (0..m * p.k_padded)
+                .map(|i| {
+                    // zero the lanes beyond k, as the driver guarantees
+                    if i % p.k_padded >= k {
+                        0
+                    } else {
+                        (rng.below(255) as i32 - 127) as i8
+                    }
+                })
+                .collect();
+            let mut acc = vec![0i32; m * n];
+            quant_matmul_into(&mut acc, &a, &p, m);
+            assert_eq!(acc, quant_matmul_naive(&a, &p, m), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn quantize_row_zero_and_scaling() {
+        let mut out = [0i8; 8];
+        let s = quantize_row(&[0.0, 0.0, 0.0], &mut out);
+        assert_eq!(s, 0.0);
+        assert!(out.iter().all(|&q| q == 0));
+
+        let s = quantize_row(&[1.0, -0.5, 0.25], &mut out);
+        // amax = 1.0 -> scale 1/127; codes 127, -64 (round half away), 32.
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(out[0], 127);
+        assert_eq!(out[1], -64);
+        assert_eq!(out[2], 32);
+        assert!(out[3..].iter().all(|&q| q == 0), "padding lanes zeroed");
+    }
+
+    #[test]
+    fn step_rows_quant_tracks_f32_step() {
+        // One step of the quantized cell stays close to the f32 cell —
+        // the per-step error budget the end-to-end parity test builds on.
+        let mut rng = Rng::new(74);
+        for &(rows, in_dim, hid) in &[(1usize, 9usize, 32usize), (5, 9, 32), (8, 3, 16)] {
+            let w = random_cell_weights(&mut rng, in_dim, hid);
+            let qw = QuantizedCellWeights::quantize(&w);
+            let xs: Vec<f32> = (0..rows * in_dim).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let h0: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c0: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+            let mut hq = h0.clone();
+            let mut cq = c0.clone();
+            let mut gates = vec![0.0f32; rows * 4 * hid];
+            let mut scratch = QuantScratch::default();
+            scratch.reserve(rows, qw.k_padded_max(), 4 * hid);
+            step_rows_quant(&qw, &xs, &mut hq, &mut cq, &mut gates, &mut scratch, rows);
+
+            let mut hf = h0.clone();
+            let mut cf = c0.clone();
+            let mut fgates = vec![0.0f32; rows * 4 * hid];
+            crate::lstm::plan::step_rows(&w, &xs, &mut hf, &mut cf, &mut fgates, rows);
+
+            for (i, (q, f)) in hq.iter().zip(&hf).enumerate() {
+                assert!((q - f).abs() < 0.05, "h[{i}] drift {q} vs {f} ({rows},{in_dim},{hid})");
+            }
+            for (i, (q, f)) in cq.iter().zip(&cf).enumerate() {
+                assert!((q - f).abs() < 0.08, "c[{i}] drift {q} vs {f} ({rows},{in_dim},{hid})");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_quant_shapes_and_determinism() {
+        let shape =
+            ModelShape { num_layers: 2, hidden: 8, input_dim: 3, seq_len: 10, num_classes: 4 };
+        let model = random_model(shape, 81);
+        let qmodel = model.quantize();
+        let mut rng = Rng::new(82);
+        let data: Vec<f32> = (0..3 * 30).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = Tensor::new(vec![3, 10, 3], data);
+        let mut arena = BatchArena::new(shape);
+        let a = qmodel.forward_batch_quant(&x, &mut arena);
+        assert_eq!(a.shape(), &[3, 4]);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+        // Re-running through the reused arena is deterministic.
+        let b = qmodel.forward_batch_quant(&x, &mut arena);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quant_logits_near_f32_logits() {
+        let shape = ModelShape::default();
+        let model = random_model(shape, 83);
+        let qmodel = model.quantize();
+        let mut rng = Rng::new(84);
+        let n = shape.seq_len * shape.input_dim;
+        let mut arena = BatchArena::new(shape);
+        let mut st = InferenceState::new(shape);
+        for _ in 0..4 {
+            let w: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let fl = model.forward_window(&w, &mut st);
+            let ql = qmodel.forward_rows_quant(&w, 1, &mut arena);
+            for (f, q) in fl.iter().zip(&ql) {
+                assert!((f - q).abs() < 0.25, "logit drift {f} vs {q}");
+            }
+        }
+    }
+}

@@ -14,6 +14,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::ModelShape;
 use crate::lstm::cell::LstmCellWeights;
+use crate::lstm::quant::{QuantizedCellWeights, QuantizedLstmModel};
 use crate::tensor::Tensor;
 
 /// A parsed MRNW file: named tensors in file order.
@@ -133,6 +134,17 @@ impl WeightFile {
         }
         Ok((layers, w_out, b_out))
     }
+
+    /// The int8 pack step (DESIGN.md §10): interpret the file as
+    /// stacked-LSTM weights for `shape` and quantize each layer's
+    /// `[I+H, 4H]` matrix per output channel into the packed layout the
+    /// integer GEMM runs on. Same shape validation as
+    /// [`WeightFile::to_model_weights`]; the classifier head stays f32.
+    pub fn to_quant_model_weights(&self, shape: ModelShape) -> Result<QuantizedLstmModel> {
+        let (layers, w_out, b_out) = self.to_model_weights(shape)?;
+        let qlayers = layers.iter().map(QuantizedCellWeights::quantize).collect();
+        Ok(QuantizedLstmModel::new(shape, qlayers, w_out, b_out))
+    }
 }
 
 #[cfg(test)]
@@ -233,5 +245,16 @@ mod tests {
         // Wrong hidden size must be rejected.
         let bad = ModelShape { hidden: 4, ..shape };
         assert!(wf.to_model_weights(bad).is_err());
+
+        // The quant pack step shares the validation and pads each GEMM
+        // half's K to quads: [2, 12] -> [4, 12] and [3, 12] -> [4, 12]
+        // int8, one scale per output channel per half.
+        let qm = wf.to_quant_model_weights(shape).unwrap();
+        assert_eq!(qm.layers().len(), 1);
+        assert_eq!((qm.layers()[0].wx.k, qm.layers()[0].wx.k_padded), (2, 4));
+        assert_eq!((qm.layers()[0].wh.k, qm.layers()[0].wh.k_padded), (3, 4));
+        assert_eq!(qm.layers()[0].wx.scales.len(), 12);
+        assert_eq!(qm.layers()[0].wh.scales.len(), 12);
+        assert!(wf.to_quant_model_weights(bad).is_err());
     }
 }

@@ -19,7 +19,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use mobirnn::config::Manifest;
-use mobirnn::coordinator::{parse_target, ClassifyOptions, DeviceState, OffloadPolicy, Router};
+use mobirnn::coordinator::{
+    parse_target, ClassifyOptions, DeviceState, OffloadPolicy, Precision, Router,
+};
 use mobirnn::figures;
 use mobirnn::har;
 use mobirnn::runtime::Runtime;
@@ -55,6 +57,7 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "gpu-load",
                 "cpu-load",
                 "target",
+                "precision",
                 "max-queue",
             ],
             &[],
@@ -164,7 +167,8 @@ fn print_help() {
          \x20                                      [--max-queue 256] [--max-connections 64]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
-         \x20                                      [--target gpu|cpu|cpu-multi]\n\
+         \x20                                      [--target gpu|cpu|cpu-multi|cpu-quant]\n\
+         \x20                                      [--precision f32|int8]\n\
          \x20 info      print the artifact manifest summary\n\
          \n\
          POLICIES: gpu | fine | cpu | cpu-multi | threshold:<0..1> | cost-model"
@@ -245,6 +249,13 @@ fn cmd_classify(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let precision = match args.get("precision") {
+        Some(p) => Some(
+            Precision::parse(p)
+                .ok_or_else(|| anyhow!("unknown --precision {p:?} (f32|int8)"))?,
+        ),
+        None => None,
+    };
     let (router, manifest) = build_router(args)?;
     let ds = har::HarDataset::load(manifest.path(&manifest.har_test.file))?;
     let n = n.min(ds.len());
@@ -252,7 +263,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     let mut correct = 0;
     for i in 0..n {
-        let opts = ClassifyOptions { id: Some(i as u64), target, ..Default::default() };
+        let opts = ClassifyOptions { id: Some(i as u64), target, precision, ..Default::default() };
         let reply = router.classify_with(ds.window(i).to_vec(), opts)?;
         let gold = ds.labels[i] as usize;
         if reply.class == gold {
@@ -361,6 +372,20 @@ mod tests {
         assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
         assert_eq!(a.get("max-wait-ms"), Some("5"));
         assert_eq!(a.get("gpu-load"), Some("0.3"));
+    }
+
+    #[test]
+    fn precision_flag_parses_for_classify_only() {
+        let a = Args::from_parts("classify", &argv(&["--precision", "int8"])).unwrap();
+        assert_eq!(a.get("precision"), Some("int8"));
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert!(Precision::parse("fp64").is_none());
+        // serve takes precision per request on the wire, not as a flag.
+        let err = Args::from_parts("serve", &argv(&["--precision", "int8"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag"), "{err}");
     }
 
     #[test]

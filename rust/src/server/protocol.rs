@@ -13,7 +13,9 @@
 
 use std::time::Duration;
 
-use crate::coordinator::{parse_target, ClassifyOptions, Router, ServeError, ServeReply};
+use crate::coordinator::{
+    parse_target, ClassifyOptions, Precision, Router, ServeError, ServeReply,
+};
 use crate::json::{obj, CodecError, FromValue, ToValue, Value};
 use crate::simulator::Target;
 
@@ -94,6 +96,9 @@ pub enum Request {
         window: Vec<f32>,
         /// Per-request target override ("gpu" | "cpu" | "cpu-multi" | ...).
         target: Option<Target>,
+        /// Numeric precision ("f32" | "int8"): int8 opts into the
+        /// quantized engine (DESIGN.md §10); absent means f32.
+        precision: Option<Precision>,
         /// Reply deadline in milliseconds.
         deadline_ms: Option<u64>,
     },
@@ -211,11 +216,14 @@ impl ToValue for Request {
                 }
                 obj(fields)
             }
-            Request::Classify { id, window, target, deadline_ms } => {
+            Request::Classify { id, window, target, precision, deadline_ms } => {
                 let mut fields = envelope("classify", *id);
                 fields.push(("window", window.to_value()));
                 if let Some(t) = target {
                     fields.push(("target", Value::from(crate::coordinator::target_label(*t))));
+                }
+                if let Some(p) = precision {
+                    fields.push(("precision", Value::from(p.as_str())));
                 }
                 if let Some(d) = deadline_ms {
                     fields.push(("deadline_ms", Value::from(*d)));
@@ -261,10 +269,22 @@ impl FromValue for Request {
                         })?)
                     }
                 };
+                let precision = match v.get("precision") {
+                    Value::Null => None,
+                    p => {
+                        let label = p
+                            .as_str()
+                            .ok_or_else(|| CodecError::field("precision", "expected a string"))?;
+                        Some(Precision::parse(label).ok_or_else(|| {
+                            CodecError::field("precision", format!("unknown precision {label:?}"))
+                        })?)
+                    }
+                };
                 Ok(Request::Classify {
                     id: field(v, "id")?,
                     window: field(v, "window")?,
                     target,
+                    precision,
                     deadline_ms: field(v, "deadline_ms")?,
                 })
             }
@@ -428,7 +448,7 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
                 cpu: router.device.cpu_util(),
             }
         }
-        Request::Classify { id, window, target, deadline_ms } => {
+        Request::Classify { id, window, target, precision, deadline_ms } => {
             let expect = router.window_len();
             if window.len() != expect {
                 return Response::Error {
@@ -440,6 +460,7 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
             let opts = ClassifyOptions {
                 id,
                 target,
+                precision,
                 deadline: deadline_ms.map(Duration::from_millis),
             };
             match router.classify_with(window, opts) {
@@ -548,9 +569,30 @@ mod tests {
                 id: Some(7),
                 window: vec![0.25, -1.5, 0.0],
                 target: Some(crate::simulator::Target::CpuMulti(4)),
+                precision: None,
                 deadline_ms: Some(250),
             },
-            Request::Classify { id: None, window: vec![], target: None, deadline_ms: None },
+            Request::Classify {
+                id: Some(8),
+                window: vec![1.0],
+                target: None,
+                precision: Some(Precision::Int8),
+                deadline_ms: None,
+            },
+            Request::Classify {
+                id: None,
+                window: vec![],
+                target: None,
+                precision: Some(Precision::F32),
+                deadline_ms: None,
+            },
+            Request::Classify {
+                id: None,
+                window: vec![],
+                target: None,
+                precision: None,
+                deadline_ms: None,
+            },
             Request::ClassifyBatch {
                 id: Some(1),
                 windows: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
@@ -661,6 +703,8 @@ mod tests {
             (r#"{"type":"classify","window":["a"]}"#, ErrorCode::BadRequest),
             (r#"{"type":"classify","window":[1,2,3]}"#, ErrorCode::BadRequest),
             (r#"{"type":"classify","window":[],"target":"npu"}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify","window":[],"precision":"fp16"}"#, ErrorCode::BadRequest),
+            (r#"{"type":"classify","window":[],"precision":7}"#, ErrorCode::BadRequest),
             (r#"{"type":"classify_batch","windows":[]}"#, ErrorCode::BadRequest),
         ] {
             match handle_line(&r, bad) {
@@ -680,6 +724,31 @@ mod tests {
                 assert_eq!(outcome.class, 1, "FixedEngine predicts class 1");
                 assert!(outcome.sim_latency_us > 0.0);
                 assert_eq!(outcome.target, "cpu");
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_precision_int8_reaches_quant_engine() {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let r = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(crate::simulator::Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(crate::simulator::Target::CpuSingle)))
+            .engine(Box::new(FixedEngine::new(crate::simulator::Target::CpuQuant)))
+            .build()
+            .unwrap();
+        let line = format!(
+            r#"{{"type":"classify","id":3,"window":{},"precision":"int8"}}"#,
+            window_json(30)
+        );
+        match handle_line(&r, &line) {
+            Response::Result { id, outcome } => {
+                assert_eq!(id, Some(3));
+                assert_eq!(outcome.target, "cpu-quant", "precision must reach the quant pool");
             }
             other => panic!("expected result, got {other:?}"),
         }

@@ -270,6 +270,7 @@ impl Client {
             id: Some(id),
             window: window.to_vec(),
             target: None,
+            precision: None,
             deadline_ms: None,
         };
         match self.call(&req)? {

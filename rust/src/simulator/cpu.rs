@@ -44,26 +44,42 @@ fn load_retention(cores: usize, threads: usize, util: f64) -> f64 {
     free_cores.min(want).max(FOREGROUND_FLOOR) / want
 }
 
-/// Simulate one inference of `shape`×`batch` on the CPU with `threads`
-/// worker threads under background utilization `util`.
-pub fn cpu_run(
+/// Arithmetic-throughput advantage of the int8 quantized path over the
+/// scalar f32 path on the same core (DESIGN.md §10): narrower
+/// multiplies plus the rational point-wise tail replacing `exp`/`tanh`.
+/// Calibrated against the measured `native_quant_b*` vs
+/// `native_batched_b*` hot-path ratios, 1.89–2.00× across B ∈ {1..8}
+/// (EXPERIMENTS.md §Perf / `BENCH_hotpath.json`).
+pub const INT8_COMPUTE_GAIN: f64 = 2.0;
+
+/// The shared roofline body: `time = max(flops / throughput, bytes /
+/// bandwidth) (+ spawn)`. Precision tiers differ ONLY in arithmetic
+/// throughput (`compute_gain`) and weight-image density
+/// (`bytes_per_param`: 4 for f32, 1 for packed int8 — which also sets
+/// the cache-residency threshold); load behaves identically on both —
+/// quantization changes per-element cost, not how the OS schedules us.
+fn cpu_roofline(
     profile: &DeviceProfile,
     shape: ModelShape,
     batch: usize,
     threads: usize,
     util: f64,
+    compute_gain: f64,
+    bytes_per_param: u64,
 ) -> CpuRunResult {
     let threads = threads.max(1);
     let flops = shape.flops_per_inference() * batch as u64;
-    let bytes = shape.weight_bytes_per_step() * shape.seq_len as u64;
+    // weight_bytes_per_step() counts f32 bytes; rescale per tier.
+    let bytes = shape.weight_bytes_per_step() * shape.seq_len as u64 * bytes_per_param / 4;
 
-    let throughput = profile.cpu_mt_flops_per_ns(threads);
+    let throughput = profile.cpu_mt_flops_per_ns(threads) * compute_gain;
     let retention = load_retention(profile.cpu_cores, threads, util);
     let compute = flops as f64 / (throughput * retention);
     // Weights stream once per timestep from LPDDR; CPU caches hold the
     // small-H models entirely (32 KiB L1 / 2 MiB L2), so the memory term
-    // only binds for large hidden sizes.
-    let cacheable = shape.param_count() * 4 < 2 * 1024 * 1024;
+    // only binds for large hidden sizes (4x later on the int8 tier,
+    // whose image is one byte per parameter).
+    let cacheable = shape.param_count() as u64 * bytes_per_param < 2 * 1024 * 1024;
     let mem = if cacheable { 0.0 } else { bytes as f64 / profile.bandwidth_bytes_per_ns };
     let spawn = if threads > 1 { profile.thread_spawn_ns } else { 0 };
 
@@ -75,6 +91,31 @@ pub fn cpu_run(
         spawn_ns: spawn,
         load_factor: 1.0 / retention,
     }
+}
+
+/// Simulate one inference of `shape`×`batch` on the CPU with `threads`
+/// worker threads under background utilization `util`.
+pub fn cpu_run(
+    profile: &DeviceProfile,
+    shape: ModelShape,
+    batch: usize,
+    threads: usize,
+    util: f64,
+) -> CpuRunResult {
+    cpu_roofline(profile, shape, batch, threads, util, 1.0, 4)
+}
+
+/// Simulate one inference on the int8 quantized CPU path (DESIGN.md
+/// §10): the [`cpu_run`] roofline at [`INT8_COMPUTE_GAIN`]× arithmetic
+/// throughput and a one-byte-per-parameter weight image.
+pub fn cpu_run_int8(
+    profile: &DeviceProfile,
+    shape: ModelShape,
+    batch: usize,
+    threads: usize,
+    util: f64,
+) -> CpuRunResult {
+    cpu_roofline(profile, shape, batch, threads, util, INT8_COMPUTE_GAIN, 1)
 }
 
 #[cfg(test)]
@@ -150,6 +191,38 @@ mod tests {
         // At Java-level flop rates compute still dominates, but the term
         // must at least be computed without panic and stay consistent.
         assert_eq!(big.total_ns, big.spawn_ns + big.compute_ns.max(big.compute_ns + big.mem_stall_ns));
+    }
+
+    #[test]
+    fn int8_cheaper_than_f32_per_element() {
+        // The quantized path must price below the f32 path at every
+        // batch size and load level — the cost-model premise of the
+        // CpuQuant target (DESIGN.md §10).
+        let s = ModelShape::default();
+        for batch in [1usize, 2, 4, 8] {
+            for util in [0.0, 0.4, 0.9] {
+                let f32_ns = cpu_run(&n5(), s, batch, 1, util).total_ns;
+                let int8_ns = cpu_run_int8(&n5(), s, batch, 1, util).total_ns;
+                assert!(
+                    int8_ns < f32_ns,
+                    "b={batch} util={util}: int8 {int8_ns} !< f32 {f32_ns}"
+                );
+                // The gain is a throughput constant: the ratio tracks it.
+                let ratio = f32_ns as f64 / int8_ns as f64;
+                assert!((ratio - INT8_COMPUTE_GAIN).abs() < 0.3, "ratio {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_load_degrades_monotonically() {
+        let s = ModelShape::default();
+        let mut last = 0;
+        for util in [0.0, 0.3, 0.6, 0.9] {
+            let t = cpu_run_int8(&n5(), s, 1, 1, util).total_ns;
+            assert!(t >= last, "util {util}: {t} < {last}");
+            last = t;
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod workunit;
 
 use crate::config::ModelShape;
 
-pub use cpu::{cpu_run, CpuRunResult};
+pub use cpu::{cpu_run, cpu_run_int8, CpuRunResult, INT8_COMPUTE_GAIN};
 pub use des::{Clock, EventHeap};
 pub use device::DeviceProfile;
 pub use gpu::{gpu_run, GpuRunResult};
@@ -44,6 +44,12 @@ pub enum Target {
     CpuSingle,
     /// Multi-threaded CPU with `n` threads (paper §4.4).
     CpuMulti(usize),
+    /// Single-threaded CPU on the int8 quantized path (DESIGN.md §10):
+    /// same roofline as [`Target::CpuSingle`] with int8 arithmetic
+    /// throughput and a quarter of the weight traffic. Entered only by
+    /// explicit request (`precision: int8`) — the offload policy never
+    /// trades precision for latency on its own.
+    CpuQuant,
 }
 
 /// Simulated latency of ONE inference of `shape` at `batch` on `target`
@@ -66,6 +72,7 @@ pub fn simulate_inference(
         }
         Target::CpuSingle => cpu_run(profile, shape, batch, 1, util).total_ns,
         Target::CpuMulti(n) => cpu_run(profile, shape, batch, n, util).total_ns,
+        Target::CpuQuant => cpu_run_int8(profile, shape, batch, 1, util).total_ns,
     }
 }
 

@@ -147,6 +147,7 @@ fn per_request_override_over_the_wire() {
         id: Some(3),
         window: ds.window(0).to_vec(),
         target: Some(mobirnn::simulator::Target::CpuSingle),
+        precision: None,
         deadline_ms: None,
     };
     match client.call(&req).unwrap() {

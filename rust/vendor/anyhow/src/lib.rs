@@ -1,0 +1,252 @@
+//! Vendored, dependency-free subset of the `anyhow` error-handling API.
+//!
+//! The build environment resolves dependencies offline, so the crate set
+//! the workspace may use is whatever ships in-tree. This shim implements
+//! exactly the surface `mobirnn` uses — [`Error`], [`Result`], the
+//! [`anyhow!`] macro, the [`Context`] extension trait and
+//! [`Error::downcast_ref`] — with the same observable semantics:
+//!
+//! - `Display` shows the OUTERMOST message (the latest context, or the
+//!   root error when no context was attached);
+//! - alternate `Display` (`{:#}`) shows the whole chain, colon-joined,
+//!   outermost first — `"ctx2: ctx1: root"`;
+//! - `downcast_ref::<E>()` sees through any number of context frames to
+//!   the root error, so typed errors (e.g. `ServeError`) survive
+//!   wrapping;
+//! - `?` converts any `std::error::Error + Send + Sync + 'static` via
+//!   the blanket `From` impl.
+//!
+//! Context messages are rendered to `String` eagerly (the real crate
+//! keeps the objects; nothing here downcasts a context frame, so the
+//! eager form is observationally identical).
+
+use std::any::Any;
+use std::convert::Infallible;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Object-safe view of a root error: printable and downcastable.
+trait Root: Display + Debug + Send + Sync + 'static {
+    fn as_any(&self) -> &(dyn Any + Send + Sync);
+}
+
+impl<M: Display + Debug + Send + Sync + 'static> Root for M {
+    fn as_any(&self) -> &(dyn Any + Send + Sync) {
+        self
+    }
+}
+
+/// Boxed dynamic error with an attachable context chain.
+pub struct Error {
+    root: Box<dyn Root>,
+    /// Context frames, INNERMOST first (`context` pushes to the back, so
+    /// the last entry is the outermost message `Display` shows).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Wrap a standard error. The concrete type stays reachable through
+    /// [`Error::downcast_ref`].
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Self { root: Box::new(error), context: Vec::new() }
+    }
+
+    /// Build from a printable message (what [`anyhow!`] expands to).
+    pub fn msg<M: Display + Debug + Send + Sync + 'static>(message: M) -> Self {
+        Self { root: Box::new(message), context: Vec::new() }
+    }
+
+    /// Attach a context message; it becomes the new outermost frame.
+    pub fn context<C: Display + Send + Sync + 'static>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// A reference to the root error if it is an `E`, looking through
+    /// every context frame.
+    pub fn downcast_ref<E: Display + Debug + Send + Sync + 'static>(&self) -> Option<&E> {
+        self.root.as_any().downcast_ref::<E>()
+    }
+
+    /// Outermost frame first, root last.
+    fn frames(&self) -> impl Iterator<Item = &str> {
+        self.context.iter().rev().map(String::as_str)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(outermost) if !f.alternate() => f.write_str(outermost),
+            _ => {
+                for frame in self.frames() {
+                    write!(f, "{frame}: ")?;
+                }
+                write!(f, "{}", self.root)
+            }
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            None => write!(f, "{:?}", self.root),
+            Some(outermost) => {
+                write!(f, "{outermost}")?;
+                write!(f, "\n\nCaused by:")?;
+                for frame in self.frames().skip(1) {
+                    write!(f, "\n    {frame}")?;
+                }
+                write!(f, "\n    {}", self.root)
+            }
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Dispatch helper behind [`Context`]: how an error value folds a
+/// context frame into an [`Error`]. One impl for standard errors, one
+/// for [`Error`] itself — the split that lets `.context(..)` work on
+/// both `Result<T, io::Error>` and `Result<T, anyhow::Error>`.
+mod ext {
+    use super::*;
+
+    pub trait StdError {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> StdError for E {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            Error::new(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`,
+/// matching the real crate's semantics (an `Option` treats `None` as an
+/// error made from the context message alone).
+pub trait Context<T, E>: private::Sealed {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(context()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(context().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (with inline captures and
+/// trailing arguments) or from any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = anyhow!("root {}", 7);
+        assert_eq!(e.to_string(), "root 7");
+        let e = Err::<(), _>(e).context("mid").unwrap_err();
+        let e = Err::<(), _>(e).with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1");
+        assert_eq!(format!("{e:#}"), "outer 1: mid: root 7");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn downcast_sees_through_context() {
+        let r: Result<()> = Err(Error::new(Typed(3)));
+        let e = r.context("wrapped").unwrap_err();
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(3)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "not a number".parse()?;
+            Ok(n)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn option_context_and_value_macro() {
+        let none: Option<u32> = None;
+        let e = none.context(format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        let e: Error = anyhow!(String::from("already built"));
+        assert_eq!(e.to_string(), "already built");
+    }
+}
