@@ -19,6 +19,12 @@
 //! requantize serving path is driven end to end over TCP — in `--smoke`
 //! mode this is the CI gate that keeps the quant engine wired in.
 //!
+//! A fourth scenario, `streaming` (DESIGN.md §11), has each client open
+//! a stateful session and push one frame per `classify_stream` call —
+//! the per-step path whose point is NOT re-running the whole window per
+//! frame: reported p50/p99 are per-STEP latencies, directly comparable
+//! to the per-window numbers of the other scenarios.
+//!
 //! ```bash
 //! cargo bench --bench serving_throughput              # full run
 //! cargo bench --bench serving_throughput -- --smoke   # CI: tiny N,
@@ -161,6 +167,58 @@ fn scenario_json(r: &ScenarioResult) -> Value {
     Value::Obj(entry)
 }
 
+/// Per-step streaming: each of `n_sessions` clients opens its own
+/// session, advances it one frame per `classify_stream` call, then
+/// closes. `requests` counts steps; `wall_ms` is per-step latency.
+fn run_streaming_scenario(
+    name: &'static str,
+    addr: std::net::SocketAddr,
+    shape: ModelShape,
+    n_sessions: usize,
+    steps_per_session: usize,
+) -> ScenarioResult {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_sessions)
+        .map(|s| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let session = client.open_session(None).expect("open_session");
+                let mut walls = Vec::new();
+                for t in 0..steps_per_session {
+                    let frame: Vec<f32> = (0..shape.input_dim)
+                        .map(|j| ((s * 131 + t * 31 + j * 7) % 97) as f32 / 97.0 - 0.5)
+                        .collect();
+                    let c0 = Instant::now();
+                    let (classes, logits) =
+                        client.classify_stream(session, &frame, t as u64).expect("stream");
+                    assert_eq!(classes.len(), 1, "one step in, one class out");
+                    assert!(classes[0] < shape.num_classes, "bad class");
+                    assert_eq!(logits.len(), shape.num_classes);
+                    walls.push(c0.elapsed().as_secs_f64() * 1e3);
+                }
+                let steps = client.close_session(session).expect("close");
+                assert_eq!(steps as usize, steps_per_session);
+                walls
+            })
+        })
+        .collect();
+    let mut requests = 0;
+    let mut wall_ms = Stats::new();
+    for h in handles {
+        for w in h.join().expect("session thread") {
+            requests += 1;
+            wall_ms.push(w);
+        }
+    }
+    let wall = t0.elapsed();
+
+    let mut client = Client::connect(addr).expect("stats connect");
+    let (_, _, metrics) = client.stats().expect("stats");
+    let expired = metrics.get("sessions_expired").as_usize().unwrap_or(0);
+    // Streams never batch (batch size is 1 by construction).
+    ScenarioResult { name, requests, wall, wall_ms, shed: 0, expired, mean_batch: 1.0 }
+}
+
 /// One server over the three native CPU engines — single-thread,
 /// multi-thread, and int8 quantized pools — sharing the random-weight
 /// model (the quant engine packs it once at registration).
@@ -226,6 +284,16 @@ fn main() {
     print_scenario(&quant);
     drop(quant_srv);
 
+    // Scenario 4: stateful streaming (DESIGN.md §11) — per-step
+    // classify_stream against persistent sessions; p50/p99 here are
+    // per-STEP, the latency a live client sees per frame.
+    let (n_sessions, steps_each) = if smoke { (2, 8) } else { (8, 100) };
+    let stream_srv = start_server(shape);
+    let streaming =
+        run_streaming_scenario("streaming", stream_srv.addr(), shape, n_sessions, steps_each);
+    print_scenario(&streaming);
+    drop(stream_srv);
+
     println!(
         "serving/dual_pool_speedup: {:.2}x (pipelined vs serialized dispatch)",
         dual.rps() / single.rps().max(1e-9)
@@ -243,6 +311,12 @@ fn main() {
         assert_eq!(dual.requests, total, "smoke: all dual-pool requests served");
         assert_eq!(quant.requests, total, "smoke: all quant-pool requests served");
         assert_eq!(single.shed + dual.shed + quant.shed, 0, "smoke: no shed at tiny N");
+        assert_eq!(
+            streaming.requests,
+            n_sessions * steps_each,
+            "smoke: every streamed step served"
+        );
+        assert_eq!(streaming.expired, 0, "smoke: no session expired mid-stream");
         println!("serving/smoke: OK ({total} requests per scenario, timings ignored)");
         return;
     }
@@ -251,6 +325,7 @@ fn main() {
     cases.insert("serving/single_pool".to_string(), scenario_json(&single));
     cases.insert("serving/dual_pool".to_string(), scenario_json(&dual));
     cases.insert("serving/quant_pool".to_string(), scenario_json(&quant));
+    cases.insert("serving/streaming".to_string(), scenario_json(&streaming));
     let mut root = BTreeMap::new();
     root.insert("format".to_string(), Value::from("mobirnn-bench"));
     root.insert("version".to_string(), Value::from(1usize));

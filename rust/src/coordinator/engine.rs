@@ -31,9 +31,11 @@ use crate::coordinator::device::DeviceState;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::target_label;
 use crate::coordinator::router::{ServeError, ServeReply, ServeRequest};
+use crate::coordinator::router::{StreamReply, StreamRequest};
 use crate::har::CLASS_NAMES;
-use crate::lstm::{BatchArena, LstmModel, QuantizedLstmModel, ThreadedLstm};
+use crate::lstm::{BatchArena, LstmModel, QuantizedLstmModel, StreamState, ThreadedLstm};
 use crate::runtime::Runtime;
+use crate::session::{SessionError, SessionStore};
 use crate::simulator::{simulate_inference, Factorization, Target};
 use crate::tensor::{argmax_slice, Tensor};
 
@@ -51,6 +53,28 @@ pub trait Engine: Send {
 
     /// Run a `[B, T, D]` input; returns `[B, C]` logits.
     fn infer(&self, x: &Tensor) -> Result<Tensor>;
+
+    /// Advance a streaming session's recurrent state through `steps`
+    /// frames (`frames` is flat `[steps, I]`); returns flat `[steps, C]`
+    /// per-step logits. Engines that cannot resume from external h/c
+    /// state (the AOT PJRT artifacts are fixed-shape whole-window
+    /// programs) keep the default, which errors — stream dispatch then
+    /// fails over to a CPU pool.
+    fn infer_stream(
+        &self,
+        frames: &[f32],
+        steps: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        let _ = (frames, steps, state);
+        Err(anyhow!("engine {} does not support streaming sessions", self.label()))
+    }
+
+    /// Does this engine implement [`Engine::infer_stream`]? Session
+    /// opens pin only to engines that say yes.
+    fn supports_streaming(&self) -> bool {
+        false
+    }
 
     /// Human-readable name (wire protocol / metrics).
     fn label(&self) -> &'static str {
@@ -78,6 +102,17 @@ pub fn same_kind(a: Target, b: Target) -> bool {
 /// engine only gains fidelity (DESIGN.md §10).
 fn failover_allowed(target: Target, candidate: Target) -> bool {
     !matches!(candidate, Target::CpuQuant) || matches!(target, Target::CpuQuant)
+}
+
+fn check_stream_shape(shape: ModelShape, frames: &[f32], steps: usize) -> Result<()> {
+    if steps == 0 || frames.len() != steps * shape.input_dim {
+        return Err(anyhow!(
+            "stream chunk of {} floats is not [steps, {}] with steps >= 1",
+            frames.len(),
+            shape.input_dim
+        ));
+    }
+    Ok(())
 }
 
 fn check_window_shape(shape: ModelShape, x: &Tensor) -> Result<usize> {
@@ -169,6 +204,20 @@ impl Engine for CpuSingleEngine {
         let mut arena = self.arena.lock().unwrap();
         Ok(self.model.forward_batch(x, &mut arena))
     }
+
+    fn infer_stream(
+        &self,
+        frames: &[f32],
+        steps: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        check_stream_shape(self.model.shape, frames, steps)?;
+        Ok(self.model.stream_chunk(frames, steps, state))
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
 }
 
 /// Int8 quantized CPU engine (DESIGN.md §10): the batched time-major
@@ -214,6 +263,20 @@ impl Engine for CpuQuantEngine {
         let mut arena = self.arena.lock().unwrap();
         Ok(self.model.forward_batch_quant(x, &mut arena))
     }
+
+    fn infer_stream(
+        &self,
+        frames: &[f32],
+        steps: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        check_stream_shape(self.model.shape, frames, steps)?;
+        Ok(self.model.stream_chunk_quant(frames, steps, state))
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
 }
 
 /// Multi-threaded native CPU engine (paper §4.4) over a persistent
@@ -242,6 +305,22 @@ impl Engine for CpuMultiEngine {
     fn infer(&self, x: &Tensor) -> Result<Tensor> {
         check_window_shape(self.shape, x)?;
         Ok(self.pool.forward_batch(x))
+    }
+
+    fn infer_stream(
+        &self,
+        frames: &[f32],
+        steps: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        // One row gains nothing from fan-out: run the chunk on the
+        // pool's shared model directly (same weights, same kernels).
+        check_stream_shape(self.shape, frames, steps)?;
+        Ok(self.pool.model().stream_chunk(frames, steps, state))
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
     }
 }
 
@@ -373,9 +452,22 @@ pub(crate) struct BatchJob {
     pub tried: u32,
 }
 
+/// One streaming chunk handed from the scheduler to the pool a session
+/// is pinned to. `target` is the affinity pin at dispatch time; when
+/// failover lands the chunk on a different-kind pool, that worker
+/// re-pins the session there and bumps `sessions_migrated` — the state
+/// itself is engine-agnostic f32 in the session store, so migration is
+/// a pointer update, never a copy (DESIGN.md §11).
+pub(crate) struct StreamJob {
+    pub req: StreamRequest,
+    pub target: Target,
+    pub tried: u32,
+}
+
 /// A message on a pool's work queue.
 pub(crate) enum PoolMsg {
     Job(BatchJob),
+    Stream(StreamJob),
     /// Drain-and-exit marker; queued jobs ahead of it still execute.
     Shutdown,
 }
@@ -402,6 +494,19 @@ impl EnginePool {
             Err(mpsc::TrySendError::Full(m)) | Err(mpsc::TrySendError::Disconnected(m)) => {
                 metrics.inflight.slot(self.target).fetch_sub(1, Ordering::Relaxed);
                 let PoolMsg::Job(j) = m else { unreachable!("we only send jobs here") };
+                Err(j)
+            }
+        }
+    }
+
+    /// [`Self::offer`] for stream chunks — same gauge protocol.
+    fn offer_stream(&self, job: StreamJob, metrics: &Metrics) -> Result<(), StreamJob> {
+        metrics.inflight.slot(self.target).fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(PoolMsg::Stream(job)) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(m)) | Err(mpsc::TrySendError::Disconnected(m)) => {
+                metrics.inflight.slot(self.target).fetch_sub(1, Ordering::Relaxed);
+                let PoolMsg::Stream(j) = m else { unreachable!("we only send stream jobs here") };
                 Err(j)
             }
         }
@@ -438,6 +543,7 @@ impl EnginePools {
         registry: EngineRegistry,
         device: DeviceState,
         metrics: Arc<Metrics>,
+        sessions: Arc<SessionStore>,
         shape: ModelShape,
         depth: usize,
     ) -> Result<Self> {
@@ -464,6 +570,7 @@ impl EnginePools {
                 peers: pools.clone(),
                 device: device.clone(),
                 metrics: Arc::clone(&metrics),
+                sessions: Arc::clone(&sessions),
                 shape,
             };
             handles.push(
@@ -483,6 +590,23 @@ impl EnginePools {
     pub(crate) fn dispatch(&self, mut job: BatchJob, metrics: &Metrics) -> Result<(), BatchJob> {
         for i in pool_order(&self.pools, job.target) {
             match self.pools[i].offer(job, metrics) {
+                Ok(()) => return Ok(()),
+                Err(j) => job = j,
+            }
+        }
+        Err(job)
+    }
+
+    /// [`Self::dispatch`] for stream chunks: the pinned pool first, then
+    /// the failover order (same precision rules — an f32 stream never
+    /// lands on the quant pool).
+    pub(crate) fn dispatch_stream(
+        &self,
+        mut job: StreamJob,
+        metrics: &Metrics,
+    ) -> Result<(), StreamJob> {
+        for i in pool_order(&self.pools, job.target) {
+            match self.pools[i].offer_stream(job, metrics) {
                 Ok(()) => return Ok(()),
                 Err(j) => job = j,
             }
@@ -522,6 +646,7 @@ struct PoolWorker {
     peers: Vec<EnginePool>,
     device: DeviceState,
     metrics: Arc<Metrics>,
+    sessions: Arc<SessionStore>,
     shape: ModelShape,
 }
 
@@ -530,6 +655,7 @@ impl PoolWorker {
         while let Ok(msg) = self.rx.recv() {
             match msg {
                 PoolMsg::Job(job) => self.execute(job),
+                PoolMsg::Stream(job) => self.execute_stream(job),
                 PoolMsg::Shutdown => break,
             }
         }
@@ -540,15 +666,27 @@ impl PoolWorker {
         // this drain still gets a channel-disconnect error at the
         // caller, never a hang.)
         while let Ok(msg) = self.rx.try_recv() {
-            if let PoolMsg::Job(job) = msg {
-                self.metrics
-                    .inflight
-                    .slot(self.engine.target())
-                    .fetch_sub(1, Ordering::Relaxed);
-                let reason = "engine pools shut down before this batch could run".to_string();
-                for req in job.reqs {
-                    let _ = req.reply.send(Err(ServeError::EngineFailure(reason.clone())));
+            match msg {
+                PoolMsg::Job(job) => {
+                    self.metrics
+                        .inflight
+                        .slot(self.engine.target())
+                        .fetch_sub(1, Ordering::Relaxed);
+                    let reason = "engine pools shut down before this batch could run".to_string();
+                    for req in job.reqs {
+                        let _ = req.reply.send(Err(ServeError::EngineFailure(reason.clone())));
+                    }
                 }
+                PoolMsg::Stream(job) => {
+                    self.metrics
+                        .inflight
+                        .slot(self.engine.target())
+                        .fetch_sub(1, Ordering::Relaxed);
+                    let _ = job.req.reply.send(Err(ServeError::EngineFailure(
+                        "engine pools shut down before this stream chunk could run".to_string(),
+                    )));
+                }
+                PoolMsg::Shutdown => {}
             }
         }
     }
@@ -588,6 +726,72 @@ impl PoolWorker {
         }
     }
 
+    /// One stream chunk: advance the pinned session's h/c under its
+    /// shard lock, reply with per-step logits. Session lookup happens
+    /// HERE, not at dispatch — TTL applies for the whole queued wait,
+    /// and the worker that actually executes owns the expiry metrics.
+    fn execute_stream(&mut self, mut job: StreamJob) {
+        let kind = self.engine.target();
+        let t0 = Instant::now();
+        let now_ns = self.sessions.now_ns();
+        let engine = &self.engine;
+        let outcome = self.sessions.with(job.req.session, now_ns, |sess| {
+            let r = engine.infer_stream(&job.req.frames, job.req.steps, &mut sess.state);
+            if r.is_ok() {
+                // Session-layer step tally: holds for any engine
+                // implementation, echoed to the client on close.
+                sess.steps += job.req.steps as u64;
+            }
+            r
+        });
+        self.metrics.inflight.slot(kind).fetch_sub(1, Ordering::Relaxed);
+        match outcome {
+            Err(SessionError::NotFound(id)) => {
+                let _ = job.req.reply.send(Err(ServeError::SessionNotFound(id)));
+            }
+            Err(SessionError::Expired(id)) => {
+                self.metrics.sessions_expired.fetch_add(1, Ordering::Relaxed);
+                self.metrics.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                let _ = job.req.reply.send(Err(ServeError::SessionExpired(id)));
+            }
+            Ok(Err(e)) => {
+                self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[pool] {} stream failed, re-enqueueing on next pool: {e:#}",
+                    self.engine.label()
+                );
+                job.tried |= 1 << self.index;
+                self.fail_over_stream(job, e);
+            }
+            Ok(Ok(logits)) => {
+                // Cross-kind failover served this chunk: the state (f32,
+                // engine-agnostic, already advanced under the shard
+                // lock) migrates by re-pinning the session here.
+                if !same_kind(job.target, kind) && self.sessions.set_target(job.req.session, kind)
+                {
+                    self.metrics.sessions_migrated.fetch_add(1, Ordering::Relaxed);
+                }
+                let used = if same_kind(job.target, kind) { job.target } else { kind };
+                let compute_ns = t0.elapsed().as_nanos() as u64;
+                complete_stream(job, logits, used, compute_ns, &self.metrics, self.shape);
+            }
+        }
+    }
+
+    fn fail_over_stream(&self, mut job: StreamJob, err: anyhow::Error) {
+        for i in pool_order(&self.peers, job.target) {
+            if job.tried & (1 << i) != 0 {
+                continue;
+            }
+            match self.peers[i].offer_stream(job, &self.metrics) {
+                Ok(()) => return,
+                Err(j) => job = j,
+            }
+        }
+        let msg = format!("all engine pools failed or were saturated (last: {err:#})");
+        let _ = job.req.reply.send(Err(ServeError::EngineFailure(msg)));
+    }
+
     fn fail_over(&self, mut job: BatchJob, err: anyhow::Error) {
         for i in pool_order(&self.peers, job.target) {
             if job.tried & (1 << i) != 0 {
@@ -603,6 +807,39 @@ impl PoolWorker {
             let _ = req.reply.send(Err(ServeError::EngineFailure(msg.clone())));
         }
     }
+}
+
+/// Success tail of a stream chunk: metrics plus one [`StreamReply`]
+/// carrying per-step classes and logits. Streams skip the simulated
+/// batch-latency accounting — the DES models whole-window kernel
+/// launches, not single-row incremental steps; wall/compute histograms
+/// and dispatch counters still record.
+fn complete_stream(
+    job: StreamJob,
+    logits: Vec<f32>,
+    used: Target,
+    compute_ns: u64,
+    metrics: &Metrics,
+    shape: ModelShape,
+) {
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    metrics.compute_latency.record(compute_ns);
+    match used {
+        Target::Gpu(_) => metrics.gpu_dispatches.fetch_add(1, Ordering::Relaxed),
+        _ => metrics.cpu_dispatches.fetch_add(1, Ordering::Relaxed),
+    };
+    let wall_ns = Instant::now().duration_since(job.req.enqueued).as_nanos() as u64;
+    metrics.wall_latency.record(wall_ns);
+    let classes = logits.chunks_exact(shape.num_classes).map(argmax_slice).collect();
+    let _ = job.req.reply.send(Ok(StreamReply {
+        id: job.req.id,
+        session: job.req.session,
+        steps: job.req.steps,
+        classes,
+        logits,
+        wall_ns,
+        target: target_label(used),
+    }));
 }
 
 /// Success tail of a batch: simulated-device accounting, metrics, and
@@ -720,6 +957,27 @@ pub(crate) mod testutil {
                 data[i * self.num_classes + 1] = 1.0;
             }
             Ok(Tensor::new(vec![batch, self.num_classes], data))
+        }
+
+        fn infer_stream(
+            &self,
+            _frames: &[f32],
+            steps: usize,
+            _state: &mut StreamState,
+        ) -> Result<Vec<f32>> {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if self.fail {
+                return Err(anyhow!("FixedEngine({}) told to fail", self.label()));
+            }
+            let mut data = vec![0.0f32; steps * self.num_classes];
+            for t in 0..steps {
+                data[t * self.num_classes + 1] = 1.0;
+            }
+            Ok(data)
+        }
+
+        fn supports_streaming(&self) -> bool {
+            true
         }
     }
 

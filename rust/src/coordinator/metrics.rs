@@ -158,6 +158,15 @@ pub struct Metrics {
     /// Requests dropped at dispatch because their deadline had already
     /// elapsed while they sat in the queue.
     pub expired: AtomicU64,
+    /// Live streaming sessions (gauge): up on `open_session`, down on
+    /// close or TTL eviction (DESIGN.md §11).
+    pub sessions_open: AtomicU64,
+    /// Sessions evicted by TTL — lazily at lookup or by the scheduler's
+    /// periodic sweep.
+    pub sessions_expired: AtomicU64,
+    /// Streams whose affinity pin moved to a different engine pool
+    /// because failover served a chunk elsewhere.
+    pub sessions_migrated: AtomicU64,
 }
 
 impl Metrics {
@@ -186,6 +195,9 @@ impl Metrics {
             ("shed", Value::from(self.shed.load(Ordering::Relaxed))),
             ("expired", Value::from(self.expired.load(Ordering::Relaxed))),
             ("queue_depth", Value::from(self.queue_depth.load(Ordering::Relaxed))),
+            ("sessions_open", Value::from(self.sessions_open.load(Ordering::Relaxed))),
+            ("sessions_expired", Value::from(self.sessions_expired.load(Ordering::Relaxed))),
+            ("sessions_migrated", Value::from(self.sessions_migrated.load(Ordering::Relaxed))),
             ("inflight", self.inflight.to_json()),
             ("wall_latency", self.wall_latency.to_json()),
             ("sim_latency", self.sim_latency.to_json()),
@@ -262,6 +274,18 @@ mod tests {
         // Serializes without panic and round-trips.
         let text = j.to_json();
         assert!(crate::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn session_metrics_in_json() {
+        let m = Metrics::new();
+        m.sessions_open.fetch_add(3, Ordering::Relaxed);
+        m.sessions_expired.fetch_add(2, Ordering::Relaxed);
+        m.sessions_migrated.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("sessions_open").as_usize(), Some(3));
+        assert_eq!(j.get("sessions_expired").as_usize(), Some(2));
+        assert_eq!(j.get("sessions_migrated").as_usize(), Some(1));
     }
 
     #[test]

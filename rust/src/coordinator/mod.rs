@@ -25,6 +25,14 @@
 //! - [`router`]   — the scheduler tying it all together, built via
 //!   [`RouterBuilder`]
 //! - [`metrics`]  — latency histograms, counters, per-target gauges
+//!
+//! Streaming sessions (DESIGN.md §11) ride the same path: `open_session`
+//! pins a session to a stream-capable pool, `classify_stream` chunks
+//! bypass the batcher (one session's private state advance never
+//! batches) and dispatch to the pinned pool with the usual failover
+//! order — a cross-pool failover migrates the pin explicitly and bumps
+//! `sessions_migrated`. State lives in [`crate::session::SessionStore`],
+//! shared by scheduler and pool workers.
 
 pub mod batcher;
 pub mod device;
@@ -44,5 +52,6 @@ pub use policy::{
     Precision,
 };
 pub use router::{
-    ClassifyOptions, Router, RouterBuilder, ServeError, ServeReply, ServeRequest,
+    ClassifyOptions, Router, RouterBuilder, ServeError, ServeReply, ServeRequest, SessionInfo,
+    StreamReply, StreamRequest,
 };

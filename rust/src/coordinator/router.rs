@@ -32,7 +32,7 @@
 //!     .build()?;
 //! ```
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
@@ -45,12 +45,13 @@ use crate::coordinator::batcher::{plan_batch, BatchCollector};
 use crate::coordinator::device::DeviceState;
 use crate::coordinator::engine::{
     BatchJob, CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, Engine, EnginePools,
-    EngineRegistry, PjrtEngine,
+    EngineRegistry, PjrtEngine, StreamJob,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{DecisionCache, LoadSnapshot, OffloadPolicy, Precision};
 use crate::lstm::{LstmModel, WeightFile};
 use crate::runtime::Runtime;
+use crate::session::{SessionError, SessionStore};
 use crate::simulator::{DeviceProfile, Target};
 use crate::tensor::Tensor;
 
@@ -119,6 +120,12 @@ pub enum ServeError {
     /// request that would only time out in the queue costs everyone
     /// else latency (the paper's §4.5 logic applied to overload).
     Overloaded,
+    /// `classify_stream` named a session that does not exist (never
+    /// opened, already closed, or evicted long enough ago that the
+    /// eviction itself is no longer observable).
+    SessionNotFound(u64),
+    /// The session existed but its TTL lapsed; this lookup evicted it.
+    SessionExpired(u64),
 }
 
 impl fmt::Display for ServeError {
@@ -127,19 +134,69 @@ impl fmt::Display for ServeError {
             ServeError::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
             ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
             ServeError::Overloaded => write!(f, "overloaded: scheduler queue full"),
+            ServeError::SessionNotFound(id) => write!(f, "session {id} not found"),
+            ServeError::SessionExpired(id) => write!(f, "session {id} expired"),
         }
     }
 }
 
 impl std::error::Error for ServeError {}
 
+/// One streaming chunk bound for a pinned session (the stream analogue
+/// of [`ServeRequest`]).
+pub struct StreamRequest {
+    pub session: u64,
+    /// Flat `[steps, input_dim]` frames.
+    pub frames: Vec<f32>,
+    pub steps: usize,
+    /// Caller-chosen request id, echoed in the reply.
+    pub id: Option<u64>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Result<StreamReply, ServeError>>,
+}
+
+/// Per-step results for one stream chunk.
+#[derive(Debug, Clone)]
+pub struct StreamReply {
+    pub id: Option<u64>,
+    pub session: u64,
+    pub steps: usize,
+    /// Predicted class after each step (`steps` entries).
+    pub classes: Vec<usize>,
+    /// Flat `[steps, C]` per-step logits.
+    pub logits: Vec<f32>,
+    /// Wall-clock latency on this host (enqueue → reply), ns.
+    pub wall_ns: u64,
+    /// The engine pool that actually served the chunk.
+    pub target: &'static str,
+}
+
+/// What [`Router::open_session`] hands back.
+#[derive(Debug, Clone)]
+pub struct SessionInfo {
+    pub id: u64,
+    /// Label of the engine pool the session is pinned to.
+    pub target: &'static str,
+    pub ttl: Duration,
+}
+
+/// A message on the scheduler's intake channel.
+enum SchedMsg {
+    Classify(ServeRequest),
+    Stream(StreamRequest),
+}
+
 /// Handle to the router thread.
 #[derive(Clone)]
 pub struct Router {
-    tx: mpsc::Sender<ServeRequest>,
+    tx: mpsc::Sender<SchedMsg>,
     pub metrics: Arc<Metrics>,
     pub device: DeviceState,
     shape: ModelShape,
+    sessions: Arc<SessionStore>,
+    /// Registered stream-capable targets, registration order — the pool
+    /// a fresh session pins to is decided here, at open.
+    stream_targets: Arc<Vec<Target>>,
     joiner: Arc<Joiner>,
 }
 
@@ -173,7 +230,12 @@ impl Router {
         }
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(ServeRequest { window, opts, enqueued: Instant::now(), reply: rtx })
+            .send(SchedMsg::Classify(ServeRequest {
+                window,
+                opts,
+                enqueued: Instant::now(),
+                reply: rtx,
+            }))
             .map_err(|_| anyhow!("router gone"))?;
         Ok(rrx)
     }
@@ -205,6 +267,100 @@ impl Router {
     pub fn window_len(&self) -> usize {
         self.shape.seq_len * self.shape.input_dim
     }
+
+    // ---- streaming sessions (DESIGN.md §11) --------------------------
+
+    /// The shared session store (tests, server stats).
+    pub fn sessions(&self) -> &Arc<SessionStore> {
+        &self.sessions
+    }
+
+    /// Open a streaming session and pin it to an engine pool: int8
+    /// sessions pin to the quant pool (PR 4's precision contract —
+    /// int8 is entered only by explicit request), f32 sessions to the
+    /// first stream-capable non-quant engine in registration order.
+    /// The h/c state is allocated in the store, zeroed, always f32.
+    pub fn open_session(&self, precision: Precision) -> Result<SessionInfo> {
+        let target = match precision {
+            Precision::Int8 => self
+                .stream_targets
+                .iter()
+                .copied()
+                .find(|t| matches!(t, Target::CpuQuant))
+                .ok_or_else(|| anyhow!("no quantized streaming engine registered"))?,
+            Precision::F32 => self
+                .stream_targets
+                .iter()
+                .copied()
+                .find(|t| !matches!(t, Target::CpuQuant))
+                .ok_or_else(|| anyhow!("no f32-capable streaming engine registered"))?,
+        };
+        let id = self.sessions.open(self.shape, precision, target);
+        self.metrics.sessions_open.fetch_add(1, Ordering::Relaxed);
+        Ok(SessionInfo {
+            id,
+            target: crate::coordinator::policy::target_label(target),
+            ttl: self.sessions.ttl(),
+        })
+    }
+
+    /// Submit a stream chunk (flat `[steps, input_dim]` frames, one or
+    /// more steps); returns the reply receiver.
+    pub fn submit_stream(
+        &self,
+        session: u64,
+        frames: Vec<f32>,
+        id: Option<u64>,
+    ) -> Result<mpsc::Receiver<Result<StreamReply, ServeError>>> {
+        let dim = self.shape.input_dim;
+        if frames.is_empty() || frames.len() % dim != 0 {
+            return Err(anyhow!(
+                "stream chunk of {} values is not a positive multiple of input_dim {dim}",
+                frames.len()
+            ));
+        }
+        let steps = frames.len() / dim;
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(SchedMsg::Stream(StreamRequest {
+                session,
+                frames,
+                steps,
+                id,
+                enqueued: Instant::now(),
+                reply: rtx,
+            }))
+            .map_err(|_| anyhow!("router gone"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking incremental classify: advance `session` through the
+    /// given frames and return per-step classes + logits. Typed session
+    /// failures ([`ServeError::SessionNotFound`] /
+    /// [`ServeError::SessionExpired`]) surface as downcastable errors,
+    /// same as the classify path.
+    pub fn classify_stream(
+        &self,
+        session: u64,
+        frames: Vec<f32>,
+        id: Option<u64>,
+    ) -> Result<StreamReply> {
+        let rrx = self.submit_stream(session, frames, id)?;
+        rrx.recv().context("router dropped stream reply")?.map_err(anyhow::Error::new)
+    }
+
+    /// Close a session; returns the steps it consumed. Closing an
+    /// unknown (or already-evicted) session is
+    /// [`ServeError::SessionNotFound`].
+    pub fn close_session(&self, session: u64) -> Result<u64> {
+        match self.sessions.close(session) {
+            Some(steps) => {
+                self.metrics.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                Ok(steps)
+            }
+            None => Err(anyhow::Error::new(ServeError::SessionNotFound(session))),
+        }
+    }
 }
 
 impl Drop for Joiner {
@@ -230,6 +386,8 @@ pub struct RouterBuilder {
     cpu_threads: usize,
     max_queue: usize,
     pool_depth: usize,
+    session_ttl: Duration,
+    session_shards: usize,
     device: Option<DeviceState>,
     registry: EngineRegistry,
 }
@@ -249,9 +407,26 @@ impl RouterBuilder {
             cpu_threads: 4,
             max_queue: 256,
             pool_depth: 4,
+            session_ttl: Duration::from_secs(30),
+            session_shards: 16,
             device: None,
             registry: EngineRegistry::new(),
         }
+    }
+
+    /// Idle TTL for streaming sessions (default 30 s): a session
+    /// untouched for this long is evicted — lazily at the next lookup
+    /// or by the scheduler's periodic sweep.
+    pub fn session_ttl(mut self, ttl: Duration) -> Self {
+        self.session_ttl = ttl;
+        self
+    }
+
+    /// Lock stripes in the session store (default 16, rounded up to a
+    /// power of two).
+    pub fn session_shards(mut self, shards: usize) -> Self {
+        self.session_shards = shards;
+        self
     }
 
     /// Model shape served by this router (set BEFORE `.manifest(..)`).
@@ -362,18 +537,38 @@ impl RouterBuilder {
         batches.dedup();
 
         let metrics = Arc::new(Metrics::new());
+        let sessions =
+            Arc::new(SessionStore::with_shards(self.session_ttl, self.session_shards));
+        // Which pools can serve streams is fixed at build: captured here,
+        // consulted at every open_session to pick the affinity pin.
+        let stream_targets: Vec<Target> = self
+            .registry
+            .iter()
+            .filter(|e| e.supports_streaming())
+            .map(|e| e.target())
+            .collect();
         let pools = EnginePools::start(
             self.registry,
             device.clone(),
             Arc::clone(&metrics),
+            Arc::clone(&sessions),
             self.shape,
             self.pool_depth,
         )?;
-        let (tx, rx) = mpsc::channel::<ServeRequest>();
+        let (tx, rx) = mpsc::channel::<SchedMsg>();
+        // Sweep cadence: a fraction of the TTL so an abandoned session
+        // is reclaimed promptly, clamped away from busy-looping.
+        let sweep_every = (self.session_ttl / 4)
+            .clamp(Duration::from_millis(10), Duration::from_secs(1));
         let scheduler = Scheduler {
             rx,
             collector: BatchCollector::new(batches, self.max_wait),
             queue: VecDeque::new(),
+            stream_queue: VecDeque::new(),
+            affinity: HashMap::new(),
+            sessions: Arc::clone(&sessions),
+            sweep_every,
+            last_sweep: Instant::now(),
             pools,
             device: device.clone(),
             metrics: Arc::clone(&metrics),
@@ -392,6 +587,8 @@ impl RouterBuilder {
             metrics,
             device,
             shape: self.shape,
+            sessions,
+            stream_targets: Arc::new(stream_targets),
             joiner: Arc::new(Joiner { handle: Mutex::new(Some(handle)) }),
         })
     }
@@ -401,9 +598,23 @@ impl RouterBuilder {
 /// refactor. Never executes a batch — it admits, batches, decides, and
 /// dispatches to the engine pools.
 struct Scheduler {
-    rx: mpsc::Receiver<ServeRequest>,
+    rx: mpsc::Receiver<SchedMsg>,
     collector: BatchCollector,
     queue: VecDeque<ServeRequest>,
+    /// Stream chunks awaiting dispatch to their pinned pool. Streams
+    /// never batch (each chunk is one session's private state advance),
+    /// so they bypass the collector; FIFO order preserves per-session
+    /// step order for a client that pipelines chunks.
+    stream_queue: VecDeque<StreamRequest>,
+    /// Session affinity map (DESIGN.md §11): the scheduler's view of
+    /// which pool each in-flight stream is pinned to, refreshed from
+    /// the authoritative `Session::target` on every dispatch and pruned
+    /// on expiry/close. Kept so the sweep can say which streams it
+    /// dropped and introspection stays O(1) on the scheduler thread.
+    affinity: HashMap<u64, Target>,
+    sessions: Arc<SessionStore>,
+    sweep_every: Duration,
+    last_sweep: Instant,
     pools: EnginePools,
     device: DeviceState,
     metrics: Arc<Metrics>,
@@ -423,17 +634,24 @@ impl Scheduler {
             self.device.advance_virtual(now.duration_since(last_tick).as_nanos() as u64);
             last_tick = now;
 
+            // Reclaim abandoned sessions on a TTL-fraction cadence.
+            if now.duration_since(self.last_sweep) >= self.sweep_every {
+                self.sweep_sessions();
+                self.last_sweep = now;
+            }
+
             // Wait for work or the batching deadline.
             let timeout = self
                 .collector
                 .time_to_deadline(now)
-                .unwrap_or(Duration::from_millis(50));
+                .unwrap_or(Duration::from_millis(50))
+                .min(self.sweep_every);
             match self.rx.recv_timeout(timeout) {
-                Ok(req) => {
-                    self.admit(req);
+                Ok(msg) => {
+                    self.admit_msg(msg);
                     // Opportunistically drain whatever is already queued.
-                    while let Ok(req) = self.rx.try_recv() {
-                        self.admit(req);
+                    while let Ok(msg) = self.rx.try_recv() {
+                        self.admit_msg(msg);
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -446,16 +664,29 @@ impl Scheduler {
                             std::thread::sleep(POOL_FULL_BACKOFF);
                         }
                     }
+                    while !self.stream_queue.is_empty() {
+                        if !self.dispatch_streams() {
+                            std::thread::sleep(POOL_FULL_BACKOFF);
+                        }
+                    }
                     self.metrics.queue_depth.store(0, Ordering::Relaxed);
                     self.pools.shutdown();
                     return;
                 }
             }
-            if !self.dispatch_once(Instant::now()) {
+            let streams_placed = self.dispatch_streams();
+            if !self.dispatch_once(Instant::now()) || !streams_placed {
                 // Every pool is saturated: back off briefly instead of
                 // spinning on the already-due batching deadline.
                 std::thread::sleep(POOL_FULL_BACKOFF);
             }
+        }
+    }
+
+    fn admit_msg(&mut self, msg: SchedMsg) {
+        match msg {
+            SchedMsg::Classify(req) => self.admit(req),
+            SchedMsg::Stream(req) => self.admit_stream(req),
         }
     }
 
@@ -470,6 +701,68 @@ impl Scheduler {
         self.collector.push(req.enqueued);
         self.queue.push_back(req);
         self.metrics.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Stream chunks share the admission bound (a stream queue allowed
+    /// to grow without limit would starve classify traffic of the same
+    /// protection).
+    fn admit_stream(&mut self, req: StreamRequest) {
+        if self.stream_queue.len() >= self.max_queue {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = req.reply.send(Err(ServeError::Overloaded));
+            return;
+        }
+        self.stream_queue.push_back(req);
+    }
+
+    /// Evict TTL-lapsed sessions and drop their affinity entries; also
+    /// prune affinity entries whose session was closed by the caller
+    /// (close happens on the caller's thread, not here).
+    fn sweep_sessions(&mut self) {
+        let evicted = self.sessions.evict_expired(self.sessions.now_ns());
+        if !evicted.is_empty() {
+            self.metrics.sessions_expired.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+            self.metrics.sessions_open.fetch_sub(evicted.len() as u64, Ordering::Relaxed);
+            for id in &evicted {
+                self.affinity.remove(id);
+            }
+        }
+        let sessions = &self.sessions;
+        self.affinity.retain(|id, _| sessions.contains(*id));
+    }
+
+    /// Dispatch every queued stream chunk to its session's pinned pool
+    /// (failover order after that). Returns `false` when a chunk could
+    /// not be placed because every eligible pool was saturated — it
+    /// stays at the queue front and the caller backs off. Session
+    /// lookup happens per dispatch, so TTL expiry applies to queued
+    /// chunks too and a migrated pin takes effect on the next chunk.
+    fn dispatch_streams(&mut self) -> bool {
+        while let Some(req) = self.stream_queue.pop_front() {
+            let now_ns = self.sessions.now_ns();
+            let target = match self.sessions.target_of(req.session, now_ns) {
+                Ok(t) => t,
+                Err(SessionError::NotFound(id)) => {
+                    self.affinity.remove(&id);
+                    let _ = req.reply.send(Err(ServeError::SessionNotFound(id)));
+                    continue;
+                }
+                Err(SessionError::Expired(id)) => {
+                    self.metrics.sessions_expired.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                    self.affinity.remove(&id);
+                    let _ = req.reply.send(Err(ServeError::SessionExpired(id)));
+                    continue;
+                }
+            };
+            self.affinity.insert(req.session, target);
+            let job = StreamJob { req, target, tried: 0 };
+            if let Err(job) = self.pools.dispatch_stream(job, &self.metrics) {
+                self.stream_queue.push_front(job.req);
+                return false;
+            }
+        }
+        true
     }
 
     /// Form and dispatch at most one batch. Returns `false` when a

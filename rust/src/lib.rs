@@ -22,6 +22,8 @@
 //!   registry over all execution backends, utilization-aware offload policy
 //! - [`server`]     — std::net TCP front-end speaking the typed JSON-lines
 //!   protocol v2 (`Request`/`Response` enums)
+//! - [`session`]    — sharded session store for streaming stateful
+//!   inference (persistent per-client h/c state, TTL eviction)
 //! - [`figures`]    — harnesses that regenerate paper Figs 2–7
 //! - [`util`]       — deterministic RNG + stats helpers
 
@@ -34,6 +36,7 @@ pub mod json;
 pub mod lstm;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod simulator;
 pub mod tensor;
 pub mod util;

@@ -17,6 +17,11 @@
 //! - [`quant::QuantizedLstmModel::forward_batch_quant`] — the batched
 //!   plan on pre-packed int8 weights: integer GEMMs + fast rational
 //!   tail, gated by argmax parity with the f32 oracle (DESIGN.md §10)
+//! - [`model::LstmModel::stream_chunk`] /
+//!   [`quant::QuantizedLstmModel::stream_chunk_quant`] — incremental
+//!   per-step execution resuming from a persistent [`stream::StreamState`]
+//!   (streaming sessions, DESIGN.md §11), bit-for-bit equal to the
+//!   batched plan over the concatenated window
 //!
 //! Weights come from MRNW files written by `python/compile/aot.py`
 //! ([`weights`]), so the native engine and the PJRT artifact execute the
@@ -27,12 +32,14 @@ pub mod cell;
 pub mod model;
 pub mod plan;
 pub mod quant;
+pub mod stream;
 pub mod threaded;
 pub mod weights;
 
 pub use cell::{lstm_cell, LstmCellWeights, FORGET_BIAS};
 pub use model::LstmModel;
 pub use plan::{step_rows, BatchArena};
+pub use stream::StreamState;
 pub use quant::{
     fast_sigmoid, fast_tanh, QuantizedCellWeights, QuantizedLstmModel, SIGMOID_MAX_ABS_ERR,
     TANH_MAX_ABS_ERR,

@@ -136,14 +136,27 @@ impl LstmModel {
         for (hrow, lrow) in
             h_last.chunks_exact(s.hidden).zip(logits.chunks_exact_mut(s.num_classes))
         {
-            lrow.copy_from_slice(self.b_out.data());
-            for (r, &hv) in hrow.iter().enumerate() {
-                for (l, wv) in lrow.iter_mut().zip(self.w_out.row(r)) {
-                    *l += hv * wv;
-                }
-            }
+            self.head_into(hrow, lrow);
         }
         logits
+    }
+
+    /// The classifier head for one `[H]` hidden row into one `[C]`
+    /// logits row — the single accumulation-order-bearing implementation
+    /// shared by the batched and streaming paths (bit-for-bit parity by
+    /// construction).
+    pub(crate) fn head_into(&self, hrow: &[f32], lrow: &mut [f32]) {
+        lrow.copy_from_slice(self.b_out.data());
+        for (r, &hv) in hrow.iter().enumerate() {
+            for (l, wv) in lrow.iter_mut().zip(self.w_out.row(r)) {
+                *l += hv * wv;
+            }
+        }
+    }
+
+    /// Per-layer cell weights, for the streaming driver (`lstm::stream`).
+    pub(crate) fn cell_layers(&self) -> &[LstmCellWeights] {
+        &self.layers
     }
 
     /// Predicted class for one window, under the crate-wide "first finite

@@ -485,14 +485,21 @@ impl QuantizedLstmModel {
         for (hrow, lrow) in
             h_last.chunks_exact(s.hidden).zip(logits.chunks_exact_mut(s.num_classes))
         {
-            lrow.copy_from_slice(self.b_out.data());
-            for (r, &hv) in hrow.iter().enumerate() {
-                for (l, wv) in lrow.iter_mut().zip(self.w_out.row(r)) {
-                    *l += hv * wv;
-                }
-            }
+            self.head_into(hrow, lrow);
         }
         logits
+    }
+
+    /// The f32 classifier head for one `[H]` hidden row — same
+    /// accumulation order as `LstmModel::head_into`, shared by the
+    /// batched and streaming quant paths.
+    pub(crate) fn head_into(&self, hrow: &[f32], lrow: &mut [f32]) {
+        lrow.copy_from_slice(self.b_out.data());
+        for (r, &hv) in hrow.iter().enumerate() {
+            for (l, wv) in lrow.iter_mut().zip(self.w_out.row(r)) {
+                *l += hv * wv;
+            }
+        }
     }
 
     /// Predicted class for one window under the crate-wide "first finite

@@ -1,0 +1,171 @@
+//! Incremental (streaming) LSTM execution — per-step inference that
+//! resumes from persisted h/c state (DESIGN.md §11).
+//!
+//! One-shot classification throws the recurrent state away after every
+//! `[T, I]` window. Streaming workloads (continuous speech, keyword
+//! spotting) instead feed an unbounded frame sequence and want logits
+//! after every step. [`StreamState`] holds exactly the state a window
+//! pass would have accumulated — one h and one c plane per layer — and
+//! [`LstmModel::stream_chunk`] advances it frame by frame through the
+//! *same* public kernels the batched plan uses ([`step_rows`] /
+//! [`step_rows_quant`] at `rows = 1`), with the head accumulated in the
+//! same order as `forward_rows`.
+//!
+//! That shared-kernel discipline is the parity contract: T single-step
+//! calls from a fresh state produce h/c and logits **bit-for-bit equal**
+//! to one `forward_batch` over the concatenated `[T, I]` window (f32),
+//! and `stream_chunk_quant` likewise matches `forward_batch_quant`
+//! bit-for-bit — verified in `rust/tests/sessions.rs`. Note what the
+//! contract does *not* depend on: chunking. Streaming 1+1+…+1 frames,
+//! one T-frame chunk, or any split in between all visit the identical
+//! per-element accumulation sequence.
+//!
+//! h/c stay f32 even for int8 sessions: the quantized path (DESIGN.md
+//! §10) quantizes weights and per-step activations but carries state in
+//! f32 precisely so requantization error cannot compound across
+//! timesteps — for a long-lived stream that property is load-bearing,
+//! not an implementation detail.
+
+use crate::config::ModelShape;
+use crate::lstm::model::LstmModel;
+use crate::lstm::plan::step_rows;
+use crate::lstm::quant::{step_rows_quant, QuantScratch, QuantizedLstmModel};
+
+/// Persistent per-stream recurrent state: one `[H]` h plane and one
+/// `[H]` c plane per layer, plus the scratch buffers a single-row step
+/// needs (`[4H]` gates; lazily-grown quant scratch). Steady-state
+/// streaming performs zero heap allocations.
+#[derive(Debug, Clone)]
+pub struct StreamState {
+    shape: ModelShape,
+    h: Vec<Vec<f32>>,
+    c: Vec<Vec<f32>>,
+    gates: Vec<f32>,
+    quant: QuantScratch,
+    steps: u64,
+}
+
+impl StreamState {
+    pub fn new(shape: ModelShape) -> Self {
+        Self {
+            shape,
+            h: vec![vec![0.0; shape.hidden]; shape.num_layers],
+            c: vec![vec![0.0; shape.hidden]; shape.num_layers],
+            gates: vec![0.0; 4 * shape.hidden],
+            quant: QuantScratch::default(),
+            steps: 0,
+        }
+    }
+
+    pub fn shape(&self) -> ModelShape {
+        self.shape
+    }
+
+    /// Total frames consumed since the state was opened (or last reset).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The h plane of `layer` — exposed for parity tests and state
+    /// inspection; `[H]` floats.
+    pub fn h_plane(&self, layer: usize) -> &[f32] {
+        &self.h[layer]
+    }
+
+    /// The c plane of `layer`; `[H]` floats.
+    pub fn c_plane(&self, layer: usize) -> &[f32] {
+        &self.c[layer]
+    }
+
+    /// Zero all planes and the step counter, as if freshly opened.
+    pub fn reset(&mut self) {
+        for v in self.h.iter_mut().chain(self.c.iter_mut()) {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.steps = 0;
+    }
+}
+
+impl LstmModel {
+    /// Advance `state` through `steps` frames (`frames` is flat
+    /// `[steps, I]`, row-major) and return flat `[steps, C]` logits —
+    /// one logits row *per step*, computed from the last layer's h after
+    /// that step.
+    ///
+    /// Drives [`step_rows`] at `rows = 1` from the stored planes, so a
+    /// fresh state streamed through a full window reproduces
+    /// `forward_batch` bit-for-bit (see module docs).
+    pub fn stream_chunk(&self, frames: &[f32], steps: usize, state: &mut StreamState) -> Vec<f32> {
+        let s = self.shape;
+        assert_eq!(state.shape(), s, "stream state built for a different model shape");
+        assert!(steps >= 1, "stream_chunk needs at least one frame");
+        assert_eq!(frames.len(), steps * s.input_dim);
+        let layers = self.cell_layers();
+        let mut logits = vec![0.0f32; steps * s.num_classes];
+        for t in 0..steps {
+            let x = &frames[t * s.input_dim..(t + 1) * s.input_dim];
+            for li in 0..s.num_layers {
+                // Same split-borrow trick as the batched plan: layer li
+                // reads layer li-1's fresh h while mutating its own.
+                let (prev, cur) = state.h.split_at_mut(li);
+                let input: &[f32] = if li == 0 { x } else { &prev[li - 1] };
+                step_rows(&layers[li], input, &mut cur[0], &mut state.c[li], &mut state.gates, 1);
+            }
+            self.head_into(
+                &state.h[s.num_layers - 1],
+                &mut logits[t * s.num_classes..(t + 1) * s.num_classes],
+            );
+        }
+        state.steps += steps as u64;
+        logits
+    }
+
+    /// Single-frame convenience wrapper over [`Self::stream_chunk`].
+    pub fn stream_step(&self, frame: &[f32], state: &mut StreamState) -> Vec<f32> {
+        self.stream_chunk(frame, 1, state)
+    }
+}
+
+impl QuantizedLstmModel {
+    /// Int8 mirror of [`LstmModel::stream_chunk`]: advances the *same*
+    /// f32 h/c planes through [`step_rows_quant`] at `rows = 1`. State
+    /// stays f32 (see module docs); a fresh state streamed through a
+    /// full window reproduces `forward_batch_quant` bit-for-bit.
+    pub fn stream_chunk_quant(
+        &self,
+        frames: &[f32],
+        steps: usize,
+        state: &mut StreamState,
+    ) -> Vec<f32> {
+        let s = self.shape;
+        assert_eq!(state.shape(), s, "stream state built for a different model shape");
+        assert!(steps >= 1, "stream_chunk_quant needs at least one frame");
+        assert_eq!(frames.len(), steps * s.input_dim);
+        let layers = self.layers();
+        let k_max = layers.iter().map(|l| l.k_padded_max()).max().unwrap_or(0);
+        state.quant.reserve(1, k_max, 4 * s.hidden);
+        let mut logits = vec![0.0f32; steps * s.num_classes];
+        for t in 0..steps {
+            let x = &frames[t * s.input_dim..(t + 1) * s.input_dim];
+            for li in 0..s.num_layers {
+                let (prev, cur) = state.h.split_at_mut(li);
+                let input: &[f32] = if li == 0 { x } else { &prev[li - 1] };
+                step_rows_quant(
+                    &layers[li],
+                    input,
+                    &mut cur[0],
+                    &mut state.c[li],
+                    &mut state.gates,
+                    &mut state.quant,
+                    1,
+                );
+            }
+            self.head_into(
+                &state.h[s.num_layers - 1],
+                &mut logits[t * s.num_classes..(t + 1) * s.num_classes],
+            );
+        }
+        state.steps += steps as u64;
+        logits
+    }
+}

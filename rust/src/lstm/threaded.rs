@@ -81,6 +81,13 @@ impl ThreadedLstm {
     /// Run a `[B, T, D]` batch across the pool; returns `[B, C]` logits in
     /// input order. Default chunking policy: `ceil(B / num_threads)` rows
     /// per chunk, so every worker gets at most one chunk per batch.
+    /// The shared model, for callers that need a single-row entry point
+    /// next to the pool (e.g. streaming sessions — one row gains nothing
+    /// from fan-out).
+    pub fn model(&self) -> &Arc<LstmModel> {
+        &self.model
+    }
+
     pub fn forward_batch(&self, x: &Tensor) -> Tensor {
         let batch = x.shape()[0];
         self.forward_batch_chunked(x, batch.div_ceil(self.num_threads).max(1))

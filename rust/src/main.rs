@@ -44,6 +44,8 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "cpu-load",
                 "max-queue",
                 "max-connections",
+                "idle-timeout-ms",
+                "session-ttl-ms",
             ],
             &[],
         ),
@@ -165,6 +167,8 @@ fn print_help() {
          \x20                                      [--device nexus5|nexus6p] [--max-wait-ms 2]\n\
          \x20                                      [--cpu-threads 4] [--gpu-load U] [--cpu-load U]\n\
          \x20                                      [--max-queue 256] [--max-connections 64]\n\
+         \x20                                      [--idle-timeout-ms 0 (never)]\n\
+         \x20                                      [--session-ttl-ms 30000]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
          \x20                                      [--target gpu|cpu|cpu-multi|cpu-quant]\n\
@@ -210,14 +214,20 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
         device.set_cpu_util(parse_util("cpu-load", raw)?);
     }
     let runtime = Runtime::start(&manifest)?;
-    let router = Router::builder()
+    let mut builder = Router::builder()
         .policy(policy)
         .device(device)
         .max_wait(Duration::from_millis(max_wait))
         .cpu_threads(cpu_threads)
-        .max_queue(max_queue)
-        .manifest(&manifest, runtime)?
-        .build()?;
+        .max_queue(max_queue);
+    if let Some(raw) = args.get("session-ttl-ms") {
+        let ttl: u64 = raw.parse().context("--session-ttl-ms")?;
+        if ttl == 0 {
+            return Err(anyhow!("--session-ttl-ms must be positive"));
+        }
+        builder = builder.session_ttl(Duration::from_millis(ttl));
+    }
+    let router = builder.manifest(&manifest, runtime)?.build()?;
     Ok((router, manifest))
 }
 
@@ -225,8 +235,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let max_connections: usize =
         args.get_or("max-connections", "64").parse().context("--max-connections")?;
+    // 0 = never time out (the historical behavior).
+    let idle_ms: u64 =
+        args.get_or("idle-timeout-ms", "0").parse().context("--idle-timeout-ms")?;
     let (router, manifest) = build_router(args)?;
-    let server = Server::builder().max_connections(max_connections).bind(&addr, router)?;
+    let server = Server::builder()
+        .max_connections(max_connections)
+        .idle_timeout(Duration::from_millis(idle_ms))
+        .bind(&addr, router)?;
     println!(
         "mobirnn serving {} on {} (policy {}, device {}) — JSON lines, protocol v{}; Ctrl-C to stop",
         manifest.default_variant,
@@ -400,6 +416,22 @@ mod tests {
         // classify takes max-queue but not the transport-level cap.
         assert!(Args::from_parts("classify", &argv(&["--max-queue", "16"])).is_ok());
         let err = Args::from_parts("classify", &argv(&["--max-connections", "8"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn serve_streaming_flags_parse() {
+        let a = Args::from_parts(
+            "serve",
+            &argv(&["--idle-timeout-ms", "5000", "--session-ttl-ms", "60000"]),
+        )
+        .unwrap();
+        assert_eq!(a.get("idle-timeout-ms"), Some("5000"));
+        assert_eq!(a.get("session-ttl-ms"), Some("60000"));
+        // Session knobs are serve-only: classify has no sessions.
+        let err = Args::from_parts("classify", &argv(&["--session-ttl-ms", "1000"]))
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown flag"), "{err}");

@@ -23,7 +23,21 @@
 //! ← {"type":"stats","v":2,"gpu_util":...,"cpu_util":...,"metrics":{...}}
 //! → {"type":"ping"}   ← {"type":"pong","v":2}
 //! → {"type":"quit"}   ← {"type":"bye","v":2}    (connection closes)
+//! → {"type":"open_session","id":1,"precision":"int8"}
+//! ← {"type":"session_opened","v":2,"id":1,"session":9,
+//!    "target":"cpu-quant","ttl_ms":30000}
+//! → {"type":"classify_stream","id":2,"session":9,"frames":[... k*D ...]}
+//! ← {"type":"stream_result","v":2,"id":2,"session":9,"steps":k,
+//!    "classes":[...],"logits":[... k*C ...],"wall_latency_us":...,
+//!    "target":"cpu-quant"}
+//! → {"type":"close_session","session":9}
+//! ← {"type":"session_closed","v":2,"session":9,"steps":42}
 //! ```
+//!
+//! Streaming sessions (DESIGN.md §11) keep per-client LSTM state
+//! server-side between `classify_stream` calls; an idle session is
+//! evicted after its TTL and later references answer with the typed
+//! `session_not_found` / `session_expired` error codes.
 
 pub mod protocol;
 pub mod tcp;

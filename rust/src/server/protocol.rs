@@ -14,7 +14,7 @@
 use std::time::Duration;
 
 use crate::coordinator::{
-    parse_target, ClassifyOptions, Precision, Router, ServeError, ServeReply,
+    parse_target, ClassifyOptions, Precision, Router, ServeError, ServeReply, StreamReply,
 };
 use crate::json::{obj, CodecError, FromValue, ToValue, Value};
 use crate::simulator::Target;
@@ -42,6 +42,12 @@ pub enum ErrorCode {
     /// Load shed: the scheduler's admission queue (or the server's
     /// connection cap) was full; retry later or elsewhere.
     Overloaded,
+    /// The stream referenced a session id the store has never seen (or
+    /// one already closed).
+    SessionNotFound,
+    /// The session existed but idled past its TTL and was evicted; the
+    /// client must `open_session` again (state is gone).
+    SessionExpired,
 }
 
 impl ErrorCode {
@@ -54,6 +60,8 @@ impl ErrorCode {
             ErrorCode::Deadline => "deadline",
             ErrorCode::Engine => "engine",
             ErrorCode::Overloaded => "overloaded",
+            ErrorCode::SessionNotFound => "session_not_found",
+            ErrorCode::SessionExpired => "session_expired",
         }
     }
 
@@ -66,6 +74,8 @@ impl ErrorCode {
             "deadline" => Some(ErrorCode::Deadline),
             "engine" => Some(ErrorCode::Engine),
             "overloaded" => Some(ErrorCode::Overloaded),
+            "session_not_found" => Some(ErrorCode::SessionNotFound),
+            "session_expired" => Some(ErrorCode::SessionExpired),
             _ => None,
         }
     }
@@ -77,6 +87,8 @@ fn serve_error_code(e: &ServeError) -> ErrorCode {
         ServeError::DeadlineExceeded => ErrorCode::Deadline,
         ServeError::Overloaded => ErrorCode::Overloaded,
         ServeError::EngineFailure(_) => ErrorCode::Engine,
+        ServeError::SessionNotFound(_) => ErrorCode::SessionNotFound,
+        ServeError::SessionExpired(_) => ErrorCode::SessionExpired,
     }
 }
 
@@ -105,6 +117,16 @@ pub enum Request {
     /// Classify several windows in one round trip; they enter the
     /// batcher together.
     ClassifyBatch { id: Option<u64>, windows: Vec<Vec<f32>> },
+    /// Open a streaming session (DESIGN.md §11): allocates persistent
+    /// h/c state server-side and pins the session to an engine pool.
+    /// Absent precision means f32; int8 pins to the quant pool.
+    OpenSession { id: Option<u64>, precision: Option<Precision> },
+    /// Advance a session through flat `[steps, input_dim]` frames (one
+    /// or more timesteps) and get per-step classes + logits back.
+    ClassifyStream { id: Option<u64>, session: u64, frames: Vec<f32> },
+    /// Close a session, freeing its state immediately (instead of
+    /// waiting for TTL eviction).
+    CloseSession { id: Option<u64>, session: u64 },
 }
 
 /// A server → client message.
@@ -118,6 +140,23 @@ pub enum Response {
     Stats { gpu_util: f64, cpu_util: f64, metrics: Value },
     Result { id: Option<u64>, outcome: ClassifyOutcome },
     BatchResult { id: Option<u64>, outcomes: Vec<ClassifyOutcome> },
+    /// `open_session` succeeded; carries the new session id, the pool it
+    /// is pinned to, and the idle TTL the client must stay inside.
+    SessionOpened { id: Option<u64>, session: u64, target: String, ttl_ms: u64 },
+    /// Per-step results for one `classify_stream` chunk: `classes[t]`
+    /// and `logits[t*C..(t+1)*C]` are the prediction after step `t`.
+    StreamResult {
+        id: Option<u64>,
+        session: u64,
+        steps: usize,
+        classes: Vec<usize>,
+        logits: Vec<f32>,
+        wall_latency_us: f64,
+        target: String,
+    },
+    /// `close_session` succeeded; echoes the total steps the session
+    /// consumed over its lifetime.
+    SessionClosed { id: Option<u64>, session: u64, steps: u64 },
     Error { id: Option<u64>, code: ErrorCode, message: String },
 }
 
@@ -235,6 +274,24 @@ impl ToValue for Request {
                 fields.push(("windows", windows.to_value()));
                 obj(fields)
             }
+            Request::OpenSession { id, precision } => {
+                let mut fields = envelope("open_session", *id);
+                if let Some(p) = precision {
+                    fields.push(("precision", Value::from(p.as_str())));
+                }
+                obj(fields)
+            }
+            Request::ClassifyStream { id, session, frames } => {
+                let mut fields = envelope("classify_stream", *id);
+                fields.push(("session", Value::from(*session)));
+                fields.push(("frames", frames.to_value()));
+                obj(fields)
+            }
+            Request::CloseSession { id, session } => {
+                let mut fields = envelope("close_session", *id);
+                fields.push(("session", Value::from(*session)));
+                obj(fields)
+            }
         }
     }
 }
@@ -292,6 +349,29 @@ impl FromValue for Request {
                 id: field(v, "id")?,
                 windows: field(v, "windows")?,
             }),
+            "open_session" => {
+                let precision = match v.get("precision") {
+                    Value::Null => None,
+                    p => {
+                        let label = p
+                            .as_str()
+                            .ok_or_else(|| CodecError::field("precision", "expected a string"))?;
+                        Some(Precision::parse(label).ok_or_else(|| {
+                            CodecError::field("precision", format!("unknown precision {label:?}"))
+                        })?)
+                    }
+                };
+                Ok(Request::OpenSession { id: field(v, "id")?, precision })
+            }
+            "classify_stream" => Ok(Request::ClassifyStream {
+                id: field(v, "id")?,
+                session: field(v, "session")?,
+                frames: field(v, "frames")?,
+            }),
+            "close_session" => Ok(Request::CloseSession {
+                id: field(v, "id")?,
+                session: field(v, "session")?,
+            }),
             other => Err(CodecError::new(format!("unknown type {other:?}"))),
         }
     }
@@ -325,6 +405,37 @@ impl ToValue for Response {
             Response::BatchResult { id, outcomes } => {
                 let mut fields = envelope("batch_result", *id);
                 fields.push(("results", outcomes.to_value()));
+                obj(fields)
+            }
+            Response::SessionOpened { id, session, target, ttl_ms } => {
+                let mut fields = envelope("session_opened", *id);
+                fields.push(("session", Value::from(*session)));
+                fields.push(("target", Value::from(target.clone())));
+                fields.push(("ttl_ms", Value::from(*ttl_ms)));
+                obj(fields)
+            }
+            Response::StreamResult {
+                id,
+                session,
+                steps,
+                classes,
+                logits,
+                wall_latency_us,
+                target,
+            } => {
+                let mut fields = envelope("stream_result", *id);
+                fields.push(("session", Value::from(*session)));
+                fields.push(("steps", Value::from(*steps)));
+                fields.push(("classes", classes.to_value()));
+                fields.push(("logits", logits.to_value()));
+                fields.push(("wall_latency_us", Value::Num(*wall_latency_us)));
+                fields.push(("target", Value::from(target.clone())));
+                obj(fields)
+            }
+            Response::SessionClosed { id, session, steps } => {
+                let mut fields = envelope("session_closed", *id);
+                fields.push(("session", Value::from(*session)));
+                fields.push(("steps", Value::from(*steps)));
                 obj(fields)
             }
             Response::Error { id, code, message } => {
@@ -370,6 +481,26 @@ impl FromValue for Response {
                 id: read_id(v),
                 outcomes: Vec::<ClassifyOutcome>::from_value(v.get("results"))
                     .map_err(|e| CodecError::field("results", e))?,
+            }),
+            "session_opened" => Ok(Response::SessionOpened {
+                id: read_id(v),
+                session: field(v, "session")?,
+                target: field(v, "target")?,
+                ttl_ms: field(v, "ttl_ms")?,
+            }),
+            "stream_result" => Ok(Response::StreamResult {
+                id: read_id(v),
+                session: field(v, "session")?,
+                steps: field(v, "steps")?,
+                classes: field(v, "classes")?,
+                logits: field(v, "logits")?,
+                wall_latency_us: field(v, "wall_latency_us")?,
+                target: field(v, "target")?,
+            }),
+            "session_closed" => Ok(Response::SessionClosed {
+                id: read_id(v),
+                session: field(v, "session")?,
+                steps: field(v, "steps")?,
             }),
             "error" => {
                 let code_str: String = field(v, "code")?;
@@ -527,6 +658,66 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
             }
             Response::BatchResult { id, outcomes }
         }
+        Request::OpenSession { id, precision } => {
+            match router.open_session(precision.unwrap_or(Precision::F32)) {
+                Ok(info) => Response::SessionOpened {
+                    id,
+                    session: info.id,
+                    target: info.target.to_string(),
+                    ttl_ms: info.ttl.as_millis() as u64,
+                },
+                Err(e) => {
+                    let code = e
+                        .downcast_ref::<ServeError>()
+                        .map_or(ErrorCode::BadRequest, serve_error_code);
+                    Response::Error { id, code, message: format!("{e:#}") }
+                }
+            }
+        }
+        Request::ClassifyStream { id, session, frames } => {
+            let dim = router.shape().input_dim;
+            if frames.is_empty() || frames.len() % dim != 0 {
+                return Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!(
+                        "frames has {} values, expected a positive multiple of input_dim {dim}",
+                        frames.len()
+                    ),
+                };
+            }
+            match router.classify_stream(session, frames, id) {
+                Ok(reply) => stream_result(id, &reply),
+                Err(e) => {
+                    let code = e
+                        .downcast_ref::<ServeError>()
+                        .map_or(ErrorCode::Engine, serve_error_code);
+                    Response::Error { id, code, message: format!("{e:#}") }
+                }
+            }
+        }
+        Request::CloseSession { id, session } => match router.close_session(session) {
+            Ok(steps) => Response::SessionClosed { id, session, steps },
+            Err(e) => {
+                let code = e
+                    .downcast_ref::<ServeError>()
+                    .map_or(ErrorCode::Engine, serve_error_code);
+                Response::Error { id, code, message: format!("{e:#}") }
+            }
+        },
+    }
+}
+
+/// The wire form of a [`StreamReply`].
+fn stream_result(id: Option<u64>, r: &StreamReply) -> Response {
+    Response::StreamResult {
+        id,
+        session: r.session,
+        steps: r.steps,
+        classes: r.classes.clone(),
+        logits: r.logits.clone(),
+        wall_latency_us: r.wall_ns as f64 / 1e3,
+        target: r.target.to_string(),
     }
 }
 
@@ -597,6 +788,10 @@ mod tests {
                 id: Some(1),
                 windows: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
             },
+            Request::OpenSession { id: Some(12), precision: None },
+            Request::OpenSession { id: None, precision: Some(Precision::Int8) },
+            Request::ClassifyStream { id: Some(13), session: 7, frames: vec![0.5, -0.25, 1.0] },
+            Request::CloseSession { id: None, session: 7 },
         ];
         for req in cases {
             // Value round-trip.
@@ -631,6 +826,22 @@ mod tests {
             Response::Result { id: Some(9), outcome: outcome.clone() },
             Response::Result { id: None, outcome: outcome.clone() },
             Response::BatchResult { id: Some(2), outcomes: vec![outcome.clone(), outcome] },
+            Response::SessionOpened {
+                id: Some(10),
+                session: 3,
+                target: "cpu-quant".into(),
+                ttl_ms: 30_000,
+            },
+            Response::StreamResult {
+                id: Some(11),
+                session: 3,
+                steps: 2,
+                classes: vec![1, 4],
+                logits: vec![0.0, 1.0, -0.5, 0.25, 2.0, 0.125],
+                wall_latency_us: 42.5,
+                target: "cpu".into(),
+            },
+            Response::SessionClosed { id: None, session: 3, steps: 17 },
             Response::Error {
                 id: Some(5),
                 code: ErrorCode::InvalidLoad,
@@ -660,6 +871,13 @@ mod tests {
         );
         assert_eq!(ErrorCode::parse("overloaded"), Some(ErrorCode::Overloaded));
         assert_eq!(ErrorCode::Overloaded.as_str(), "overloaded");
+        assert_eq!(
+            serve_error_code(&ServeError::SessionNotFound(4)),
+            ErrorCode::SessionNotFound
+        );
+        assert_eq!(serve_error_code(&ServeError::SessionExpired(4)), ErrorCode::SessionExpired);
+        assert_eq!(ErrorCode::parse("session_not_found"), Some(ErrorCode::SessionNotFound));
+        assert_eq!(ErrorCode::parse("session_expired"), Some(ErrorCode::SessionExpired));
     }
 
     #[test]
@@ -844,6 +1062,99 @@ mod tests {
                 assert_eq!(id, Some(1));
             }
             other => panic!("expected deadline error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_lifecycle_over_the_protocol() {
+        let r = router();
+        // Open: pins to the only stream-capable pool (FixedEngine "cpu").
+        let session = match handle_line(&r, r#"{"type":"open_session","id":1,"v":2}"#) {
+            Response::SessionOpened { id, session, target, ttl_ms } => {
+                assert_eq!(id, Some(1));
+                assert_eq!(target, "cpu");
+                assert!(ttl_ms > 0);
+                session
+            }
+            other => panic!("expected session_opened, got {other:?}"),
+        };
+        // Stream two steps (input_dim = 3 -> 6 values).
+        let line = format!(
+            r#"{{"type":"classify_stream","id":2,"session":{session},"frames":[0.1,0.2,0.3,0.4,0.5,0.6]}}"#
+        );
+        match handle_line(&r, &line) {
+            Response::StreamResult { id, session: s, steps, classes, logits, target, .. } => {
+                assert_eq!(id, Some(2));
+                assert_eq!(s, session);
+                assert_eq!(steps, 2);
+                assert_eq!(classes, vec![1, 1], "FixedEngine predicts class 1 per step");
+                assert_eq!(logits.len(), 2 * 6);
+                assert_eq!(target, "cpu");
+            }
+            other => panic!("expected stream_result, got {other:?}"),
+        }
+        // Close: echoes the steps consumed.
+        let line = format!(r#"{{"type":"close_session","id":3,"session":{session}}}"#);
+        match handle_line(&r, &line) {
+            Response::SessionClosed { id, session: s, steps } => {
+                assert_eq!(id, Some(3));
+                assert_eq!(s, session);
+                assert_eq!(steps, 2);
+            }
+            other => panic!("expected session_closed, got {other:?}"),
+        }
+        // Streaming into a closed session is the typed not-found error.
+        let line = format!(
+            r#"{{"type":"classify_stream","id":4,"session":{session},"frames":[0.1,0.2,0.3]}}"#
+        );
+        match handle_line(&r, &line) {
+            Response::Error { id, code, .. } => {
+                assert_eq!(id, Some(4));
+                assert_eq!(code, ErrorCode::SessionNotFound);
+            }
+            other => panic!("expected session_not_found, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_frame_validation_is_a_bad_request() {
+        let r = router();
+        let session = match handle_request(
+            &r,
+            Request::OpenSession { id: None, precision: None },
+        ) {
+            Response::SessionOpened { session, .. } => session,
+            other => panic!("expected session_opened, got {other:?}"),
+        };
+        // Empty and non-multiple-of-input_dim chunks never reach the
+        // scheduler.
+        for frames in [vec![], vec![0.5, 0.5]] {
+            match handle_request(
+                &r,
+                Request::ClassifyStream { id: Some(9), session, frames },
+            ) {
+                Response::Error { id, code, message } => {
+                    assert_eq!(id, Some(9));
+                    assert_eq!(code, ErrorCode::BadRequest);
+                    assert!(message.contains("input_dim"), "{message}");
+                }
+                other => panic!("expected bad_request, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn open_session_without_capable_engine_is_typed() {
+        // No quant engine registered: int8 open fails loudly, not with a
+        // dropped connection.
+        let r = router();
+        match handle_line(&r, r#"{"type":"open_session","id":5,"precision":"int8"}"#) {
+            Response::Error { id, code, message } => {
+                assert_eq!(id, Some(5));
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("quantized"), "{message}");
+            }
+            other => panic!("expected error, got {other:?}"),
         }
     }
 

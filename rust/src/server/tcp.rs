@@ -17,7 +17,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::Router;
+use crate::coordinator::{Precision, Router};
 use crate::json::{FromValue, ToValue, Value};
 use crate::server::protocol::{self, ClassifyOutcome, ErrorCode, Request, Response};
 
@@ -31,11 +31,12 @@ struct ConnSlot {
 /// Transport knobs; build with [`Server::builder`].
 pub struct ServerBuilder {
     max_connections: usize,
+    idle_timeout: Option<std::time::Duration>,
 }
 
 impl ServerBuilder {
     pub fn new() -> Self {
-        Self { max_connections: 64 }
+        Self { max_connections: 64, idle_timeout: None }
     }
 
     /// Cap on concurrently served connections (default 64). Clients
@@ -47,10 +48,20 @@ impl ServerBuilder {
         self
     }
 
+    /// Close a connection that sends nothing for this long (default:
+    /// never). Streaming clients hold connections open between chunks;
+    /// without a bound, an abandoned stream pins one `mobirnn-conn`
+    /// thread (and one `max_connections` slot) forever. Expiry is clean:
+    /// the handler writes one `bye` line, then closes. Zero disables.
+    pub fn idle_timeout(mut self, d: std::time::Duration) -> Self {
+        self.idle_timeout = (!d.is_zero()).then_some(d);
+        self
+    }
+
     /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
     /// `router` until stopped.
     pub fn bind(self, addr: &str, router: Router) -> Result<Server> {
-        Server::start(addr, router, self.max_connections)
+        Server::start(addr, router, self.max_connections, self.idle_timeout)
     }
 }
 
@@ -81,7 +92,12 @@ impl Server {
         Self::builder().bind(addr, router)
     }
 
-    fn start(addr: &str, router: Router, max_connections: usize) -> Result<Self> {
+    fn start(
+        addr: &str,
+        router: Router,
+        max_connections: usize,
+        idle_timeout: Option<std::time::Duration>,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -128,7 +144,7 @@ impl Server {
                             let spawned = std::thread::Builder::new()
                                 .name("mobirnn-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_connection(stream, router);
+                                    let _ = handle_connection(stream, router, idle_timeout);
                                 });
                             if let Ok(handle) = spawned {
                                 conns2
@@ -210,16 +226,43 @@ fn refuse_connection(mut stream: TcpStream, max_connections: usize) {
     }
 }
 
-fn handle_connection(stream: TcpStream, router: Router) -> Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    router: Router,
+    idle_timeout: Option<std::time::Duration>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    if let Some(d) = idle_timeout {
+        stream.set_read_timeout(Some(d)).ok();
+    }
     let mut writer = stream.try_clone().context("clone stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client hung up.
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle past the timeout (a stalled mid-line write counts
+                // too): one `bye` line, then a clean close, so the
+                // thread and its max_connections slot come back.
+                let mut out = Response::Bye.to_value().to_json();
+                out.push('\n');
+                let _ = writer.write_all(out.as_bytes());
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        }
         if line.trim().is_empty() {
             continue;
         }
-        let resp = protocol::handle_line(&router, &line);
+        let resp = protocol::handle_line(&router, line.trim_end());
         let close = matches!(resp, Response::Bye);
         let mut out = resp.to_value().to_json();
         out.push('\n');
@@ -297,6 +340,48 @@ impl Client {
     pub fn stats(&mut self) -> Result<(f64, f64, Value)> {
         match self.call(&Request::Stats)? {
             Response::Stats { gpu_util, cpu_util, metrics } => Ok((gpu_util, cpu_util, metrics)),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Open a streaming session; returns its id. `None` precision means
+    /// f32.
+    pub fn open_session(&mut self, precision: Option<Precision>) -> Result<u64> {
+        match self.call(&Request::OpenSession { id: None, precision })? {
+            Response::SessionOpened { session, .. } => Ok(session),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server error ({}): {message}", code.as_str()))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Advance a session through flat `[steps, input_dim]` frames;
+    /// returns per-step `(classes, logits)`.
+    pub fn classify_stream(
+        &mut self,
+        session: u64,
+        frames: &[f32],
+        id: u64,
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        let req =
+            Request::ClassifyStream { id: Some(id), session, frames: frames.to_vec() };
+        match self.call(&req)? {
+            Response::StreamResult { classes, logits, .. } => Ok((classes, logits)),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server error ({}): {message}", code.as_str()))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Close a session; returns the steps it consumed.
+    pub fn close_session(&mut self, session: u64) -> Result<u64> {
+        match self.call(&Request::CloseSession { id: None, session })? {
+            Response::SessionClosed { steps, .. } => Ok(steps),
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server error ({}): {message}", code.as_str()))
+            }
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
@@ -492,5 +577,83 @@ mod tests {
             }
             other => panic!("expected overloaded error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn unknown_request_type_keeps_connection_open() {
+        // Regression: an unknown `type` on a v2 envelope must come back
+        // as one typed bad_request line — never a dropped connection.
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let v = client
+            .call_raw(&crate::json::parse(r#"{"type":"frobnicate","v":2,"id":1}"#).unwrap())
+            .unwrap();
+        assert_eq!(v.get("type").as_str(), Some("error"));
+        assert_eq!(v.get("code").as_str(), Some("bad_request"));
+        assert_eq!(v.get("id").as_usize(), Some(1));
+        // The connection survived the bad line.
+        client.ping().unwrap();
+    }
+
+    #[test]
+    fn idle_timeout_closes_connection_cleanly() {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap();
+        let srv = Server::builder()
+            .idle_timeout(std::time::Duration::from_millis(50))
+            .bind("127.0.0.1:0", router)
+            .unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.ping().unwrap();
+        // Go quiet past the timeout: the server says bye and closes.
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        let mut line = String::new();
+        client.reader.read_line(&mut line).unwrap();
+        let v = crate::json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("type").as_str(), Some("bye"), "{line}");
+        line.clear();
+        assert_eq!(client.reader.read_line(&mut line).unwrap(), 0, "socket closed after bye");
+    }
+
+    #[test]
+    fn zero_idle_timeout_means_never() {
+        // Duration::ZERO disables the timeout (the CLI's `0` spelling).
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap();
+        let srv = Server::builder()
+            .idle_timeout(std::time::Duration::ZERO)
+            .bind("127.0.0.1:0", router)
+            .unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        client.ping().unwrap();
+    }
+
+    #[test]
+    fn streaming_session_over_tcp() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let session = client.open_session(None).unwrap();
+        let (classes, logits) =
+            client.classify_stream(session, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6], 1).unwrap();
+        assert_eq!(classes, vec![1, 1], "FixedEngine predicts class 1 per step");
+        assert_eq!(logits.len(), 2 * 6);
+        assert_eq!(client.close_session(session).unwrap(), 2);
+        let err = client.classify_stream(session, &[0.1, 0.2, 0.3], 2).unwrap_err().to_string();
+        assert!(err.contains("session_not_found"), "{err}");
     }
 }

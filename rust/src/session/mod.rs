@@ -1,0 +1,29 @@
+//! Streaming session subsystem (DESIGN.md §11).
+//!
+//! Turns the stateless batch classifier into a stateful streaming
+//! service: each client opens a session, feeds frames incrementally
+//! (`classify_stream`, per-step or per-chunk), and closes it — or lets
+//! it expire. The per-client recurrent h/c state
+//! ([`crate::lstm::StreamState`], one plane per layer, always f32)
+//! lives in a sharded, lock-striped [`SessionStore`] shared by the
+//! router, the scheduler, and every pool worker:
+//!
+//! - **Sharded, lock-striped**: sessions hash to `id & (shards - 1)`
+//!   over a power-of-two shard count, one `Mutex<HashMap>` per shard —
+//!   concurrent streams on different sessions almost never contend, and
+//!   a worker holds exactly one shard lock while it advances one
+//!   session's state.
+//! - **TTL eviction on a monotonic clock**: every touch stamps
+//!   nanoseconds since the store's `Instant` epoch; lookups past the
+//!   TTL evict lazily, and the scheduler sweeps periodically. All
+//!   expiry APIs take an explicit `now_ns` so tests drive time
+//!   deterministically.
+//! - **Engine-agnostic state**: h/c planes live here, *not* inside any
+//!   engine's arena, so session affinity is a scheduling pin
+//!   (`Session::target`) rather than a data dependency — failover
+//!   migrates a stream by re-pinning and bumping `sessions_migrated`,
+//!   no state copy required.
+
+pub mod store;
+
+pub use store::{Session, SessionError, SessionStore};

@@ -1,0 +1,311 @@
+//! The sharded, lock-striped session store (see module docs in
+//! [`crate::session`]).
+
+use std::collections::HashMap;
+use std::error::Error;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::ModelShape;
+use crate::coordinator::Precision;
+use crate::lstm::StreamState;
+use crate::simulator::Target;
+
+/// Typed session-lookup failure. `Expired` means the entry existed but
+/// its TTL had lapsed — the lookup evicted it (lazy expiry); the caller
+/// owns the matching metrics update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionError {
+    NotFound(u64),
+    Expired(u64),
+}
+
+impl fmt::Display for SessionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionError::NotFound(id) => write!(f, "session {id} not found"),
+            SessionError::Expired(id) => write!(f, "session {id} expired"),
+        }
+    }
+}
+
+impl Error for SessionError {}
+
+/// One live stream: the persistent recurrent state plus the scheduling
+/// pin and bookkeeping stamps.
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    /// Precision class fixed at open: int8 sessions pin to the quant
+    /// pool; f32 sessions never land on it (PR 4's no-cross-precision
+    /// contract).
+    pub precision: Precision,
+    /// Session affinity: the engine target this stream is pinned to.
+    /// Authoritative — the scheduler's affinity map is a cache of this
+    /// field. Rewritten (with a `sessions_migrated` bump) when failover
+    /// lands the stream on a different pool.
+    pub target: Target,
+    /// The recurrent h/c planes (always f32, even for int8 sessions).
+    pub state: StreamState,
+    /// Frames successfully served, counted by the session layer (the
+    /// pool worker) so the tally holds for ANY engine implementation —
+    /// echoed to the client on close.
+    pub steps: u64,
+    /// Monotonic ns (store epoch) of the last successful touch.
+    pub last_touch_ns: u64,
+    pub opened_ns: u64,
+}
+
+/// Sharded, lock-striped map of live sessions. Cheap to share
+/// (`Arc<SessionStore>`); all methods take `&self`.
+pub struct SessionStore {
+    shards: Vec<Mutex<HashMap<u64, Session>>>,
+    shard_mask: u64,
+    ttl_ns: u64,
+    next_id: AtomicU64,
+    epoch: Instant,
+}
+
+impl SessionStore {
+    /// Default striping: 16 shards.
+    pub fn new(ttl: Duration) -> Self {
+        Self::with_shards(ttl, 16)
+    }
+
+    /// `shards` is rounded up to a power of two (min 1) so the stripe
+    /// function is a mask, not a division.
+    pub fn with_shards(ttl: Duration, shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_mask: (n - 1) as u64,
+            ttl_ns: ttl.as_nanos() as u64,
+            next_id: AtomicU64::new(1),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Monotonic nanoseconds since the store was created — the clock
+    /// every `now_ns` argument below is measured on.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    pub fn ttl(&self) -> Duration {
+        Duration::from_nanos(self.ttl_ns)
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<HashMap<u64, Session>> {
+        &self.shards[(id & self.shard_mask) as usize]
+    }
+
+    /// Open a new session pinned to `target`; returns its id. Ids are
+    /// sequential (they stripe uniformly under the mask) and never
+    /// reused within a store's lifetime.
+    pub fn open(&self, shape: ModelShape, precision: Precision, target: Target) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let now = self.now_ns();
+        let session = Session {
+            id,
+            precision,
+            target,
+            state: StreamState::new(shape),
+            steps: 0,
+            last_touch_ns: now,
+            opened_ns: now,
+        };
+        self.shard(id).lock().unwrap().insert(id, session);
+        id
+    }
+
+    /// Run `f` against the live session under its shard lock, touching
+    /// its TTL stamp. A lapsed entry is evicted here (lazy expiry) and
+    /// reported as [`SessionError::Expired`].
+    pub fn with<R>(
+        &self,
+        id: u64,
+        now_ns: u64,
+        f: impl FnOnce(&mut Session) -> R,
+    ) -> Result<R, SessionError> {
+        let mut shard = self.shard(id).lock().unwrap();
+        let expired = match shard.get_mut(&id) {
+            None => return Err(SessionError::NotFound(id)),
+            Some(sess) => now_ns.saturating_sub(sess.last_touch_ns) > self.ttl_ns,
+        };
+        if expired {
+            shard.remove(&id);
+            return Err(SessionError::Expired(id));
+        }
+        let sess = shard.get_mut(&id).expect("checked above");
+        sess.last_touch_ns = now_ns;
+        Ok(f(sess))
+    }
+
+    /// The session's current affinity pin (touches the TTL stamp).
+    pub fn target_of(&self, id: u64, now_ns: u64) -> Result<Target, SessionError> {
+        self.with(id, now_ns, |s| s.target)
+    }
+
+    /// Re-pin a session after failover migrated it to a different pool.
+    /// No TTL check: the migrating worker just served the stream, so
+    /// the session is by definition live. Returns false if it vanished
+    /// (closed/evicted concurrently).
+    pub fn set_target(&self, id: u64, target: Target) -> bool {
+        match self.shard(id).lock().unwrap().get_mut(&id) {
+            Some(sess) => {
+                sess.target = target;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Close a session; returns the steps it consumed, or None if it
+    /// did not exist (already closed or evicted).
+    pub fn close(&self, id: u64) -> Option<u64> {
+        self.shard(id).lock().unwrap().remove(&id).map(|s| s.steps)
+    }
+
+    /// Sweep every shard, evicting sessions whose TTL lapsed before
+    /// `now_ns`. Returns the evicted ids (the caller updates metrics
+    /// and its affinity cache).
+    pub fn evict_expired(&self, now_ns: u64) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            shard.retain(|id, sess| {
+                let live = now_ns.saturating_sub(sess.last_touch_ns) <= self.ttl_ns;
+                if !live {
+                    evicted.push(*id);
+                }
+                live
+            });
+        }
+        evicted
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.shard(id).lock().unwrap().contains_key(&id)
+    }
+
+    /// Number of live (possibly TTL-lapsed but not yet swept) sessions.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(ttl_ms: u64, shards: usize) -> SessionStore {
+        SessionStore::with_shards(Duration::from_millis(ttl_ms), shards)
+    }
+
+    fn shape() -> ModelShape {
+        ModelShape { num_layers: 2, hidden: 4, input_dim: 3, seq_len: 5, num_classes: 3 }
+    }
+
+    #[test]
+    fn open_with_close_roundtrip() {
+        let st = store(1000, 4);
+        let id = st.open(shape(), Precision::F32, Target::CpuSingle);
+        assert!(st.contains(id));
+        assert_eq!(st.len(), 1);
+        let tgt = st.target_of(id, st.now_ns()).unwrap();
+        assert_eq!(tgt, Target::CpuSingle);
+        let steps = st.with(id, st.now_ns(), |s| s.state.steps()).unwrap();
+        assert_eq!(steps, 0);
+        // The session layer's tally is what close echoes back.
+        st.with(id, st.now_ns(), |s| s.steps += 5).unwrap();
+        assert_eq!(st.close(id), Some(5));
+        assert!(!st.contains(id));
+        assert_eq!(st.close(id), None);
+    }
+
+    #[test]
+    fn missing_session_is_not_found() {
+        let st = store(1000, 4);
+        assert_eq!(st.target_of(99, 0).unwrap_err(), SessionError::NotFound(99));
+    }
+
+    #[test]
+    fn lazy_expiry_on_lookup() {
+        // Synthetic clock: expiry is a pure function of now_ns, no
+        // sleeps needed.
+        let st = store(10, 4); // 10ms TTL
+        let id = st.open(shape(), Precision::F32, Target::CpuSingle);
+        let opened = st.with(id, st.now_ns(), |s| s.opened_ns).unwrap();
+        let past_ttl = opened + 11_000_000;
+        assert_eq!(st.target_of(id, past_ttl).unwrap_err(), SessionError::Expired(id));
+        // Lazy expiry removed it: a second lookup is NotFound.
+        assert_eq!(st.target_of(id, past_ttl).unwrap_err(), SessionError::NotFound(id));
+    }
+
+    #[test]
+    fn touch_extends_ttl() {
+        let st = store(10, 1);
+        let id = st.open(shape(), Precision::F32, Target::CpuSingle);
+        let opened = st.with(id, st.now_ns(), |s| s.opened_ns).unwrap();
+        // Touch at +8ms, then look up at +16ms: 8ms since last touch,
+        // still live.
+        assert!(st.with(id, opened + 8_000_000, |_| ()).is_ok());
+        assert!(st.target_of(id, opened + 16_000_000).is_ok());
+        // But +8ms touch then +20ms lookup (12ms gap) expires.
+        assert_eq!(
+            st.target_of(id, opened + 20_000_000 + 8_000_000).unwrap_err(),
+            SessionError::Expired(id)
+        );
+    }
+
+    #[test]
+    fn sweep_evicts_only_lapsed() {
+        let st = store(10, 8);
+        let a = st.open(shape(), Precision::F32, Target::CpuSingle);
+        let b = st.open(shape(), Precision::Int8, Target::CpuQuant);
+        let opened = st.with(a, st.now_ns(), |s| s.opened_ns).unwrap();
+        // Keep b fresh at +9ms, then sweep at +15ms: only a lapses.
+        st.with(b, opened + 9_000_000, |_| ()).unwrap();
+        let evicted = st.evict_expired(opened + 15_000_000);
+        assert_eq!(evicted, vec![a]);
+        assert!(!st.contains(a));
+        assert!(st.contains(b));
+        assert!(st.evict_expired(opened + 15_000_000).is_empty());
+    }
+
+    #[test]
+    fn set_target_repins() {
+        let st = store(1000, 2);
+        let id = st.open(shape(), Precision::F32, Target::CpuSingle);
+        assert!(st.set_target(id, Target::CpuMulti(4)));
+        assert_eq!(st.target_of(id, st.now_ns()).unwrap(), Target::CpuMulti(4));
+        st.close(id);
+        assert!(!st.set_target(id, Target::CpuSingle));
+    }
+
+    #[test]
+    fn ids_stripe_across_shards() {
+        let st = store(1000, 4);
+        for _ in 0..16 {
+            st.open(shape(), Precision::F32, Target::CpuSingle);
+        }
+        assert_eq!(st.len(), 16);
+        // Sequential ids under a power-of-two mask hit every shard.
+        let per_shard: Vec<usize> = st.shards.iter().map(|s| s.lock().unwrap().len()).collect();
+        assert_eq!(per_shard, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        let st = store(1000, 5);
+        assert_eq!(st.shards.len(), 8);
+        let st = store(1000, 0);
+        assert_eq!(st.shards.len(), 1);
+    }
+}

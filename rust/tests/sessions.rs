@@ -1,0 +1,371 @@
+//! Streaming-session integration (DESIGN.md §11): incremental parity
+//! against the batched plan, TTL eviction, and session-affine
+//! scheduling with explicit failover migration — all over live routers
+//! on the artifact-free random-weight fixture.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mobirnn::bench::random_model;
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::{
+    CpuQuantEngine, CpuSingleEngine, Engine, OffloadPolicy, Precision, Router, ServeError,
+};
+use mobirnn::lstm::{BatchArena, StreamState};
+use mobirnn::simulator::Target;
+use mobirnn::tensor::Tensor;
+
+fn shape() -> ModelShape {
+    ModelShape { num_layers: 2, hidden: 8, input_dim: 3, seq_len: 12, num_classes: 4 }
+}
+
+/// Deterministic window fixture, flat `[T, I]`.
+fn window(shape: ModelShape, seed: usize) -> Vec<f32> {
+    let n = shape.seq_len * shape.input_dim;
+    (0..n).map(|j| ((seed * 131 + j * 17) % 101) as f32 / 101.0 - 0.5).collect()
+}
+
+/// The same trained weights at a different `seq_len`: `random_model`'s
+/// RNG consumption depends only on the layer dims, so re-seeding with a
+/// reshaped `seq_len` yields the identical model truncated to `t` steps.
+fn model_at_seq_len(base: ModelShape, t: usize, seed: u64) -> mobirnn::lstm::LstmModel {
+    random_model(ModelShape { seq_len: t, ..base }, seed)
+}
+
+// ---- incremental parity (the tentpole's correctness contract) --------
+
+/// T single-step `stream_chunk` calls from a fresh state produce, at
+/// every step t, logits bit-for-bit equal to running the first t+1
+/// frames through the batched `forward_rows` plan.
+#[test]
+fn f32_stream_matches_batched_plan_bit_for_bit_at_every_prefix() {
+    let s = shape();
+    let model = random_model(s, 7);
+    let w = window(s, 1);
+    let mut state = StreamState::new(s);
+    for t in 0..s.seq_len {
+        let frame = &w[t * s.input_dim..(t + 1) * s.input_dim];
+        let step_logits = model.stream_step(frame, &mut state);
+        assert_eq!(step_logits.len(), s.num_classes);
+
+        let prefix_model = model_at_seq_len(s, t + 1, 7);
+        let mut arena = BatchArena::new(prefix_model.shape);
+        let batched =
+            prefix_model.forward_rows(&w[..(t + 1) * s.input_dim], 1, &mut arena);
+        assert_eq!(step_logits, batched, "prefix of {} steps diverged", t + 1);
+    }
+    assert_eq!(state.steps(), s.seq_len as u64);
+
+    // The persisted planes equal what one whole-window pass accumulates:
+    // streaming the same window into a fresh state must reproduce them.
+    let mut replay = StreamState::new(s);
+    let _ = model.stream_chunk(&w, s.seq_len, &mut replay);
+    for li in 0..s.num_layers {
+        assert_eq!(state.h_plane(li), replay.h_plane(li));
+        assert_eq!(state.c_plane(li), replay.c_plane(li));
+    }
+}
+
+/// Chunking is irrelevant to the numbers: 1+1+…+1, one T-chunk, and a
+/// ragged 5+4+3 split all visit the identical accumulation sequence.
+#[test]
+fn f32_chunking_never_changes_logits_or_state() {
+    let s = shape();
+    let model = random_model(s, 9);
+    let w = window(s, 2);
+
+    let mut whole = StreamState::new(s);
+    let whole_logits = model.stream_chunk(&w, s.seq_len, &mut whole);
+
+    let mut stepped = StreamState::new(s);
+    let mut stepped_logits = Vec::new();
+    for t in 0..s.seq_len {
+        stepped_logits
+            .extend(model.stream_step(&w[t * s.input_dim..(t + 1) * s.input_dim], &mut stepped));
+    }
+
+    let mut ragged = StreamState::new(s);
+    let mut ragged_logits = Vec::new();
+    let mut at = 0;
+    for chunk in [5usize, 4, 3] {
+        ragged_logits.extend(model.stream_chunk(
+            &w[at * s.input_dim..(at + chunk) * s.input_dim],
+            chunk,
+            &mut ragged,
+        ));
+        at += chunk;
+    }
+
+    assert_eq!(whole_logits, stepped_logits);
+    assert_eq!(whole_logits, ragged_logits);
+    for li in 0..s.num_layers {
+        assert_eq!(whole.h_plane(li), stepped.h_plane(li));
+        assert_eq!(whole.c_plane(li), ragged.c_plane(li));
+    }
+}
+
+/// Int8 mirror of the prefix-parity property: `stream_chunk_quant`
+/// against `forward_rows_quant`, bit-for-bit. The h/c planes stay f32
+/// (DESIGN.md §11), so the same [`StreamState`] drives both tiers.
+#[test]
+fn int8_stream_matches_batched_quant_plan_bit_for_bit_at_every_prefix() {
+    let s = shape();
+    let model = random_model(s, 11);
+    let quant = model.quantize();
+    let w = window(s, 3);
+    let mut state = StreamState::new(s);
+    for t in 0..s.seq_len {
+        let frame = &w[t * s.input_dim..(t + 1) * s.input_dim];
+        let step_logits = quant.stream_chunk_quant(frame, 1, &mut state);
+
+        let prefix_quant = model_at_seq_len(s, t + 1, 11).quantize();
+        let mut arena = BatchArena::new(prefix_quant.shape);
+        let batched =
+            prefix_quant.forward_rows_quant(&w[..(t + 1) * s.input_dim], 1, &mut arena);
+        assert_eq!(step_logits, batched, "quant prefix of {} steps diverged", t + 1);
+    }
+    assert_eq!(state.steps(), s.seq_len as u64);
+}
+
+// ---- live-router round trips -----------------------------------------
+
+fn f32_router(s: ModelShape) -> (Router, Arc<mobirnn::lstm::LstmModel>) {
+    let model = Arc::new(random_model(s, 42));
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .engine(Box::new(CpuSingleEngine::new(Arc::clone(&model))))
+        .build()
+        .unwrap();
+    (router, model)
+}
+
+#[test]
+fn live_router_stream_is_bit_for_bit_with_the_local_model() {
+    let s = shape();
+    let (router, model) = f32_router(s);
+    let w = window(s, 4);
+
+    let info = router.open_session(Precision::F32).unwrap();
+    assert_eq!(info.target, "cpu");
+    assert_eq!(router.metrics.sessions_open.load(Ordering::Relaxed), 1);
+
+    let mut oracle = StreamState::new(s);
+    for t in 0..s.seq_len {
+        let frame = &w[t * s.input_dim..(t + 1) * s.input_dim];
+        let reply = router.classify_stream(info.id, frame.to_vec(), Some(t as u64)).unwrap();
+        assert_eq!(reply.id, Some(t as u64));
+        assert_eq!(reply.steps, 1);
+        assert_eq!(reply.target, "cpu");
+        let expect = model.stream_step(frame, &mut oracle);
+        assert_eq!(reply.logits, expect, "server state diverged at step {t}");
+        assert_eq!(reply.classes.len(), 1);
+    }
+
+    assert_eq!(router.close_session(info.id).unwrap(), s.seq_len as u64);
+    assert_eq!(router.metrics.sessions_open.load(Ordering::Relaxed), 0);
+    // Closing again is the typed not-found error.
+    let err = router.close_session(info.id).unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<ServeError>(),
+        Some(ServeError::SessionNotFound(_))
+    ));
+}
+
+#[test]
+fn int8_sessions_pin_to_the_quant_pool_and_match_the_quant_model() {
+    let s = shape();
+    let model = Arc::new(random_model(s, 42));
+    let quant = model.quantize();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .engine(Box::new(CpuSingleEngine::new(Arc::clone(&model))))
+        .engine(Box::new(CpuQuantEngine::from_f32(&model)))
+        .build()
+        .unwrap();
+
+    // f32 sessions never land on the quant pool (PR 4's precision
+    // contract); int8 sessions pin there by construction.
+    let f32_info = router.open_session(Precision::F32).unwrap();
+    assert_eq!(f32_info.target, "cpu");
+    let int8_info = router.open_session(Precision::Int8).unwrap();
+    assert_eq!(int8_info.target, "cpu-quant");
+
+    let w = window(s, 5);
+    let mut oracle = StreamState::new(s);
+    for t in 0..s.seq_len {
+        let frame = &w[t * s.input_dim..(t + 1) * s.input_dim];
+        let reply = router.classify_stream(int8_info.id, frame.to_vec(), None).unwrap();
+        assert_eq!(reply.target, "cpu-quant", "int8 stream must stay on the quant pool");
+        let expect = quant.stream_chunk_quant(frame, 1, &mut oracle);
+        assert_eq!(reply.logits, expect, "quant server state diverged at step {t}");
+    }
+    router.close_session(int8_info.id).unwrap();
+    router.close_session(f32_info.id).unwrap();
+}
+
+#[test]
+fn idle_sessions_are_evicted_after_the_ttl() {
+    let s = shape();
+    let model = Arc::new(random_model(s, 42));
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .session_ttl(Duration::from_millis(50))
+        .engine(Box::new(CpuSingleEngine::new(model)))
+        .build()
+        .unwrap();
+
+    let info = router.open_session(Precision::F32).unwrap();
+    let frame: Vec<f32> = window(s, 6)[..s.input_dim].to_vec();
+    router.classify_stream(info.id, frame.clone(), None).unwrap();
+
+    std::thread::sleep(Duration::from_millis(250));
+
+    // Whichever path noticed first — the scheduler's periodic sweep
+    // (not_found after removal) or a lazy lookup (expired) — the
+    // session is gone and the eviction was counted exactly once.
+    let err = router.classify_stream(info.id, frame, None).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::SessionExpired(_) | ServeError::SessionNotFound(_))
+        ),
+        "{err:#}"
+    );
+    assert_eq!(router.metrics.sessions_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(router.metrics.sessions_open.load(Ordering::Relaxed), 0);
+    assert!(!router.sessions().contains(info.id));
+}
+
+// ---- session affinity under failover ---------------------------------
+
+/// Stream-capable engine that starts failing after `fail_after` calls —
+/// the fixture for forcing a mid-stream pool failure.
+struct FlakyStreamEngine {
+    shape: ModelShape,
+    fail_after: usize,
+    calls: AtomicUsize,
+}
+
+impl FlakyStreamEngine {
+    fn new(shape: ModelShape, fail_after: usize) -> Self {
+        Self { shape, fail_after, calls: AtomicUsize::new(0) }
+    }
+}
+
+impl Engine for FlakyStreamEngine {
+    fn target(&self) -> Target {
+        Target::CpuSingle
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &[]
+    }
+
+    fn infer(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let b = x.shape()[0];
+        Ok(Tensor::new(vec![b, self.shape.num_classes], vec![0.0; b * self.shape.num_classes]))
+    }
+
+    fn infer_stream(
+        &self,
+        _frames: &[f32],
+        steps: usize,
+        _state: &mut StreamState,
+    ) -> anyhow::Result<Vec<f32>> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) >= self.fail_after {
+            anyhow::bail!("flaky engine down");
+        }
+        // Class 0 flagged per step.
+        let mut logits = vec![0.0; steps * self.shape.num_classes];
+        for t in 0..steps {
+            logits[t * self.shape.num_classes] = 1.0;
+        }
+        Ok(logits)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+}
+
+/// Healthy second pool; flags class 1 so replies are attributable.
+struct SteadyStreamEngine {
+    shape: ModelShape,
+}
+
+impl Engine for SteadyStreamEngine {
+    fn target(&self) -> Target {
+        Target::CpuMulti(2)
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &[]
+    }
+
+    fn infer(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let b = x.shape()[0];
+        Ok(Tensor::new(vec![b, self.shape.num_classes], vec![0.0; b * self.shape.num_classes]))
+    }
+
+    fn infer_stream(
+        &self,
+        _frames: &[f32],
+        steps: usize,
+        _state: &mut StreamState,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut logits = vec![0.0; steps * self.shape.num_classes];
+        for t in 0..steps {
+            logits[t * self.shape.num_classes + 1] = 1.0;
+        }
+        Ok(logits)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+}
+
+#[test]
+fn failover_migrates_the_session_pin_exactly_once() {
+    let s = shape();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .engine(Box::new(FlakyStreamEngine::new(s, 1)))
+        .engine(Box::new(SteadyStreamEngine { shape: s }))
+        .build()
+        .unwrap();
+
+    let info = router.open_session(Precision::F32).unwrap();
+    assert_eq!(info.target, "cpu", "opens pin to the first stream-capable pool");
+    let frame: Vec<f32> = vec![0.25; s.input_dim];
+
+    // Step 1: the pinned pool is healthy.
+    let r1 = router.classify_stream(info.id, frame.clone(), None).unwrap();
+    assert_eq!(r1.target, "cpu");
+    assert_eq!(r1.classes, vec![0]);
+    assert_eq!(router.metrics.sessions_migrated.load(Ordering::Relaxed), 0);
+
+    // Step 2: the pinned pool fails; the chunk fails over, the reply
+    // names the pool that actually served it, and the pin migrates.
+    let r2 = router.classify_stream(info.id, frame.clone(), None).unwrap();
+    assert_eq!(r2.target, "cpu-multi", "failover must be visible in the reply");
+    assert_eq!(r2.classes, vec![1]);
+    assert_eq!(router.metrics.sessions_migrated.load(Ordering::Relaxed), 1);
+
+    // Step 3: dispatched straight to the migrated pin — no second
+    // migration, and the flaky pool is never retried.
+    let r3 = router.classify_stream(info.id, frame, None).unwrap();
+    assert_eq!(r3.target, "cpu-multi");
+    assert_eq!(router.metrics.sessions_migrated.load(Ordering::Relaxed), 1);
+
+    assert_eq!(router.close_session(info.id).unwrap(), 3);
+}
