@@ -25,6 +25,13 @@
 //! frame: reported p50/p99 are per-STEP latencies, directly comparable
 //! to the per-window numbers of the other scenarios.
 //!
+//! A fifth scenario, `binary_vs_json` (DESIGN.md §12), measures the
+//! wire subsystem: the decode cost of one classify request as a JSON
+//! line vs a binary frame, and end-to-end throughput over the
+//! event-driven server on both transports while ~1k idle connections
+//! stay multiplexed on two fixed I/O threads — in `--smoke` mode this
+//! asserts the 5× decode win and the 1k-connection capacity.
+//!
 //! ```bash
 //! cargo bench --bench serving_throughput              # full run
 //! cargo bench --bench serving_throughput -- --smoke   # CI: tiny N,
@@ -41,8 +48,8 @@ use mobirnn::config::ModelShape;
 use mobirnn::coordinator::{
     CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, OffloadPolicy, Router,
 };
-use mobirnn::json::Value;
-use mobirnn::server::{Client, Request, Response, Server};
+use mobirnn::json::{ToValue, Value};
+use mobirnn::server::{frame, protocol, Client, EventServer, Request, Response, Server};
 use mobirnn::simulator::Target;
 use mobirnn::util::Stats;
 
@@ -78,6 +85,7 @@ fn run_scenario(
     n_clients: usize,
     total: usize,
     targets: &[Target],
+    binary: bool,
 ) -> ScenarioResult {
     let next = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
@@ -87,6 +95,9 @@ fn run_scenario(
             let targets = targets.to_vec();
             std::thread::spawn(move || {
                 let mut client = Client::connect(addr).expect("connect");
+                if binary {
+                    client.negotiate_binary().expect("hello proto 3");
+                }
                 let mut served = 0usize;
                 let mut shed = 0usize;
                 let mut walls = Vec::new();
@@ -236,6 +247,54 @@ fn start_server(shape: ModelShape) -> Server {
     Server::bind("127.0.0.1:0", router).expect("bind")
 }
 
+/// The same engine set behind the event-driven front-end (DESIGN.md
+/// §12): a fixed pair of I/O threads multiplexing every connection.
+fn start_event_server(shape: ModelShape, max_connections: usize) -> EventServer {
+    let model = Arc::new(random_model(shape, 42));
+    let router = Router::builder()
+        .shape(shape)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(2))
+        .engine(Box::new(CpuMultiEngine::new(Arc::clone(&model), 4)))
+        .engine(Box::new(CpuQuantEngine::from_f32(&model)))
+        .engine(Box::new(CpuSingleEngine::new(model)))
+        .build()
+        .expect("router");
+    EventServer::builder()
+        .io_threads(2)
+        .max_connections(max_connections)
+        .bind("127.0.0.1:0", router)
+        .expect("bind event")
+}
+
+/// Decode cost of ONE classify request, JSON line vs binary frame —
+/// the per-request serialization tax the wire subsystem exists to cut.
+/// Returns (json_ns_per_op, binary_ns_per_op).
+fn decode_costs(shape: ModelShape, iters: usize) -> (f64, f64) {
+    let req = Request::Classify {
+        id: Some(7),
+        window: window(shape, 3),
+        target: None,
+        precision: None,
+        deadline_ms: None,
+    };
+    let line = req.to_value().to_json();
+    let encoded = frame::encode_request(&req);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let decoded = protocol::decode_line(std::hint::black_box(line.as_str()));
+        std::hint::black_box(decoded.expect("json decode"));
+    }
+    let json_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let decoded = frame::decode_request(std::hint::black_box(encoded.as_slice()));
+        std::hint::black_box(decoded.expect("frame decode"));
+    }
+    let binary_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    (json_ns, binary_ns)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var_os("MOBIRNN_BENCH_SMOKE").is_some();
@@ -251,6 +310,7 @@ fn main() {
         n_clients,
         total,
         &[Target::CpuSingle],
+        false,
     );
     print_scenario(&single);
     drop(single_srv);
@@ -264,6 +324,7 @@ fn main() {
         n_clients,
         total,
         &[Target::CpuSingle, Target::CpuMulti(4)],
+        false,
     );
     print_scenario(&dual);
     drop(dual_srv);
@@ -280,6 +341,7 @@ fn main() {
         n_clients,
         total,
         &[Target::CpuQuant],
+        false,
     );
     print_scenario(&quant);
     drop(quant_srv);
@@ -293,6 +355,50 @@ fn main() {
         run_streaming_scenario("streaming", stream_srv.addr(), shape, n_sessions, steps_each);
     print_scenario(&streaming);
     drop(stream_srv);
+
+    // Scenario 5 (DESIGN.md §12): binary_vs_json — the event-driven
+    // server first driven over JSON lines, then over binary frames,
+    // while ~1k idle connections stay open on the same two I/O threads.
+    let idle_conns = 1024usize;
+    let event_srv = start_event_server(shape, idle_conns + n_clients + 8);
+    let mut idle: Vec<Client> = (0..idle_conns)
+        .map(|_| Client::connect(event_srv.addr()).expect("idle connect"))
+        .collect();
+    // Every idle connection answers a ping: accepted, multiplexed, live.
+    for c in idle.iter_mut() {
+        c.ping().expect("idle ping");
+    }
+    let json_over = run_scenario(
+        "json_event",
+        event_srv.addr(),
+        shape,
+        n_clients,
+        total,
+        &[Target::CpuSingle],
+        false,
+    );
+    print_scenario(&json_over);
+    let binary_over = run_scenario(
+        "binary_event",
+        event_srv.addr(),
+        shape,
+        n_clients,
+        total,
+        &[Target::CpuSingle],
+        true,
+    );
+    print_scenario(&binary_over);
+    let accepted = event_srv.connections_accepted();
+    drop(idle);
+    drop(event_srv);
+
+    let decode_iters = if smoke { 400 } else { 4000 };
+    let (json_ns, binary_ns) = decode_costs(shape, decode_iters);
+    let decode_ratio = json_ns / binary_ns.max(1e-9);
+    println!(
+        "wire/decode_classify: json {json_ns:.0} ns/op, binary {binary_ns:.0} ns/op \
+         ({decode_ratio:.1}x cheaper)"
+    );
 
     println!(
         "serving/dual_pool_speedup: {:.2}x (pipelined vs serialized dispatch)",
@@ -317,6 +423,17 @@ fn main() {
             "smoke: every streamed step served"
         );
         assert_eq!(streaming.expired, 0, "smoke: no session expired mid-stream");
+        assert_eq!(json_over.requests, total, "smoke: all json-over-event requests served");
+        assert_eq!(binary_over.requests, total, "smoke: all binary-over-event requests served");
+        assert!(
+            accepted >= idle_conns as u64,
+            "smoke: event server must sustain >=1k concurrent connections (accepted {accepted})"
+        );
+        assert!(
+            decode_ratio >= 5.0,
+            "smoke: binary classify decode must be >=5x cheaper than JSON \
+             (json {json_ns:.0} ns, binary {binary_ns:.0} ns, {decode_ratio:.1}x)"
+        );
         println!("serving/smoke: OK ({total} requests per scenario, timings ignored)");
         return;
     }
@@ -326,6 +443,14 @@ fn main() {
     cases.insert("serving/dual_pool".to_string(), scenario_json(&dual));
     cases.insert("serving/quant_pool".to_string(), scenario_json(&quant));
     cases.insert("serving/streaming".to_string(), scenario_json(&streaming));
+    cases.insert("serving/json_over_event".to_string(), scenario_json(&json_over));
+    cases.insert("serving/binary_over_event".to_string(), scenario_json(&binary_over));
+    let mut wire = BTreeMap::new();
+    wire.insert("json_decode_ns".to_string(), Value::Num(json_ns));
+    wire.insert("binary_decode_ns".to_string(), Value::Num(binary_ns));
+    wire.insert("decode_speedup".to_string(), Value::Num(decode_ratio));
+    wire.insert("idle_connections".to_string(), Value::Num(idle_conns as f64));
+    cases.insert("wire/binary_vs_json".to_string(), Value::Obj(wire));
     let mut root = BTreeMap::new();
     root.insert("format".to_string(), Value::from("mobirnn-bench"));
     root.insert("version".to_string(), Value::from(1usize));

@@ -167,6 +167,19 @@ pub struct Metrics {
     /// Streams whose affinity pin moved to a different engine pool
     /// because failover served a chunk elsewhere.
     pub sessions_migrated: AtomicU64,
+    /// Live TCP connections (gauge): up when a server accepts, down when
+    /// the handler thread or event loop drops the connection.
+    pub conns_open: AtomicU64,
+    /// Binary wire-v3 frames decoded off sockets (DESIGN.md §12).
+    pub frames_rx: AtomicU64,
+    /// Binary wire-v3 frames written to sockets.
+    pub frames_tx: AtomicU64,
+    /// Connections that upgraded to the binary protocol via
+    /// `hello {"proto":3}`.
+    pub proto_v3_negotiated: AtomicU64,
+    /// Reply/refusal writes that failed; each one also kills its
+    /// connection rather than silently dropping the bytes.
+    pub write_failed: AtomicU64,
 }
 
 impl Metrics {
@@ -198,6 +211,11 @@ impl Metrics {
             ("sessions_open", Value::from(self.sessions_open.load(Ordering::Relaxed))),
             ("sessions_expired", Value::from(self.sessions_expired.load(Ordering::Relaxed))),
             ("sessions_migrated", Value::from(self.sessions_migrated.load(Ordering::Relaxed))),
+            ("conns_open", Value::from(self.conns_open.load(Ordering::Relaxed))),
+            ("frames_rx", Value::from(self.frames_rx.load(Ordering::Relaxed))),
+            ("frames_tx", Value::from(self.frames_tx.load(Ordering::Relaxed))),
+            ("proto_v3_negotiated", Value::from(self.proto_v3_negotiated.load(Ordering::Relaxed))),
+            ("write_failed", Value::from(self.write_failed.load(Ordering::Relaxed))),
             ("inflight", self.inflight.to_json()),
             ("wall_latency", self.wall_latency.to_json()),
             ("sim_latency", self.sim_latency.to_json()),
@@ -286,6 +304,22 @@ mod tests {
         assert_eq!(j.get("sessions_open").as_usize(), Some(3));
         assert_eq!(j.get("sessions_expired").as_usize(), Some(2));
         assert_eq!(j.get("sessions_migrated").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn wire_metrics_in_json() {
+        let m = Metrics::new();
+        m.conns_open.fetch_add(5, Ordering::Relaxed);
+        m.frames_rx.fetch_add(40, Ordering::Relaxed);
+        m.frames_tx.fetch_add(41, Ordering::Relaxed);
+        m.proto_v3_negotiated.fetch_add(3, Ordering::Relaxed);
+        m.write_failed.fetch_add(2, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("conns_open").as_usize(), Some(5));
+        assert_eq!(j.get("frames_rx").as_usize(), Some(40));
+        assert_eq!(j.get("frames_tx").as_usize(), Some(41));
+        assert_eq!(j.get("proto_v3_negotiated").as_usize(), Some(3));
+        assert_eq!(j.get("write_failed").as_usize(), Some(2));
     }
 
     #[test]

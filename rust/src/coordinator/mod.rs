@@ -52,6 +52,6 @@ pub use policy::{
     Precision,
 };
 pub use router::{
-    ClassifyOptions, Router, RouterBuilder, ServeError, ServeReply, ServeRequest, SessionInfo,
-    StreamReply, StreamRequest,
+    ClassifyOptions, ReplySink, Router, RouterBuilder, ServeError, ServeReply, ServeRequest,
+    SessionInfo, StreamReply, StreamRequest,
 };

@@ -83,13 +83,56 @@ pub struct ClassifyOptions {
     pub deadline: Option<Duration>,
 }
 
+/// Where a finished request's outcome goes. The blocking API wraps an
+/// `mpsc` channel ([`ReplySink::channel`]); the event-driven server
+/// (DESIGN.md §12) registers a one-shot callback instead
+/// ([`ReplySink::callback`]) so no thread parks waiting for a reply —
+/// whichever pool worker resolves the request runs the callback, which
+/// pushes the response onto the owning I/O loop's completion queue and
+/// wakes it.
+pub enum ReplySink<T> {
+    /// Deliver into a channel; the submitting thread holds the receiver.
+    Channel(mpsc::Sender<Result<T, ServeError>>),
+    /// Run a one-shot closure on whichever thread resolves the request.
+    Callback(Mutex<Option<Box<dyn FnOnce(Result<T, ServeError>) + Send>>>),
+}
+
+impl<T> ReplySink<T> {
+    pub fn channel(tx: mpsc::Sender<Result<T, ServeError>>) -> Self {
+        ReplySink::Channel(tx)
+    }
+
+    pub fn callback(f: impl FnOnce(Result<T, ServeError>) + Send + 'static) -> Self {
+        ReplySink::Callback(Mutex::new(Some(Box::new(f))))
+    }
+
+    /// Deliver the outcome. Returns `false` when nobody is listening:
+    /// the channel receiver hung up, or the callback already fired (it
+    /// runs at most once).
+    pub fn send(&self, outcome: Result<T, ServeError>) -> bool {
+        match self {
+            ReplySink::Channel(tx) => tx.send(outcome).is_ok(),
+            ReplySink::Callback(slot) => {
+                let f = slot.lock().ok().and_then(|mut s| s.take());
+                match f {
+                    Some(f) => {
+                        f(outcome);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        }
+    }
+}
+
 /// One classify request.
 pub struct ServeRequest {
     /// Flat `[seq_len * input_dim]` window.
     pub window: Vec<f32>,
     pub opts: ClassifyOptions,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Result<ServeReply, ServeError>>,
+    pub reply: ReplySink<ServeReply>,
 }
 
 /// The answer sent back to the client.
@@ -152,7 +195,7 @@ pub struct StreamRequest {
     /// Caller-chosen request id, echoed in the reply.
     pub id: Option<u64>,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Result<StreamReply, ServeError>>,
+    pub reply: ReplySink<StreamReply>,
 }
 
 /// Per-step results for one stream chunk.
@@ -234,7 +277,7 @@ impl Router {
                 window,
                 opts,
                 enqueued: Instant::now(),
-                reply: rtx,
+                reply: ReplySink::channel(rtx),
             }))
             .map_err(|_| anyhow!("router gone"))?;
         Ok(rrx)
@@ -257,6 +300,64 @@ impl Router {
             None => rrx.recv().context("router dropped reply")?,
         };
         outcome.map_err(anyhow::Error::new)
+    }
+
+    /// Submit a window with a caller-provided reply sink — the
+    /// non-blocking analogue of [`Router::submit_with`], used by the
+    /// event-driven server (DESIGN.md §12). Returns `Err` only for an
+    /// invalid window; the sink is dropped unfired and the caller still
+    /// owns the error response. Once validation passes, every outcome —
+    /// including scheduler shutdown — is delivered through the sink.
+    pub fn submit_sink(
+        &self,
+        window: Vec<f32>,
+        opts: ClassifyOptions,
+        reply: ReplySink<ServeReply>,
+    ) -> Result<()> {
+        let expect = self.window_len();
+        if window.len() != expect {
+            return Err(anyhow!("window has {} values, expected {expect}", window.len()));
+        }
+        let msg =
+            SchedMsg::Classify(ServeRequest { window, opts, enqueued: Instant::now(), reply });
+        if let Err(mpsc::SendError(msg)) = self.tx.send(msg) {
+            if let SchedMsg::Classify(req) = msg {
+                req.reply.send(Err(ServeError::EngineFailure("router gone".into())));
+            }
+        }
+        Ok(())
+    }
+
+    /// Stream analogue of [`Router::submit_sink`].
+    pub fn submit_stream_sink(
+        &self,
+        session: u64,
+        frames: Vec<f32>,
+        id: Option<u64>,
+        reply: ReplySink<StreamReply>,
+    ) -> Result<()> {
+        let dim = self.shape.input_dim;
+        if frames.is_empty() || frames.len() % dim != 0 {
+            return Err(anyhow!(
+                "stream chunk of {} values is not a positive multiple of input_dim {dim}",
+                frames.len()
+            ));
+        }
+        let steps = frames.len() / dim;
+        let msg = SchedMsg::Stream(StreamRequest {
+            session,
+            frames,
+            steps,
+            id,
+            enqueued: Instant::now(),
+            reply,
+        });
+        if let Err(mpsc::SendError(msg)) = self.tx.send(msg) {
+            if let SchedMsg::Stream(req) = msg {
+                req.reply.send(Err(ServeError::EngineFailure("router gone".into())));
+            }
+        }
+        Ok(())
     }
 
     pub fn shape(&self) -> ModelShape {
@@ -328,7 +429,7 @@ impl Router {
                 steps,
                 id,
                 enqueued: Instant::now(),
-                reply: rtx,
+                reply: ReplySink::channel(rtx),
             }))
             .map_err(|_| anyhow!("router gone"))?;
         Ok(rrx)

@@ -4,9 +4,9 @@
 //! manifest loader ([`crate::config`]) and the serving wire protocol
 //! ([`crate::server`]) use this self-contained implementation: a
 //! recursive-descent parser into a [`Value`] tree plus an escaping
-//! writer. Supports the full JSON grammar (RFC 8259) minus `\u` escapes
-//! beyond the BMP surrogate-pair handling we don't need (artifact
-//! manifests and wire messages are ASCII).
+//! writer. Supports the full JSON grammar (RFC 8259), including `\uXXXX`
+//! escapes with UTF-16 surrogate pairs for astral-plane characters; lone
+//! or mismatched surrogates are rejected as parse errors.
 //!
 //! On top of the tree sit the [`ToValue`]/[`FromValue`] codec traits:
 //! typed messages (the protocol-v2 `Request`/`Response` enums in
@@ -459,6 +459,16 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Read exactly four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let d = self.bump().ok_or_else(|| self.err("bad \\u"))?;
+            code = code * 16 + (d as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+        }
+        Ok(code)
+    }
+
     fn string(&mut self) -> Result<String, ParseError> {
         self.expect(b'"')?;
         let mut out = String::new();
@@ -476,13 +486,30 @@ impl<'a> Parser<'a> {
                     Some(b'b') => out.push('\u{8}'),
                     Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let d = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                            code = code * 16
-                                + (d as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
-                        }
-                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        let code = self.hex4()?;
+                        let c = match code {
+                            // High surrogate: RFC 8259 requires an
+                            // immediately following low surrogate escape;
+                            // the pair combines into one astral scalar.
+                            0xD800..=0xDBFF => {
+                                if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                    return Err(self.err("unpaired high surrogate"));
+                                }
+                                let low = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&low) {
+                                    return Err(self.err("invalid low surrogate"));
+                                }
+                                let scalar = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                                char::from_u32(scalar)
+                                    .ok_or_else(|| self.err("bad surrogate pair"))?
+                            }
+                            0xDC00..=0xDFFF => {
+                                return Err(self.err("unpaired low surrogate"));
+                            }
+                            // Any other BMP code point is a valid scalar.
+                            _ => char::from_u32(code).ok_or_else(|| self.err("bad \\u escape"))?,
+                        };
+                        out.push(c);
                     }
                     _ => return Err(self.err("bad escape")),
                 },
@@ -616,6 +643,44 @@ mod tests {
     fn parse_escapes() {
         let v = parse(r#""a\n\t\"\\A""#).unwrap();
         assert_eq!(v.as_str(), Some("a\n\t\"\\A"));
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        // BMP escapes.
+        assert_eq!(parse(r#""A\u00e9\u4e16""#).unwrap().as_str(), Some("A\u{e9}\u{4e16}"));
+        // Surrogate pair combines into one astral scalar (U+1F600).
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap().as_str(), Some("\u{1f600}"));
+        assert_eq!(parse(r#""x\ud83d\ude00y""#).unwrap().as_str(), Some("x\u{1f600}y"));
+        // Case-insensitive hex digits.
+        assert_eq!(parse(r#""\uD83D\uDE00""#).unwrap().as_str(), Some("\u{1f600}"));
+        // Escaped and literal forms agree.
+        assert_eq!(parse(r#""\ud83d\ude00""#).unwrap(), parse("\"\u{1f600}\"").unwrap());
+    }
+
+    #[test]
+    fn rejects_lone_surrogates() {
+        // High surrogate with no continuation, wrong continuation, or a
+        // non-surrogate follower; low surrogate on its own.
+        assert!(parse(r#""\ud83d""#).is_err());
+        assert!(parse(r#""\ud83dx""#).is_err());
+        assert!(parse(r#""\ud83d\n""#).is_err());
+        assert!(parse(r#""\ud83dA""#).is_err());
+        assert!(parse(r#""\ude00""#).is_err());
+        assert!(parse(r#""\ud83d\ud83d""#).is_err());
+        // Truncated hex.
+        assert!(parse(r#""\ud8""#).is_err());
+        assert!(parse(r#""\uzzzz""#).is_err());
+    }
+
+    #[test]
+    fn astral_roundtrip() {
+        // Astral chars the writer emits raw must survive write→parse.
+        for s in ["😀", "emoji 🎉 mix 𐍈", "\u{10348}\u{1f600}"] {
+            let v = Value::Str(s.to_string());
+            let rt = parse(&v.to_json()).unwrap();
+            assert_eq!(rt.as_str(), Some(s), "astral round-trip broke {s:?}");
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! mobirnn figures [--fig 2|3|4|5|6|7] [--all]     regenerate paper figures
 //! mobirnn serve   [--addr A] [--policy P] [--device D] [--max-wait-ms N]
+//!                 [--io-threads N] [--proto 2|3]
 //! mobirnn classify [--n N] [--policy P] [--device D] [--gpu-load U] [--target T]
 //! mobirnn info                                      artifact manifest summary
 //! ```
@@ -25,7 +26,7 @@ use mobirnn::coordinator::{
 use mobirnn::figures;
 use mobirnn::har;
 use mobirnn::runtime::Runtime;
-use mobirnn::server::Server;
+use mobirnn::server::{EventServer, Server};
 use mobirnn::simulator::DeviceProfile;
 
 /// Per-command flag specification: which `--key value` flags and which
@@ -46,6 +47,8 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "max-connections",
                 "idle-timeout-ms",
                 "session-ttl-ms",
+                "proto",
+                "io-threads",
             ],
             &[],
         ),
@@ -169,6 +172,7 @@ fn print_help() {
          \x20                                      [--max-queue 256] [--max-connections 64]\n\
          \x20                                      [--idle-timeout-ms 0 (never)]\n\
          \x20                                      [--session-ttl-ms 30000]\n\
+         \x20                                      [--io-threads 0 (thread-per-conn)] [--proto 2|3]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
          \x20                                      [--target gpu|cpu|cpu-multi|cpu-quant]\n\
@@ -231,6 +235,21 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
     Ok((router, manifest))
 }
 
+/// Whichever front-end `serve` picked, kept alive for the serve loop.
+enum Serving {
+    Threaded(Server),
+    Event(EventServer),
+}
+
+impl Serving {
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            Serving::Threaded(s) => s.addr(),
+            Serving::Event(s) => s.addr(),
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let max_connections: usize =
@@ -238,18 +257,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // 0 = never time out (the historical behavior).
     let idle_ms: u64 =
         args.get_or("idle-timeout-ms", "0").parse().context("--idle-timeout-ms")?;
+    let max_proto: u64 = args.get_or("proto", "3").parse().context("--proto")?;
+    if !(2..=3).contains(&max_proto) {
+        return Err(anyhow!("--proto must be 2 (JSON only) or 3 (binary frames)"));
+    }
+    // 0 = the classic thread-per-connection server.
+    let io_threads: usize = args.get_or("io-threads", "0").parse().context("--io-threads")?;
     let (router, manifest) = build_router(args)?;
-    let server = Server::builder()
-        .max_connections(max_connections)
-        .idle_timeout(Duration::from_millis(idle_ms))
-        .bind(&addr, router)?;
+    let server = if io_threads > 0 {
+        Serving::Event(
+            EventServer::builder()
+                .io_threads(io_threads)
+                .max_connections(max_connections)
+                .idle_timeout(Duration::from_millis(idle_ms))
+                .max_proto(max_proto)
+                .bind(&addr, router)?,
+        )
+    } else {
+        Serving::Threaded(
+            Server::builder()
+                .max_connections(max_connections)
+                .idle_timeout(Duration::from_millis(idle_ms))
+                .max_proto(max_proto)
+                .bind(&addr, router)?,
+        )
+    };
+    let transport = if io_threads > 0 {
+        format!("event-driven, {io_threads} io threads")
+    } else {
+        "thread-per-connection".to_string()
+    };
     println!(
-        "mobirnn serving {} on {} (policy {}, device {}) — JSON lines, protocol v{}; Ctrl-C to stop",
+        "mobirnn serving {} on {} (policy {}, device {}, {transport}) — protocols v2..=v{max_proto}; Ctrl-C to stop",
         manifest.default_variant,
         server.addr(),
         args.get_or("policy", "cost-model"),
         args.get_or("device", "nexus5"),
-        mobirnn::server::PROTOCOL_VERSION,
     );
     // Serve forever.
     loop {
@@ -432,6 +475,22 @@ mod tests {
         assert_eq!(a.get("session-ttl-ms"), Some("60000"));
         // Session knobs are serve-only: classify has no sessions.
         let err = Args::from_parts("classify", &argv(&["--session-ttl-ms", "1000"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn serve_transport_flags_parse() {
+        let a = Args::from_parts("serve", &argv(&["--io-threads", "4", "--proto", "2"])).unwrap();
+        assert_eq!(a.get("io-threads"), Some("4"));
+        assert_eq!(a.get("proto"), Some("2"));
+        // Transport knobs are serve-only.
+        let err = Args::from_parts("classify", &argv(&["--io-threads", "2"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag"), "{err}");
+        let err = Args::from_parts("classify", &argv(&["--proto", "3"]))
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown flag"), "{err}");

@@ -1,0 +1,942 @@
+//! Event-driven connection multiplexer (DESIGN.md §12).
+//!
+//! The threaded server ([`super::tcp`]) spends one `mobirnn-conn`
+//! thread per connection — fine for dozens of clients, fatal for
+//! thousands: the paper's point that overhead around the kernel
+//! dominates once the kernel is fast applies to threads as much as to
+//! serialization. This module serves the same two wire protocols
+//! (JSON lines, and binary frames after a `hello {"proto":3}` upgrade)
+//! from a FIXED set of I/O threads, each multiplexing its share of
+//! connections over nonblocking sockets with `poll(2)` — reached
+//! through a minimal FFI declaration rather than a dependency.
+//!
+//! Per-connection state machine:
+//!
+//! ```text
+//! readable ──▶ rbuf ──▶ parse (line | frame) ──▶ dispatch async
+//!                 ▲                                   │ completion
+//!                 │ POLLIN off while a request         ▼ queue + waker
+//!  backpressure ──┘ is in flight (strict FIFO)    wbuf ──▶ writable
+//! ```
+//!
+//! Scheduling rules, each load-bearing:
+//!
+//! - **One request in flight per connection.** Parsing pauses (and
+//!   POLLIN is dropped from the poll set) until the completion for the
+//!   dispatched request lands, so replies keep request order and a
+//!   flood from one client backs up in ITS socket buffer, not in
+//!   server memory.
+//! - **Replies arrive over a completion queue.** [`super::protocol`]'s
+//!   `handle_request_async` fires its callback on whichever pool
+//!   worker resolved the request; the callback just enqueues
+//!   `(slot, generation, response)` and pokes the loop's waker pipe.
+//!   Generations guard against slot reuse: a completion for a dead
+//!   connection is dropped, never sent to the slot's new tenant.
+//! - **Write backpressure.** Responses append to a per-connection
+//!   write buffer flushed on POLLOUT; while more than
+//!   [`WRITE_HIGH_WATER`] bytes are unflushed, parsing pauses too. A
+//!   client that stops reading stops being served, at bounded memory.
+//! - **Upgrades happen at completion time.** The `hello_ok {proto:3}`
+//!   reply is encoded in JSON (the old mode), then the connection
+//!   flips to frames — bytes a client pipelined right behind its hello
+//!   are already sitting unparsed in `rbuf` and get decoded as frames.
+//!
+//! The admission story matches the threaded server: a global live-count
+//! cap, refusals via the same typed `overloaded` line, and the
+//! `conns_open` / `frames_rx` / `frames_tx` / `write_failed` counters
+//! reported through [`crate::coordinator::Metrics`].
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Metrics, Router};
+use crate::json::ToValue;
+use crate::server::frame;
+use crate::server::protocol::{self, ErrorCode, Response};
+use crate::server::tcp::refuse_connection;
+
+/// Parsing pauses while a connection has this many reply bytes
+/// unflushed; they drain before any new request is decoded.
+const WRITE_HIGH_WATER: usize = 1 << 20;
+
+/// Per-iteration read budget for one connection, so a firehose client
+/// cannot monopolize its I/O loop.
+const READ_CHUNK: usize = 1 << 20;
+
+/// Poll timeout: bounds the latency of stop-flag and idle-timeout
+/// checks when no socket activity wakes the loop sooner.
+const POLL_TIMEOUT_MS: i32 = 50;
+
+/// `poll(2)` via a minimal FFI declaration — the only system interface
+/// this module needs beyond std's sockets.
+mod sys {
+    use std::os::raw::{c_int, c_short, c_ulong};
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+}
+
+/// Transport knobs; build with [`EventServer::builder`].
+pub struct EventServerBuilder {
+    io_threads: usize,
+    max_connections: usize,
+    idle_timeout: Option<Duration>,
+    max_proto: u64,
+}
+
+impl EventServerBuilder {
+    pub fn new() -> Self {
+        Self {
+            io_threads: 2,
+            max_connections: 1024,
+            idle_timeout: None,
+            max_proto: protocol::PROTO_V3_BINARY,
+        }
+    }
+
+    /// Number of I/O loop threads (default 2). Connections are dealt
+    /// round-robin at accept time; each loop multiplexes its share.
+    pub fn io_threads(mut self, n: usize) -> Self {
+        self.io_threads = n.max(1);
+        self
+    }
+
+    /// Cap on concurrently served connections (default 1024). Clients
+    /// beyond the cap receive one typed `overloaded` error line and are
+    /// disconnected.
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n.max(1);
+        self
+    }
+
+    /// Close a connection that sends nothing for this long (default:
+    /// never). Expiry is clean — one `bye` in the connection's current
+    /// transport, a flush, then close. Zero disables.
+    pub fn idle_timeout(mut self, d: Duration) -> Self {
+        self.idle_timeout = (!d.is_zero()).then_some(d);
+        self
+    }
+
+    /// Highest wire protocol the server will negotiate (default 3).
+    /// `2` keeps every connection on JSON lines: a `hello {"proto":3}`
+    /// gets a typed `unsupported_version` refusal instead of an upgrade.
+    pub fn max_proto(mut self, p: u64) -> Self {
+        self.max_proto = p;
+        self
+    }
+
+    /// Bind `addr` and serve `router` until stopped.
+    pub fn bind(self, addr: &str, router: Router) -> Result<EventServer> {
+        EventServer::start(
+            addr,
+            router,
+            self.io_threads,
+            self.max_connections,
+            self.idle_timeout,
+            self.max_proto,
+        )
+    }
+}
+
+impl Default for EventServerBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A running event-driven server; drop or call [`EventServer::stop`]
+/// to shut down.
+pub struct EventServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    refused: Arc<AtomicU64>,
+    wakers: Vec<Arc<UnixStream>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EventServer {
+    pub fn builder() -> EventServerBuilder {
+        EventServerBuilder::new()
+    }
+
+    /// [`EventServerBuilder::bind`] with default knobs.
+    pub fn bind(addr: &str, router: Router) -> Result<Self> {
+        Self::builder().bind(addr, router)
+    }
+
+    fn start(
+        addr: &str,
+        router: Router,
+        io_threads: usize,
+        max_connections: usize,
+        idle_timeout: Option<Duration>,
+        max_proto: u64,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let refused = Arc::new(AtomicU64::new(0));
+        let metrics = Arc::clone(&router.metrics);
+
+        let mut wakers = Vec::with_capacity(io_threads);
+        let mut intakes = Vec::with_capacity(io_threads);
+        let mut handles = Vec::with_capacity(io_threads);
+        for i in 0..io_threads {
+            let (waker_tx, waker_rx) = UnixStream::pair().context("waker pair")?;
+            waker_tx.set_nonblocking(true)?;
+            waker_rx.set_nonblocking(true)?;
+            let waker = Arc::new(waker_tx);
+            let intake: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+            let (done_tx, done_rx) = mpsc::channel();
+            let ctx = DispatchCtx {
+                router: router.clone(),
+                metrics: Arc::clone(&metrics),
+                done_tx,
+                waker: Arc::clone(&waker),
+                max_proto,
+            };
+            let stop2 = Arc::clone(&stop);
+            let live2 = Arc::clone(&live);
+            let intake2 = Arc::clone(&intake);
+            let handle = std::thread::Builder::new()
+                .name(format!("mobirnn-io-{i}"))
+                .spawn(move || io_loop(ctx, stop2, live2, intake2, waker_rx, done_rx, idle_timeout))
+                .context("spawning io loop")?;
+            wakers.push(waker);
+            intakes.push(intake);
+            handles.push(handle);
+        }
+
+        let ports: Vec<_> = wakers.iter().cloned().zip(intakes.iter().cloned()).collect();
+        let stop2 = Arc::clone(&stop);
+        let live2 = Arc::clone(&live);
+        let accepted2 = Arc::clone(&accepted);
+        let refused2 = Arc::clone(&refused);
+        let acceptor = std::thread::Builder::new()
+            .name("mobirnn-accept".into())
+            .spawn(move || {
+                let mut next = 0usize;
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if live2.load(Ordering::Relaxed) >= max_connections {
+                                refused2.fetch_add(1, Ordering::Relaxed);
+                                refuse_connection(stream, max_connections, &metrics);
+                                continue;
+                            }
+                            // The acceptor owns the gauge increment;
+                            // whichever loop closes the connection
+                            // decrements.
+                            live2.fetch_add(1, Ordering::Relaxed);
+                            metrics.conns_open.fetch_add(1, Ordering::Relaxed);
+                            accepted2.fetch_add(1, Ordering::Relaxed);
+                            let (waker, intake) = &ports[next % ports.len()];
+                            next = next.wrapping_add(1);
+                            intake.lock().unwrap().push(stream);
+                            wake(waker);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning acceptor")?;
+
+        Ok(Self { addr: local, stop, accepted, refused, wakers, handles, acceptor: Some(acceptor) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn connections_accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Connections turned away at the `max_connections` cap.
+    pub fn connections_refused(&self) -> u64 {
+        self.refused.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, wake every I/O loop, and join all threads. Live
+    /// connections are dropped (clients see EOF).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for w in &self.wakers {
+            wake(w);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---- the I/O loop ----------------------------------------------------
+
+/// Everything a dispatched request needs to find its way back.
+struct DispatchCtx {
+    router: Router,
+    metrics: Arc<Metrics>,
+    done_tx: mpsc::Sender<Completion>,
+    waker: Arc<UnixStream>,
+    max_proto: u64,
+}
+
+/// A resolved request on its way back to the loop that dispatched it.
+struct Completion {
+    slot: usize,
+    generation: u64,
+    resp: Response,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Json,
+    Binary,
+}
+
+/// One multiplexed connection.
+struct Conn {
+    stream: TcpStream,
+    /// Guards against slot reuse: completions carry the generation they
+    /// were dispatched under and are dropped on mismatch.
+    generation: u64,
+    mode: Mode,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` already written; `wbuf` compacts when drained.
+    wpos: usize,
+    /// A request has been dispatched and its completion has not landed.
+    inflight: bool,
+    /// `bye` (or idle expiry) happened: flush, then close.
+    closing: bool,
+    last_active: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, generation: u64) -> Self {
+        Self {
+            stream,
+            generation,
+            mode: Mode::Json,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: false,
+            closing: false,
+            last_active: Instant::now(),
+        }
+    }
+
+    /// Unflushed reply bytes.
+    fn backlog(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// Poke a loop's waker pipe so its `poll` returns now. A full pipe is
+/// fine — it already guarantees a pending wakeup.
+fn wake(waker: &UnixStream) {
+    let mut w = waker;
+    let _ = w.write_all(&[1u8]);
+}
+
+fn drain_waker(waker: &UnixStream) {
+    let mut r = waker;
+    let mut sink = [0u8; 64];
+    while matches!(r.read(&mut sink), Ok(n) if n > 0) {}
+}
+
+fn io_loop(
+    ctx: DispatchCtx,
+    stop: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    intake: Arc<Mutex<Vec<TcpStream>>>,
+    waker_rx: UnixStream,
+    done_rx: mpsc::Receiver<Completion>,
+    idle_timeout: Option<Duration>,
+) {
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut next_generation: u64 = 0;
+    let mut fds: Vec<sys::PollFd> = Vec::new();
+    let mut fd_slots: Vec<usize> = Vec::new();
+
+    while !stop.load(Ordering::Relaxed) {
+        // 1. Adopt newly accepted connections.
+        for stream in intake.lock().unwrap().drain(..) {
+            if stream.set_nonblocking(true).is_err() {
+                // Cannot be multiplexed; undo the acceptor's gauge.
+                live.fetch_sub(1, Ordering::Relaxed);
+                ctx.metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            next_generation += 1;
+            let conn = Conn::new(stream, next_generation);
+            match conns.iter().position(Option::is_none) {
+                Some(slot) => conns[slot] = Some(conn),
+                None => conns.push(Some(conn)),
+            }
+        }
+
+        // 2. Apply completions from the pool workers.
+        while let Ok(done) = done_rx.try_recv() {
+            let alive = match conns.get_mut(done.slot).and_then(Option::as_mut) {
+                Some(conn) if conn.generation == done.generation => {
+                    on_completion(conn, done.resp, &ctx);
+                    parse_more(conn, &ctx, done.slot) && flush(conn, &ctx.metrics)
+                }
+                // The connection died (or the slot was re-let) while
+                // the request ran; drop the orphan reply.
+                _ => continue,
+            };
+            if !alive {
+                close(&mut conns, done.slot, &live, &ctx.metrics);
+            }
+        }
+
+        // 3. Build the poll set: the waker, then every live socket.
+        fds.clear();
+        fd_slots.clear();
+        fds.push(sys::PollFd { fd: waker_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        fd_slots.push(usize::MAX);
+        for (slot, entry) in conns.iter().enumerate() {
+            if let Some(conn) = entry {
+                let mut events = 0;
+                if !conn.inflight && !conn.closing && conn.backlog() < WRITE_HIGH_WATER {
+                    events |= sys::POLLIN;
+                }
+                if conn.backlog() > 0 {
+                    events |= sys::POLLOUT;
+                }
+                fds.push(sys::PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+                fd_slots.push(slot);
+            }
+        }
+
+        // 4. Wait for readiness (or the timeout, for stop/idle checks).
+        let rc = unsafe {
+            sys::poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, POLL_TIMEOUT_MS)
+        };
+        if rc < 0 {
+            // EINTR or a transient failure: go around. The sleep bounds
+            // the retry rate if the failure is persistent.
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+
+        if fds[0].revents & sys::POLLIN != 0 {
+            drain_waker(&waker_rx);
+        }
+
+        // 5. Service readiness per connection.
+        for (pf, &slot) in fds.iter().zip(fd_slots.iter()).skip(1) {
+            let revents = pf.revents;
+            if revents == 0 {
+                continue;
+            }
+            let alive = match conns[slot].as_mut() {
+                Some(conn) => {
+                    if revents & (sys::POLLERR | sys::POLLNVAL) != 0 {
+                        false
+                    } else {
+                        let mut ok = true;
+                        if revents & (sys::POLLIN | sys::POLLHUP) != 0 {
+                            ok = service_readable(conn, &ctx, slot);
+                        }
+                        ok && flush(conn, &ctx.metrics)
+                    }
+                }
+                None => continue,
+            };
+            if !alive {
+                close(&mut conns, slot, &live, &ctx.metrics);
+            }
+        }
+
+        // 6. Idle expiry and drained-close sweep.
+        let now = Instant::now();
+        for slot in 0..conns.len() {
+            let mut kill = false;
+            if let Some(conn) = conns[slot].as_mut() {
+                if let Some(d) = idle_timeout {
+                    if !conn.closing
+                        && !conn.inflight
+                        && now.duration_since(conn.last_active) >= d
+                    {
+                        enqueue_response(conn, &Response::Bye, &ctx.metrics);
+                        conn.closing = true;
+                        if !flush(conn, &ctx.metrics) {
+                            kill = true;
+                        }
+                    }
+                }
+                if conn.closing && !conn.inflight && conn.backlog() == 0 {
+                    kill = true;
+                }
+            }
+            if kill {
+                close(&mut conns, slot, &live, &ctx.metrics);
+            }
+        }
+    }
+
+    // Shutdown: release the gauge for everything this loop still holds,
+    // including connections the acceptor queued but we never adopted.
+    let stranded = intake.lock().unwrap().drain(..).count();
+    let open = conns.iter().filter(|c| c.is_some()).count() + stranded;
+    if open > 0 {
+        live.fetch_sub(open, Ordering::Relaxed);
+        ctx.metrics.conns_open.fetch_sub(open as u64, Ordering::Relaxed);
+    }
+}
+
+/// Drain readable bytes into `rbuf`, then parse. `false` means the
+/// connection is dead (EOF, error, or lost framing) and must be closed.
+fn service_readable(conn: &mut Conn, ctx: &DispatchCtx, slot: usize) -> bool {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => return false, // EOF — mid-frame or not, it is over.
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&buf[..n]);
+                conn.last_active = Instant::now();
+                if conn.rbuf.len() >= READ_CHUNK {
+                    break; // Enough for this turn; POLLIN will re-fire.
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    parse_more(conn, ctx, slot)
+}
+
+/// Decode and act on as many buffered requests as the scheduling rules
+/// allow (one in flight; write backlog under the high-water mark).
+/// `false` means framing was lost and the connection must close.
+fn parse_more(conn: &mut Conn, ctx: &DispatchCtx, slot: usize) -> bool {
+    loop {
+        if conn.inflight || conn.closing || conn.backlog() >= WRITE_HIGH_WATER {
+            return true;
+        }
+        match conn.mode {
+            Mode::Json => {
+                let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') else {
+                    return true;
+                };
+                let line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                match std::str::from_utf8(&line) {
+                    Ok(text) if text.trim().is_empty() => {}
+                    Ok(text) => match protocol::decode_line(text.trim_end()) {
+                        Ok(req) => admit(conn, ctx, slot, req),
+                        Err(resp) => enqueue_response(conn, &resp, &ctx.metrics),
+                    },
+                    Err(_) => {
+                        let resp = Response::Error {
+                            id: None,
+                            code: ErrorCode::BadJson,
+                            message: "line is not utf-8".into(),
+                        };
+                        enqueue_response(conn, &resp, &ctx.metrics);
+                    }
+                }
+            }
+            Mode::Binary => {
+                let total = match frame::frame_len(&conn.rbuf) {
+                    Ok(Some(n)) => n,
+                    Ok(None) => return true,
+                    // Bad magic/version/length: framing is lost and
+                    // there is no way to resynchronize.
+                    Err(_) => return false,
+                };
+                if conn.rbuf.len() < total {
+                    return true;
+                }
+                let frame_bytes: Vec<u8> = conn.rbuf.drain(..total).collect();
+                ctx.metrics.frames_rx.fetch_add(1, Ordering::Relaxed);
+                match frame::decode_request(&frame_bytes) {
+                    Ok(req) => admit(conn, ctx, slot, req),
+                    Err(e) => {
+                        // Valid framing, malformed payload: answer with
+                        // a typed error and keep the connection.
+                        let id = frame::parse_header(&frame_bytes).ok().and_then(|h| h.id());
+                        let resp = Response::Error {
+                            id,
+                            code: ErrorCode::BadRequest,
+                            message: format!("bad frame payload: {e}"),
+                        };
+                        enqueue_response(conn, &resp, &ctx.metrics);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gate one decoded request: a hello above the server's cap
+/// (`--proto` on the CLI) is answered inline with a typed refusal;
+/// everything else dispatches to the router.
+fn admit(conn: &mut Conn, ctx: &DispatchCtx, slot: usize, req: protocol::Request) {
+    match req {
+        protocol::Request::Hello { proto } if proto > ctx.max_proto => {
+            let resp = protocol::proto_capped_error(ctx.max_proto);
+            enqueue_response(conn, &resp, &ctx.metrics);
+        }
+        req => dispatch(conn, ctx, slot, req),
+    }
+}
+
+/// Hand one request to the router without blocking this thread. The
+/// completion callback may fire inline (sync ops) or later from a pool
+/// worker; either way it lands in the completion queue and is applied
+/// by the loop, so the ordering rules hold in both cases.
+fn dispatch(conn: &mut Conn, ctx: &DispatchCtx, slot: usize, req: protocol::Request) {
+    conn.inflight = true;
+    let tx = ctx.done_tx.clone();
+    let waker = Arc::clone(&ctx.waker);
+    let generation = conn.generation;
+    protocol::handle_request_async(
+        &ctx.router,
+        req,
+        Box::new(move |resp| {
+            let _ = tx.send(Completion { slot, generation, resp });
+            wake(&waker);
+        }),
+    );
+}
+
+/// Apply a resolved request to its connection: encode the reply in the
+/// connection's CURRENT transport, then run transport reactions (`bye`
+/// closes; `hello_ok {proto:3}` flips the mode for everything after).
+fn on_completion(conn: &mut Conn, resp: Response, ctx: &DispatchCtx) {
+    conn.inflight = false;
+    conn.last_active = Instant::now();
+    if matches!(resp, Response::Bye) {
+        conn.closing = true;
+    }
+    let upgrade = matches!(resp, Response::HelloOk { proto: protocol::PROTO_V3_BINARY });
+    enqueue_response(conn, &resp, &ctx.metrics);
+    if upgrade {
+        conn.mode = Mode::Binary;
+    }
+}
+
+fn enqueue_response(conn: &mut Conn, resp: &Response, metrics: &Metrics) {
+    match conn.mode {
+        Mode::Json => {
+            let mut line = resp.to_value().to_json();
+            line.push('\n');
+            conn.wbuf.extend_from_slice(line.as_bytes());
+        }
+        Mode::Binary => {
+            conn.wbuf.extend_from_slice(&frame::encode_response(resp));
+            metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Write as much backlog as the socket accepts. `false` means the
+/// write failed — the client is gone and the connection must close.
+fn flush(conn: &mut Conn, metrics: &Metrics) -> bool {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                metrics.write_failed.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                metrics.write_failed.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+    true
+}
+
+fn close(conns: &mut [Option<Conn>], slot: usize, live: &AtomicUsize, metrics: &Metrics) {
+    if conns[slot].take().is_some() {
+        live.fetch_sub(1, Ordering::Relaxed);
+        metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+    use crate::coordinator::engine::testutil::FixedEngine;
+    use crate::coordinator::OffloadPolicy;
+    use crate::server::protocol::Request;
+    use crate::server::tcp::Client;
+    use crate::simulator::Target;
+    use std::io::BufRead;
+
+    fn router() -> Router {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap()
+    }
+
+    fn server() -> EventServer {
+        EventServer::bind("127.0.0.1:0", router()).unwrap()
+    }
+
+    fn window() -> Vec<f32> {
+        (0..30).map(|i| i as f32 / 30.0).collect()
+    }
+
+    #[test]
+    fn json_round_trip_over_event_server() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.ping().unwrap();
+        let outcome = client.classify(&window(), 1).unwrap();
+        assert_eq!(outcome.class, 1, "FixedEngine predicts class 1");
+        assert_eq!(outcome.target, "cpu");
+        let session = client.open_session(None).unwrap();
+        let (classes, logits) =
+            client.classify_stream(session, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6], 2).unwrap();
+        assert_eq!(classes, vec![1, 1]);
+        assert_eq!(logits.len(), 2 * 6);
+        assert_eq!(client.close_session(session).unwrap(), 2);
+        client.set_load(0.4, 0.1).unwrap();
+        let (gpu_util, _, metrics) = client.stats().unwrap();
+        assert!((gpu_util - 0.4).abs() < 1e-9);
+        assert_eq!(metrics.get("conns_open").as_usize(), Some(1));
+        client.quit().unwrap();
+        // Quit closed the connection server-side.
+        assert!(client.ping().is_err());
+    }
+
+    #[test]
+    fn binary_round_trip_over_event_server() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.negotiate_binary().unwrap();
+        client.ping().unwrap();
+        let outcome = client.classify(&window(), 7).unwrap();
+        assert_eq!(outcome.class, 1);
+        match client
+            .call(&Request::ClassifyBatch { id: Some(3), windows: vec![window(), window()] })
+            .unwrap()
+        {
+            Response::BatchResult { id, outcomes } => {
+                assert_eq!(id, Some(3));
+                assert_eq!(outcomes.len(), 2);
+            }
+            other => panic!("expected batch_result, got {other:?}"),
+        }
+        let session = client.open_session(None).unwrap();
+        let (classes, _) = client.classify_stream(session, &[0.1, 0.2, 0.3], 4).unwrap();
+        assert_eq!(classes, vec![1]);
+        assert_eq!(client.close_session(session).unwrap(), 1);
+        let (_, _, metrics) = client.stats().unwrap();
+        assert_eq!(metrics.get("proto_v3_negotiated").as_usize(), Some(1));
+        assert!(metrics.get("frames_rx").as_usize().unwrap() >= 6, "{metrics:?}");
+        assert!(metrics.get("frames_tx").as_usize().unwrap() >= 5, "{metrics:?}");
+        client.quit().unwrap();
+    }
+
+    #[test]
+    fn pipelined_lines_are_answered_in_order() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client
+            .writer
+            .write_all(b"{\"type\":\"ping\"}\n{\"type\":\"stats\"}\n{\"type\":\"ping\"}\n")
+            .unwrap();
+        let mut line = String::new();
+        for want in ["pong", "stats", "pong"] {
+            line.clear();
+            client.reader.read_line(&mut line).unwrap();
+            let v = crate::json::parse(line.trim()).unwrap();
+            assert_eq!(v.get("type").as_str(), Some(want), "{line}");
+        }
+    }
+
+    #[test]
+    fn hello_upgrade_handles_pipelined_binary_bytes() {
+        // A client may send its hello line and its first frame in one
+        // burst; the frame must wait in rbuf until the mode flips.
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let mut bytes = b"{\"type\":\"hello\",\"proto\":3}\n".to_vec();
+        bytes.extend_from_slice(&frame::encode_request(&Request::Ping));
+        client.writer.write_all(&bytes).unwrap();
+        let mut line = String::new();
+        client.reader.read_line(&mut line).unwrap();
+        assert!(line.contains("hello_ok"), "{line}");
+        let mut header = [0u8; frame::HEADER_LEN];
+        client.reader.read_exact(&mut header).unwrap();
+        let h = frame::parse_header(&header).unwrap();
+        let mut payload = vec![0u8; h.payload_len as usize];
+        client.reader.read_exact(&mut payload).unwrap();
+        assert_eq!(frame::decode_response_body(&h, &payload).unwrap(), Response::Pong);
+    }
+
+    #[test]
+    fn one_io_thread_multiplexes_many_connections() {
+        let mut srv = EventServer::builder()
+            .io_threads(1)
+            .max_connections(256)
+            .bind("127.0.0.1:0", router())
+            .unwrap();
+        let mut clients: Vec<Client> =
+            (0..64).map(|_| Client::connect(srv.addr()).unwrap()).collect();
+        // Half the fleet upgrades to binary; all stay multiplexed on
+        // the single loop thread.
+        for (i, c) in clients.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                c.negotiate_binary().unwrap();
+            }
+        }
+        for c in clients.iter_mut() {
+            c.ping().unwrap();
+        }
+        for (i, c) in clients.iter_mut().enumerate() {
+            assert_eq!(c.classify(&window(), i as u64).unwrap().class, 1);
+        }
+        assert_eq!(srv.connections_accepted(), 64);
+        drop(clients);
+        srv.stop();
+    }
+
+    #[test]
+    fn cap_refuses_with_typed_error() {
+        let mut srv = EventServer::builder()
+            .max_connections(1)
+            .bind("127.0.0.1:0", router())
+            .unwrap();
+        let mut c1 = Client::connect(srv.addr()).unwrap();
+        c1.ping().unwrap();
+        let mut c2 = Client::connect(srv.addr()).unwrap();
+        match c2.call(&Request::Ping).unwrap() {
+            Response::Error { code, message, .. } => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert!(message.contains("max_connections"), "{message}");
+            }
+            other => panic!("expected overloaded refusal, got {other:?}"),
+        }
+        assert_eq!(srv.connections_accepted(), 1);
+        assert_eq!(srv.connections_refused(), 1);
+        drop(c2);
+        srv.stop();
+    }
+
+    #[test]
+    fn idle_timeout_says_bye_and_closes() {
+        let srv = EventServer::builder()
+            .idle_timeout(Duration::from_millis(50))
+            .bind("127.0.0.1:0", router())
+            .unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.ping().unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let mut line = String::new();
+        client.reader.read_line(&mut line).unwrap();
+        let v = crate::json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("type").as_str(), Some("bye"), "{line}");
+        line.clear();
+        assert_eq!(client.reader.read_line(&mut line).unwrap(), 0, "closed after bye");
+    }
+
+    #[test]
+    fn binary_garbage_closes_but_malformed_payload_does_not() {
+        let srv = server();
+        // Valid header, malformed payload: typed error, connection
+        // lives.
+        let mut c1 = Client::connect(srv.addr()).unwrap();
+        c1.negotiate_binary().unwrap();
+        let payload = 99u32.to_le_bytes();
+        let mut bad = vec![0xA7u8, 3, 0x05, 0];
+        bad.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bad.extend_from_slice(&0u64.to_le_bytes());
+        bad.extend_from_slice(&payload);
+        c1.writer.write_all(&bad).unwrap();
+        match c1.call(&Request::Ping) {
+            // The error frame for the malformed payload arrives first.
+            Ok(Response::Error { code, .. }) => assert_eq!(code, ErrorCode::BadRequest),
+            other => panic!("expected typed error frame, got {other:?}"),
+        }
+        // Garbage where a header should be: framing lost, connection
+        // dropped.
+        let mut c2 = Client::connect(srv.addr()).unwrap();
+        c2.negotiate_binary().unwrap();
+        c2.writer.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        assert!(c2.call(&Request::Ping).is_err());
+        // The server shrugged it all off.
+        let mut c3 = Client::connect(srv.addr()).unwrap();
+        c3.ping().unwrap();
+    }
+
+    #[test]
+    fn proto_cap_keeps_connection_json() {
+        let srv = EventServer::builder().max_proto(2).bind("127.0.0.1:0", router()).unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let err = client.negotiate_binary().unwrap_err().to_string();
+        assert!(err.contains("unsupported_version"), "{err}");
+        // The refusal is an answer, not a hang-up: JSON still works.
+        client.ping().unwrap();
+    }
+
+    #[test]
+    fn stop_with_live_clients_returns() {
+        let mut srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.ping().unwrap();
+        srv.stop();
+        assert!(client.ping().is_err(), "stopped server drops its connections");
+    }
+}

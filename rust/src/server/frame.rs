@@ -1,0 +1,1032 @@
+//! Wire protocol v3: length-prefixed binary frames (DESIGN.md §12).
+//!
+//! JSON (protocol v2, [`super::protocol`]) costs ~96µs to decode one
+//! classify request — every float is text. At int8 kernel speeds that
+//! is the serving bottleneck, so v3 moves the hot path to a fixed
+//! little-endian frame format: a 16-byte header (magic, version,
+//! opcode, flags, bounded payload length, request id) followed by an
+//! opcode-specific payload in which `f32` tensors travel as raw LE
+//! bytes. Decoding a window is a bounds check plus one `memcpy` — or
+//! no copy at all through [`classify_window`], which hands back a
+//! borrowed [`F32View`] aliasing the wire bytes on aligned
+//! little-endian hosts. There are no i8 tensor payloads: int8 is a
+//! server-side precision contract (DESIGN.md §10), so windows are
+//! always f32 on the wire and only the `precision` tag differs.
+//!
+//! Every protocol-v2 op — classify, batch, session lifecycle, stats,
+//! set_load, hello — has a binary encoding here, byte-exactly
+//! round-tripped by the tests below. A connection starts in JSON and
+//! upgrades by sending `hello {"proto":3}`
+//! ([`super::protocol::PROTO_V3_BINARY`]); after the server's
+//! `hello_ok` both directions switch to frames. Decoding is total:
+//! malformed input yields a typed [`FrameError`], never a panic, and
+//! the declared payload length is checked against [`MAX_PAYLOAD`]
+//! before any allocation, so a hostile length prefix cannot balloon
+//! memory.
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     magic 0xA7
+//! 1       1     frame version (3)
+//! 2       1     opcode (requests 0x01..; responses 0x81.., error 0xFF)
+//! 3       1     flags (bit 0: id field meaningful)
+//! 4       4     payload length, u32 LE, <= MAX_PAYLOAD
+//! 8       8     request id, u64 LE (0 unless flags bit 0)
+//! 16      n     payload
+//! ```
+
+use std::fmt;
+
+use crate::coordinator::{parse_target, target_label, Precision};
+use crate::server::protocol::{ClassifyOutcome, ErrorCode, Request, Response};
+
+/// First byte of every frame; a connection that has negotiated v3 and
+/// then sends anything else is treated as corrupt and closed.
+pub const MAGIC: u8 = 0xA7;
+
+/// Frame format version carried in byte 1.
+pub const FRAME_VERSION: u8 = 3;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 16;
+
+/// Hard bound on the declared payload length. Large enough for a
+/// 4096-window batch of the default shape (~19 MB would exceed it;
+/// batches that big should be split), small enough that a hostile
+/// length prefix cannot make the server buffer unbounded memory.
+pub const MAX_PAYLOAD: u32 = 16 << 20;
+
+const FLAG_HAS_ID: u8 = 0x01;
+
+// Request opcodes.
+const OP_PING: u8 = 0x01;
+const OP_QUIT: u8 = 0x02;
+const OP_STATS: u8 = 0x03;
+const OP_SET_LOAD: u8 = 0x04;
+const OP_CLASSIFY: u8 = 0x05;
+const OP_CLASSIFY_BATCH: u8 = 0x06;
+const OP_OPEN_SESSION: u8 = 0x07;
+const OP_CLASSIFY_STREAM: u8 = 0x08;
+const OP_CLOSE_SESSION: u8 = 0x09;
+const OP_HELLO: u8 = 0x0A;
+
+// Response opcodes (high bit set).
+const OP_PONG: u8 = 0x81;
+const OP_BYE: u8 = 0x82;
+const OP_STATS_R: u8 = 0x83;
+const OP_LOAD_SET: u8 = 0x84;
+const OP_RESULT: u8 = 0x85;
+const OP_BATCH_RESULT: u8 = 0x86;
+const OP_SESSION_OPENED: u8 = 0x87;
+const OP_STREAM_RESULT: u8 = 0x88;
+const OP_SESSION_CLOSED: u8 = 0x89;
+const OP_HELLO_OK: u8 = 0x8A;
+const OP_ERROR: u8 = 0xFF;
+
+/// Typed decode failure. Decoding is total — every input maps to a
+/// value or one of these, never a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// More bytes are needed before the frame can be judged. Streaming
+    /// decoders treat this as "wait for more input"; one-shot decoders
+    /// as corruption.
+    Truncated,
+    /// Byte 0 was not [`MAGIC`]; framing is lost, close the connection.
+    BadMagic(u8),
+    /// Byte 1 declared a frame version we do not speak.
+    BadVersion(u8),
+    /// Unknown opcode for the direction being decoded.
+    BadOpcode(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// Header was fine but the payload is structurally invalid for its
+    /// opcode; framing is intact, so the connection can answer a typed
+    /// error and continue.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated => write!(f, "incomplete frame"),
+            FrameError::BadMagic(b) => write!(f, "bad frame magic {b:#04x}"),
+            FrameError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            FrameError::BadOpcode(op) => write!(f, "unknown opcode {op:#04x}"),
+            FrameError::Oversized(n) => {
+                write!(f, "declared payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte bound")
+            }
+            FrameError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub opcode: u8,
+    pub flags: u8,
+    pub payload_len: u32,
+    /// Raw id field; meaningful only when flags bit 0 is set — use
+    /// [`Header::id`].
+    pub id_raw: u64,
+}
+
+impl Header {
+    /// The request id, if the sender marked one.
+    pub fn id(&self) -> Option<u64> {
+        if self.flags & FLAG_HAS_ID != 0 {
+            Some(self.id_raw)
+        } else {
+            None
+        }
+    }
+
+    /// Total frame size: header plus declared payload.
+    pub fn frame_len(&self) -> usize {
+        HEADER_LEN + self.payload_len as usize
+    }
+}
+
+/// Parse the fixed 16-byte header. Magic, version and the payload-length
+/// bound are all enforced here, before any payload is buffered.
+pub fn parse_header(bytes: &[u8]) -> Result<Header, FrameError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(FrameError::Truncated);
+    }
+    if bytes[0] != MAGIC {
+        return Err(FrameError::BadMagic(bytes[0]));
+    }
+    if bytes[1] != FRAME_VERSION {
+        return Err(FrameError::BadVersion(bytes[1]));
+    }
+    let payload_len = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if payload_len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized(payload_len));
+    }
+    let mut id = [0u8; 8];
+    id.copy_from_slice(&bytes[8..16]);
+    Ok(Header {
+        opcode: bytes[2],
+        flags: bytes[3],
+        payload_len,
+        id_raw: u64::from_le_bytes(id),
+    })
+}
+
+/// Incremental framing for the event loop's read buffer: `Ok(Some(n))`
+/// when the buffer's first frame is `n` bytes long (it may not all be
+/// buffered yet), `Ok(None)` when more header bytes are needed, and
+/// `Err` when the prefix can never become a valid frame (bad magic /
+/// version / oversized length — close the connection).
+pub fn frame_len(buf: &[u8]) -> Result<Option<usize>, FrameError> {
+    if !buf.is_empty() && buf[0] != MAGIC {
+        return Err(FrameError::BadMagic(buf[0]));
+    }
+    if buf.len() >= 2 && buf[1] != FRAME_VERSION {
+        return Err(FrameError::BadVersion(buf[1]));
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    parse_header(buf).map(|h| Some(h.frame_len()))
+}
+
+// ---- zero-copy tensor views ------------------------------------------
+
+/// View over a raw little-endian `f32` payload. On little-endian hosts
+/// where the wire bytes happen to be 4-aligned, `Borrowed` aliases them
+/// directly — no copy, no per-element parse; otherwise values are
+/// materialized on access from the raw bytes.
+#[derive(Debug, Clone, Copy)]
+pub enum F32View<'a> {
+    Borrowed(&'a [f32]),
+    Raw(&'a [u8]),
+}
+
+impl F32View<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            F32View::Borrowed(s) => s.len(),
+            F32View::Raw(b) => b.len() / 4,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `Some` only on the zero-copy path.
+    pub fn as_borrowed(&self) -> Option<&[f32]> {
+        match self {
+            F32View::Borrowed(s) => Some(s),
+            F32View::Raw(_) => None,
+        }
+    }
+
+    /// Materialize an owned vector (one memcpy on the borrowed path).
+    pub fn to_vec(&self) -> Vec<f32> {
+        match self {
+            F32View::Borrowed(s) => s.to_vec(),
+            F32View::Raw(b) => b
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        }
+    }
+}
+
+/// Build the cheapest possible view over raw LE f32 bytes.
+fn f32_view(bytes: &[u8]) -> F32View<'_> {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: every bit pattern is a valid f32, and `align_to`
+        // guarantees `mid` is correctly aligned; the borrow keeps the
+        // backing bytes alive.
+        let (prefix, mid, suffix) = unsafe { bytes.align_to::<f32>() };
+        if prefix.is_empty() && suffix.is_empty() {
+            return F32View::Borrowed(mid);
+        }
+    }
+    F32View::Raw(bytes)
+}
+
+// ---- payload writer --------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// u16 length + UTF-8 bytes; anything past 64 KiB is truncated on a
+/// char boundary (only error messages could ever get near that).
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    let mut end = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u16(b, end as u16);
+    b.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+/// u32 length + raw bytes (embedded metrics JSON — not a hot path).
+fn put_bytes32(b: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(b, bytes.len() as u32);
+    b.extend_from_slice(bytes);
+}
+
+/// u32 element count + raw LE f32 bytes.
+fn put_f32s(b: &mut Vec<u8>, vals: &[f32]) {
+    put_u32(b, vals.len() as u32);
+    b.reserve(vals.len() * 4);
+    for v in vals {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_opt_f64(b: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(v) => {
+            put_u8(b, 1);
+            put_f64(b, v);
+        }
+        None => put_u8(b, 0),
+    }
+}
+
+fn put_opt_u64(b: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(v) => {
+            put_u8(b, 1);
+            put_u64(b, v);
+        }
+        None => put_u8(b, 0),
+    }
+}
+
+fn put_opt_str(b: &mut Vec<u8>, v: Option<&str>) {
+    match v {
+        Some(s) => {
+            put_u8(b, 1);
+            put_str(b, s);
+        }
+        None => put_u8(b, 0),
+    }
+}
+
+/// Stamp the header over the first [`HEADER_LEN`] bytes (reserved as
+/// zeros by the encoders) once the payload length is known.
+fn finish_frame(mut buf: Vec<u8>, opcode: u8, id: Option<u64>) -> Vec<u8> {
+    let payload_len = (buf.len() - HEADER_LEN) as u32;
+    buf[0] = MAGIC;
+    buf[1] = FRAME_VERSION;
+    buf[2] = opcode;
+    buf[3] = if id.is_some() { FLAG_HAS_ID } else { 0 };
+    buf[4..8].copy_from_slice(&payload_len.to_le_bytes());
+    buf[8..16].copy_from_slice(&id.unwrap_or(0).to_le_bytes());
+    buf
+}
+
+// ---- payload cursor --------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bounds-checked slice take: length is validated against what is
+    /// actually buffered BEFORE anything is allocated, so hostile
+    /// counts cannot balloon memory.
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(FrameError::Malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(FrameError::Malformed("payload truncated"));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, FrameError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| FrameError::Malformed("string is not utf-8"))
+    }
+
+    fn bytes32(&mut self) -> Result<&'a [u8], FrameError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    fn f32s(&mut self) -> Result<F32View<'a>, FrameError> {
+        let n = self.u32()? as usize;
+        let byte_len = n
+            .checked_mul(4)
+            .ok_or(FrameError::Malformed("f32 count overflow"))?;
+        Ok(f32_view(self.take(byte_len)?))
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            _ => Err(FrameError::Malformed("bad presence byte")),
+        }
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            _ => Err(FrameError::Malformed("bad presence byte")),
+        }
+    }
+
+    fn opt_str(&mut self) -> Result<Option<String>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            _ => Err(FrameError::Malformed("bad presence byte")),
+        }
+    }
+
+    /// Every decoder ends with this: leftover bytes mean the sender and
+    /// receiver disagree about the payload layout.
+    fn finish(self) -> Result<(), FrameError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FrameError::Malformed("trailing payload bytes"))
+        }
+    }
+}
+
+// ---- request codec ---------------------------------------------------
+
+/// Encode a request into one complete frame.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut b = vec![0u8; HEADER_LEN];
+    let (opcode, id) = match req {
+        Request::Ping => (OP_PING, None),
+        Request::Quit => (OP_QUIT, None),
+        Request::Stats => (OP_STATS, None),
+        Request::SetLoad { id, gpu, cpu } => {
+            put_opt_f64(&mut b, *gpu);
+            put_opt_f64(&mut b, *cpu);
+            (OP_SET_LOAD, *id)
+        }
+        Request::Classify { id, window, target, precision, deadline_ms } => {
+            put_f32s(&mut b, window);
+            put_opt_str(&mut b, target.map(target_label));
+            put_opt_str(&mut b, precision.map(Precision::as_str));
+            put_opt_u64(&mut b, *deadline_ms);
+            (OP_CLASSIFY, *id)
+        }
+        Request::ClassifyBatch { id, windows } => {
+            put_u32(&mut b, windows.len() as u32);
+            for w in windows {
+                put_f32s(&mut b, w);
+            }
+            (OP_CLASSIFY_BATCH, *id)
+        }
+        Request::OpenSession { id, precision } => {
+            put_opt_str(&mut b, precision.map(Precision::as_str));
+            (OP_OPEN_SESSION, *id)
+        }
+        Request::ClassifyStream { id, session, frames } => {
+            put_u64(&mut b, *session);
+            put_f32s(&mut b, frames);
+            (OP_CLASSIFY_STREAM, *id)
+        }
+        Request::CloseSession { id, session } => {
+            put_u64(&mut b, *session);
+            (OP_CLOSE_SESSION, *id)
+        }
+        Request::Hello { proto } => {
+            put_u64(&mut b, *proto);
+            (OP_HELLO, None)
+        }
+    };
+    finish_frame(b, opcode, id)
+}
+
+/// Decode one complete request frame (header + exactly its payload).
+pub fn decode_request(frame: &[u8]) -> Result<Request, FrameError> {
+    let h = parse_header(frame)?;
+    decode_request_body(&h, payload(&h, frame)?)
+}
+
+/// Decode a request from an already-parsed header and its payload —
+/// the form the transports use after reading the two pieces off a
+/// socket separately.
+pub fn decode_request_body(h: &Header, payload: &[u8]) -> Result<Request, FrameError> {
+    if payload.len() != h.payload_len as usize {
+        return Err(FrameError::Truncated);
+    }
+    let mut c = Cursor::new(payload);
+    let id = h.id();
+    let req = match h.opcode {
+        OP_PING => Request::Ping,
+        OP_QUIT => Request::Quit,
+        OP_STATS => Request::Stats,
+        OP_SET_LOAD => Request::SetLoad { id, gpu: c.opt_f64()?, cpu: c.opt_f64()? },
+        OP_CLASSIFY => {
+            let window = c.f32s()?.to_vec();
+            let target = match c.opt_str()? {
+                None => None,
+                Some(label) => Some(
+                    parse_target(&label).ok_or(FrameError::Malformed("unknown target"))?,
+                ),
+            };
+            let precision = match c.opt_str()? {
+                None => None,
+                Some(label) => Some(
+                    Precision::parse(&label)
+                        .ok_or(FrameError::Malformed("unknown precision"))?,
+                ),
+            };
+            let deadline_ms = c.opt_u64()?;
+            Request::Classify { id, window, target, precision, deadline_ms }
+        }
+        OP_CLASSIFY_BATCH => {
+            let n = c.u32()? as usize;
+            let mut windows = Vec::new();
+            for _ in 0..n {
+                windows.push(c.f32s()?.to_vec());
+            }
+            Request::ClassifyBatch { id, windows }
+        }
+        OP_OPEN_SESSION => {
+            let precision = match c.opt_str()? {
+                None => None,
+                Some(label) => Some(
+                    Precision::parse(&label)
+                        .ok_or(FrameError::Malformed("unknown precision"))?,
+                ),
+            };
+            Request::OpenSession { id, precision }
+        }
+        OP_CLASSIFY_STREAM => Request::ClassifyStream {
+            id,
+            session: c.u64()?,
+            frames: c.f32s()?.to_vec(),
+        },
+        OP_CLOSE_SESSION => Request::CloseSession { id, session: c.u64()? },
+        OP_HELLO => Request::Hello { proto: c.u64()? },
+        other => return Err(FrameError::BadOpcode(other)),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Zero-copy fast path: borrow a classify frame's window directly from
+/// the wire bytes without building a [`Request`]. This is the decode
+/// cost the v3 design is about — a header check and a slice borrow
+/// instead of parsing thousands of text floats.
+pub fn classify_window(frame: &[u8]) -> Result<F32View<'_>, FrameError> {
+    let h = parse_header(frame)?;
+    if h.opcode != OP_CLASSIFY {
+        return Err(FrameError::BadOpcode(h.opcode));
+    }
+    let mut c = Cursor::new(payload(&h, frame)?);
+    c.f32s()
+}
+
+/// The payload slice of a complete frame.
+fn payload<'a>(h: &Header, frame: &'a [u8]) -> Result<&'a [u8], FrameError> {
+    let end = h.frame_len();
+    if frame.len() < end {
+        return Err(FrameError::Truncated);
+    }
+    if frame.len() > end {
+        return Err(FrameError::Malformed("trailing bytes after frame"));
+    }
+    Ok(&frame[HEADER_LEN..end])
+}
+
+// ---- response codec --------------------------------------------------
+
+fn put_outcome(b: &mut Vec<u8>, o: &ClassifyOutcome) {
+    put_u32(b, o.class as u32);
+    put_str(b, &o.label);
+    put_f64(b, o.sim_latency_us);
+    put_f64(b, o.wall_latency_us);
+    put_str(b, &o.target);
+    put_u32(b, o.batch_size as u32);
+}
+
+fn get_outcome(c: &mut Cursor<'_>) -> Result<ClassifyOutcome, FrameError> {
+    Ok(ClassifyOutcome {
+        class: c.u32()? as usize,
+        label: c.str()?,
+        sim_latency_us: c.f64()?,
+        wall_latency_us: c.f64()?,
+        target: c.str()?,
+        batch_size: c.u32()? as usize,
+    })
+}
+
+/// Encode a response into one complete frame.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut b = vec![0u8; HEADER_LEN];
+    let (opcode, id) = match resp {
+        Response::Pong => (OP_PONG, None),
+        Response::Bye => (OP_BYE, None),
+        Response::Stats { gpu_util, cpu_util, metrics } => {
+            put_f64(&mut b, *gpu_util);
+            put_f64(&mut b, *cpu_util);
+            put_bytes32(&mut b, metrics.to_json().as_bytes());
+            (OP_STATS_R, None)
+        }
+        Response::LoadSet { id, gpu, cpu } => {
+            put_f64(&mut b, *gpu);
+            put_f64(&mut b, *cpu);
+            (OP_LOAD_SET, *id)
+        }
+        Response::Result { id, outcome } => {
+            put_outcome(&mut b, outcome);
+            (OP_RESULT, *id)
+        }
+        Response::BatchResult { id, outcomes } => {
+            put_u32(&mut b, outcomes.len() as u32);
+            for o in outcomes {
+                put_outcome(&mut b, o);
+            }
+            (OP_BATCH_RESULT, *id)
+        }
+        Response::SessionOpened { id, session, target, ttl_ms } => {
+            put_u64(&mut b, *session);
+            put_str(&mut b, target);
+            put_u64(&mut b, *ttl_ms);
+            (OP_SESSION_OPENED, *id)
+        }
+        Response::StreamResult {
+            id,
+            session,
+            steps,
+            classes,
+            logits,
+            wall_latency_us,
+            target,
+        } => {
+            put_u64(&mut b, *session);
+            put_u32(&mut b, *steps as u32);
+            put_u32(&mut b, classes.len() as u32);
+            for cl in classes {
+                put_u32(&mut b, *cl as u32);
+            }
+            put_f32s(&mut b, logits);
+            put_f64(&mut b, *wall_latency_us);
+            put_str(&mut b, target);
+            (OP_STREAM_RESULT, *id)
+        }
+        Response::SessionClosed { id, session, steps } => {
+            put_u64(&mut b, *session);
+            put_u64(&mut b, *steps);
+            (OP_SESSION_CLOSED, *id)
+        }
+        Response::HelloOk { proto } => {
+            put_u64(&mut b, *proto);
+            (OP_HELLO_OK, None)
+        }
+        Response::Error { id, code, message } => {
+            put_str(&mut b, code.as_str());
+            put_str(&mut b, message);
+            (OP_ERROR, *id)
+        }
+    };
+    finish_frame(b, opcode, id)
+}
+
+/// Decode one complete response frame.
+pub fn decode_response(frame: &[u8]) -> Result<Response, FrameError> {
+    let h = parse_header(frame)?;
+    decode_response_body(&h, payload(&h, frame)?)
+}
+
+/// Decode a response from an already-parsed header and its payload.
+pub fn decode_response_body(h: &Header, payload: &[u8]) -> Result<Response, FrameError> {
+    if payload.len() != h.payload_len as usize {
+        return Err(FrameError::Truncated);
+    }
+    let mut c = Cursor::new(payload);
+    let id = h.id();
+    let resp = match h.opcode {
+        OP_PONG => Response::Pong,
+        OP_BYE => Response::Bye,
+        OP_STATS_R => {
+            let gpu_util = c.f64()?;
+            let cpu_util = c.f64()?;
+            let bytes = c.bytes32()?;
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| FrameError::Malformed("metrics json is not utf-8"))?;
+            let metrics = crate::json::parse(text)
+                .map_err(|_| FrameError::Malformed("bad metrics json"))?;
+            if metrics.as_obj().is_none() {
+                return Err(FrameError::Malformed("metrics is not an object"));
+            }
+            Response::Stats { gpu_util, cpu_util, metrics }
+        }
+        OP_LOAD_SET => Response::LoadSet { id, gpu: c.f64()?, cpu: c.f64()? },
+        OP_RESULT => Response::Result { id, outcome: get_outcome(&mut c)? },
+        OP_BATCH_RESULT => {
+            let n = c.u32()? as usize;
+            let mut outcomes = Vec::new();
+            for _ in 0..n {
+                outcomes.push(get_outcome(&mut c)?);
+            }
+            Response::BatchResult { id, outcomes }
+        }
+        OP_SESSION_OPENED => Response::SessionOpened {
+            id,
+            session: c.u64()?,
+            target: c.str()?,
+            ttl_ms: c.u64()?,
+        },
+        OP_STREAM_RESULT => {
+            let session = c.u64()?;
+            let steps = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            let mut classes = Vec::new();
+            for _ in 0..n {
+                classes.push(c.u32()? as usize);
+            }
+            let logits = c.f32s()?.to_vec();
+            let wall_latency_us = c.f64()?;
+            let target = c.str()?;
+            Response::StreamResult { id, session, steps, classes, logits, wall_latency_us, target }
+        }
+        OP_SESSION_CLOSED => Response::SessionClosed { id, session: c.u64()?, steps: c.u64()? },
+        OP_HELLO_OK => Response::HelloOk { proto: c.u64()? },
+        OP_ERROR => {
+            let code_str = c.str()?;
+            let code = ErrorCode::parse(&code_str)
+                .ok_or(FrameError::Malformed("unknown error code"))?;
+            Response::Error { id, code, message: c.str()? }
+        }
+        other => return Err(FrameError::BadOpcode(other)),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{obj, Value};
+    use crate::simulator::Target;
+
+    fn request_cases() -> Vec<Request> {
+        vec![
+            Request::Ping,
+            Request::Quit,
+            Request::Stats,
+            Request::SetLoad { id: Some(11), gpu: Some(0.5), cpu: None },
+            Request::SetLoad { id: None, gpu: None, cpu: Some(1.0) },
+            Request::Classify {
+                id: Some(7),
+                window: vec![0.25, -1.5, 0.0],
+                target: Some(Target::CpuMulti(4)),
+                precision: None,
+                deadline_ms: Some(250),
+            },
+            Request::Classify {
+                id: Some(8),
+                window: vec![1.0],
+                target: None,
+                precision: Some(Precision::Int8),
+                deadline_ms: None,
+            },
+            Request::Classify {
+                id: None,
+                window: vec![],
+                target: None,
+                precision: None,
+                deadline_ms: None,
+            },
+            Request::ClassifyBatch { id: Some(1), windows: vec![vec![1.0, 2.0], vec![3.0, 4.0]] },
+            Request::ClassifyBatch { id: None, windows: vec![] },
+            Request::OpenSession { id: Some(12), precision: None },
+            Request::OpenSession { id: None, precision: Some(Precision::Int8) },
+            Request::ClassifyStream { id: Some(13), session: 7, frames: vec![0.5, -0.25, 1.0] },
+            Request::CloseSession { id: None, session: u64::MAX },
+            Request::Hello { proto: 3 },
+        ]
+    }
+
+    fn response_cases() -> Vec<Response> {
+        let outcome = ClassifyOutcome {
+            class: 3,
+            label: "sitting".into(),
+            sim_latency_us: 1234.5,
+            wall_latency_us: 88.25,
+            target: "gpu".into(),
+            batch_size: 4,
+        };
+        vec![
+            Response::Pong,
+            Response::Bye,
+            Response::LoadSet { id: Some(4), gpu: 0.75, cpu: 0.25 },
+            Response::Stats {
+                gpu_util: 0.5,
+                cpu_util: 0.0,
+                metrics: obj([("requests", Value::from(4usize))]),
+            },
+            Response::Result { id: Some(9), outcome: outcome.clone() },
+            Response::Result { id: None, outcome: outcome.clone() },
+            Response::BatchResult { id: Some(2), outcomes: vec![outcome.clone(), outcome] },
+            Response::BatchResult { id: None, outcomes: vec![] },
+            Response::SessionOpened {
+                id: Some(10),
+                session: 3,
+                target: "cpu-quant".into(),
+                ttl_ms: 30_000,
+            },
+            Response::StreamResult {
+                id: Some(11),
+                session: 3,
+                steps: 2,
+                classes: vec![1, 4],
+                logits: vec![0.0, 1.0, -0.5, 0.25, 2.0, 0.125],
+                wall_latency_us: 42.5,
+                target: "cpu".into(),
+            },
+            Response::SessionClosed { id: None, session: 3, steps: 17 },
+            Response::HelloOk { proto: 3 },
+            Response::Error {
+                id: Some(5),
+                code: ErrorCode::Overloaded,
+                message: "overloaded: scheduler queue full".into(),
+            },
+            Response::Error { id: None, code: ErrorCode::BadRequest, message: String::new() },
+        ]
+    }
+
+    #[test]
+    fn header_layout_is_byte_exact() {
+        let frame = encode_request(&Request::Ping);
+        assert_eq!(frame.len(), HEADER_LEN, "ping has an empty payload");
+        assert_eq!(frame[0], 0xA7);
+        assert_eq!(frame[1], 3);
+        assert_eq!(frame[2], 0x01);
+        assert_eq!(frame[3], 0, "ping carries no id");
+        assert_eq!(&frame[4..16], &[0u8; 12][..], "zero payload length and id");
+
+        let frame = encode_request(&Request::CloseSession { id: Some(0x0102), session: 9 });
+        assert_eq!(frame[2], 0x09);
+        assert_eq!(frame[3], 1, "id flag set");
+        assert_eq!(u32::from_le_bytes(frame[4..8].try_into().unwrap()), 8);
+        assert_eq!(u64::from_le_bytes(frame[8..16].try_into().unwrap()), 0x0102);
+        assert_eq!(u64::from_le_bytes(frame[16..24].try_into().unwrap()), 9);
+    }
+
+    #[test]
+    fn every_request_round_trips_byte_exact() {
+        for req in request_cases() {
+            let frame = encode_request(&req);
+            let back = decode_request(&frame).unwrap();
+            assert_eq!(back, req, "decode(encode(x)) != x");
+            // Byte-exact: re-encoding the decoded value reproduces the
+            // identical frame.
+            assert_eq!(encode_request(&back), frame, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn every_response_round_trips_byte_exact() {
+        for resp in response_cases() {
+            let frame = encode_response(&resp);
+            let back = decode_response(&frame).unwrap();
+            assert_eq!(back, resp, "decode(encode(x)) != x");
+            assert_eq!(encode_response(&back), frame, "{resp:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors() {
+        let frame = encode_request(&Request::Classify {
+            id: Some(1),
+            window: vec![1.0, 2.0, 3.0],
+            target: None,
+            precision: None,
+            deadline_ms: None,
+        });
+        for k in 0..frame.len() {
+            let err = decode_request(&frame[..k]).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Truncated | FrameError::Malformed(_)),
+                "prefix of {k} bytes: unexpected {err:?}"
+            );
+        }
+        // Streaming view: a partial header is "wait", a full header
+        // names the final length even before the payload arrives.
+        assert_eq!(frame_len(&frame[..4]), Ok(None));
+        assert_eq!(frame_len(&frame[..HEADER_LEN]), Ok(Some(frame.len())));
+        assert_eq!(frame_len(&frame), Ok(Some(frame.len())));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut frame = encode_request(&Request::Ping);
+        frame[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(parse_header(&frame), Err(FrameError::Oversized(MAX_PAYLOAD + 1)));
+        assert_eq!(frame_len(&frame), Err(FrameError::Oversized(MAX_PAYLOAD + 1)));
+        // A length that lies WITHIN the bound but past the actual
+        // payload is caught by the cursor, not by allocation.
+        let mut frame = encode_request(&Request::Ping);
+        frame[4..8].copy_from_slice(&1024u32.to_le_bytes());
+        assert_eq!(decode_request(&frame), Err(FrameError::Truncated));
+    }
+
+    #[test]
+    fn garbage_headers_are_typed_errors() {
+        assert_eq!(frame_len(b"GET / HTTP/1.1"), Err(FrameError::BadMagic(b'G')));
+        let mut frame = encode_request(&Request::Ping);
+        frame[1] = 9;
+        assert_eq!(decode_request(&frame), Err(FrameError::BadVersion(9)));
+        let mut frame = encode_request(&Request::Ping);
+        frame[2] = 0x55;
+        assert_eq!(decode_request(&frame), Err(FrameError::BadOpcode(0x55)));
+        // Response opcode on the request decoder and vice versa.
+        let resp_frame = encode_response(&Response::Pong);
+        assert_eq!(decode_request(&resp_frame), Err(FrameError::BadOpcode(OP_PONG)));
+        let req_frame = encode_request(&Request::Ping);
+        assert_eq!(decode_response(&req_frame), Err(FrameError::BadOpcode(OP_PING)));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut frame = encode_request(&Request::Ping);
+        frame.push(0);
+        assert_eq!(
+            decode_request(&frame),
+            Err(FrameError::Malformed("trailing bytes after frame"))
+        );
+    }
+
+    #[test]
+    fn malformed_payloads_never_panic() {
+        // Flip every byte of a valid classify frame through a few
+        // values: decoding must always return Ok or a typed Err.
+        let frame = encode_request(&Request::Classify {
+            id: Some(3),
+            window: vec![0.5; 8],
+            target: Some(Target::CpuSingle),
+            precision: Some(Precision::F32),
+            deadline_ms: Some(9),
+        });
+        for i in 0..frame.len() {
+            for delta in [1u8, 0x7F, 0xFF] {
+                let mut bad = frame.clone();
+                bad[i] = bad[i].wrapping_add(delta);
+                let _ = decode_request(&bad);
+            }
+        }
+        // Unknown target / precision labels are Malformed, not panics.
+        let frame = encode_request(&Request::Classify {
+            id: None,
+            window: vec![],
+            target: Some(Target::CpuSingle),
+            precision: None,
+            deadline_ms: None,
+        });
+        let text: &[u8] = b"cpu";
+        // Corrupt the target label in place ("cpu" -> "cpx").
+        let pos = frame.windows(text.len()).position(|w| w == text).unwrap();
+        let mut bad = frame.clone();
+        bad[pos + 2] = b'x';
+        assert_eq!(decode_request(&bad), Err(FrameError::Malformed("unknown target")));
+    }
+
+    #[test]
+    fn zero_copy_view_on_aligned_little_endian() {
+        let window: Vec<f32> = (0..32).map(|i| i as f32 * 0.25 - 4.0).collect();
+        let frame = encode_request(&Request::Classify {
+            id: None,
+            window: window.clone(),
+            target: None,
+            precision: None,
+            deadline_ms: None,
+        });
+        let view = classify_window(&frame).unwrap();
+        assert_eq!(view.len(), window.len());
+        assert_eq!(view.to_vec(), window);
+        // The window payload starts at byte 20 (header 16 + count 4);
+        // whenever the frame buffer is 4-aligned the view borrows.
+        if cfg!(target_endian = "little") && frame.as_ptr() as usize % 4 == 0 {
+            assert!(view.as_borrowed().is_some(), "aligned LE decode must not copy");
+        }
+        // Unaligned raw path computes the same values.
+        let mut shifted = vec![0u8; 1];
+        shifted.extend_from_slice(&frame[HEADER_LEN + 4..]);
+        let raw = f32_view(&shifted[1..]);
+        assert_eq!(raw.to_vec(), window);
+    }
+
+    #[test]
+    fn error_strings_are_bounded() {
+        let long = "x".repeat(100_000);
+        let frame = encode_response(&Response::Error {
+            id: None,
+            code: ErrorCode::Engine,
+            message: long,
+        });
+        match decode_response(&frame).unwrap() {
+            Response::Error { message, .. } => {
+                assert_eq!(message.len(), u16::MAX as usize, "truncated to the u16 bound");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+}

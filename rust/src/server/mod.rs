@@ -1,4 +1,5 @@
-//! TCP JSON-lines serving front-end (wire protocol v2).
+//! TCP serving front-ends: JSON lines (protocol v2) and binary frames
+//! (protocol v3, negotiated per connection).
 //!
 //! The image's vendor set has no tokio, so this is a classic std::net
 //! threaded server: one acceptor, one handler thread per connection,
@@ -38,10 +39,24 @@
 //! server-side between `classify_stream` calls; an idle session is
 //! evicted after its TTL and later references answer with the typed
 //! `session_not_found` / `session_expired` error codes.
+//!
+//! Wire protocol v3 (DESIGN.md §12) layers a binary transport on the
+//! same catalogue: a client sends `{"type":"hello","proto":3}` as a
+//! JSON line and, after the `hello_ok`, both directions switch to
+//! length-prefixed frames ([`frame`]) — raw little-endian f32 tensors
+//! instead of decimal text. JSON remains the default and the fallback.
+//! Two server front-ends speak both transports: the thread-per-
+//! connection [`Server`] ([`tcp`]) and the event-driven [`EventServer`]
+//! ([`event`]), which multiplexes thousands of connections over a
+//! fixed set of `poll(2)` I/O threads.
 
+pub mod event;
+pub mod frame;
 pub mod protocol;
 pub mod tcp;
 
+pub use event::{EventServer, EventServerBuilder};
+pub use frame::{F32View, FrameError};
 pub use protocol::{
     handle_line, handle_request, ClassifyOutcome, ErrorCode, Request, Response,
     PROTOCOL_VERSION,

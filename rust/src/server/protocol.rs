@@ -11,10 +11,13 @@
 //! Pure functions over [`crate::json::Value`] so the protocol is
 //! testable without sockets; [`super::tcp`] adds the transport.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{
-    parse_target, ClassifyOptions, Precision, Router, ServeError, ServeReply, StreamReply,
+    parse_target, ClassifyOptions, Precision, ReplySink, Router, ServeError, ServeReply,
+    StreamReply,
 };
 use crate::json::{obj, CodecError, FromValue, ToValue, Value};
 use crate::simulator::Target;
@@ -22,6 +25,16 @@ use crate::simulator::Target;
 /// Version stamped on every response; requests carrying a different
 /// `"v"` are rejected with [`ErrorCode::UnsupportedVersion`].
 pub const PROTOCOL_VERSION: u64 = 2;
+
+/// `hello` negotiation value for the default transport: line-delimited
+/// JSON (this module's codec).
+pub const PROTO_V2_JSON: u64 = 2;
+
+/// `hello` negotiation value for the binary transport: length-prefixed
+/// frames ([`super::frame`], DESIGN.md §12). A client upgrades by
+/// sending a JSON `hello {"proto":3}`; after the server's `hello_ok`
+/// both directions switch to frames on the same connection.
+pub const PROTO_V3_BINARY: u64 = 3;
 
 /// Machine-readable error class carried by [`Response::Error`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,7 +95,17 @@ impl ErrorCode {
 }
 
 /// The typed wire code for a serving-side failure.
-fn serve_error_code(e: &ServeError) -> ErrorCode {
+/// The refusal a server capped below a client's requested proto sends
+/// (`mobirnn serve --proto 2`): typed, with the cap in the message.
+pub(crate) fn proto_capped_error(max_proto: u64) -> Response {
+    Response::Error {
+        id: None,
+        code: ErrorCode::UnsupportedVersion,
+        message: format!("server accepts proto <= {max_proto}"),
+    }
+}
+
+pub(crate) fn serve_error_code(e: &ServeError) -> ErrorCode {
     match e {
         ServeError::DeadlineExceeded => ErrorCode::Deadline,
         ServeError::Overloaded => ErrorCode::Overloaded,
@@ -127,6 +150,9 @@ pub enum Request {
     /// Close a session, freeing its state immediately (instead of
     /// waiting for TTL eviction).
     CloseSession { id: Option<u64>, session: u64 },
+    /// Negotiate the wire transport for this connection
+    /// ([`PROTO_V2_JSON`] | [`PROTO_V3_BINARY`]); always sent as JSON.
+    Hello { proto: u64 },
 }
 
 /// A server → client message.
@@ -157,6 +183,9 @@ pub enum Response {
     /// `close_session` succeeded; echoes the total steps the session
     /// consumed over its lifetime.
     SessionClosed { id: Option<u64>, session: u64, steps: u64 },
+    /// `hello` accepted; echoes the protocol now in effect. After a
+    /// `proto: 3` acknowledgement both sides speak binary frames.
+    HelloOk { proto: u64 },
     Error { id: Option<u64>, code: ErrorCode, message: String },
 }
 
@@ -292,6 +321,11 @@ impl ToValue for Request {
                 fields.push(("session", Value::from(*session)));
                 obj(fields)
             }
+            Request::Hello { proto } => {
+                let mut fields = envelope("hello", None);
+                fields.push(("proto", Value::from(*proto)));
+                obj(fields)
+            }
         }
     }
 }
@@ -372,6 +406,7 @@ impl FromValue for Request {
                 id: field(v, "id")?,
                 session: field(v, "session")?,
             }),
+            "hello" => Ok(Request::Hello { proto: field(v, "proto")? }),
             other => Err(CodecError::new(format!("unknown type {other:?}"))),
         }
     }
@@ -438,6 +473,11 @@ impl ToValue for Response {
                 fields.push(("steps", Value::from(*steps)));
                 obj(fields)
             }
+            Response::HelloOk { proto } => {
+                let mut fields = envelope("hello_ok", None);
+                fields.push(("proto", Value::from(*proto)));
+                obj(fields)
+            }
             Response::Error { id, code, message } => {
                 let mut fields = envelope("error", *id);
                 fields.push(("code", Value::from(code.as_str())));
@@ -502,6 +542,7 @@ impl FromValue for Response {
                 session: field(v, "session")?,
                 steps: field(v, "steps")?,
             }),
+            "hello_ok" => Ok(Response::HelloOk { proto: field(v, "proto")? }),
             "error" => {
                 let code_str: String = field(v, "code")?;
                 let code = ErrorCode::parse(&code_str)
@@ -515,35 +556,44 @@ impl FromValue for Response {
 
 // ---- server-side execution -------------------------------------------
 
-/// Handle one wire line against the router. Never panics on malformed
-/// input — protocol and execution errors become typed
-/// [`Response::Error`] lines.
-pub fn handle_line(router: &Router, line: &str) -> Response {
+/// Decode one wire line into a typed request, applying the same
+/// version and error rules as [`handle_line`]. `Err` carries the ready
+/// [`Response::Error`] — the transports (threaded and event-driven)
+/// share this single decode seam.
+pub fn decode_line(line: &str) -> Result<Request, Response> {
     let v = match crate::json::parse(line) {
         Ok(v) => v,
         Err(e) => {
-            return Response::Error {
+            return Err(Response::Error {
                 id: None,
                 code: ErrorCode::BadJson,
                 message: format!("bad json: {e}"),
-            }
+            })
         }
     };
     let id = read_id(&v);
     if let Some(ver) = v.get("v").as_usize() {
         if ver as u64 != PROTOCOL_VERSION {
-            return Response::Error {
+            return Err(Response::Error {
                 id,
                 code: ErrorCode::UnsupportedVersion,
                 message: format!(
                     "protocol version {ver} not supported (server speaks v{PROTOCOL_VERSION})"
                 ),
-            };
+            });
         }
     }
-    match Request::from_value(&v) {
+    Request::from_value(&v)
+        .map_err(|e| Response::Error { id, code: ErrorCode::BadRequest, message: e.to_string() })
+}
+
+/// Handle one wire line against the router. Never panics on malformed
+/// input — protocol and execution errors become typed
+/// [`Response::Error`] lines.
+pub fn handle_line(router: &Router, line: &str) -> Response {
+    match decode_line(line) {
         Ok(req) => handle_request(router, req),
-        Err(e) => Response::Error { id, code: ErrorCode::BadRequest, message: e.to_string() },
+        Err(resp) => resp,
     }
 }
 
@@ -705,7 +755,174 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
                 Response::Error { id, code, message: format!("{e:#}") }
             }
         },
+        Request::Hello { proto } => match proto {
+            PROTO_V2_JSON => Response::HelloOk { proto },
+            PROTO_V3_BINARY => {
+                router.metrics.proto_v3_negotiated.fetch_add(1, Ordering::Relaxed);
+                Response::HelloOk { proto }
+            }
+            _ => Response::Error {
+                id: None,
+                code: ErrorCode::UnsupportedVersion,
+                message: format!(
+                    "wire protocol {proto} not supported (server speaks \
+                     {PROTO_V2_JSON} and {PROTO_V3_BINARY})"
+                ),
+            },
+        },
     }
+}
+
+/// Execute a typed request without ever blocking the calling thread.
+///
+/// Synchronous ops (ping, stats, set_load, session open/close, hello)
+/// run inline, so `done` fires before this returns. The classify family
+/// is handed to the scheduler with a [`ReplySink`] callback and `done`
+/// fires later, on whichever pool worker resolves the request. Exactly
+/// one `done` call happens per request — the event-driven server
+/// (DESIGN.md §12) relies on that to keep its per-connection in-flight
+/// accounting balanced. Unlike the blocking path, reply deadlines are
+/// enforced only at dispatch (expired-in-queue drops), never by a
+/// waiting thread — there is none.
+pub fn handle_request_async(router: &Router, req: Request, done: Box<dyn FnOnce(Response) + Send>) {
+    match req {
+        Request::Classify { id, window, target, precision, deadline_ms } => {
+            let expect = router.window_len();
+            if window.len() != expect {
+                done(Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!("window has {} values, expected {expect}", window.len()),
+                });
+                return;
+            }
+            let opts = ClassifyOptions {
+                id,
+                target,
+                precision,
+                deadline: deadline_ms.map(Duration::from_millis),
+            };
+            let sink = ReplySink::callback(move |outcome: Result<ServeReply, ServeError>| {
+                done(match outcome {
+                    Ok(reply) => {
+                        Response::Result { id, outcome: ClassifyOutcome::from_reply(&reply) }
+                    }
+                    Err(e) => Response::Error {
+                        id,
+                        code: serve_error_code(&e),
+                        message: e.to_string(),
+                    },
+                })
+            });
+            // Cannot fail: the window was validated above with the same
+            // rule `submit_sink` applies.
+            let _ = router.submit_sink(window, opts, sink);
+        }
+        Request::ClassifyBatch { id, windows } => {
+            if windows.is_empty() {
+                done(Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: "classify_batch requires at least one window".into(),
+                });
+                return;
+            }
+            let expect = router.window_len();
+            if let Some(w) = windows.iter().find(|w| w.len() != expect) {
+                done(Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!("window has {} values, expected {expect}", w.len()),
+                });
+                return;
+            }
+            // Fan-in: one slot per window (submit order preserved); the
+            // last reply to land assembles the batch response.
+            let n = windows.len();
+            let slots: Arc<Mutex<Vec<Option<Result<ServeReply, ServeError>>>>> =
+                Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+            let remaining = Arc::new(AtomicUsize::new(n));
+            let done = Arc::new(Mutex::new(Some(done)));
+            for (i, w) in windows.into_iter().enumerate() {
+                let slots = Arc::clone(&slots);
+                let remaining = Arc::clone(&remaining);
+                let done = Arc::clone(&done);
+                let sink = ReplySink::callback(move |outcome| {
+                    if let Ok(mut s) = slots.lock() {
+                        s[i] = Some(outcome);
+                    }
+                    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let filled = slots
+                            .lock()
+                            .map(|mut s| std::mem::take(&mut *s))
+                            .unwrap_or_default();
+                        if let Some(done) = done.lock().ok().and_then(|mut d| d.take()) {
+                            done(batch_response(id, filled));
+                        }
+                    }
+                });
+                // Cannot fail: every window was validated above.
+                let _ = router.submit_sink(w, ClassifyOptions::default(), sink);
+            }
+        }
+        Request::ClassifyStream { id, session, frames } => {
+            let dim = router.shape().input_dim;
+            if frames.is_empty() || frames.len() % dim != 0 {
+                done(Response::Error {
+                    id,
+                    code: ErrorCode::BadRequest,
+                    message: format!(
+                        "frames has {} values, expected a positive multiple of input_dim {dim}",
+                        frames.len()
+                    ),
+                });
+                return;
+            }
+            let sink = ReplySink::callback(move |outcome: Result<StreamReply, ServeError>| {
+                done(match outcome {
+                    Ok(reply) => stream_result(id, &reply),
+                    Err(e) => Response::Error {
+                        id,
+                        code: serve_error_code(&e),
+                        message: e.to_string(),
+                    },
+                })
+            });
+            // Cannot fail: the chunk shape was validated above.
+            let _ = router.submit_stream_sink(session, frames, id, sink);
+        }
+        other => done(handle_request(router, other)),
+    }
+}
+
+/// Assemble the fan-in result of an async batch: the first failed slot
+/// (in submit order) becomes the whole batch's error, matching the
+/// blocking path in [`handle_request`].
+fn batch_response(
+    id: Option<u64>,
+    slots: Vec<Option<Result<ServeReply, ServeError>>>,
+) -> Response {
+    let mut outcomes = Vec::with_capacity(slots.len());
+    for slot in slots {
+        match slot {
+            Some(Ok(reply)) => outcomes.push(ClassifyOutcome::from_reply(&reply)),
+            Some(Err(e)) => {
+                return Response::Error {
+                    id,
+                    code: serve_error_code(&e),
+                    message: e.to_string(),
+                }
+            }
+            None => {
+                return Response::Error {
+                    id,
+                    code: ErrorCode::Engine,
+                    message: "router dropped reply".into(),
+                }
+            }
+        }
+    }
+    Response::BatchResult { id, outcomes }
 }
 
 /// The wire form of a [`StreamReply`].
@@ -792,6 +1009,8 @@ mod tests {
             Request::OpenSession { id: None, precision: Some(Precision::Int8) },
             Request::ClassifyStream { id: Some(13), session: 7, frames: vec![0.5, -0.25, 1.0] },
             Request::CloseSession { id: None, session: 7 },
+            Request::Hello { proto: PROTO_V3_BINARY },
+            Request::Hello { proto: PROTO_V2_JSON },
         ];
         for req in cases {
             // Value round-trip.
@@ -842,6 +1061,7 @@ mod tests {
                 target: "cpu".into(),
             },
             Response::SessionClosed { id: None, session: 3, steps: 17 },
+            Response::HelloOk { proto: PROTO_V3_BINARY },
             Response::Error {
                 id: Some(5),
                 code: ErrorCode::InvalidLoad,
@@ -884,6 +1104,133 @@ mod tests {
     fn responses_carry_protocol_version() {
         for resp in [Response::Pong, Response::Bye] {
             assert_eq!(resp.to_value().get("v").as_usize(), Some(PROTOCOL_VERSION as usize));
+        }
+    }
+
+    #[test]
+    fn hello_negotiation() {
+        let r = router();
+        assert_eq!(
+            handle_line(&r, r#"{"type":"hello","proto":3}"#),
+            Response::HelloOk { proto: 3 }
+        );
+        assert_eq!(r.metrics.proto_v3_negotiated.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            handle_line(&r, r#"{"type":"hello","proto":2}"#),
+            Response::HelloOk { proto: 2 }
+        );
+        assert_eq!(r.metrics.proto_v3_negotiated.load(Ordering::Relaxed), 1);
+        match handle_line(&r, r#"{"type":"hello","proto":9}"#) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::UnsupportedVersion),
+            other => panic!("expected error, got {other:?}"),
+        }
+        match handle_line(&r, r#"{"type":"hello"}"#) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_handler_matches_blocking_for_sync_and_classify() {
+        let r = router();
+        let (tx, rx) = std::sync::mpsc::channel();
+        // Sync op: done fires inline.
+        let t = tx.clone();
+        handle_request_async(&r, Request::Ping, Box::new(move |resp| t.send(resp).unwrap()));
+        assert_eq!(rx.try_recv().unwrap(), Response::Pong);
+        // Classify: done fires later, from a pool worker.
+        let window: Vec<f32> = (0..30).map(|i| i as f32 / 10.0).collect();
+        let t = tx.clone();
+        handle_request_async(
+            &r,
+            Request::Classify {
+                id: Some(42),
+                window,
+                target: None,
+                precision: None,
+                deadline_ms: None,
+            },
+            Box::new(move |resp| t.send(resp).unwrap()),
+        );
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Response::Result { id, outcome } => {
+                assert_eq!(id, Some(42));
+                assert_eq!(outcome.class, 1, "FixedEngine predicts class 1");
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+        // Bad window: immediate typed error, done still fires once.
+        let t = tx.clone();
+        handle_request_async(
+            &r,
+            Request::Classify {
+                id: Some(1),
+                window: vec![0.0; 3],
+                target: None,
+                precision: None,
+                deadline_ms: None,
+            },
+            Box::new(move |resp| t.send(resp).unwrap()),
+        );
+        match rx.try_recv().unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_batch_fans_in_ordered() {
+        let r = router();
+        let w: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        let (tx, rx) = std::sync::mpsc::channel();
+        handle_request_async(
+            &r,
+            Request::ClassifyBatch { id: Some(5), windows: vec![w.clone(), w.clone(), w] },
+            Box::new(move |resp| tx.send(resp).unwrap()),
+        );
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Response::BatchResult { id, outcomes } => {
+                assert_eq!(id, Some(5));
+                assert_eq!(outcomes.len(), 3);
+                assert!(outcomes.iter().all(|o| o.class == 1));
+            }
+            other => panic!("expected batch_result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_stream_lifecycle() {
+        let r = router();
+        let opened = match handle_request(&r, Request::OpenSession { id: None, precision: None })
+        {
+            Response::SessionOpened { session, .. } => session,
+            other => panic!("expected session_opened, got {other:?}"),
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        handle_request_async(
+            &r,
+            Request::ClassifyStream { id: Some(9), session: opened, frames: vec![0.1, 0.2, 0.3] },
+            Box::new(move |resp| tx.send(resp).unwrap()),
+        );
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Response::StreamResult { id, session, steps, classes, .. } => {
+                assert_eq!(id, Some(9));
+                assert_eq!(session, opened);
+                assert_eq!(steps, 1);
+                assert_eq!(classes.len(), 1);
+            }
+            other => panic!("expected stream_result, got {other:?}"),
+        }
+        // Unknown session: typed error through the async path too.
+        let (tx, rx) = std::sync::mpsc::channel();
+        handle_request_async(
+            &r,
+            Request::ClassifyStream { id: None, session: 999_999, frames: vec![0.1, 0.2, 0.3] },
+            Box::new(move |resp| tx.send(resp).unwrap()),
+        );
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::SessionNotFound),
+            other => panic!("expected error, got {other:?}"),
         }
     }
 

@@ -1,8 +1,14 @@
-//! Threaded TCP transport for the JSON-lines protocol (v2).
+//! Threaded TCP transport for the JSON-lines protocol (v2) and, after
+//! an in-band `hello {"proto":3}` upgrade, the binary frame protocol
+//! (v3, [`super::frame`], DESIGN.md §12).
 //!
 //! The transport is deliberately thin: it reads lines, hands them to
 //! [`protocol::handle_line`], writes back the typed [`Response`]'s wire
-//! form, and closes when the response says so ([`Response::Bye`]).
+//! form, and closes when the response says so ([`Response::Bye`]). When
+//! a `hello_ok {"proto":3}` goes out, the same connection switches to
+//! length-prefixed frames in both directions and stays framed until it
+//! closes. Write errors are never discarded: a failed reply write
+//! counts `write_failed` and kills its connection.
 //!
 //! Connection discipline (DESIGN.md §9): every handler thread is
 //! TRACKED — [`Server::stop`] force-closes the live sockets and joins
@@ -17,8 +23,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{Precision, Router};
+use crate::coordinator::{Metrics, Precision, Router};
 use crate::json::{FromValue, ToValue, Value};
+use crate::server::frame;
 use crate::server::protocol::{self, ClassifyOutcome, ErrorCode, Request, Response};
 
 /// One tracked connection: the handle to join, plus a clone of the
@@ -32,11 +39,12 @@ struct ConnSlot {
 pub struct ServerBuilder {
     max_connections: usize,
     idle_timeout: Option<std::time::Duration>,
+    max_proto: u64,
 }
 
 impl ServerBuilder {
     pub fn new() -> Self {
-        Self { max_connections: 64, idle_timeout: None }
+        Self { max_connections: 64, idle_timeout: None, max_proto: protocol::PROTO_V3_BINARY }
     }
 
     /// Cap on concurrently served connections (default 64). Clients
@@ -58,10 +66,18 @@ impl ServerBuilder {
         self
     }
 
+    /// Highest wire protocol the server will negotiate (default 3).
+    /// `2` keeps every connection on JSON lines: a `hello {"proto":3}`
+    /// gets a typed `unsupported_version` refusal instead of an upgrade.
+    pub fn max_proto(mut self, p: u64) -> Self {
+        self.max_proto = p;
+        self
+    }
+
     /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
     /// `router` until stopped.
     pub fn bind(self, addr: &str, router: Router) -> Result<Server> {
-        Server::start(addr, router, self.max_connections, self.idle_timeout)
+        Server::start(addr, router, self.max_connections, self.idle_timeout, self.max_proto)
     }
 }
 
@@ -97,6 +113,7 @@ impl Server {
         router: Router,
         max_connections: usize,
         idle_timeout: Option<std::time::Duration>,
+        max_proto: u64,
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
@@ -125,7 +142,7 @@ impl Server {
                             };
                             if live >= max_connections {
                                 refused2.fetch_add(1, Ordering::Relaxed);
-                                refuse_connection(stream, max_connections);
+                                refuse_connection(stream, max_connections, &router.metrics);
                                 continue;
                             }
                             // An untrackable connection would be
@@ -135,22 +152,37 @@ impl Server {
                                 Ok(p) => p,
                                 Err(_) => {
                                     refused2.fetch_add(1, Ordering::Relaxed);
-                                    refuse_connection(stream, max_connections);
+                                    refuse_connection(stream, max_connections, &router.metrics);
                                     continue;
                                 }
                             };
                             accepted2.fetch_add(1, Ordering::Relaxed);
                             let router = router.clone();
+                            // conns_open is a gauge: up here, down when
+                            // the handler (or a failed spawn) releases
+                            // the connection.
+                            let gauge = Arc::clone(&router.metrics);
+                            gauge.conns_open.fetch_add(1, Ordering::Relaxed);
+                            let conn_gauge = Arc::clone(&gauge);
                             let spawned = std::thread::Builder::new()
                                 .name("mobirnn-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_connection(stream, router, idle_timeout);
+                                    let _ =
+                                        handle_connection(stream, router, idle_timeout, max_proto);
+                                    conn_gauge.conns_open.fetch_sub(1, Ordering::Relaxed);
                                 });
-                            if let Ok(handle) = spawned {
-                                conns2
-                                    .lock()
-                                    .unwrap()
-                                    .push(ConnSlot { stream: peer, handle });
+                            match spawned {
+                                Ok(handle) => {
+                                    conns2
+                                        .lock()
+                                        .unwrap()
+                                        .push(ConnSlot { stream: peer, handle });
+                                }
+                                Err(_) => {
+                                    // The handler never ran; release the
+                                    // gauge ourselves.
+                                    gauge.conns_open.fetch_sub(1, Ordering::Relaxed);
+                                }
                             }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -205,8 +237,9 @@ impl Drop for Server {
 /// line, a write-side FIN, a brief drain of whatever the client already
 /// sent, then close. The drain matters: dropping a socket with unread
 /// bytes in the receive buffer sends RST, which can destroy the error
-/// line before the client reads it.
-fn refuse_connection(mut stream: TcpStream, max_connections: usize) {
+/// line before the client reads it. Shared with the event-driven server
+/// ([`super::event`]), which applies the same cap discipline.
+pub(crate) fn refuse_connection(mut stream: TcpStream, max_connections: usize, metrics: &Metrics) {
     let resp = Response::Error {
         id: None,
         code: ErrorCode::Overloaded,
@@ -214,7 +247,12 @@ fn refuse_connection(mut stream: TcpStream, max_connections: usize) {
     };
     let mut line = resp.to_value().to_json();
     line.push('\n');
-    let _ = stream.write_all(line.as_bytes());
+    if stream.write_all(line.as_bytes()).is_err() {
+        // The client vanished before reading the refusal; count the
+        // dead write and skip the drain -- nobody is listening.
+        metrics.write_failed.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
     let _ = stream.shutdown(std::net::Shutdown::Write);
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(50)));
     let mut sink = [0u8; 512];
@@ -230,11 +268,13 @@ fn handle_connection(
     stream: TcpStream,
     router: Router,
     idle_timeout: Option<std::time::Duration>,
+    max_proto: u64,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     if let Some(d) = idle_timeout {
         stream.set_read_timeout(Some(d)).ok();
     }
+    let metrics = Arc::clone(&router.metrics);
     let mut writer = stream.try_clone().context("clone stream")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
@@ -254,7 +294,9 @@ fn handle_connection(
                 // thread and its max_connections slot come back.
                 let mut out = Response::Bye.to_value().to_json();
                 out.push('\n');
-                let _ = writer.write_all(out.as_bytes());
+                // A failed farewell still counts (via `send`); the
+                // connection is closing either way.
+                let _ = send(&mut writer, out.as_bytes(), &metrics);
                 break;
             }
             Err(e) => return Err(e.into()),
@@ -262,11 +304,25 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let resp = protocol::handle_line(&router, line.trim_end());
+        let resp = match protocol::decode_line(line.trim_end()) {
+            // A hello above the server's cap (`--proto`) is refused
+            // before it reaches the router; the connection stays JSON.
+            Ok(Request::Hello { proto }) if proto > max_proto => {
+                protocol::proto_capped_error(max_proto)
+            }
+            Ok(req) => protocol::handle_request(&router, req),
+            Err(resp) => resp,
+        };
         let close = matches!(resp, Response::Bye);
+        let upgrade = matches!(resp, Response::HelloOk { proto: protocol::PROTO_V3_BINARY });
         let mut out = resp.to_value().to_json();
         out.push('\n');
-        writer.write_all(out.as_bytes())?;
+        send(&mut writer, out.as_bytes(), &metrics)?;
+        if upgrade {
+            // The hello_ok above was the connection's last JSON line;
+            // everything after it is length-prefixed frames.
+            return serve_binary(&mut reader, &mut writer, &router, &metrics);
+        }
         if close {
             break;
         }
@@ -274,12 +330,108 @@ fn handle_connection(
     Ok(())
 }
 
+/// Write a whole reply, counting failures: a failed write means the
+/// client is gone, so the caller must treat the connection as dead.
+/// (These errors used to be silently discarded.)
+fn send(writer: &mut TcpStream, bytes: &[u8], metrics: &Metrics) -> Result<()> {
+    writer.write_all(bytes).map_err(|e| {
+        metrics.write_failed.fetch_add(1, Ordering::Relaxed);
+        anyhow!("reply write failed: {e}")
+    })
+}
+
+/// How a blocking read-to-fill ended.
+enum ReadOutcome {
+    /// The buffer was filled.
+    Full,
+    /// The peer closed -- at a frame boundary or mid-frame, either way
+    /// the connection is over.
+    Eof,
+    /// The read timeout elapsed (the transport's idle timeout).
+    Idle,
+}
+
+fn read_full(reader: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(ReadOutcome::Eof),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(ReadOutcome::Idle)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+/// Serve binary frames on an upgraded connection (DESIGN.md §12). Each
+/// request frame is answered before the next one is parsed -- the same
+/// strict per-connection FIFO as the JSON loop. Header-level corruption
+/// (bad magic, bad version, oversized length) loses the framing and
+/// closes the connection; a malformed payload under a valid header gets
+/// a typed error frame and the connection lives on.
+fn serve_binary(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    router: &Router,
+    metrics: &Metrics,
+) -> Result<()> {
+    loop {
+        let mut header = [0u8; frame::HEADER_LEN];
+        match read_full(reader, &mut header)? {
+            ReadOutcome::Full => {}
+            ReadOutcome::Eof => return Ok(()),
+            ReadOutcome::Idle => {
+                let _ = send(writer, &frame::encode_response(&Response::Bye), metrics);
+                return Ok(());
+            }
+        }
+        let h = frame::parse_header(&header).map_err(|e| anyhow!("bad frame header: {e}"))?;
+        // Bounded by MAX_PAYLOAD -- parse_header already rejected
+        // anything larger.
+        let mut payload = vec![0u8; h.payload_len as usize];
+        match read_full(reader, &mut payload)? {
+            ReadOutcome::Full => {}
+            ReadOutcome::Eof => return Ok(()),
+            ReadOutcome::Idle => {
+                let _ = send(writer, &frame::encode_response(&Response::Bye), metrics);
+                return Ok(());
+            }
+        }
+        metrics.frames_rx.fetch_add(1, Ordering::Relaxed);
+        let resp = match frame::decode_request_body(&h, &payload) {
+            Ok(req) => protocol::handle_request(router, req),
+            Err(e) => Response::Error {
+                id: h.id(),
+                code: ErrorCode::BadRequest,
+                message: format!("bad frame payload: {e}"),
+            },
+        };
+        let close = matches!(resp, Response::Bye);
+        send(writer, &frame::encode_response(&resp), metrics)?;
+        metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+        if close {
+            return Ok(());
+        }
+    }
+}
+
 /// Minimal blocking client for tests, examples and the CLI. Speaks the
 /// typed protocol: requests go out as [`Request`], replies come back as
 /// [`Response`].
 pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    pub(crate) reader: BufReader<TcpStream>,
+    pub(crate) writer: TcpStream,
+    /// After [`Client::negotiate_binary`]: speak frames, not JSON lines.
+    binary: bool,
 }
 
 impl Client {
@@ -287,13 +439,44 @@ impl Client {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
         let writer = stream.try_clone()?;
-        Ok(Self { reader: BufReader::new(stream), writer })
+        Ok(Self { reader: BufReader::new(stream), writer, binary: false })
     }
 
-    /// Send one typed request, read back the typed response.
+    /// Upgrade this connection to the binary frame transport (proto 3).
+    /// The hello goes out as the connection's last JSON line; every
+    /// call after success uses length-prefixed frames.
+    pub fn negotiate_binary(&mut self) -> Result<()> {
+        match self.call(&Request::Hello { proto: protocol::PROTO_V3_BINARY })? {
+            Response::HelloOk { proto } if proto == protocol::PROTO_V3_BINARY => {
+                self.binary = true;
+                Ok(())
+            }
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server refused proto 3 ({}): {message}", code.as_str()))
+            }
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Send one typed request, read back the typed response -- over
+    /// whichever transport this connection negotiated.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
+        if self.binary {
+            self.writer.write_all(&frame::encode_request(req))?;
+            return self.read_frame();
+        }
         let v = self.call_raw(&req.to_value())?;
         Response::from_value(&v).map_err(Into::into)
+    }
+
+    /// Read one complete response frame off the wire.
+    fn read_frame(&mut self) -> Result<Response> {
+        let mut header = [0u8; frame::HEADER_LEN];
+        self.reader.read_exact(&mut header)?;
+        let h = frame::parse_header(&header).map_err(|e| anyhow!("bad frame header: {e}"))?;
+        let mut payload = vec![0u8; h.payload_len as usize];
+        self.reader.read_exact(&mut payload)?;
+        frame::decode_response_body(&h, &payload).map_err(|e| anyhow!("bad frame: {e}"))
     }
 
     /// Send one raw JSON line, read one JSON line back. Escape hatch for
@@ -364,8 +547,7 @@ impl Client {
         frames: &[f32],
         id: u64,
     ) -> Result<(Vec<usize>, Vec<f32>)> {
-        let req =
-            Request::ClassifyStream { id: Some(id), session, frames: frames.to_vec() };
+        let req = Request::ClassifyStream { id: Some(id), session, frames: frames.to_vec() };
         match self.call(&req)? {
             Response::StreamResult { classes, logits, .. } => Ok((classes, logits)),
             Response::Error { code, message, .. } => {
@@ -527,8 +709,7 @@ mod tests {
             .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
             .build()
             .unwrap();
-        let mut srv =
-            Server::builder().max_connections(1).bind("127.0.0.1:0", router).unwrap();
+        let mut srv = Server::builder().max_connections(1).bind("127.0.0.1:0", router).unwrap();
         let _c1 = Client::connect(srv.addr()).unwrap();
         // The second connection is refused with one typed error line.
         let mut c2 = Client::connect(srv.addr()).unwrap();
@@ -655,5 +836,110 @@ mod tests {
         assert_eq!(client.close_session(session).unwrap(), 2);
         let err = client.classify_stream(session, &[0.1, 0.2, 0.3], 2).unwrap_err().to_string();
         assert!(err.contains("session_not_found"), "{err}");
+    }
+
+    #[test]
+    fn proto_cap_refuses_binary_upgrade() {
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(std::time::Duration::from_millis(1))
+            .engine(Box::new(FixedEngine::new(Target::CpuSingle)))
+            .build()
+            .unwrap();
+        let srv = Server::builder().max_proto(2).bind("127.0.0.1:0", router).unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let err = client.negotiate_binary().unwrap_err().to_string();
+        assert!(err.contains("unsupported_version"), "{err}");
+        // The refusal is an answer, not a hang-up: JSON still works.
+        client.ping().unwrap();
+    }
+
+    #[test]
+    fn binary_negotiation_and_full_round_trip() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.negotiate_binary().unwrap();
+        client.ping().unwrap();
+        // The whole op catalogue over frames.
+        let outcome = client.classify(&window(), 7).unwrap();
+        assert_eq!(outcome.class, 1, "FixedEngine predicts class 1");
+        assert_eq!(outcome.target, "cpu");
+        client.set_load(0.3, 0.1).unwrap();
+        let session = client.open_session(None).unwrap();
+        let (classes, logits) = client.classify_stream(session, &[0.1, 0.2, 0.3], 2).unwrap();
+        assert_eq!(classes, vec![1]);
+        assert_eq!(logits.len(), 6);
+        assert_eq!(client.close_session(session).unwrap(), 1);
+        let (gpu_util, _, metrics) = client.stats().unwrap();
+        assert!((gpu_util - 0.3).abs() < 1e-9);
+        assert_eq!(metrics.get("proto_v3_negotiated").as_usize(), Some(1));
+        assert!(metrics.get("frames_rx").as_usize().unwrap() >= 6, "{metrics:?}");
+        assert!(metrics.get("frames_tx").as_usize().unwrap() >= 5, "{metrics:?}");
+        assert_eq!(metrics.get("conns_open").as_usize(), Some(1));
+        client.quit().unwrap();
+    }
+
+    #[test]
+    fn binary_malformed_payload_keeps_connection_open() {
+        // A classify frame whose payload claims 99 floats but carries
+        // none: valid header, malformed payload -> one typed error
+        // frame, and the connection survives.
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.negotiate_binary().unwrap();
+        let payload = 99u32.to_le_bytes();
+        let mut bad = vec![0xA7u8, 3, 0x05, 0];
+        bad.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bad.extend_from_slice(&0u64.to_le_bytes());
+        bad.extend_from_slice(&payload);
+        client.writer.write_all(&bad).unwrap();
+        match client.read_frame().unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+            other => panic!("expected typed error frame, got {other:?}"),
+        }
+        client.ping().unwrap();
+    }
+
+    #[test]
+    fn binary_garbage_header_closes_connection() {
+        // Once framing is lost there is no way to resynchronize: the
+        // server closes without an answer, and without a panic.
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.negotiate_binary().unwrap();
+        client.writer.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        assert!(client.read_frame().is_err(), "no reply to garbage, just EOF");
+        // The server is unharmed: new clients get full service.
+        let mut c2 = Client::connect(srv.addr()).unwrap();
+        c2.ping().unwrap();
+    }
+
+    #[test]
+    fn binary_mid_frame_disconnect_is_a_clean_close() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.negotiate_binary().unwrap();
+        // Half a header, then hang up.
+        client.writer.write_all(&[0xA7, 3, 0x05]).unwrap();
+        drop(client);
+        let mut c2 = Client::connect(srv.addr()).unwrap();
+        c2.ping().unwrap();
+    }
+
+    #[test]
+    fn binary_oversized_length_closes_connection() {
+        let srv = server();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        client.negotiate_binary().unwrap();
+        // Header declaring a payload over the hard bound: the server
+        // must refuse to buffer it and drop the connection instead.
+        let mut bad = vec![0xA7u8, 3, 0x05, 0];
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        bad.extend_from_slice(&0u64.to_le_bytes());
+        client.writer.write_all(&bad).unwrap();
+        assert!(client.read_frame().is_err());
     }
 }

@@ -1,0 +1,241 @@
+//! Wire-protocol integration: protocol v3 (binary frames) must be
+//! indistinguishable from protocol v2 (JSON lines) in everything but
+//! cost, over BOTH serving front-ends — the thread-per-connection
+//! server and the event-driven multiplexer (DESIGN.md §12). Also
+//! drives the frame robustness rules over live sockets: header-level
+//! garbage kills a connection, malformed payloads get typed errors,
+//! and neither takes the server down.
+//!
+//! Artifact-free: engines run the shared random-weight fixture, so the
+//! parity checks are deterministic and run on every host.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mobirnn::bench::random_model;
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::{CpuSingleEngine, OffloadPolicy, Router};
+use mobirnn::server::{frame, Client, ClassifyOutcome, EventServer, Request, Response, Server};
+use mobirnn::simulator::Target;
+
+fn shape() -> ModelShape {
+    ModelShape { num_layers: 1, hidden: 16, input_dim: 3, seq_len: 10, num_classes: 6 }
+}
+
+/// A deterministic single-engine router: same weights, same policy,
+/// batch size 1 — so both transports must produce identical outcomes.
+fn router() -> Router {
+    let model = Arc::new(random_model(shape(), 42));
+    Router::builder()
+        .shape(shape())
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .engine(Box::new(CpuSingleEngine::new(model)))
+        .build()
+        .unwrap()
+}
+
+fn window(i: usize) -> Vec<f32> {
+    let n = shape().seq_len * shape().input_dim;
+    (0..n).map(|j| ((i * 31 + j * 7) % 97) as f32 / 97.0 - 0.5).collect()
+}
+
+fn assert_same_outcome(json: &ClassifyOutcome, binary: &ClassifyOutcome) {
+    assert_eq!(json.class, binary.class, "class must match across transports");
+    assert_eq!(json.label, binary.label, "label must match across transports");
+    assert_eq!(json.target, binary.target, "target must match across transports");
+    assert_eq!(json.batch_size, binary.batch_size, "batch size must match across transports");
+}
+
+/// Run the full op catalogue twice against `addr` — once over JSON,
+/// once over binary frames — and require identical results.
+fn parity_against(addr: SocketAddr) {
+    let mut json = Client::connect(addr).unwrap();
+    let mut bin = Client::connect(addr).unwrap();
+    bin.negotiate_binary().unwrap();
+
+    json.ping().unwrap();
+    bin.ping().unwrap();
+
+    // classify: identical class, label, target, batch size.
+    for i in 0..4 {
+        let a = json.classify(&window(i), i as u64).unwrap();
+        let b = bin.classify(&window(i), i as u64).unwrap();
+        assert_same_outcome(&a, &b);
+    }
+
+    // classify_batch: same outcomes element-wise.
+    let req = Request::ClassifyBatch { id: Some(9), windows: vec![window(0), window(1)] };
+    let (a, b) = (json.call(&req).unwrap(), bin.call(&req).unwrap());
+    match (a, b) {
+        (
+            Response::BatchResult { outcomes: oa, .. },
+            Response::BatchResult { outcomes: ob, .. },
+        ) => {
+            assert_eq!(oa.len(), 2);
+            assert_eq!(ob.len(), 2);
+            for (x, y) in oa.iter().zip(ob.iter()) {
+                assert_same_outcome(x, y);
+            }
+        }
+        other => panic!("expected two batch_results, got {other:?}"),
+    }
+
+    // sessions: same per-step classes AND bit-identical logits — the
+    // JSON float formatter is shortest-roundtrip, so nothing may drift.
+    let frames: Vec<f32> = (0..3 * shape().input_dim).map(|j| j as f32 / 10.0).collect();
+    let sa = json.open_session(None).unwrap();
+    let sb = bin.open_session(None).unwrap();
+    let (ca, la) = json.classify_stream(sa, &frames, 1).unwrap();
+    let (cb, lb) = bin.classify_stream(sb, &frames, 1).unwrap();
+    assert_eq!(ca, cb, "stream classes must match across transports");
+    assert_eq!(la, lb, "stream logits must match bit-for-bit");
+    assert_eq!(json.close_session(sa).unwrap(), 3);
+    assert_eq!(bin.close_session(sb).unwrap(), 3);
+
+    // set_load / stats: same knobs visible over both.
+    json.set_load(0.25, 0.5).unwrap();
+    let (g_json, c_json, _) = json.stats().unwrap();
+    let (g_bin, c_bin, _) = bin.stats().unwrap();
+    assert!((g_json - 0.25).abs() < 1e-9 && (g_bin - 0.25).abs() < 1e-9);
+    assert!((c_json - 0.5).abs() < 1e-9 && (c_bin - 0.5).abs() < 1e-9);
+
+    // errors: the same bad request earns the same typed code.
+    let bad = Request::Classify {
+        id: Some(13),
+        window: vec![0.0; 5],
+        target: None,
+        precision: None,
+        deadline_ms: None,
+    };
+    let (a, b) = (json.call(&bad).unwrap(), bin.call(&bad).unwrap());
+    match (a, b) {
+        (Response::Error { code: ca, .. }, Response::Error { code: cb, .. }) => {
+            assert_eq!(ca, cb, "error codes must match across transports");
+        }
+        other => panic!("expected matching typed errors, got {other:?}"),
+    }
+
+    json.quit().unwrap();
+    bin.quit().unwrap();
+}
+
+#[test]
+fn every_op_matches_across_transports_threaded() {
+    let srv = Server::bind("127.0.0.1:0", router()).unwrap();
+    parity_against(srv.addr());
+}
+
+#[test]
+fn every_op_matches_across_transports_event() {
+    let srv = EventServer::bind("127.0.0.1:0", router()).unwrap();
+    parity_against(srv.addr());
+}
+
+/// Upgrade a raw socket to binary frames by hand, for byte-level abuse
+/// the typed [`Client`] refuses to send.
+fn upgrade_raw(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"type\":\"hello\",\"proto\":3}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("hello_ok"), "{line}");
+    (reader, writer)
+}
+
+fn read_raw_frame(reader: &mut BufReader<TcpStream>) -> std::io::Result<Response> {
+    let mut header = [0u8; frame::HEADER_LEN];
+    reader.read_exact(&mut header)?;
+    let h = frame::parse_header(&header).expect("well-formed reply header");
+    let mut payload = vec![0u8; h.payload_len as usize];
+    reader.read_exact(&mut payload)?;
+    Ok(frame::decode_response_body(&h, &payload).expect("well-formed reply payload"))
+}
+
+/// Abuse one server at the byte level; it must answer typed errors for
+/// malformed payloads, close on lost framing, and never stop serving.
+fn abuse(addr: SocketAddr, kind: &str) {
+    // Malformed payload under a valid header: typed error, the
+    // connection survives and still answers pings.
+    let (mut reader, mut writer) = upgrade_raw(addr);
+    let payload = 99u32.to_le_bytes(); // classify claiming 99 floats, sending none
+    let mut bad = vec![frame::MAGIC, frame::FRAME_VERSION, 0x05, 0];
+    bad.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    bad.extend_from_slice(&0u64.to_le_bytes());
+    bad.extend_from_slice(&payload);
+    writer.write_all(&bad).unwrap();
+    match read_raw_frame(&mut reader).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code.as_str(), "bad_request", "{kind}"),
+        other => panic!("{kind}: expected typed error, got {other:?}"),
+    }
+    writer.write_all(&frame::encode_request(&Request::Ping)).unwrap();
+    assert_eq!(read_raw_frame(&mut reader).unwrap(), Response::Pong, "{kind}");
+
+    // Garbage where a header should be: framing is lost, the
+    // connection closes (EOF, not a hang and not a panic).
+    let (mut reader, mut writer) = upgrade_raw(addr);
+    writer.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    assert!(read_raw_frame(&mut reader).is_err(), "{kind}: garbage must close");
+
+    // An oversized length closes before any allocation happens.
+    let (mut reader, mut writer) = upgrade_raw(addr);
+    let mut huge = vec![frame::MAGIC, frame::FRAME_VERSION, 0x01, 0];
+    huge.extend_from_slice(&u32::MAX.to_le_bytes());
+    huge.extend_from_slice(&0u64.to_le_bytes());
+    writer.write_all(&huge).unwrap();
+    assert!(read_raw_frame(&mut reader).is_err(), "{kind}: oversized must close");
+
+    // Mid-frame disconnect: three header bytes, then gone.
+    let (reader, mut writer) = upgrade_raw(addr);
+    writer.write_all(&[frame::MAGIC, frame::FRAME_VERSION, 0x05]).unwrap();
+    drop(writer);
+    drop(reader);
+
+    // After all of that, the server still serves new clients.
+    let mut client = Client::connect(addr).unwrap();
+    client.ping().unwrap();
+    client.quit().unwrap();
+}
+
+#[test]
+fn frame_abuse_over_live_sockets_threaded() {
+    let srv = Server::bind("127.0.0.1:0", router()).unwrap();
+    abuse(srv.addr(), "threaded");
+}
+
+#[test]
+fn frame_abuse_over_live_sockets_event() {
+    let srv = EventServer::bind("127.0.0.1:0", router()).unwrap();
+    abuse(srv.addr(), "event");
+}
+
+#[test]
+fn event_server_multiplexes_mixed_transports() {
+    let mut srv = EventServer::builder()
+        .io_threads(2)
+        .max_connections(128)
+        .bind("127.0.0.1:0", router())
+        .unwrap();
+    let mut clients: Vec<Client> = (0..96).map(|_| Client::connect(srv.addr()).unwrap()).collect();
+    for (i, c) in clients.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            c.negotiate_binary().unwrap();
+        }
+    }
+    // Everybody gets served, interleaved, on two I/O threads.
+    let mut first = None;
+    for (i, c) in clients.iter_mut().enumerate() {
+        let outcome = c.classify(&window(i % 7), i as u64).unwrap();
+        let class = *first.get_or_insert(outcome.class);
+        if i % 7 == 0 {
+            assert_eq!(outcome.class, class, "same window, same class, any transport");
+        }
+    }
+    assert_eq!(srv.connections_accepted(), 96);
+    drop(clients);
+    srv.stop();
+}
