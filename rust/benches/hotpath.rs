@@ -5,12 +5,17 @@
 //!   - native LSTM cell + full-window forward (CPU serving target)
 //!   - per-row GEMV path vs the batched time-major plan at B ∈ {1,2,4,8}
 //!     (artifact-free: random weights, so it runs on every host)
+//!   - `gemm_microbench/*`: the inner GEMM kernels in isolation at the
+//!     HAR shape, dispatched-SIMD vs forced-scalar, reported as GFLOP/s
+//!     (DESIGN.md §13)
 //!   - PJRT execute (GPU serving target) at batch 1 and 8
 //!   - batch planning, policy decision, JSON wire codec, histogram record
 //!
 //! Every case also lands in `BENCH_hotpath.json` next to Cargo.toml —
 //! the machine-readable seed of the perf trajectory (mean/stddev ns per
-//! case; schema documented in EXPERIMENTS.md §Perf).
+//! case, plus which kernel path timed it; a `machine` block pins the
+//! detected ISA and core count so trajectories are comparable across
+//! hosts; schema documented in EXPERIMENTS.md §Perf).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -35,6 +40,7 @@ use mobirnn::tensor::Tensor;
 /// the artifact-gated cases (native cell/forward_window, pjrt) are
 /// absent, and the flag keeps that from reading as a dropped case.
 fn write_bench_json(results: &[BenchResult], artifacts_present: bool) {
+    let isa = mobirnn::kernel::active().as_str();
     let mut cases = BTreeMap::new();
     for r in results {
         let mut entry = BTreeMap::new();
@@ -45,13 +51,25 @@ fn write_bench_json(results: &[BenchResult], artifacts_present: bool) {
             "iters_per_sample".to_string(),
             Value::Num(r.iters_per_sample as f64),
         );
+        // Which kernel path timed this case: the `*_scalar` micro cases
+        // call the scalar oracles directly; everything else ran on the
+        // dispatched ISA.
+        let kernel = if r.name.ends_with("_scalar") { "scalar" } else { isa };
+        entry.insert("kernel".to_string(), Value::from(kernel));
         cases.insert(r.name.clone(), Value::Obj(entry));
     }
+    let mut machine = BTreeMap::new();
+    machine.insert("kernel_isa".to_string(), Value::from(isa));
+    machine.insert(
+        "cores".to_string(),
+        Value::from(std::thread::available_parallelism().map_or(1, |n| n.get())),
+    );
     let mut root = BTreeMap::new();
     root.insert("format".to_string(), Value::from("mobirnn-bench"));
-    root.insert("version".to_string(), Value::from(1usize));
+    root.insert("version".to_string(), Value::from(2usize));
     root.insert("bench".to_string(), Value::from("hotpath"));
     root.insert("artifacts_present".to_string(), Value::from(artifacts_present));
+    root.insert("machine".to_string(), Value::Obj(machine));
     root.insert("cases".to_string(), Value::Obj(cases));
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     std::fs::write(&path, Value::Obj(root).to_json()).expect("write BENCH_hotpath.json");
@@ -115,6 +133,49 @@ fn main() {
     // native_quant_b8 mean ≤ 0.6× native_batched_b8.
     all.extend(bench_quant_vs_f32("hotpath", 80.0, &per_row_vs_batched));
     all.extend(per_row_vs_batched);
+
+    // --- inner GEMM kernels in isolation (DESIGN.md §13) ---
+    // The HAR hot-path shape: B=8 rows through a layer's recurrent half
+    // ([8, 64] × [64, 128], K = I+H at H=32, N = 4H). Dispatched kernels
+    // vs the scalar oracles, reported as GFLOP/s (2·M·K·N per iter; the
+    // int8 cases count the same "effective" flops so the ratio reads as
+    // per-element speedup).
+    {
+        use mobirnn::lstm::quant::{
+            quant_matmul_into, quant_matmul_into_scalar, PackedQuantMatrix,
+        };
+        use mobirnn::tensor::{matmul_into, matmul_into_scalar};
+        use mobirnn::util::Rng;
+
+        let (m, k, n) = (8usize, 64usize, 128usize);
+        let flops = (2 * m * k * n) as f64;
+        let mut rng = Rng::new(77);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut out = vec![0.0f32; m * n];
+        all.push(bench_auto("gemm_microbench/gemm_f32", 60.0, || {
+            out.fill(0.0);
+            matmul_into(&mut out, &a, &w, m, k, n);
+        }));
+        all.push(bench_auto("gemm_microbench/gemm_f32_scalar", 60.0, || {
+            out.fill(0.0);
+            matmul_into_scalar(&mut out, &a, &w, m, k, n);
+        }));
+        let wq = PackedQuantMatrix::pack(&w, k, n);
+        let qa: Vec<i8> = (0..m * k).map(|_| rng.uniform(-127.0, 127.0) as i8).collect();
+        let mut qacc = vec![0i32; m * n];
+        all.push(bench_auto("gemm_microbench/gemm_i8", 60.0, || {
+            qacc.fill(0);
+            quant_matmul_into(&mut qacc, &qa, &wq, m);
+        }));
+        all.push(bench_auto("gemm_microbench/gemm_i8_scalar", 60.0, || {
+            qacc.fill(0);
+            quant_matmul_into_scalar(&mut qacc, &qa, &wq, m);
+        }));
+        for r in all.iter().rev().take(4).rev() {
+            println!("{}: {:.2} GFLOP/s", r.name, flops / r.mean_ns());
+        }
+    }
 
     // --- PJRT path ---
     if let Some(man) = &man {

@@ -33,7 +33,9 @@ use crate::coordinator::policy::target_label;
 use crate::coordinator::router::{ServeError, ServeReply, ServeRequest};
 use crate::coordinator::router::{StreamReply, StreamRequest};
 use crate::har::CLASS_NAMES;
-use crate::lstm::{BatchArena, LstmModel, QuantizedLstmModel, StreamState, ThreadedLstm};
+use crate::lstm::{
+    BatchArena, LstmModel, PlanPool, QuantizedLstmModel, StreamState, ThreadedLstm,
+};
 use crate::runtime::Runtime;
 use crate::session::{SessionError, SessionStore};
 use crate::simulator::{simulate_inference, Factorization, Target};
@@ -185,7 +187,12 @@ pub struct CpuSingleEngine {
 
 impl CpuSingleEngine {
     pub fn new(model: Arc<LstmModel>) -> Self {
-        let arena = Mutex::new(BatchArena::new(model.shape));
+        // Intra-batch pool (DESIGN.md §13): one batch's rows split across
+        // the socket, so this engine scales with cores even at batch
+        // size 1 per chunk. On a 1-core host the pool spawns no workers
+        // and every run is plain inline execution.
+        let pool = Arc::new(PlanPool::with_default_threads());
+        let arena = Mutex::new(BatchArena::with_pool(model.shape, pool));
         Self { model, arena }
     }
 }
@@ -238,7 +245,9 @@ pub struct CpuQuantEngine {
 
 impl CpuQuantEngine {
     pub fn new(model: Arc<QuantizedLstmModel>) -> Self {
-        let arena = Mutex::new(BatchArena::new(model.shape));
+        // Same intra-batch scaling as CpuSingleEngine (DESIGN.md §13).
+        let pool = Arc::new(PlanPool::with_default_threads());
+        let arena = Mutex::new(BatchArena::with_pool(model.shape, pool));
         Self { model, arena }
     }
 

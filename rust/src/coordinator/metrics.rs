@@ -198,6 +198,10 @@ impl Metrics {
 
     pub fn to_json(&self) -> Value {
         obj([
+            // Which inner-kernel ISA this process resolved to (DESIGN.md
+            // §13) — bench trajectories and latency regressions are only
+            // comparable across hosts with this pinned in the snapshot.
+            ("kernel_isa", Value::from(crate::kernel::active().as_str())),
             ("requests", Value::from(self.requests.load(Ordering::Relaxed))),
             ("batches", Value::from(self.batches.load(Ordering::Relaxed))),
             ("mean_batch_size", Value::Num(self.mean_batch_size())),
@@ -281,6 +285,9 @@ mod tests {
         m.queue_depth.store(7, Ordering::Relaxed);
         m.inflight.gpu.fetch_add(1, Ordering::Relaxed);
         let j = m.to_json();
+        // The snapshot pins the resolved kernel ISA, and it agrees with
+        // the dispatch module's label.
+        assert_eq!(j.get("kernel_isa").as_str(), Some(crate::kernel::active().as_str()));
         assert_eq!(j.get("requests").as_usize(), Some(10));
         assert_eq!(j.get("mean_batch_size").as_f64(), Some(2.5));
         assert_eq!(j.get("wall_latency").get("count").as_usize(), Some(1));

@@ -1,0 +1,199 @@
+//! Runtime kernel dispatch: pick the widest SIMD inner kernels the host
+//! actually has, once, at startup.
+//!
+//! The native hot path bottoms out in three inner kernels — the f32
+//! GEMM/GEMV pair (`tensor::matmul_into` / `tensor::gemv_into`) and the
+//! int8 GEMM (`lstm::quant::quant_matmul_into`). Each has three
+//! implementations:
+//!
+//! - **scalar** — the original quad-blocked kernels, kept verbatim (plus
+//!   the K-remainder bugfix) as the parity oracle and the fallback for
+//!   hosts without the detected features;
+//! - **AVX2** (x86_64, requires `avx2` + `fma`) — 8-lane f32 with fused
+//!   multiply-add, 8-lane widening i8×i8→i32;
+//! - **NEON** (aarch64, baseline) — 4-lane f32 `vfmaq`, widening
+//!   `vmlal_s16` int8.
+//!
+//! Selection happens ONCE per process (first call to [`dispatch`] /
+//! [`active`]), via `std::arch` runtime feature detection, and is cached
+//! in an atomic so the hot path pays one relaxed load + an indirect call.
+//! The scalar path stays reachable in production two ways: the
+//! `MOBIRNN_FORCE_SCALAR` environment variable (any value but `0`/empty)
+//! and [`force_scalar`] (the `--force-scalar` CLI flag) — CI runs the
+//! whole tier-1 suite a second time under the env var so the fallback
+//! cannot rot.
+//!
+//! Numerics contract (DESIGN.md §13): the int8 kernel is **bit-exact**
+//! across ISAs (integer adds are associative). The f32 SIMD kernels use
+//! fused multiply-adds and therefore differ from scalar within a
+//! documented absolute bound; within ONE ISA, `matmul_into` remains
+//! bit-for-bit equal to m independent `gemv_into` calls (every M-block
+//! path performs the identical per-element fma chain), so the
+//! batched-vs-per-window and streaming parity guarantees hold unchanged.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which inner-kernel implementation the process is running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar kernels — the parity oracle and universal fallback.
+    Scalar,
+    /// x86_64 AVX2 + FMA (runtime-detected).
+    Avx2,
+    /// aarch64 NEON (architectural baseline).
+    Neon,
+}
+
+impl KernelIsa {
+    /// Stable lowercase label — logged at startup, emitted in the metrics
+    /// snapshot (`kernel_isa`) and in `BENCH_hotpath.json` machine info.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Neon => "neon",
+        }
+    }
+}
+
+/// The resolved kernel table: one function pointer per inner kernel.
+/// `quant_matmul` takes the packed image as raw slices
+/// (`acc, a, w_data, m, k_padded, n`) so the table stays free of any
+/// `lstm`-layer types.
+pub struct KernelDispatch {
+    pub isa: KernelIsa,
+    pub matmul_f32: fn(&mut [f32], &[f32], &[f32], usize, usize, usize),
+    pub gemv_f32: fn(&mut [f32], &[f32], &[f32]),
+    pub quant_matmul: fn(&mut [i32], &[i8], &[i8], usize, usize, usize),
+}
+
+static SCALAR: KernelDispatch = KernelDispatch {
+    isa: KernelIsa::Scalar,
+    matmul_f32: crate::tensor::matmul_into_scalar,
+    gemv_f32: crate::tensor::gemv_into_scalar,
+    quant_matmul: crate::lstm::quant::quant_matmul_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelDispatch = KernelDispatch {
+    isa: KernelIsa::Avx2,
+    matmul_f32: crate::tensor::simd::matmul_into_avx2,
+    gemv_f32: crate::tensor::simd::gemv_into_avx2,
+    quant_matmul: crate::lstm::quant::simd::quant_matmul_avx2,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelDispatch = KernelDispatch {
+    isa: KernelIsa::Neon,
+    matmul_f32: crate::tensor::simd::matmul_into_neon,
+    gemv_f32: crate::tensor::simd::gemv_into_neon,
+    quant_matmul: crate::lstm::quant::simd::quant_matmul_neon,
+};
+
+/// 0 = undecided; the rest mirror [`KernelIsa`]. A relaxed CAS publishes
+/// the first detection — the race is benign because `detect()` is a pure
+/// function of the host (and the env var, read once per call).
+const TAG_UNSET: u8 = 0;
+const TAG_SCALAR: u8 = 1;
+const TAG_AVX2: u8 = 2;
+const TAG_NEON: u8 = 3;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(TAG_UNSET);
+
+fn scalar_forced_by_env() -> bool {
+    std::env::var_os("MOBIRNN_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+fn detect() -> u8 {
+    if scalar_forced_by_env() {
+        return TAG_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return TAG_AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return TAG_NEON;
+    }
+    #[allow(unreachable_code)]
+    TAG_SCALAR
+}
+
+fn active_tag() -> u8 {
+    let tag = ACTIVE.load(Ordering::Relaxed);
+    if tag != TAG_UNSET {
+        return tag;
+    }
+    let detected = detect();
+    // First writer wins; a concurrent force_scalar() store also wins —
+    // either way the subsequent load is the settled answer.
+    let _ = ACTIVE.compare_exchange(TAG_UNSET, detected, Ordering::Relaxed, Ordering::Relaxed);
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// The ISA the dispatch table is (or will be) resolved to.
+pub fn active() -> KernelIsa {
+    match active_tag() {
+        TAG_AVX2 => KernelIsa::Avx2,
+        TAG_NEON => KernelIsa::Neon,
+        _ => KernelIsa::Scalar,
+    }
+}
+
+/// Pin the process to the scalar kernels (the `--force-scalar` CLI
+/// path). Effective even after a SIMD table was already selected —
+/// in-flight calls finish on the old table; every later dispatch is
+/// scalar.
+pub fn force_scalar() {
+    ACTIVE.store(TAG_SCALAR, Ordering::Relaxed);
+}
+
+/// The resolved kernel table for this process.
+pub fn dispatch() -> &'static KernelDispatch {
+    match active_tag() {
+        #[cfg(target_arch = "x86_64")]
+        TAG_AVX2 => &AVX2,
+        #[cfg(target_arch = "aarch64")]
+        TAG_NEON => &NEON,
+        _ => &SCALAR,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(KernelIsa::Scalar.as_str(), "scalar");
+        assert_eq!(KernelIsa::Avx2.as_str(), "avx2");
+        assert_eq!(KernelIsa::Neon.as_str(), "neon");
+    }
+
+    #[test]
+    fn dispatch_table_matches_active_isa() {
+        // Whatever was detected (host- and env-dependent), the table and
+        // the reported ISA must agree — the observability contract.
+        assert_eq!(dispatch().isa, active());
+    }
+
+    #[test]
+    fn detected_isa_is_possible_on_this_arch() {
+        let isa = active();
+        #[cfg(target_arch = "x86_64")]
+        assert_ne!(isa, KernelIsa::Neon);
+        #[cfg(target_arch = "aarch64")]
+        assert_ne!(isa, KernelIsa::Avx2);
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert_eq!(isa, KernelIsa::Scalar);
+    }
+
+    // force_scalar() is process-global and would blind the SIMD↔scalar
+    // parity tests running in sibling threads, so it is exercised by the
+    // scalar-forced CI lane (MOBIRNN_FORCE_SCALAR=1) and the CLI flag
+    // test, not flipped here.
+}

@@ -13,6 +13,8 @@
 //! - [`config`]     — model/variant/manifest configuration
 //! - [`json`]       — in-crate JSON tree + the `ToValue`/`FromValue`
 //!   codec traits the wire protocol is typed through
+//! - [`kernel`]     — runtime SIMD dispatch (scalar/AVX2/NEON) for the
+//!   f32 and int8 inner GEMM kernels (DESIGN.md §13)
 //! - [`lstm`]       — native Rust LSTM forward pass (CPU engines) + MRNW weights
 //! - [`har`]        — synthetic HAR dataset substrate (MRNH loader + generator)
 //! - [`simulator`]  — DES mobile-SoC simulator (GPU slots, launch overhead,
@@ -33,6 +35,7 @@ pub mod coordinator;
 pub mod figures;
 pub mod har;
 pub mod json;
+pub mod kernel;
 pub mod lstm;
 pub mod runtime;
 pub mod server;

@@ -13,7 +13,8 @@
 //!   (DESIGN.md §8), one blocked GEMM per `(t, layer)` step
 //! - [`threaded::ThreadedLstm`]    — the batched plan data-parallelized
 //!   over contiguous sub-batch chunks (paper §4.4's "multi-threaded RNN
-//!   on the CPU")
+//!   on the CPU"); within ONE batch, [`plan::PlanPool`] row-partitions
+//!   the arena so single-batch engines scale with cores too (§13)
 //! - [`quant::QuantizedLstmModel::forward_batch_quant`] — the batched
 //!   plan on pre-packed int8 weights: integer GEMMs + fast rational
 //!   tail, gated by argmax parity with the f32 oracle (DESIGN.md §10)
@@ -38,7 +39,7 @@ pub mod weights;
 
 pub use cell::{lstm_cell, LstmCellWeights, FORGET_BIAS};
 pub use model::LstmModel;
-pub use plan::{step_rows, BatchArena};
+pub use plan::{chunk_spans, step_rows, BatchArena, PlanPool};
 pub use stream::StreamState;
 pub use quant::{
     fast_sigmoid, fast_tanh, QuantizedCellWeights, QuantizedLstmModel, SIGMOID_MAX_ABS_ERR,

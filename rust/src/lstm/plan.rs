@@ -1,5 +1,5 @@
 //! Batched time-major execution plan for the native LSTM stack
-//! (DESIGN.md §8).
+//! (DESIGN.md §8, intra-batch parallelism §13).
 //!
 //! The per-window path (`model::forward_window`) runs one GEMV per
 //! timestep per layer, re-reading every layer's `[I+H, 4H]` weight
@@ -9,7 +9,7 @@
 //! advances through one blocked GEMM (`tensor::matmul_into`), so each
 //! quad of weight rows is loaded once and feeds four batch rows.
 //!
-//! Two pieces:
+//! Three pieces:
 //!
 //! - [`BatchArena`] — the preallocated state of one in-flight batch:
 //!   `[B, H]` h/c planes per layer, one `[B, 4H]` gate buffer shared by
@@ -21,6 +21,17 @@
 //!   batch rows at once, numerically bit-for-bit with `rows` calls to
 //!   [`lstm_cell`](crate::lstm::cell::lstm_cell) (same per-element
 //!   accumulation order; asserted by `rust/tests/batched_plan.rs`).
+//! - [`PlanPool`] — a persistent intra-batch worker pool. With a pool
+//!   attached ([`BatchArena::set_pool`]), one batch's rows are split
+//!   into contiguous ranges ([`chunk_spans`] — the same chunking
+//!   discipline `lstm::threaded` uses across batches) and each range
+//!   runs the FULL time-major loop on its own worker over disjoint
+//!   sub-planes of the shared arena. Rows of a batch never interact —
+//!   the h/c recurrence is sequential in *t*, not across rows — so the
+//!   partitioned run is bit-for-bit equal to the inline run (each row's
+//!   per-element accumulation chain is unchanged; asserted below). This
+//!   is what lets `CpuSingleEngine`/`CpuQuantEngine` scale with cores
+//!   instead of batch count.
 //!
 //! Loop order is TIME-MAJOR, layer inner (`for t { for layer }`), the
 //! same order as the per-window path: each step's GEMM input is the
@@ -28,10 +39,175 @@
 //! in place with zero copies; only layer 0 needs a gather from the
 //! `[B, T, D]` input into the `[rows, I]` staging plane.
 
+use std::fmt;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
 use crate::config::ModelShape;
 use crate::lstm::cell::{sigmoid, LstmCellWeights, FORGET_BIAS};
-use crate::lstm::quant::{step_rows_quant, QuantScratch, QuantizedCellWeights};
+use crate::lstm::quant::{step_rows_quant_slices, QuantScratch, QuantizedCellWeights};
 use crate::tensor::matmul_into;
+
+/// Contiguous `(start, rows)` spans covering `total` rows in chunks of
+/// at most `chunk` rows — the chunking discipline shared by the
+/// cross-batch dispatcher (`lstm::threaded`) and the intra-batch
+/// partitioner here. `chunk` must be ≥ 1; the final span absorbs the
+/// remainder.
+pub fn chunk_spans(total: usize, chunk: usize) -> Vec<(usize, usize)> {
+    assert!(chunk >= 1, "chunk must be >= 1");
+    let mut spans = Vec::with_capacity(total.div_ceil(chunk.max(1)));
+    let mut start = 0;
+    while start < total {
+        let rows = chunk.min(total - start);
+        spans.push((start, rows));
+        start += rows;
+    }
+    spans
+}
+
+/// A job queued on the intra-batch pool. Tasks are erased to `'static`
+/// by [`PlanPool::run_scoped`], which guarantees they complete before
+/// the borrowed data they capture goes away.
+enum PoolJob {
+    Run(Box<dyn FnOnce() + Send + 'static>),
+    Shutdown,
+}
+
+/// A persistent worker pool for splitting ONE batch's work across
+/// cores. `new(t)` spawns `t - 1` OS threads (the caller's thread is
+/// always the t-th worker, so `new(1)` spawns nothing and
+/// [`PlanPool::run_scoped`] degrades to plain inline execution).
+///
+/// Workers share one queue behind a mutexed receiver (the
+/// `lstm::threaded` worker pattern) and live until the pool drops, so
+/// steady-state serving pays no thread spawns per batch — the pool is
+/// built once per engine and shared via `Arc` across that engine's
+/// arenas.
+pub struct PlanPool {
+    tx: Mutex<mpsc::Sender<PoolJob>>,
+    threads: usize,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl PlanPool {
+    /// A pool that runs scoped task sets on `threads` threads total
+    /// (caller + `threads - 1` spawned workers).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (1..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("mobirnn-plan-{i}"))
+                    .spawn(move || loop {
+                        // Take the job while holding the lock, run it after
+                        // releasing so workers pull in parallel.
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(PoolJob::Run(task)) => {
+                                // A panicking task must not kill the worker:
+                                // queued siblings would never drain and the
+                                // scoped caller could never observe completion.
+                                // The dropped-without-send done channel turns
+                                // the panic into a caller-side panic instead.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(task),
+                                );
+                            }
+                            Ok(PoolJob::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn plan pool worker")
+            })
+            .collect();
+        Self { tx: Mutex::new(tx), threads, workers }
+    }
+
+    /// A pool sized to the host's available parallelism.
+    pub fn with_default_threads() -> Self {
+        Self::new(thread::available_parallelism().map_or(1, |n| n.get()))
+    }
+
+    /// Total execution lanes (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a set of tasks that may borrow the caller's stack, blocking
+    /// until every one of them has completed. The last task runs on the
+    /// calling thread (it would otherwise idle-wait); the rest go to the
+    /// workers. If the pool has no workers, everything runs inline.
+    ///
+    /// Panics if a queued task panicked on a worker — by then all other
+    /// tasks have finished, so the borrowed data is quiescent either way.
+    pub fn run_scoped<'scope>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if self.workers.is_empty() || tasks.len() <= 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let inline = tasks.pop().expect("tasks.len() > 1");
+        let queued = tasks.len();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        {
+            let tx = self.tx.lock().unwrap();
+            for task in tasks {
+                let done = done_tx.clone();
+                let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    task();
+                    let _ = done.send(());
+                });
+                // SAFETY: only the lifetime is transmuted ('scope ->
+                // 'static); Box<dyn FnOnce> layout does not depend on it.
+                // This function does not return until `queued` completions
+                // (or a closed channel, which only happens after every
+                // other queued task finished or was dropped unrun) have
+                // been observed, so no task outlives 'scope.
+                let wrapped = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(wrapped)
+                };
+                tx.send(PoolJob::Run(wrapped)).expect("plan pool workers alive");
+            }
+        }
+        drop(done_tx);
+        inline();
+        for _ in 0..queued {
+            if done_rx.recv().is_err() {
+                // Every sender is gone but not every completion arrived:
+                // some task was dropped without finishing (it panicked on
+                // its worker). All other tasks have drained by now.
+                panic!("plan pool task panicked");
+            }
+        }
+    }
+}
+
+impl fmt::Debug for PlanPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PlanPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl Drop for PlanPool {
+    fn drop(&mut self) {
+        {
+            let tx = self.tx.lock().unwrap_or_else(|p| p.into_inner());
+            for _ in &self.workers {
+                let _ = tx.send(PoolJob::Shutdown);
+            }
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
 
 /// Preallocated per-batch state: every buffer the time-major plan writes.
 ///
@@ -55,6 +231,9 @@ pub struct BatchArena {
     /// Int8-path scratch (DESIGN.md §10): empty until the first
     /// [`BatchArena::run_quant`], so pure-f32 serving pays nothing.
     quant: QuantScratch,
+    /// Intra-batch worker pool (DESIGN.md §13): `None` runs every batch
+    /// inline on the calling thread, exactly as before.
+    pool: Option<Arc<PlanPool>>,
 }
 
 impl BatchArena {
@@ -73,9 +252,27 @@ impl BatchArena {
             gates: Vec::new(),
             xt: Vec::new(),
             quant: QuantScratch::default(),
+            pool: None,
         };
         arena.reserve_rows(rows.max(1));
         arena
+    }
+
+    /// An arena with an intra-batch pool attached from the start.
+    pub fn with_pool(shape: ModelShape, pool: Arc<PlanPool>) -> Self {
+        let mut arena = Self::new(shape);
+        arena.set_pool(pool);
+        arena
+    }
+
+    /// Attach a persistent intra-batch worker pool: every subsequent
+    /// `run`/`run_quant` splits its batch's rows across
+    /// `pool.threads()` lanes (bit-for-bit equal to the inline run).
+    /// Several arenas may share one pool — its queue serializes task
+    /// sets, which is exactly right when the arenas belong to the same
+    /// engine.
+    pub fn set_pool(&mut self, pool: Arc<PlanPool>) {
+        self.pool = Some(pool);
     }
 
     pub fn shape(&self) -> ModelShape {
@@ -116,14 +313,16 @@ impl BatchArena {
     /// time-major through the stacked layers. Returns the last layer's
     /// `[rows, H]` h-plane for the caller's head computation.
     ///
-    /// Allocation-free once the arena has grown to `rows`.
+    /// Allocation-free once the arena has grown to `rows` (modulo the
+    /// per-range task boxes when an intra-batch pool is attached).
     pub fn run(&mut self, layers: &[LstmCellWeights], windows: &[f32], rows: usize) -> &[f32] {
         self.run_impl(Layers::F32(layers), windows, rows)
     }
 
     /// [`BatchArena::run`]'s int8 mirror (DESIGN.md §10): the SAME
     /// time-major driver, with the per-`(t, layer)` step swapped for
-    /// [`step_rows_quant`]'s quantize → integer GEMM → requantize →
+    /// [`step_rows_quant`](crate::lstm::quant::step_rows_quant)'s
+    /// quantize → integer GEMM → requantize →
     /// fast-tail sequence. The h/c planes stay f32 (the recurrence input
     /// of the next step), so error does not compound across timesteps.
     ///
@@ -138,11 +337,13 @@ impl BatchArena {
         self.run_impl(Layers::Quant(layers), windows, rows)
     }
 
-    /// The one time-major driver behind both precisions: gather
-    /// `x[:, t, :]` into the contiguous staging plane, then chain the
-    /// layers in place — each layer's input is layer 0's staging plane
-    /// or the previous layer's freshly-written h-plane (split-borrow,
-    /// zero copies).
+    /// The one time-major driver behind both precisions. Without a pool
+    /// (or for single-row batches) the whole batch runs inline as one
+    /// row range; with a pool, rows split into contiguous ranges — each
+    /// range owns disjoint sub-planes of h/c/gates/xt (and the quant
+    /// scratch) and runs the full `for t { for layer }` loop
+    /// independently, because the recurrence couples timesteps, never
+    /// batch rows.
     fn run_impl(&mut self, layers: Layers<'_>, windows: &[f32], rows: usize) -> &[f32] {
         let s = self.shape;
         let n_layers = match layers {
@@ -152,50 +353,39 @@ impl BatchArena {
         assert_eq!(n_layers, s.num_layers, "layer count");
         assert_eq!(windows.len(), rows * s.seq_len * s.input_dim, "window data");
         self.reset(rows);
+        let mut kp_max = 0;
         if let Layers::Quant(l) = layers {
-            let kp_max = l.iter().map(QuantizedCellWeights::k_padded_max).max().unwrap_or(4);
+            kp_max = l.iter().map(QuantizedCellWeights::k_padded_max).max().unwrap_or(4);
             self.quant.reserve(rows, kp_max, 4 * s.hidden);
         }
-        let window_len = s.seq_len * s.input_dim;
-        let hn = rows * s.hidden;
-        for t in 0..s.seq_len {
-            // Gather x[:, t, :] into the contiguous [rows, I] staging plane.
-            for (b, dst) in self.xt[..rows * s.input_dim].chunks_exact_mut(s.input_dim).enumerate()
-            {
-                let at = b * window_len + t * s.input_dim;
-                dst.copy_from_slice(&windows[at..at + s.input_dim]);
-            }
-            for li in 0..s.num_layers {
-                // split_at_mut(0) leaves `prev` empty and `cur[0]` the
-                // first h-plane, so layer 0 needs no special borrow.
-                let (prev, cur) = self.h.split_at_mut(li);
-                let input: &[f32] = if li == 0 {
-                    &self.xt[..rows * s.input_dim]
-                } else {
-                    &prev[li - 1][..hn]
-                };
-                match layers {
-                    Layers::F32(l) => step_rows(
-                        &l[li],
-                        input,
-                        &mut cur[0][..hn],
-                        &mut self.c[li][..hn],
-                        &mut self.gates,
-                        rows,
-                    ),
-                    Layers::Quant(l) => step_rows_quant(
-                        &l[li],
-                        input,
-                        &mut cur[0][..hn],
-                        &mut self.c[li][..hn],
-                        &mut self.gates,
-                        &mut self.quant,
-                        rows,
-                    ),
+        let parts = match &self.pool {
+            Some(pool) if rows >= 2 => pool.threads().min(rows),
+            _ => 1,
+        };
+        let spans = chunk_spans(rows, rows.div_ceil(parts.max(1)).max(1));
+        let pool = self.pool.clone();
+        {
+            let quant = matches!(layers, Layers::Quant(_)).then_some(&mut self.quant);
+            let mut ranges =
+                split_ranges(&mut self.h, &mut self.c, &mut self.gates, &mut self.xt, quant, s,
+                    kp_max, &spans);
+            if ranges.len() <= 1 {
+                if let Some(range) = ranges.pop() {
+                    run_range(layers, s, windows, range);
                 }
+            } else {
+                let pool = pool.expect("multiple ranges only form with a pool attached");
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                    .into_iter()
+                    .map(|range| {
+                        Box::new(move || run_range(layers, s, windows, range))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_scoped(tasks);
             }
         }
-        &self.h[s.num_layers - 1][..hn]
+        &self.h[s.num_layers - 1][..rows * s.hidden]
     }
 }
 
@@ -205,6 +395,150 @@ impl BatchArena {
 enum Layers<'a> {
     F32(&'a [LstmCellWeights]),
     Quant(&'a [QuantizedCellWeights]),
+}
+
+/// One contiguous row range's mutable view of every arena plane — what
+/// a single intra-batch worker owns for the duration of a batch.
+struct RowRange<'a> {
+    /// First batch row of this range (offset into `windows`).
+    start: usize,
+    rows: usize,
+    /// Per layer: this range's `[rows, H]` h/c sub-planes.
+    h: Vec<&'a mut [f32]>,
+    c: Vec<&'a mut [f32]>,
+    gates: &'a mut [f32],
+    xt: &'a mut [f32],
+    quant: Option<QuantViews<'a>>,
+}
+
+/// This range's rows of the quant scratch planes.
+struct QuantViews<'a> {
+    qa: &'a mut [i8],
+    qacc: &'a mut [i32],
+    qscale: &'a mut [f32],
+}
+
+/// Split every arena plane into per-span disjoint sub-slices. All
+/// planes are row-major with contiguous rows, so each span is one
+/// `split_at_mut` per plane.
+#[allow(clippy::too_many_arguments)]
+fn split_ranges<'a>(
+    h: &'a mut [Vec<f32>],
+    c: &'a mut [Vec<f32>],
+    gates: &'a mut [f32],
+    xt: &'a mut [f32],
+    quant: Option<&'a mut QuantScratch>,
+    s: ModelShape,
+    kp_max: usize,
+    spans: &[(usize, usize)],
+) -> Vec<RowRange<'a>> {
+    let total: usize = spans.iter().map(|&(_, rows)| rows).sum();
+    let mut ranges: Vec<RowRange<'a>> = spans
+        .iter()
+        .map(|&(start, rows)| RowRange {
+            start,
+            rows,
+            h: Vec::with_capacity(s.num_layers),
+            c: Vec::with_capacity(s.num_layers),
+            gates: &mut [],
+            xt: &mut [],
+            quant: None,
+        })
+        .collect();
+    for (planes, field) in [(h, 0usize), (c, 1)] {
+        for plane in planes.iter_mut() {
+            let mut rest = &mut plane[..total * s.hidden];
+            for range in ranges.iter_mut() {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(range.rows * s.hidden);
+                if field == 0 {
+                    range.h.push(head);
+                } else {
+                    range.c.push(head);
+                }
+                rest = tail;
+            }
+        }
+    }
+    let mut rest = &mut gates[..total * 4 * s.hidden];
+    for range in ranges.iter_mut() {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(range.rows * 4 * s.hidden);
+        range.gates = head;
+        rest = tail;
+    }
+    let mut rest = &mut xt[..total * s.input_dim];
+    for range in ranges.iter_mut() {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(range.rows * s.input_dim);
+        range.xt = head;
+        rest = tail;
+    }
+    if let Some(q) = quant {
+        let mut qa = &mut q.qa[..total * kp_max];
+        let mut qacc = &mut q.qacc[..total * 4 * s.hidden];
+        let mut qscale = &mut q.qscale[..total];
+        for range in ranges.iter_mut() {
+            let (qa_head, qa_tail) = std::mem::take(&mut qa).split_at_mut(range.rows * kp_max);
+            qa = qa_tail;
+            let (qacc_head, qacc_tail) =
+                std::mem::take(&mut qacc).split_at_mut(range.rows * 4 * s.hidden);
+            qacc = qacc_tail;
+            let (qs_head, qs_tail) = std::mem::take(&mut qscale).split_at_mut(range.rows);
+            qscale = qs_tail;
+            range.quant = Some(QuantViews { qa: qa_head, qacc: qacc_head, qscale: qs_head });
+        }
+    }
+    ranges
+}
+
+/// Run the full time-major loop over one row range. Ranges are fully
+/// independent: the LSTM recurrence chains h/c across TIMESTEPS within
+/// a row, never across rows, so each range can sweep all of `t` on its
+/// own thread while reading the shared `windows`.
+fn run_range(layers: Layers<'_>, s: ModelShape, windows: &[f32], mut range: RowRange<'_>) {
+    let rows = range.rows;
+    let window_len = s.seq_len * s.input_dim;
+    let hn = rows * s.hidden;
+    for t in 0..s.seq_len {
+        // Gather this range's x[:, t, :] into its contiguous staging rows.
+        for (b, dst) in range.xt[..rows * s.input_dim].chunks_exact_mut(s.input_dim).enumerate() {
+            let at = (range.start + b) * window_len + t * s.input_dim;
+            dst.copy_from_slice(&windows[at..at + s.input_dim]);
+        }
+        for li in 0..s.num_layers {
+            // split_at_mut(li) leaves `prev` the layers below and
+            // `cur[0]` this layer's h-plane, so layer 0 needs no special
+            // borrow.
+            let (prev, cur) = range.h.split_at_mut(li);
+            let input: &[f32] = if li == 0 {
+                &range.xt[..rows * s.input_dim]
+            } else {
+                &prev[li - 1][..hn]
+            };
+            match layers {
+                Layers::F32(l) => step_rows(
+                    &l[li],
+                    input,
+                    &mut cur[0][..hn],
+                    &mut range.c[li][..hn],
+                    range.gates,
+                    rows,
+                ),
+                Layers::Quant(l) => {
+                    let q = range.quant.as_mut().expect("quant scratch views");
+                    step_rows_quant_slices(
+                        &l[li],
+                        input,
+                        &mut cur[0][..hn],
+                        &mut range.c[li][..hn],
+                        range.gates,
+                        q.qa,
+                        q.qacc,
+                        q.qscale,
+                        rows,
+                    )
+                }
+            }
+        }
+    }
 }
 
 /// One LSTM step for `rows` batch rows at once, in place: reads `xs`
@@ -265,6 +599,61 @@ mod tests {
     use crate::bench::random_cell_weights as rand_weights;
     use crate::lstm::cell::{lstm_cell, CellScratch};
     use crate::util::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_spans_cover_exactly_once() {
+        assert_eq!(chunk_spans(0, 3), vec![]);
+        assert_eq!(chunk_spans(1, 3), vec![(0, 1)]);
+        assert_eq!(chunk_spans(6, 2), vec![(0, 2), (2, 2), (4, 2)]);
+        assert_eq!(chunk_spans(7, 3), vec![(0, 3), (3, 3), (6, 1)]);
+        for total in 0..20usize {
+            for chunk in 1..8usize {
+                let spans = chunk_spans(total, chunk);
+                let mut next = 0;
+                for &(start, rows) in &spans {
+                    assert_eq!(start, next, "contiguous");
+                    assert!(rows >= 1 && rows <= chunk);
+                    next += rows;
+                }
+                assert_eq!(next, total, "total={total} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_pool_runs_every_task_and_is_reusable() {
+        let pool = PlanPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        for round in 1..=3usize {
+            let counter = AtomicUsize::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+            assert_eq!(counter.load(Ordering::SeqCst), 8, "round {round}");
+        }
+    }
+
+    #[test]
+    fn plan_pool_single_thread_runs_inline() {
+        let pool = PlanPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
 
     #[test]
     fn step_rows_bitwise_matches_per_row_cell() {
@@ -319,6 +708,40 @@ mod tests {
         // A smaller batch must not shrink capacity.
         let _ = arena.run(&layers, &windows[..2 * shape.seq_len * shape.input_dim], 2);
         assert_eq!(arena.capacity(), 5);
+    }
+
+    #[test]
+    fn partitioned_run_is_bitwise_equal_to_inline() {
+        // Rows never interact within a batch, and every kernel's
+        // per-element accumulation chain is independent of the M split,
+        // so the pool-partitioned run must reproduce the inline run bit
+        // for bit — f32 and int8, across chunk remainders.
+        let shape =
+            ModelShape { num_layers: 2, hidden: 16, input_dim: 5, seq_len: 6, num_classes: 4 };
+        let mut rng = Rng::new(54);
+        let mut layers = Vec::new();
+        let mut qlayers = Vec::new();
+        let mut in_dim = shape.input_dim;
+        for _ in 0..shape.num_layers {
+            let w = rand_weights(&mut rng, in_dim, shape.hidden);
+            qlayers.push(QuantizedCellWeights::quantize(&w));
+            layers.push(w);
+            in_dim = shape.hidden;
+        }
+        let pool = Arc::new(PlanPool::new(3));
+        let mut inline = BatchArena::new(shape);
+        let mut pooled = BatchArena::with_pool(shape, Arc::clone(&pool));
+        for rows in [1usize, 2, 5, 7, 8] {
+            let windows: Vec<f32> = (0..rows * shape.seq_len * shape.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let f_inline = inline.run(&layers, &windows, rows).to_vec();
+            let f_pooled = pooled.run(&layers, &windows, rows).to_vec();
+            assert_eq!(f_inline, f_pooled, "f32 rows={rows}");
+            let q_inline = inline.run_quant(&qlayers, &windows, rows).to_vec();
+            let q_pooled = pooled.run_quant(&qlayers, &windows, rows).to_vec();
+            assert_eq!(q_inline, q_pooled, "quant rows={rows}");
+        }
     }
 
     #[test]

@@ -32,11 +32,20 @@
 //!   [`SIGMOID_MAX_ABS_ERR`]) asserted over a dense sweep of [-10, 10]
 //!   by `rust/tests/quant.rs`.
 //!
-//! The kernel mirrors `tensor::matmul_into`'s blocking exactly —
-//! quad-M output rows over quad-K weight rows, duo/single M tails — so
-//! the weight-reuse argument (one loaded quad of `W` rows feeds four
-//! batch rows) carries over unchanged; the int8 image is 4× denser, so
-//! the same traversal moves a quarter of the bytes.
+//! Since the SIMD work (DESIGN.md §13), [`quant_matmul_into`] routes
+//! through the process-wide [`crate::kernel::dispatch`] table: a
+//! widening i8×i8→i16→i32 AVX2 kernel on capable x86_64, `vmlal_s16`
+//! NEON on aarch64, and the original scalar kernel
+//! ([`quant_matmul_into_scalar`]) everywhere else. Integer addition is
+//! associative and every product fits comfortably (`127² · K ≪ 2³¹`),
+//! so ALL implementations are bit-exact with each other — asserted by
+//! `rust/tests/simd_parity.rs`.
+//!
+//! The scalar kernel mirrors `tensor::matmul_into_scalar`'s blocking
+//! exactly — quad-M output rows over quad-K weight rows, duo/single M
+//! tails — so the weight-reuse argument (one loaded quad of `W` rows
+//! feeds four batch rows) carries over unchanged; the int8 image is 4×
+//! denser, so the same traversal moves a quarter of the bytes.
 //!
 //! Accuracy gate: this path is NOT bit-exact with f32 and never claims
 //! to be. Its contract is argmax parity — ≥ 99% agreement with the f32
@@ -145,20 +154,38 @@ impl PackedQuantMatrix {
 }
 
 /// `acc[m][j] += Σ_r a[m][r] · w[r][j]` in `i8×i8→i32` — the integer
-/// mirror of `tensor::matmul_into`: output rows blocked in quads (each
+/// mirror of `tensor::matmul_into`, via the process-wide kernel table
+/// ([`crate::kernel::dispatch`]). `a` is row-major `[m, w.k_padded]`
+/// with the padding lanes zero. Bit-exact across every implementation
+/// (integer accumulation is associative).
+pub fn quant_matmul_into(acc: &mut [i32], a: &[i8], w: &PackedQuantMatrix, m: usize) {
+    debug_assert_eq!(acc.len(), m * w.n, "acc shape");
+    debug_assert_eq!(a.len(), m * w.k_padded, "a shape");
+    (crate::kernel::dispatch().quant_matmul)(acc, a, &w.data, m, w.k_padded, w.n)
+}
+
+/// [`quant_matmul_into`] pinned to the scalar kernel — the parity
+/// oracle for `rust/tests/simd_parity.rs` regardless of what the
+/// dispatch table selected.
+pub fn quant_matmul_into_scalar(acc: &mut [i32], a: &[i8], w: &PackedQuantMatrix, m: usize) {
+    debug_assert_eq!(acc.len(), m * w.n, "acc shape");
+    debug_assert_eq!(a.len(), m * w.k_padded, "a shape");
+    quant_matmul_scalar(acc, a, &w.data, m, w.k_padded, w.n)
+}
+
+/// The scalar integer GEMM over the raw packed image (row-major
+/// `[kp, n]` with `kp % 4 == 0`): output rows blocked in quads (each
 /// loaded quad of packed weight rows feeds four accumulator rows), K
 /// blocked in quads with NO remainder (packing padded K), a duo-M block
-/// for 2–3 row tails, single rows last. `a` is row-major
-/// `[m, w.k_padded]` with the padding lanes zero.
-pub fn quant_matmul_into(acc: &mut [i32], a: &[i8], w: &PackedQuantMatrix, m: usize) {
-    let n = w.n;
-    let kp = w.k_padded;
+/// for 2–3 row tails, single rows last.
+pub fn quant_matmul_scalar(acc: &mut [i32], a: &[i8], wd: &[i8], m: usize, kp: usize, n: usize) {
+    debug_assert_eq!(kp % 4, 0, "packed K must be quad-padded");
     debug_assert_eq!(acc.len(), m * n, "acc shape");
     debug_assert_eq!(a.len(), m * kp, "a shape");
+    debug_assert!(wd.len() >= kp * n, "W too small");
     // i8·i8 ≤ 127² = 16129 per term: kp below ~133k rows cannot overflow
     // the i32 accumulator even if every product saturates.
     debug_assert!(kp < (i32::MAX as usize) / (127 * 127), "K too large for i32 acc");
-    let wd = &w.data;
     let mut mi = 0;
     while mi + 4 <= m {
         let (o01, o23) = acc[mi * n..(mi + 4) * n].split_at_mut(2 * n);
@@ -242,6 +269,227 @@ pub fn quant_matmul_into(acc: &mut [i32], a: &[i8], w: &PackedQuantMatrix, m: us
     }
 }
 
+/// AVX2 int8 GEMM: widening i8×i8→i16→i32 dot products, 16 output
+/// channels per vector step. Weights widen via `_mm256_cvtepi8_epi16`,
+/// products run in `_mm256_mullo_epi16` (exact: |i8·i8| ≤ 127² < 2¹⁵),
+/// then widen to i32 and accumulate. Bit-exact with the scalar kernel —
+/// integer adds in any order. M-blocks of 4 rows reuse each widened
+/// weight vector; remaining rows run singly (no duo block needed, the
+/// result is identical by associativity).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod simd {
+    use std::arch::x86_64::*;
+
+    pub(crate) fn quant_matmul_avx2(
+        acc: &mut [i32],
+        a: &[i8],
+        wd: &[i8],
+        m: usize,
+        kp: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(kp % 4, 0, "packed K must be quad-padded");
+        debug_assert_eq!(acc.len(), m * n, "acc shape");
+        debug_assert_eq!(a.len(), m * kp, "a shape");
+        debug_assert!(wd.len() >= kp * n, "W too small");
+        debug_assert!(kp < (i32::MAX as usize) / (127 * 127), "K too large for i32 acc");
+        // SAFETY: the dispatch table installs this entry only after
+        // `is_x86_feature_detected!("avx2")` held; the shape asserts
+        // bound every pointer offset used inside.
+        unsafe { qmm_avx2(acc.as_mut_ptr(), a.as_ptr(), wd.as_ptr(), m, kp, n) }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `acc`/`a`/`wd` must be valid for `m*n` / `m*kp` /
+    /// `kp*n` element accesses.
+    #[target_feature(enable = "avx2")]
+    unsafe fn qmm_avx2(acc: *mut i32, a: *const i8, wd: *const i8, m: usize, kp: usize, n: usize) {
+        unsafe {
+            let mut mi = 0;
+            while mi + 4 <= m {
+                qrows4_avx2(acc.add(mi * n), a.add(mi * kp), wd, kp, n);
+                mi += 4;
+            }
+            while mi < m {
+                qrow1_avx2(acc.add(mi * n), a.add(mi * kp), wd, kp, n);
+                mi += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; 4 accumulator rows at `o`, 4 activation rows at `a`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn qrows4_avx2(o: *mut i32, a: *const i8, wd: *const i8, kp: usize, n: usize) {
+        unsafe {
+            let (o0, o1, o2, o3) = (o, o.add(n), o.add(2 * n), o.add(3 * n));
+            let (a0, a1, a2, a3) = (a, a.add(kp), a.add(2 * kp), a.add(3 * kp));
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut s0l = _mm256_loadu_si256(o0.add(j) as *const __m256i);
+                let mut s0h = _mm256_loadu_si256(o0.add(j + 8) as *const __m256i);
+                let mut s1l = _mm256_loadu_si256(o1.add(j) as *const __m256i);
+                let mut s1h = _mm256_loadu_si256(o1.add(j + 8) as *const __m256i);
+                let mut s2l = _mm256_loadu_si256(o2.add(j) as *const __m256i);
+                let mut s2h = _mm256_loadu_si256(o2.add(j + 8) as *const __m256i);
+                let mut s3l = _mm256_loadu_si256(o3.add(j) as *const __m256i);
+                let mut s3h = _mm256_loadu_si256(o3.add(j + 8) as *const __m256i);
+                for r in 0..kp {
+                    // 16 packed weights → i16 lanes, shared by 4 rows.
+                    let w16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        wd.add(r * n + j) as *const __m128i
+                    ));
+                    let p0 = _mm256_mullo_epi16(_mm256_set1_epi16(*a0.add(r) as i16), w16);
+                    let p1 = _mm256_mullo_epi16(_mm256_set1_epi16(*a1.add(r) as i16), w16);
+                    let p2 = _mm256_mullo_epi16(_mm256_set1_epi16(*a2.add(r) as i16), w16);
+                    let p3 = _mm256_mullo_epi16(_mm256_set1_epi16(*a3.add(r) as i16), w16);
+                    s0l = _mm256_add_epi32(s0l, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p0)));
+                    s0h = _mm256_add_epi32(
+                        s0h,
+                        _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p0)),
+                    );
+                    s1l = _mm256_add_epi32(s1l, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p1)));
+                    s1h = _mm256_add_epi32(
+                        s1h,
+                        _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p1)),
+                    );
+                    s2l = _mm256_add_epi32(s2l, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p2)));
+                    s2h = _mm256_add_epi32(
+                        s2h,
+                        _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p2)),
+                    );
+                    s3l = _mm256_add_epi32(s3l, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p3)));
+                    s3h = _mm256_add_epi32(
+                        s3h,
+                        _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p3)),
+                    );
+                }
+                _mm256_storeu_si256(o0.add(j) as *mut __m256i, s0l);
+                _mm256_storeu_si256(o0.add(j + 8) as *mut __m256i, s0h);
+                _mm256_storeu_si256(o1.add(j) as *mut __m256i, s1l);
+                _mm256_storeu_si256(o1.add(j + 8) as *mut __m256i, s1h);
+                _mm256_storeu_si256(o2.add(j) as *mut __m256i, s2l);
+                _mm256_storeu_si256(o2.add(j + 8) as *mut __m256i, s2h);
+                _mm256_storeu_si256(o3.add(j) as *mut __m256i, s3l);
+                _mm256_storeu_si256(o3.add(j + 8) as *mut __m256i, s3h);
+                j += 16;
+            }
+            while j < n {
+                let (mut s0, mut s1, mut s2, mut s3) =
+                    (*o0.add(j), *o1.add(j), *o2.add(j), *o3.add(j));
+                for r in 0..kp {
+                    let wv = *wd.add(r * n + j) as i32;
+                    s0 += *a0.add(r) as i32 * wv;
+                    s1 += *a1.add(r) as i32 * wv;
+                    s2 += *a2.add(r) as i32 * wv;
+                    s3 += *a3.add(r) as i32 * wv;
+                }
+                *o0.add(j) = s0;
+                *o1.add(j) = s1;
+                *o2.add(j) = s2;
+                *o3.add(j) = s3;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; 1 accumulator row at `o`, 1 activation row at `a`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn qrow1_avx2(o: *mut i32, a: *const i8, wd: *const i8, kp: usize, n: usize) {
+        unsafe {
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut sl = _mm256_loadu_si256(o.add(j) as *const __m256i);
+                let mut sh = _mm256_loadu_si256(o.add(j + 8) as *const __m256i);
+                for r in 0..kp {
+                    let w16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        wd.add(r * n + j) as *const __m128i
+                    ));
+                    let p = _mm256_mullo_epi16(_mm256_set1_epi16(*a.add(r) as i16), w16);
+                    sl = _mm256_add_epi32(sl, _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p)));
+                    sh = _mm256_add_epi32(
+                        sh,
+                        _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p)),
+                    );
+                }
+                _mm256_storeu_si256(o.add(j) as *mut __m256i, sl);
+                _mm256_storeu_si256(o.add(j + 8) as *mut __m256i, sh);
+                j += 16;
+            }
+            while j < n {
+                let mut s = *o.add(j);
+                for r in 0..kp {
+                    s += *a.add(r) as i32 * *wd.add(r * n + j) as i32;
+                }
+                *o.add(j) = s;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// NEON int8 GEMM: widening i8→i16 (`vmovl_s8`) then `vmlal_n_s16`
+/// multiply-accumulate into i32x4 halves, 8 output channels per vector
+/// step. Bit-exact with the scalar kernel (integer adds in any order).
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod simd {
+    use std::arch::aarch64::*;
+
+    pub(crate) fn quant_matmul_neon(
+        acc: &mut [i32],
+        a: &[i8],
+        wd: &[i8],
+        m: usize,
+        kp: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(kp % 4, 0, "packed K must be quad-padded");
+        debug_assert_eq!(acc.len(), m * n, "acc shape");
+        debug_assert_eq!(a.len(), m * kp, "a shape");
+        debug_assert!(wd.len() >= kp * n, "W too small");
+        debug_assert!(kp < (i32::MAX as usize) / (127 * 127), "K too large for i32 acc");
+        // SAFETY: NEON is architecturally guaranteed on aarch64; the
+        // shape asserts bound every pointer offset used inside.
+        unsafe { qmm_neon(acc.as_mut_ptr(), a.as_ptr(), wd.as_ptr(), m, kp, n) }
+    }
+
+    /// # Safety
+    /// `acc`/`a`/`wd` must be valid for `m*n` / `m*kp` / `kp*n` element
+    /// accesses.
+    #[target_feature(enable = "neon")]
+    unsafe fn qmm_neon(acc: *mut i32, a: *const i8, wd: *const i8, m: usize, kp: usize, n: usize) {
+        unsafe {
+            for mi in 0..m {
+                let o = acc.add(mi * n);
+                let ar = a.add(mi * kp);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let mut sl = vld1q_s32(o.add(j));
+                    let mut sh = vld1q_s32(o.add(j + 4));
+                    for r in 0..kp {
+                        let w16 = vmovl_s8(vld1_s8(wd.add(r * n + j)));
+                        let av = *ar.add(r) as i16;
+                        sl = vmlal_n_s16(sl, vget_low_s16(w16), av);
+                        sh = vmlal_n_s16(sh, vget_high_s16(w16), av);
+                    }
+                    vst1q_s32(o.add(j), sl);
+                    vst1q_s32(o.add(j + 4), sh);
+                    j += 8;
+                }
+                while j < n {
+                    let mut s = *o.add(j);
+                    for r in 0..kp {
+                        s += *ar.add(r) as i32 * *wd.add(r * n + j) as i32;
+                    }
+                    *o.add(j) = s;
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
 /// One layer's weights on the quantized path: the `[I+H, 4H]` matrix
 /// packed as its two GEMM halves — input rows (`[I, 4H]`) and recurrent
 /// rows (`[H, 4H]`), each with its own per-output-channel scales — plus
@@ -306,6 +554,9 @@ fn quantize_row(part: &[f32], out: &mut [i8]) -> f32 {
 /// scales. Owned by [`BatchArena`] (lazily sized — a pure-f32 arena
 /// never allocates them) so steady-state quantized serving performs
 /// zero heap allocations per step, same discipline as the f32 planes.
+/// The buffers are plain row-major planes, so the intra-batch
+/// partitioner can hand each worker a disjoint row range of all three
+/// (see `step_rows_quant_slices`).
 #[derive(Debug, Clone, Default)]
 pub struct QuantScratch {
     /// `[rows, k_padded_max]` quantized `[x;h]` rows (padding lanes 0).
@@ -335,13 +586,18 @@ impl QuantScratch {
 /// `act` (`[rows, k]` f32) with its own dynamic scale, run the integer
 /// GEMM against `w`, and fold the dequantized contribution into
 /// `gates`. `init` seeds each gate row from the bias (the x half);
-/// otherwise contributions accumulate (the h half).
+/// otherwise contributions accumulate (the h half). Scratch arrives as
+/// raw row-major slices so partitioned workers can pass disjoint
+/// sub-planes.
+#[allow(clippy::too_many_arguments)]
 fn quant_gemm_half(
     w: &PackedQuantMatrix,
     act: &[f32],
     bias: &[f32],
     gates: &mut [f32],
-    scratch: &mut QuantScratch,
+    qa: &mut [i8],
+    qacc: &mut [i32],
+    qscale: &mut [f32],
     rows: usize,
     init: bool,
 ) {
@@ -350,9 +606,9 @@ fn quant_gemm_half(
     let n = w.n;
     debug_assert_eq!(act.len(), rows * k);
     debug_assert_eq!(gates.len(), rows * n);
-    let qa = &mut scratch.qa[..rows * kp];
-    let qacc = &mut scratch.qacc[..rows * n];
-    let qscale = &mut scratch.qscale[..rows];
+    let qa = &mut qa[..rows * kp];
+    let qacc = &mut qacc[..rows * n];
+    let qscale = &mut qscale[..rows];
 
     for ((arow, qrow), s) in
         act.chunks_exact(k).zip(qa.chunks_exact_mut(kp)).zip(qscale.iter_mut())
@@ -397,6 +653,35 @@ pub fn step_rows_quant(
     scratch: &mut QuantScratch,
     rows: usize,
 ) {
+    step_rows_quant_slices(
+        weights,
+        xs,
+        h,
+        c,
+        gates,
+        &mut scratch.qa,
+        &mut scratch.qacc,
+        &mut scratch.qscale,
+        rows,
+    )
+}
+
+/// [`step_rows_quant`] over raw scratch slices — the entry point the
+/// intra-batch partitioner uses, handing each worker a disjoint row
+/// range of the arena's scratch planes. `qa`/`qacc`/`qscale` must hold
+/// at least `rows * k_padded_max` / `rows * 4H` / `rows` elements.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn step_rows_quant_slices(
+    weights: &QuantizedCellWeights,
+    xs: &[f32],
+    h: &mut [f32],
+    c: &mut [f32],
+    gates: &mut [f32],
+    qa: &mut [i8],
+    qacc: &mut [i32],
+    qscale: &mut [f32],
+    rows: usize,
+) {
     let hid = weights.hidden;
     let in_dim = weights.input_dim;
     debug_assert_eq!(weights.wx.k, in_dim);
@@ -405,13 +690,13 @@ pub fn step_rows_quant(
     debug_assert_eq!(h.len(), rows * hid);
     debug_assert_eq!(c.len(), rows * hid);
     debug_assert!(gates.len() >= rows * 4 * hid);
-    debug_assert!(scratch.qa.len() >= rows * weights.k_padded_max());
-    debug_assert!(scratch.qacc.len() >= rows * 4 * hid);
-    debug_assert!(scratch.qscale.len() >= rows);
+    debug_assert!(qa.len() >= rows * weights.k_padded_max());
+    debug_assert!(qacc.len() >= rows * 4 * hid);
+    debug_assert!(qscale.len() >= rows);
     let gates = &mut gates[..rows * 4 * hid];
 
-    quant_gemm_half(&weights.wx, xs, &weights.b, gates, scratch, rows, true);
-    quant_gemm_half(&weights.wh, h, &weights.b, gates, scratch, rows, false);
+    quant_gemm_half(&weights.wx, xs, &weights.b, gates, qa, qacc, qscale, rows, true);
+    quant_gemm_half(&weights.wh, h, &weights.b, gates, qa, qacc, qscale, rows, false);
 
     // Fused point-wise tail on the fast approximations.
     for ((grow, hrow), crow) in gates
@@ -531,6 +816,20 @@ mod tests {
         out
     }
 
+    /// Random quad-zero-padded activation rows for kernel tests.
+    fn random_activations(rng: &mut Rng, m: usize, k: usize, kp: usize) -> Vec<i8> {
+        (0..m * kp)
+            .map(|i| {
+                // zero the lanes beyond k, as the driver guarantees
+                if i % kp >= k {
+                    0
+                } else {
+                    (rng.below(255) as i32 - 127) as i8
+                }
+            })
+            .collect()
+    }
+
     #[test]
     fn pack_pads_k_to_quads_with_zero_rows() {
         for &(k, n) in &[(1usize, 4usize), (4, 8), (5, 4), (7, 12), (41, 128)] {
@@ -590,19 +889,30 @@ mod tests {
         ] {
             let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
             let p = PackedQuantMatrix::pack(&w, k, n);
-            let a: Vec<i8> = (0..m * p.k_padded)
-                .map(|i| {
-                    // zero the lanes beyond k, as the driver guarantees
-                    if i % p.k_padded >= k {
-                        0
-                    } else {
-                        (rng.below(255) as i32 - 127) as i8
-                    }
-                })
-                .collect();
+            let a = random_activations(&mut rng, m, k, p.k_padded);
             let mut acc = vec![0i32; m * n];
             quant_matmul_into(&mut acc, &a, &p, m);
             assert_eq!(acc, quant_matmul_naive(&a, &p, m), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_quant_matmul_is_bit_exact_with_scalar() {
+        // Integer accumulation is associative: whatever ISA the dispatch
+        // table selected must agree with the scalar oracle bit for bit —
+        // including odd n (vector j-tail) and m tails.
+        let mut rng = Rng::new(75);
+        for &(m, k, n) in
+            &[(1usize, 5usize, 17usize), (3, 12, 33), (5, 9, 16), (8, 64, 128), (9, 6, 7)]
+        {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let p = PackedQuantMatrix::pack(&w, k, n);
+            let a = random_activations(&mut rng, m, k, p.k_padded);
+            let mut disp = vec![0i32; m * n];
+            let mut scal = vec![0i32; m * n];
+            quant_matmul_into(&mut disp, &a, &p, m);
+            quant_matmul_into_scalar(&mut scal, &a, &p, m);
+            assert_eq!(disp, scal, "m={m} k={k} n={n}");
         }
     }
 

@@ -26,7 +26,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::lstm::model::LstmModel;
-use crate::lstm::plan::BatchArena;
+use crate::lstm::plan::{chunk_spans, BatchArena};
 use crate::tensor::Tensor;
 
 enum Job {
@@ -58,6 +58,10 @@ impl ThreadedLstm {
             let done = Arc::clone(&windows_done);
             workers.push(std::thread::spawn(move || {
                 // One preallocated arena per worker, reused for every job.
+                // Deliberately pool-less (no intra-batch `PlanPool`): this
+                // dispatcher already saturates the socket across chunks,
+                // and nesting row-partitioning inside each worker would
+                // only oversubscribe cores.
                 let mut arena = BatchArena::new(model.shape);
                 let window_len = model.shape.seq_len * model.shape.input_dim;
                 loop {
@@ -110,13 +114,10 @@ impl ThreadedLstm {
         // copies.
         let shared = Arc::new(x.clone());
         let (otx, orx) = mpsc::channel();
-        let mut start = 0;
-        while start < batch {
-            let rows = chunk_rows.min(batch - start);
+        for (start, rows) in chunk_spans(batch, chunk_rows) {
             self.tx
                 .send(Job::Chunk(start, rows, Arc::clone(&shared), otx.clone()))
                 .expect("worker pool alive");
-            start += rows;
         }
         drop(otx);
         let mut out = vec![0.0f32; batch * shape.num_classes];

@@ -50,7 +50,7 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "proto",
                 "io-threads",
             ],
-            &[],
+            &["force-scalar"],
         ),
         "classify" => (
             &[
@@ -65,7 +65,7 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "precision",
                 "max-queue",
             ],
-            &[],
+            &["force-scalar"],
         ),
         _ => (&[], &[]),
     }
@@ -173,10 +173,11 @@ fn print_help() {
          \x20                                      [--idle-timeout-ms 0 (never)]\n\
          \x20                                      [--session-ttl-ms 30000]\n\
          \x20                                      [--io-threads 0 (thread-per-conn)] [--proto 2|3]\n\
+         \x20                                      [--force-scalar]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
          \x20                                      [--target gpu|cpu|cpu-multi|cpu-quant]\n\
-         \x20                                      [--precision f32|int8]\n\
+         \x20                                      [--precision f32|int8] [--force-scalar]\n\
          \x20 info      print the artifact manifest summary\n\
          \n\
          POLICIES: gpu | fine | cpu | cpu-multi | threshold:<0..1> | cost-model"
@@ -200,6 +201,12 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn build_router(args: &Args) -> Result<(Router, Manifest)> {
+    // Pin kernels BEFORE anything touches the dispatch table (the
+    // MOBIRNN_FORCE_SCALAR env var is honored by detection itself).
+    if args.get("force-scalar").is_some() {
+        mobirnn::kernel::force_scalar();
+    }
+    println!("kernels: {} (see --force-scalar / MOBIRNN_FORCE_SCALAR)", mobirnn::kernel::active().as_str());
     let manifest = Manifest::load_default()?;
     let device_name = args.get_or("device", "nexus5");
     let profile = DeviceProfile::by_name(&device_name)
@@ -491,6 +498,21 @@ mod tests {
             .to_string();
         assert!(err.contains("unknown flag"), "{err}");
         let err = Args::from_parts("classify", &argv(&["--proto", "3"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn force_scalar_flag_parses_for_serve_and_classify() {
+        // Bare switch, no value — and it must not swallow the next token.
+        let a = Args::from_parts("classify", &argv(&["--force-scalar", "--n", "3"])).unwrap();
+        assert_eq!(a.get("force-scalar"), Some("true"));
+        assert_eq!(a.get("n"), Some("3"));
+        let a = Args::from_parts("serve", &argv(&["--force-scalar"])).unwrap();
+        assert_eq!(a.get("force-scalar"), Some("true"));
+        // figures never touches the native kernels.
+        let err = Args::from_parts("figures", &argv(&["--force-scalar"]))
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown flag"), "{err}");

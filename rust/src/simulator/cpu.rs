@@ -45,12 +45,14 @@ fn load_retention(cores: usize, threads: usize, util: f64) -> f64 {
 }
 
 /// Arithmetic-throughput advantage of the int8 quantized path over the
-/// scalar f32 path on the same core (DESIGN.md §10): narrower
-/// multiplies plus the rational point-wise tail replacing `exp`/`tanh`.
-/// Calibrated against the measured `native_quant_b*` vs
-/// `native_batched_b*` hot-path ratios, 1.89–2.00× across B ∈ {1..8}
-/// (EXPERIMENTS.md §Perf / `BENCH_hotpath.json`).
-pub const INT8_COMPUTE_GAIN: f64 = 2.0;
+/// f32 path on the same core (DESIGN.md §10, §13): with the vectorized
+/// kernels, the widening i8×i8→i16→i32 dot product moves twice the
+/// channels per vector op of the 8-lane f32 FMA, plus the rational
+/// point-wise tail replacing `exp`/`tanh`. Calibrated against the
+/// measured `native_quant_b*` vs `native_batched_b*` hot-path ratios,
+/// ~2.2× across B ∈ {1..8} on the AVX2 kernels (was 1.89–2.00× scalar;
+/// EXPERIMENTS.md §Perf / `BENCH_hotpath.json`).
+pub const INT8_COMPUTE_GAIN: f64 = 2.2;
 
 /// The shared roofline body: `time = max(flops / throughput, bytes /
 /// bandwidth) (+ spawn)`. Precision tiers differ ONLY in arithmetic

@@ -8,25 +8,56 @@
 //! ops the engine uses, each with debug-mode shape checks.
 //!
 //! [`gemv_into`] and [`matmul_into`] are the two accumulation kernels
-//! behind every native forward pass (`lstm::cell`, `lstm::plan`). Both
-//! traverse `W` row-major exactly once and block the K dimension in
-//! quads; `matmul_into` additionally blocks output rows in quads so one
-//! loaded quad of `W` rows feeds four accumulator rows — the batch-level
-//! weight-reuse step (MobiRNN §3.3's coarser work units applied to the
-//! batch dimension). Per output element both kernels perform the exact
-//! same float operations in the exact same order, so batched and
-//! per-row forwards agree bit-for-bit (asserted in
-//! `rust/tests/batched_plan.rs`).
+//! behind every native forward pass (`lstm::cell`, `lstm::plan`). Since
+//! the SIMD work (DESIGN.md §13) they are thin entry points through the
+//! process-wide [`crate::kernel::dispatch`] table: AVX2+FMA on capable
+//! x86_64 hosts, NEON on aarch64, and the original scalar kernels
+//! ([`gemv_into_scalar`] / [`matmul_into_scalar`], kept as the parity
+//! oracle) everywhere else or when scalar is forced.
+//!
+//! The invariant every implementation MUST uphold: per output element,
+//! `matmul_into` performs the exact same float operations in the exact
+//! same order as `gemv_into` on that row — so batched and per-row
+//! forwards agree bit-for-bit WITHIN the selected ISA (asserted in
+//! `rust/tests/batched_plan.rs` and `rust/tests/simd_parity.rs`). The
+//! scalar pair additionally blocks K in quads (and `matmul_into_scalar`
+//! blocks output rows in quads so one loaded quad of `W` rows feeds four
+//! accumulator rows — MobiRNN §3.3's coarser work units applied to the
+//! batch dimension); the SIMD pair instead folds K as one sequential
+//! fused-multiply-add chain per element, vectorized across the N
+//! dimension, so its results differ from scalar within the small
+//! documented bound of DESIGN.md §13 (f32 only — int8 is bit-exact).
 
 use std::fmt;
 
 /// `acc[j] += Σ_r v[r] * W[r][j]` over a row-major `[v.len(), acc.len()]`
-/// prefix of `w` — the quad-K blocked GEMV.
+/// prefix of `w`, via the process-wide kernel table
+/// ([`crate::kernel::dispatch`]).
+pub fn gemv_into(acc: &mut [f32], w: &[f32], v: &[f32]) {
+    (crate::kernel::dispatch().gemv_f32)(acc, w, v)
+}
+
+/// `out[m][j] += Σ_r a[m][r] * W[r][j]` — row-major `[m, k] @ [k, n]`
+/// accumulated into a row-major `[m, n]` buffer, via the process-wide
+/// kernel table ([`crate::kernel::dispatch`]).
+///
+/// Bit-for-bit equal to `m` independent [`gemv_into`] calls (same ISA,
+/// same per-element accumulation order — every implementation's
+/// contract).
+pub fn matmul_into(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n: usize) {
+    (crate::kernel::dispatch().matmul_f32)(out, a, w, m, k, n)
+}
+
+/// The scalar quad-K blocked GEMV — the parity oracle and universal
+/// fallback behind [`gemv_into`].
 ///
 /// Rows of `W` are processed four at a time so the `acc` accumulator is
 /// read/written once per quad instead of once per row (≈4× less
-/// accumulator traffic; see EXPERIMENTS.md §Perf).
-pub fn gemv_into(acc: &mut [f32], w: &[f32], v: &[f32]) {
+/// accumulator traffic; see EXPERIMENTS.md §Perf). The ≤3-row K
+/// remainder accumulates unconditionally — it used to skip `v[r] == 0.0`
+/// rows, which made the accumulation path (and the sign of zero results)
+/// depend on where a zero fell relative to the quad boundary.
+pub fn gemv_into_scalar(acc: &mut [f32], w: &[f32], v: &[f32]) {
     let width = acc.len();
     debug_assert!(w.len() >= v.len() * width, "W too small: {} < {}", w.len(), v.len() * width);
     let mut r = 0;
@@ -44,30 +75,28 @@ pub fn gemv_into(acc: &mut [f32], w: &[f32], v: &[f32]) {
     }
     while r < v.len() {
         let vr = v[r];
-        if vr != 0.0 {
-            let base = r * width;
-            for (a, x0) in acc.iter_mut().zip(&w[base..base + width]) {
-                *a += vr * x0;
-            }
+        let base = r * width;
+        for (a, x0) in acc.iter_mut().zip(&w[base..base + width]) {
+            *a += vr * x0;
         }
         r += 1;
     }
 }
 
-/// `out[m][j] += Σ_r a[m][r] * W[r][j]` — row-major `[m, k] @ [k, n]`
-/// accumulated into a row-major `[m, n]` buffer.
+/// The scalar quad-M/quad-K blocked GEMM — the parity oracle and
+/// universal fallback behind [`matmul_into`].
 ///
-/// This is [`gemv_into`]'s quad-K blocking generalized to multiple output
-/// rows: output rows are ALSO blocked in quads, so each quad of `W` rows
-/// is loaded once and feeds four accumulator rows (16 multiply-adds per 4
-/// `W` loads instead of 4 per 4). `W` is traversed once per *quad* of
-/// batch rows instead of once per row — the weight-traffic amortization
-/// that makes the batched plan beat the per-row path. A duo-row block
-/// catches 2–3 row tails (half the reuse), then single rows fall back to
-/// [`gemv_into`]. Per output element the accumulation order is identical
-/// to [`gemv_into`], so results are bit-for-bit equal to m independent
-/// GEMVs.
-pub fn matmul_into(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n: usize) {
+/// This is [`gemv_into_scalar`]'s quad-K blocking generalized to multiple
+/// output rows: output rows are ALSO blocked in quads, so each quad of
+/// `W` rows is loaded once and feeds four accumulator rows (16
+/// multiply-adds per 4 `W` loads instead of 4 per 4). `W` is traversed
+/// once per *quad* of batch rows instead of once per row — the
+/// weight-traffic amortization that makes the batched plan beat the
+/// per-row path. A duo-row block catches 2–3 row tails (half the reuse),
+/// then single rows fall back to [`gemv_into_scalar`]. Per output element
+/// the accumulation order is identical to [`gemv_into_scalar`], so
+/// results are bit-for-bit equal to m independent GEMVs.
+pub fn matmul_into_scalar(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(out.len(), m * n, "out shape");
     debug_assert_eq!(a.len(), m * k, "a shape");
     debug_assert!(w.len() >= k * n, "W too small");
@@ -106,10 +135,8 @@ pub fn matmul_into(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n:
             let wr = &w[base..base + n];
             for (orow, arow) in [(&mut *o0, a0), (&mut *o1, a1), (&mut *o2, a2), (&mut *o3, a3)] {
                 let vr = arow[r];
-                if vr != 0.0 {
-                    for (oj, wj) in orow.iter_mut().zip(wr) {
-                        *oj += vr * wj;
-                    }
+                for (oj, wj) in orow.iter_mut().zip(wr) {
+                    *oj += vr * wj;
                 }
             }
             r += 1;
@@ -143,10 +170,8 @@ pub fn matmul_into(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n:
             let wr = &w[base..base + n];
             for (orow, arow) in [(&mut *o0, a0), (&mut *o1, a1)] {
                 let vr = arow[r];
-                if vr != 0.0 {
-                    for (oj, wj) in orow.iter_mut().zip(wr) {
-                        *oj += vr * wj;
-                    }
+                for (oj, wj) in orow.iter_mut().zip(wr) {
+                    *oj += vr * wj;
                 }
             }
             r += 1;
@@ -154,8 +179,288 @@ pub fn matmul_into(out: &mut [f32], a: &[f32], w: &[f32], m: usize, k: usize, n:
         mi += 2;
     }
     while mi < m {
-        gemv_into(&mut out[mi * n..(mi + 1) * n], w, &a[mi * k..(mi + 1) * k]);
+        gemv_into_scalar(&mut out[mi * n..(mi + 1) * n], w, &a[mi * k..(mi + 1) * k]);
         mi += 1;
+    }
+}
+
+/// AVX2+FMA f32 kernels, installed into the dispatch table by
+/// `crate::kernel` after runtime detection of `avx2` + `fma`.
+///
+/// Layout: M-blocks of 4/2/1 output rows (the scalar kernel's blocking,
+/// for the same weight-row reuse), each j-vectorized 8 lanes wide. The
+/// K dimension folds as ONE sequential fused-multiply-add chain per
+/// output element — vector lanes via `_mm256_fmadd_ps`, the `n % 8`
+/// scalar tail via `f32::mul_add` (the same fused op) — so every M-block
+/// path performs the identical per-element chain and `matmul_into` stays
+/// bit-for-bit equal to m independent `gemv_into` calls within this ISA.
+/// Versus scalar (which contracts nothing and groups K in quads) results
+/// differ within the DESIGN.md §13 bound.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod simd {
+    use std::arch::x86_64::*;
+
+    pub(crate) fn matmul_into_avx2(
+        out: &mut [f32],
+        a: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(out.len(), m * n, "out shape");
+        debug_assert_eq!(a.len(), m * k, "a shape");
+        debug_assert!(w.len() >= k * n, "W too small");
+        // SAFETY: the dispatch table installs this entry only after
+        // `is_x86_feature_detected!("avx2")` and `("fma")` both held;
+        // the shape asserts above bound every pointer offset used inside.
+        unsafe { matmul_avx2(out.as_mut_ptr(), a.as_ptr(), w.as_ptr(), m, k, n) }
+    }
+
+    /// GEMV is the m = 1 row of the same kernel — parity by construction.
+    pub(crate) fn gemv_into_avx2(acc: &mut [f32], w: &[f32], v: &[f32]) {
+        let (k, n) = (v.len(), acc.len());
+        debug_assert!(w.len() >= k * n, "W too small: {} < {}", w.len(), k * n);
+        // SAFETY: as in `matmul_into_avx2`, with m = 1.
+        unsafe { matmul_avx2(acc.as_mut_ptr(), v.as_ptr(), w.as_ptr(), 1, k, n) }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA; `out`/`a`/`w` must be valid for `m*n` / `m*k` /
+    /// `k*n` f32 reads (writes for `out`).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn matmul_avx2(out: *mut f32, a: *const f32, w: *const f32, m: usize, k: usize, n: usize) {
+        unsafe {
+            let mut mi = 0;
+            while mi + 4 <= m {
+                rows4_avx2(out.add(mi * n), a.add(mi * k), w, k, n);
+                mi += 4;
+            }
+            if mi + 2 <= m {
+                rows2_avx2(out.add(mi * n), a.add(mi * k), w, k, n);
+                mi += 2;
+            }
+            while mi < m {
+                row1_avx2(out.add(mi * n), a.add(mi * k), w, k, n);
+                mi += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA; 4 output rows at `o`, 4 input rows at `a`.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rows4_avx2(o: *mut f32, a: *const f32, w: *const f32, k: usize, n: usize) {
+        unsafe {
+            let (o0, o1, o2, o3) = (o, o.add(n), o.add(2 * n), o.add(3 * n));
+            let (a0, a1, a2, a3) = (a, a.add(k), a.add(2 * k), a.add(3 * k));
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut s0 = _mm256_loadu_ps(o0.add(j));
+                let mut s1 = _mm256_loadu_ps(o1.add(j));
+                let mut s2 = _mm256_loadu_ps(o2.add(j));
+                let mut s3 = _mm256_loadu_ps(o3.add(j));
+                for r in 0..k {
+                    let wv = _mm256_loadu_ps(w.add(r * n + j));
+                    s0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(r)), wv, s0);
+                    s1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.add(r)), wv, s1);
+                    s2 = _mm256_fmadd_ps(_mm256_set1_ps(*a2.add(r)), wv, s2);
+                    s3 = _mm256_fmadd_ps(_mm256_set1_ps(*a3.add(r)), wv, s3);
+                }
+                _mm256_storeu_ps(o0.add(j), s0);
+                _mm256_storeu_ps(o1.add(j), s1);
+                _mm256_storeu_ps(o2.add(j), s2);
+                _mm256_storeu_ps(o3.add(j), s3);
+                j += 8;
+            }
+            while j < n {
+                // n % 8 tail: same fused chain, one lane at a time.
+                let (mut s0, mut s1) = (*o0.add(j), *o1.add(j));
+                let (mut s2, mut s3) = (*o2.add(j), *o3.add(j));
+                for r in 0..k {
+                    let wv = *w.add(r * n + j);
+                    s0 = (*a0.add(r)).mul_add(wv, s0);
+                    s1 = (*a1.add(r)).mul_add(wv, s1);
+                    s2 = (*a2.add(r)).mul_add(wv, s2);
+                    s3 = (*a3.add(r)).mul_add(wv, s3);
+                }
+                *o0.add(j) = s0;
+                *o1.add(j) = s1;
+                *o2.add(j) = s2;
+                *o3.add(j) = s3;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA; 2 output rows at `o`, 2 input rows at `a`.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn rows2_avx2(o: *mut f32, a: *const f32, w: *const f32, k: usize, n: usize) {
+        unsafe {
+            let (o0, o1) = (o, o.add(n));
+            let (a0, a1) = (a, a.add(k));
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut s0 = _mm256_loadu_ps(o0.add(j));
+                let mut s1 = _mm256_loadu_ps(o1.add(j));
+                for r in 0..k {
+                    let wv = _mm256_loadu_ps(w.add(r * n + j));
+                    s0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(r)), wv, s0);
+                    s1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.add(r)), wv, s1);
+                }
+                _mm256_storeu_ps(o0.add(j), s0);
+                _mm256_storeu_ps(o1.add(j), s1);
+                j += 8;
+            }
+            while j < n {
+                let (mut s0, mut s1) = (*o0.add(j), *o1.add(j));
+                for r in 0..k {
+                    let wv = *w.add(r * n + j);
+                    s0 = (*a0.add(r)).mul_add(wv, s0);
+                    s1 = (*a1.add(r)).mul_add(wv, s1);
+                }
+                *o0.add(j) = s0;
+                *o1.add(j) = s1;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA; 1 output row at `o`, 1 input row at `a`.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn row1_avx2(o: *mut f32, a: *const f32, w: *const f32, k: usize, n: usize) {
+        unsafe {
+            let mut j = 0;
+            while j + 8 <= n {
+                let mut s0 = _mm256_loadu_ps(o.add(j));
+                for r in 0..k {
+                    let wv = _mm256_loadu_ps(w.add(r * n + j));
+                    s0 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(r)), wv, s0);
+                }
+                _mm256_storeu_ps(o.add(j), s0);
+                j += 8;
+            }
+            while j < n {
+                let mut s0 = *o.add(j);
+                for r in 0..k {
+                    s0 = (*a.add(r)).mul_add(*w.add(r * n + j), s0);
+                }
+                *o.add(j) = s0;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// NEON f32 kernels (aarch64 baseline) — the AVX2 module's structure at
+/// 4 lanes: M-blocks of 4/2/1 rows, per-element K folded as one
+/// sequential fused chain (`vfmaq_n_f32` lanes, `f32::mul_add` tail), so
+/// the matmul ≡ m × gemv bitwise invariant holds within this ISA too.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod simd {
+    use std::arch::aarch64::*;
+
+    pub(crate) fn matmul_into_neon(
+        out: &mut [f32],
+        a: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        debug_assert_eq!(out.len(), m * n, "out shape");
+        debug_assert_eq!(a.len(), m * k, "a shape");
+        debug_assert!(w.len() >= k * n, "W too small");
+        // SAFETY: NEON is architecturally guaranteed on aarch64; the
+        // shape asserts bound every pointer offset used inside.
+        unsafe { matmul_neon(out.as_mut_ptr(), a.as_ptr(), w.as_ptr(), m, k, n) }
+    }
+
+    /// GEMV is the m = 1 row of the same kernel — parity by construction.
+    pub(crate) fn gemv_into_neon(acc: &mut [f32], w: &[f32], v: &[f32]) {
+        let (k, n) = (v.len(), acc.len());
+        debug_assert!(w.len() >= k * n, "W too small: {} < {}", w.len(), k * n);
+        // SAFETY: as in `matmul_into_neon`, with m = 1.
+        unsafe { matmul_neon(acc.as_mut_ptr(), v.as_ptr(), w.as_ptr(), 1, k, n) }
+    }
+
+    /// # Safety
+    /// `out`/`a`/`w` must be valid for `m*n` / `m*k` / `k*n` f32 reads
+    /// (writes for `out`).
+    #[target_feature(enable = "neon")]
+    unsafe fn matmul_neon(out: *mut f32, a: *const f32, w: *const f32, m: usize, k: usize, n: usize) {
+        unsafe {
+            let mut mi = 0;
+            while mi + 2 <= m {
+                rows2_neon(out.add(mi * n), a.add(mi * k), w, k, n);
+                mi += 2;
+            }
+            while mi < m {
+                row1_neon(out.add(mi * n), a.add(mi * k), w, k, n);
+                mi += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// 2 output rows at `o`, 2 input rows at `a`.
+    #[target_feature(enable = "neon")]
+    unsafe fn rows2_neon(o: *mut f32, a: *const f32, w: *const f32, k: usize, n: usize) {
+        unsafe {
+            let (o0, o1) = (o, o.add(n));
+            let (a0, a1) = (a, a.add(k));
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut s0 = vld1q_f32(o0.add(j));
+                let mut s1 = vld1q_f32(o1.add(j));
+                for r in 0..k {
+                    let wv = vld1q_f32(w.add(r * n + j));
+                    s0 = vfmaq_n_f32(s0, wv, *a0.add(r));
+                    s1 = vfmaq_n_f32(s1, wv, *a1.add(r));
+                }
+                vst1q_f32(o0.add(j), s0);
+                vst1q_f32(o1.add(j), s1);
+                j += 4;
+            }
+            while j < n {
+                let (mut s0, mut s1) = (*o0.add(j), *o1.add(j));
+                for r in 0..k {
+                    let wv = *w.add(r * n + j);
+                    s0 = (*a0.add(r)).mul_add(wv, s0);
+                    s1 = (*a1.add(r)).mul_add(wv, s1);
+                }
+                *o0.add(j) = s0;
+                *o1.add(j) = s1;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// 1 output row at `o`, 1 input row at `a`.
+    #[target_feature(enable = "neon")]
+    unsafe fn row1_neon(o: *mut f32, a: *const f32, w: *const f32, k: usize, n: usize) {
+        unsafe {
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut s0 = vld1q_f32(o.add(j));
+                for r in 0..k {
+                    s0 = vfmaq_n_f32(s0, vld1q_f32(w.add(r * n + j)), *a.add(r));
+                }
+                vst1q_f32(o.add(j), s0);
+                j += 4;
+            }
+            while j < n {
+                let mut s0 = *o.add(j);
+                for r in 0..k {
+                    s0 = (*a.add(r)).mul_add(*w.add(r * n + j), s0);
+                }
+                *o.add(j) = s0;
+                j += 1;
+            }
+        }
     }
 }
 
@@ -397,9 +702,12 @@ mod tests {
 
     #[test]
     fn matmul_into_bitwise_equals_row_gemvs() {
-        // The quad-M kernel performs the same per-element float ops in
-        // the same order as m independent GEMVs — the invariant the
-        // batched-vs-per-window parity test relies on.
+        // Every implementation (scalar, AVX2, NEON) performs the same
+        // per-element float ops in the same order as m independent GEMVs
+        // — the invariant the batched-vs-per-window parity test relies
+        // on. Runs against whatever the dispatch table selected, so the
+        // scalar-forced CI lane covers the oracle and a plain run covers
+        // the SIMD path.
         let mut rng = crate::util::Rng::new(33);
         // m values cover every block mix: gemv only (1), duo (2), duo+gemv
         // (3), quad (8), quad+duo (6), quad+gemv (9), quad+duo+gemv (7).
@@ -425,11 +733,67 @@ mod tests {
     }
 
     #[test]
-    fn allclose_and_diff() {
-        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
-        let b = Tensor::new(vec![3], vec![1.0, 2.0001, 3.0]);
-        assert!(a.allclose(&b, 1e-3, 1e-3));
-        assert!(!a.allclose(&b, 0.0, 1e-6));
-        assert!((a.max_abs_diff(&b) - 1e-4).abs() < 1e-6);
+    fn scalar_k_remainder_is_unconditional() {
+        // Regression: the scalar K-remainder used to skip `v[r] == 0.0`
+        // rows while the quad body did not, so an all-zero dot product
+        // flushed a -0.0 accumulator to +0.0 when k >= 4 (quad body adds
+        // 0.0) but left it -0.0 when the zeros fell in the remainder.
+        // The remainder now accumulates unconditionally: same path, same
+        // bits, for every k mod 4.
+        for k in 1..=7usize {
+            let n = 5;
+            let w: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+            let v = vec![0.0f32; k];
+            let mut acc = vec![-0.0f32; n];
+            gemv_into_scalar(&mut acc, &w, &v);
+            for (j, a) in acc.iter().enumerate() {
+                assert_eq!(*a, 0.0, "k={k} j={j}");
+                assert!(a.is_sign_positive(), "k={k} j={j}: -0.0 leaked through the remainder");
+            }
+        }
+        // Zeros straddling the quad boundary (last quad lane + both
+        // remainder lanes zero): every matmul M-block's remainder must
+        // take the same accumulation path as gemv's.
+        let (k, n) = (6usize, 9usize);
+        let w: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.37).sin()).collect();
+        for m in [2usize, 4, 5, 7] {
+            let mut a = vec![0.31f32; m * k];
+            for row in a.chunks_exact_mut(k) {
+                row[3] = 0.0;
+                row[4] = 0.0;
+                row[5] = 0.0;
+            }
+            let mut out = vec![-0.0f32; m * n];
+            matmul_into_scalar(&mut out, &a, &w, m, k, n);
+            for mi in 0..m {
+                let mut row = vec![-0.0f32; n];
+                gemv_into_scalar(&mut row, &w, &a[mi * k..(mi + 1) * k]);
+                assert_eq!(&out[mi * n..(mi + 1) * n], &row[..], "m={m} row {mi}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_scalar_when_available() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            return;
+        }
+        // Direct unit check of the AVX2 entry points against the scalar
+        // oracle (the full M/K/N sweep lives in tests/simd_parity.rs).
+        let mut rng = crate::util::Rng::new(34);
+        for &(m, k, n) in &[(1usize, 5usize, 9usize), (4, 32, 128), (7, 33, 17)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut simd_out = vec![0.5f32; m * n];
+            let mut scalar_out = vec![0.5f32; m * n];
+            simd::matmul_into_avx2(&mut simd_out, &a, &w, m, k, n);
+            matmul_into_scalar(&mut scalar_out, &a, &w, m, k, n);
+            for (s, o) in simd_out.iter().zip(&scalar_out) {
+                assert!((s - o).abs() <= 2e-4, "m={m} k={k} n={n}: {s} vs {o}");
+            }
+        }
     }
 }

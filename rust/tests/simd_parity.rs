@@ -1,0 +1,138 @@
+//! SIMD ↔ scalar parity property tests (DESIGN.md §13).
+//!
+//! The dispatched kernels (whatever `kernel::active()` resolved to on
+//! this host) are swept against the scalar oracles across M/K/N grids
+//! that cover every remainder path: quad/duo/single M tails, K not a
+//! multiple of the f32 quad (or the int8 vector width), and N tails
+//! shorter than one vector register.
+//!
+//! Contracts under test:
+//! - **int8**: BIT-EXACT across ISAs. Integer adds are associative, so
+//!   any lane blocking must produce identical i32 accumulators.
+//! - **f32**: within the documented absolute bound (§13: ≤ 2e-4 for
+//!   inputs in [-1, 1] at K ≤ 128, which covers the sweeps here) of the
+//!   scalar oracle.
+//!   SIMD fuses multiply-adds; scalar never fuses — bit equality is the
+//!   contract for the scalar path only.
+//! - **within one ISA**: `matmul_into` ≡ m independent `gemv_into` calls
+//!   bit-for-bit — the invariant the batched/streaming parity guarantees
+//!   stand on.
+//!
+//! Under the scalar-forced CI lane (`MOBIRNN_FORCE_SCALAR=1`) the
+//! dispatched side IS the scalar oracle and these tests pass trivially —
+//! by design: that lane exists to exercise the fallback everywhere else.
+
+use mobirnn::lstm::quant::{quant_matmul_into, quant_matmul_into_scalar, PackedQuantMatrix};
+use mobirnn::tensor::{gemv_into, gemv_into_scalar, matmul_into, matmul_into_scalar};
+use mobirnn::util::Rng;
+
+/// Documented f32 SIMD-vs-scalar absolute tolerance (DESIGN.md §13).
+const F32_ABS_TOL: f32 = 2e-4;
+
+const M_SWEEP: &[usize] = &[1, 2, 3, 4, 5, 6, 7, 8, 9];
+const K_SWEEP: &[usize] = &[1, 2, 3, 4, 5, 8, 9, 31, 32, 33, 63, 64, 65];
+const N_SWEEP: &[usize] = &[1, 3, 7, 8, 9, 15, 16, 17, 128];
+
+fn fill_uniform(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+#[test]
+fn f32_matmul_dispatched_within_documented_bound_of_scalar() {
+    let mut rng = Rng::new(0xA11CE);
+    for &m in M_SWEEP {
+        for &k in K_SWEEP {
+            for &n in N_SWEEP {
+                let a = fill_uniform(&mut rng, m * k);
+                let w = fill_uniform(&mut rng, k * n);
+                // Non-zero init: the kernels accumulate into `out`.
+                let init = fill_uniform(&mut rng, m * n);
+                let mut got = init.clone();
+                let mut want = init.clone();
+                matmul_into(&mut got, &a, &w, m, k, n);
+                matmul_into_scalar(&mut want, &a, &w, m, k, n);
+                for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - e).abs() <= F32_ABS_TOL,
+                        "({m},{k},{n}) out[{i}]: dispatched {g} vs scalar {e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_gemv_dispatched_within_documented_bound_of_scalar() {
+    let mut rng = Rng::new(0xB0B);
+    for &k in K_SWEEP {
+        for &n in N_SWEEP {
+            let v = fill_uniform(&mut rng, k);
+            let w = fill_uniform(&mut rng, k * n);
+            let init = fill_uniform(&mut rng, n);
+            let mut got = init.clone();
+            let mut want = init.clone();
+            gemv_into(&mut got, &w, &v);
+            gemv_into_scalar(&mut want, &w, &v);
+            for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - e).abs() <= F32_ABS_TOL,
+                    "({k},{n}) acc[{i}]: dispatched {g} vs scalar {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_matmul_is_bitwise_m_gemvs_on_the_active_isa() {
+    // The per-ISA invariant every batched↔per-window parity guarantee
+    // rests on: whatever M-blocking the active kernel uses, each row's
+    // per-element accumulation chain must equal the GEMV path exactly.
+    let mut rng = Rng::new(0xC0FFEE);
+    for &m in M_SWEEP {
+        for &k in K_SWEEP {
+            for &n in N_SWEEP {
+                let a = fill_uniform(&mut rng, m * k);
+                let w = fill_uniform(&mut rng, k * n);
+                let init = fill_uniform(&mut rng, m * n);
+                let mut got = init.clone();
+                matmul_into(&mut got, &a, &w, m, k, n);
+                let mut want = init;
+                for (row, acc) in a.chunks_exact(k).zip(want.chunks_exact_mut(n)) {
+                    gemv_into(acc, &w, row);
+                }
+                assert_eq!(got, want, "({m},{k},{n})");
+            }
+        }
+    }
+}
+
+/// Random `[m, k_padded]` int8 activations with the padding lanes
+/// (`i % k_padded >= k`) zeroed — the same layout `quantize_activations`
+/// produces.
+fn random_activations(rng: &mut Rng, m: usize, k: usize, kp: usize) -> Vec<i8> {
+    (0..m * kp)
+        .map(|i| if i % kp >= k { 0 } else { rng.uniform(-127.0, 127.0) as i8 })
+        .collect()
+}
+
+#[test]
+fn int8_matmul_dispatched_is_bit_exact_with_scalar() {
+    let mut rng = Rng::new(0xDEAD);
+    for &m in M_SWEEP {
+        for &k in K_SWEEP {
+            for &n in N_SWEEP {
+                let w = fill_uniform(&mut rng, k * n);
+                let wq = PackedQuantMatrix::pack(&w, k, n);
+                let kp = k.div_ceil(4) * 4;
+                let a = random_activations(&mut rng, m, k, kp);
+                let mut got = vec![0i32; m * n];
+                let mut want = vec![0i32; m * n];
+                quant_matmul_into(&mut got, &a, &wq, m);
+                quant_matmul_into_scalar(&mut want, &a, &wq, m);
+                assert_eq!(got, want, "({m},{k},{n})");
+            }
+        }
+    }
+}
