@@ -8,6 +8,10 @@
 //!   - `gemm_microbench/*`: the inner GEMM kernels in isolation at the
 //!     HAR shape, dispatched-SIMD vs forced-scalar, reported as GFLOP/s
 //!     (DESIGN.md §13)
+//!   - `tail_microbench/*`: the fused LSTM gate tail in isolation,
+//!     dispatched vs libm-scalar vs Padé-scalar, reported as elem/s
+//!     (DESIGN.md §14); `--smoke` gates the b8 batched time and the
+//!     tail speedup on SIMD hosts
 //!   - PJRT execute (GPU serving target) at batch 1 and 8
 //!   - batch planning, policy decision, JSON wire codec, histogram record
 //!
@@ -177,6 +181,35 @@ fn main() {
         }
     }
 
+    // --- fused LSTM gate tail in isolation (DESIGN.md §14) ---
+    // The B=8 HAR step tail: [8, 4H] gate pre-activations → h/c update.
+    // Dispatched kernel vs the libm oracle vs the scalar Padé chain
+    // (which the vector kernels are bit-identical to), reported as
+    // elem/s of updated state.
+    {
+        use mobirnn::lstm::{lstm_tail, lstm_tail_pade_scalar, lstm_tail_scalar};
+        use mobirnn::util::Rng;
+
+        let (rows, hid) = (8usize, shape.hidden);
+        let mut rng = Rng::new(78);
+        let gates: Vec<f32> = (0..rows * 4 * hid).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let mut h = vec![0.0f32; rows * hid];
+        let mut c = vec![0.0f32; rows * hid];
+        all.push(bench_auto("tail_microbench/tail_f32", 60.0, || {
+            lstm_tail(&gates, &mut h, &mut c, rows, hid);
+        }));
+        all.push(bench_auto("tail_microbench/tail_f32_libm_scalar", 60.0, || {
+            lstm_tail_scalar(&gates, &mut h, &mut c, rows, hid);
+        }));
+        all.push(bench_auto("tail_microbench/tail_f32_pade_scalar", 60.0, || {
+            lstm_tail_pade_scalar(&gates, &mut h, &mut c, rows, hid);
+        }));
+        let elems = (rows * hid) as f64;
+        for r in all.iter().rev().take(3).rev() {
+            println!("{}: {:.0} Melem/s", r.name, elems * 1e3 / r.mean_ns());
+        }
+    }
+
     // --- PJRT path ---
     if let Some(man) = &man {
         let rt = Runtime::start(man).unwrap();
@@ -261,4 +294,42 @@ fn main() {
     }));
 
     write_bench_json(&all, man.is_some());
+
+    // --- CI smoke gate (DESIGN.md §14 acceptance) ---
+    // `--smoke` asserts the vectorized-tail win on SIMD hosts: the f32
+    // batched b8 hot path must land at ≤ 0.75× of the PR 7 baseline
+    // (2.31 ms, BENCH_hotpath.json history), and the dispatched tail
+    // must beat the libm scalar tail by ≥ 2× in isolation. Skipped on
+    // scalar-only hosts / under MOBIRNN_FORCE_SCALAR, where the tail IS
+    // libm by contract.
+    if std::env::args().any(|a| a == "--smoke") {
+        const PR7_BASELINE_B8_MS: f64 = 2.31;
+        if mobirnn::kernel::active() == mobirnn::kernel::KernelIsa::Scalar {
+            println!("smoke: scalar kernels active, tail perf gate skipped");
+        } else {
+            let mean_ms = |name: &str| {
+                all.iter()
+                    .find(|r| r.name == name)
+                    .unwrap_or_else(|| panic!("smoke: case {name} missing"))
+                    .mean_ns()
+                    / 1e6
+            };
+            let b8 = mean_ms("hotpath/native_batched_b8");
+            let gate = 0.75 * PR7_BASELINE_B8_MS;
+            assert!(
+                b8 <= gate,
+                "smoke: native_batched_b8 {b8:.3} ms > {gate:.3} ms (0.75× PR 7 baseline)"
+            );
+            let tail = mean_ms("tail_microbench/tail_f32");
+            let libm = mean_ms("tail_microbench/tail_f32_libm_scalar");
+            assert!(
+                tail * 2.0 <= libm,
+                "smoke: dispatched tail {tail:.4} ms not ≥2× faster than libm {libm:.4} ms"
+            );
+            println!(
+                "smoke: b8 {b8:.3} ms ≤ {gate:.3} ms, tail {:.1}× over libm — PASS",
+                libm / tail
+            );
+        }
+    }
 }

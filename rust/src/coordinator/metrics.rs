@@ -202,6 +202,11 @@ impl Metrics {
             // §13) — bench trajectories and latency regressions are only
             // comparable across hosts with this pinned in the snapshot.
             ("kernel_isa", Value::from(crate::kernel::active().as_str())),
+            // The fused gate-tail kernel (DESIGN.md §14) — distinct from
+            // kernel_isa because it pins the NUMERICS config: libm oracle
+            // vs Padé approximation, which accuracy dashboards must split
+            // on.
+            ("kernel_tail", Value::from(crate::kernel::active().tail_label())),
             ("requests", Value::from(self.requests.load(Ordering::Relaxed))),
             ("batches", Value::from(self.batches.load(Ordering::Relaxed))),
             ("mean_batch_size", Value::Num(self.mean_batch_size())),
@@ -288,6 +293,7 @@ mod tests {
         // The snapshot pins the resolved kernel ISA, and it agrees with
         // the dispatch module's label.
         assert_eq!(j.get("kernel_isa").as_str(), Some(crate::kernel::active().as_str()));
+        assert_eq!(j.get("kernel_tail").as_str(), Some(crate::kernel::active().tail_label()));
         assert_eq!(j.get("requests").as_usize(), Some(10));
         assert_eq!(j.get("mean_batch_size").as_f64(), Some(2.5));
         assert_eq!(j.get("wall_latency").get("count").as_usize(), Some(1));

@@ -474,6 +474,56 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_flip_points_after_tail_recalibration() {
+        // Pins the decision boundary the §14 tail recalibration produces
+        // (F32_COMPUTE_GAIN stays the calibration frame's unit;
+        // INT8_COMPUTE_GAIN re-fit 2.2 → 1.2). Under co-load the GPU
+        // must win when idle, lose render-preemption-style exactly once,
+        // and never win again past the flip — and at the flip the
+        // decision must still equal the hand-computed argmin, so the
+        // boundary location is a property of the priced curves, not of
+        // tie-breaking order.
+        use crate::simulator::{cpu_run, cpu_run_int8, F32_COMPUTE_GAIN, INT8_COMPUTE_GAIN};
+        let p = OffloadPolicy::CostModel;
+        let shape = ModelShape::default();
+        let decide_at = |u: f64| {
+            let load = LoadSnapshot { gpu_util: u, cpu_util: u, ..Default::default() };
+            p.decide(&n5(), shape, 1, load)
+        };
+        let mut flip = None;
+        for i in 0..=100 {
+            let u = i as f64 / 100.0;
+            let is_gpu = matches!(decide_at(u), Target::Gpu(_));
+            match flip {
+                None if !is_gpu => flip = Some(u),
+                Some(f) => assert!(!is_gpu, "GPU re-won at u={u} after flipping at u={f}"),
+                None => {}
+            }
+        }
+        let flip = flip.expect("co-load sweep must leave the GPU eventually (Fig 7)");
+        assert!(
+            (0.2..0.95).contains(&flip),
+            "flip at u={flip}: boundary drifted outside the Fig 7 regime"
+        );
+        let at_flip = LoadSnapshot { gpu_util: flip, cpu_util: flip, ..Default::default() };
+        let best = OffloadPolicy::candidates(&n5())
+            .iter()
+            .copied()
+            .min_by_key(|&t| simulate_inference(&n5(), shape, 1, t, at_flip.effective_util(t)))
+            .unwrap();
+        assert_eq!(decide_at(flip), best, "flip point must be the argmin's, not a tie-break");
+        // The pricing input to that boundary: int8-over-f32 throughput
+        // ratio is exactly the recalibrated constant pair.
+        let f32_ns = cpu_run(&n5(), shape, 8, 1, 0.0).total_ns as f64;
+        let int8_ns = cpu_run_int8(&n5(), shape, 8, 1, 0.0).total_ns as f64;
+        assert!(
+            (f32_ns / int8_ns - INT8_COMPUTE_GAIN / F32_COMPUTE_GAIN).abs() < 0.05,
+            "priced int8/f32 ratio {} drifted from the calibrated gains",
+            f32_ns / int8_ns
+        );
+    }
+
+    #[test]
     fn quant_effective_util_uses_cpu_pressure() {
         // CpuQuant shares the CPU complex: its effective utilization is
         // the CPU knob plus the CPU in-flight pressure.

@@ -1,10 +1,11 @@
 //! Runtime kernel dispatch: pick the widest SIMD inner kernels the host
 //! actually has, once, at startup.
 //!
-//! The native hot path bottoms out in three inner kernels — the f32
-//! GEMM/GEMV pair (`tensor::matmul_into` / `tensor::gemv_into`) and the
-//! int8 GEMM (`lstm::quant::quant_matmul_into`). Each has three
-//! implementations:
+//! The native hot path bottoms out in four inner kernels — the f32
+//! GEMM/GEMV pair (`tensor::matmul_into` / `tensor::gemv_into`), the
+//! int8 GEMM (`lstm::quant::quant_matmul_into`), and the fused LSTM gate
+//! tail (`lstm::tail::lstm_tail`, the point-wise `(i,g,f,o) → c', h'`
+//! update). Each has three implementations:
 //!
 //! - **scalar** — the original quad-blocked kernels, kept verbatim (plus
 //!   the K-remainder bugfix) as the parity oracle and the fallback for
@@ -23,13 +24,19 @@
 //! whole tier-1 suite a second time under the env var so the fallback
 //! cannot rot.
 //!
-//! Numerics contract (DESIGN.md §13): the int8 kernel is **bit-exact**
-//! across ISAs (integer adds are associative). The f32 SIMD kernels use
+//! Numerics contract (DESIGN.md §13–§14): the int8 GEMM is **bit-exact**
+//! across ISAs (integer adds are associative). The f32 SIMD GEMMs use
 //! fused multiply-adds and therefore differ from scalar within a
 //! documented absolute bound; within ONE ISA, `matmul_into` remains
 //! bit-for-bit equal to m independent `gemv_into` calls (every M-block
 //! path performs the identical per-element fma chain), so the
 //! batched-vs-per-window and streaming parity guarantees hold unchanged.
+//! The tail kernel has a two-sided contract of its own: the scalar entry
+//! is the exact libm oracle, while the AVX2/NEON entries run a clamped
+//! Padé (5,4) approximation within `lstm::tail::TAIL_{C,H}_MAX_ABS_ERR`
+//! of libm — and, being built without FMA, are bit-identical to the
+//! scalar Padé helpers lane-for-lane, so per-row chunking (PlanPool,
+//! streaming) cannot perturb results within one ISA.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -54,6 +61,19 @@ impl KernelIsa {
             KernelIsa::Neon => "neon",
         }
     }
+
+    /// Stable label for the tail kernel this ISA selects — logged in the
+    /// startup `kernels:` line and emitted as `kernel_tail` in the
+    /// metrics snapshot. Distinct from [`Self::as_str`] because the tail
+    /// contract is numeric, not just a lane width: scalar means the
+    /// exact libm oracle, the SIMD ISAs mean the Padé approximation.
+    pub fn tail_label(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "libm-scalar",
+            KernelIsa::Avx2 => "pade-avx2",
+            KernelIsa::Neon => "pade-neon",
+        }
+    }
 }
 
 /// The resolved kernel table: one function pointer per inner kernel.
@@ -65,6 +85,9 @@ pub struct KernelDispatch {
     pub matmul_f32: fn(&mut [f32], &[f32], &[f32], usize, usize, usize),
     pub gemv_f32: fn(&mut [f32], &[f32], &[f32]),
     pub quant_matmul: fn(&mut [i32], &[i8], &[i8], usize, usize, usize),
+    /// Fused LSTM gate tail: `(gates [rows,4H], h [rows,H], c [rows,H],
+    /// rows, hid)`; overwrites `h`/`c` in place (DESIGN.md §14).
+    pub lstm_tail_f32: fn(&[f32], &mut [f32], &mut [f32], usize, usize),
 }
 
 static SCALAR: KernelDispatch = KernelDispatch {
@@ -72,6 +95,7 @@ static SCALAR: KernelDispatch = KernelDispatch {
     matmul_f32: crate::tensor::matmul_into_scalar,
     gemv_f32: crate::tensor::gemv_into_scalar,
     quant_matmul: crate::lstm::quant::quant_matmul_scalar,
+    lstm_tail_f32: crate::lstm::tail::lstm_tail_scalar,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -80,6 +104,7 @@ static AVX2: KernelDispatch = KernelDispatch {
     matmul_f32: crate::tensor::simd::matmul_into_avx2,
     gemv_f32: crate::tensor::simd::gemv_into_avx2,
     quant_matmul: crate::lstm::quant::simd::quant_matmul_avx2,
+    lstm_tail_f32: crate::lstm::tail::simd::lstm_tail_avx2,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -88,6 +113,7 @@ static NEON: KernelDispatch = KernelDispatch {
     matmul_f32: crate::tensor::simd::matmul_into_neon,
     gemv_f32: crate::tensor::simd::gemv_into_neon,
     quant_matmul: crate::lstm::quant::simd::quant_matmul_neon,
+    lstm_tail_f32: crate::lstm::tail::simd::lstm_tail_neon,
 };
 
 /// 0 = undecided; the rest mirror [`KernelIsa`]. A relaxed CAS publishes
@@ -145,9 +171,10 @@ pub fn active() -> KernelIsa {
 }
 
 /// Pin the process to the scalar kernels (the `--force-scalar` CLI
-/// path). Effective even after a SIMD table was already selected —
-/// in-flight calls finish on the old table; every later dispatch is
-/// scalar.
+/// path) — GEMMs AND the gate tail, which thereby becomes the exact
+/// libm oracle. Effective even after a SIMD table was already
+/// selected — in-flight calls finish on the old table; every later
+/// dispatch is scalar.
 pub fn force_scalar() {
     ACTIVE.store(TAG_SCALAR, Ordering::Relaxed);
 }
@@ -172,6 +199,9 @@ mod tests {
         assert_eq!(KernelIsa::Scalar.as_str(), "scalar");
         assert_eq!(KernelIsa::Avx2.as_str(), "avx2");
         assert_eq!(KernelIsa::Neon.as_str(), "neon");
+        assert_eq!(KernelIsa::Scalar.tail_label(), "libm-scalar");
+        assert_eq!(KernelIsa::Avx2.tail_label(), "pade-avx2");
+        assert_eq!(KernelIsa::Neon.tail_label(), "pade-neon");
     }
 
     #[test]

@@ -34,16 +34,20 @@ pub mod model;
 pub mod plan;
 pub mod quant;
 pub mod stream;
+pub mod tail;
 pub mod threaded;
 pub mod weights;
 
 pub use cell::{lstm_cell, LstmCellWeights, FORGET_BIAS};
 pub use model::LstmModel;
 pub use plan::{chunk_spans, step_rows, BatchArena, PlanPool};
-pub use stream::StreamState;
 pub use quant::{
     fast_sigmoid, fast_tanh, QuantizedCellWeights, QuantizedLstmModel, SIGMOID_MAX_ABS_ERR,
     TANH_MAX_ABS_ERR,
+};
+pub use stream::StreamState;
+pub use tail::{
+    lstm_tail, lstm_tail_pade_scalar, lstm_tail_scalar, TAIL_C_MAX_ABS_ERR, TAIL_H_MAX_ABS_ERR,
 };
 pub use threaded::ThreadedLstm;
 pub use weights::WeightFile;

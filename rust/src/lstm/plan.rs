@@ -45,7 +45,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 
 use crate::config::ModelShape;
-use crate::lstm::cell::{sigmoid, LstmCellWeights, FORGET_BIAS};
+use crate::lstm::cell::LstmCellWeights;
 use crate::lstm::quant::{step_rows_quant_slices, QuantScratch, QuantizedCellWeights};
 use crate::tensor::matmul_into;
 
@@ -576,21 +576,11 @@ pub fn step_rows(
     matmul_into(gates, xs, w, rows, in_dim, 4 * hid);
     matmul_into(gates, h, &w[in_dim * 4 * hid..], rows, hid, 4 * hid);
 
-    // Fused point-wise tail (i, g, f, o) per row, writing h/c in place.
-    for ((grow, hrow), crow) in gates
-        .chunks_exact(4 * hid)
-        .zip(h.chunks_exact_mut(hid))
-        .zip(c.chunks_exact_mut(hid))
-    {
-        let (ig, rest) = grow.split_at(hid);
-        let (gg, rest) = rest.split_at(hid);
-        let (fg, og) = rest.split_at(hid);
-        for k in 0..hid {
-            let c_next = sigmoid(fg[k] + FORGET_BIAS) * crow[k] + sigmoid(ig[k]) * gg[k].tanh();
-            crow[k] = c_next;
-            hrow[k] = sigmoid(og[k]) * c_next.tanh();
-        }
-    }
+    // Fused point-wise tail (i, g, f, o) per row, writing h/c in place —
+    // the dispatched kernel (DESIGN.md §14). Per-element with a fixed
+    // per-row op chain, so PlanPool row partitions stay bit-for-bit
+    // equal to the inline run under every ISA.
+    crate::lstm::tail::lstm_tail(gates, h, c, rows, hid);
 }
 
 #[cfg(test)]

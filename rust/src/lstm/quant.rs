@@ -26,11 +26,18 @@
 //!   step's GEMM input, and keeping state in f32 stops quantization
 //!   error from compounding across the 128 timesteps (DESIGN.md §10 has
 //!   the error budget).
-//! - **The tail** uses [`fast_sigmoid`]/[`fast_tanh`]: a clamped Padé
-//!   (5,4) rational approximation (no `exp`, division instead), with
-//!   documented max-abs-error bounds ([`TANH_MAX_ABS_ERR`],
-//!   [`SIGMOID_MAX_ABS_ERR`]) asserted over a dense sweep of [-10, 10]
-//!   by `rust/tests/quant.rs`.
+//! - **The tail** goes through the dispatched fused gate kernel
+//!   ([`crate::lstm::tail::lstm_tail`], DESIGN.md §14) — the same entry
+//!   the f32 batched/pooled/streaming paths use. On SIMD hosts that is
+//!   the vector Padé (5,4) kernel, bit-identical to the scalar
+//!   [`fast_sigmoid`]/[`fast_tanh`] loop this module ran historically
+//!   (the approximation originated here; its bounds
+//!   [`TANH_MAX_ABS_ERR`]/[`SIGMOID_MAX_ABS_ERR`] are dense-sweep
+//!   asserted by `rust/tests/quant.rs`). Under the forced-scalar ISA the
+//!   int8 tier now gets the exact libm tail instead — slightly MORE
+//!   accurate, and it means end-to-end int8 bit-exactness across ISA
+//!   configs holds at the GEMM level, not the full forward (DESIGN.md
+//!   §14 records this contract change).
 //!
 //! Since the SIMD work (DESIGN.md §13), [`quant_matmul_into`] routes
 //! through the process-wide [`crate::kernel::dispatch`] table: a
@@ -53,40 +60,14 @@
 //! on the weight round-trip, both asserted in `rust/tests/quant.rs`.
 
 use crate::config::ModelShape;
-use crate::lstm::cell::{LstmCellWeights, FORGET_BIAS};
+use crate::lstm::cell::LstmCellWeights;
 use crate::lstm::plan::BatchArena;
 use crate::tensor::{argmax_slice, Tensor};
 
-/// Documented bound: `|fast_tanh(x) - tanh(x)| < 1.5e-3` on [-10, 10].
-/// The true maximum is ≈ 1.07e-3, at the ±3.5 clamp boundary.
-pub const TANH_MAX_ABS_ERR: f32 = 1.5e-3;
-
-/// Documented bound: `|fast_sigmoid(x) - σ(x)| < 8e-4` on [-10, 10]
-/// (half the tanh bound, since σ(x) = (1 + tanh(x/2)) / 2).
-pub const SIGMOID_MAX_ABS_ERR: f32 = 8.0e-4;
-
-/// Fast `tanh`: the Padé (5,4) truncation of the continued fraction
-/// `x/(1+x²/(3+x²/(5+x²/(7+x²/9))))`, input-clamped to ±3.5 where the
-/// rational part reads 0.999239 (true tanh: 0.998178). Branch-free and
-/// division-for-exp, so the point-wise tail vectorizes; max abs error
-/// ≈ 1.07e-3 at the clamp (see [`TANH_MAX_ABS_ERR`]), monotone
-/// non-decreasing, saturating at ±0.999239.
-#[inline(always)]
-pub fn fast_tanh(x: f32) -> f32 {
-    let x = x.clamp(-3.5, 3.5);
-    let x2 = x * x;
-    let p = x * (945.0 + x2 * (105.0 + x2));
-    let q = 945.0 + x2 * (420.0 + 15.0 * x2);
-    p / q
-}
-
-/// Fast logistic via [`fast_tanh`]: `σ(x) = (1 + tanh(x/2)) / 2`.
-/// Max abs error ≈ 5.4e-4 (see [`SIGMOID_MAX_ABS_ERR`]); monotone
-/// non-decreasing; saturates at 3.8e-4 / 0.99962 beyond |x| = 7.
-#[inline(always)]
-pub fn fast_sigmoid(x: f32) -> f32 {
-    0.5 + 0.5 * fast_tanh(0.5 * x)
-}
+// The Padé helpers were born in this module (PR 4) and moved to
+// `lstm::tail` when the tail became a dispatched kernel; re-exported
+// here so `lstm::quant::{fast_tanh, ...}` call sites keep compiling.
+pub use crate::lstm::tail::{fast_sigmoid, fast_tanh, SIGMOID_MAX_ABS_ERR, TANH_MAX_ABS_ERR};
 
 /// Round `k` up to the next multiple of 4 (the kernel's K quad).
 #[inline]
@@ -643,7 +624,7 @@ fn quant_gemm_half(
 /// Per step: two quantize → integer-GEMM → requantize passes (input
 /// half seeding the gates from the bias, recurrent half accumulating —
 /// the f32 cell's two `matmul_into` calls, mirrored), then the fused
-/// point-wise tail on [`fast_sigmoid`]/[`fast_tanh`].
+/// point-wise tail through [`crate::lstm::tail::lstm_tail`].
 pub fn step_rows_quant(
     weights: &QuantizedCellWeights,
     xs: &[f32],
@@ -698,22 +679,11 @@ pub(crate) fn step_rows_quant_slices(
     quant_gemm_half(&weights.wx, xs, &weights.b, gates, qa, qacc, qscale, rows, true);
     quant_gemm_half(&weights.wh, h, &weights.b, gates, qa, qacc, qscale, rows, false);
 
-    // Fused point-wise tail on the fast approximations.
-    for ((grow, hrow), crow) in gates
-        .chunks_exact(4 * hid)
-        .zip(h.chunks_exact_mut(hid))
-        .zip(c.chunks_exact_mut(hid))
-    {
-        let (ig, rest) = grow.split_at(hid);
-        let (gg, rest) = rest.split_at(hid);
-        let (fg, og) = rest.split_at(hid);
-        for k in 0..hid {
-            let c_next = fast_sigmoid(fg[k] + FORGET_BIAS) * crow[k]
-                + fast_sigmoid(ig[k]) * fast_tanh(gg[k]);
-            crow[k] = c_next;
-            hrow[k] = fast_sigmoid(og[k]) * fast_tanh(c_next);
-        }
-    }
+    // Fused point-wise tail through the dispatch table — on SIMD hosts
+    // bit-identical to the scalar fast_sigmoid/fast_tanh loop that lived
+    // here before DESIGN.md §14 unified the tail; under the forced-scalar
+    // ISA this is the exact libm oracle instead.
+    crate::lstm::tail::lstm_tail(gates, h, c, rows, hid);
 }
 
 /// A fully packed model for the int8 path: quantized layer weights plus

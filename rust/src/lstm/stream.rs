@@ -18,7 +18,12 @@
 //! bit-for-bit — verified in `rust/tests/sessions.rs`. Note what the
 //! contract does *not* depend on: chunking. Streaming 1+1+…+1 frames,
 //! one T-frame chunk, or any split in between all visit the identical
-//! per-element accumulation sequence.
+//! per-element accumulation sequence. The dispatched fused gate tail
+//! (DESIGN.md §14) preserves this: within one process/ISA config the
+//! tail kernel is per-element with a fixed op chain, so batched, pooled
+//! and streaming execution share one accuracy contract for BOTH
+//! precisions — asserted across `PlanPool` thread counts in
+//! `rust/tests/tail.rs`.
 //!
 //! h/c stay f32 even for int8 sessions: the quantized path (DESIGN.md
 //! §10) quantizes weights and per-step activations but carries state in

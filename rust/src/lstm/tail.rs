@@ -1,0 +1,492 @@
+//! The fused LSTM gate tail — the `(i, g, f, o) → c', h'` point-wise
+//! update — as a dispatched kernel (DESIGN.md §14).
+//!
+//! After the SIMD GEMMs (DESIGN.md §13) the scalar libm `sigmoid`/`tanh`
+//! tail became the dominant share of f32 per-step time (EXPERIMENTS.md
+//! §Perf, Amdahl note). This module gives the tail the same treatment
+//! the GEMMs got: one entry in the [`crate::kernel::dispatch`] table,
+//! three implementations, one accuracy contract shared by every
+//! consumer — `plan::step_rows` (batched + `PlanPool` row partitions),
+//! `quant::step_rows_quant` (the f32 requantized tail of the int8
+//! tier), the streaming path (which drives both at `rows = 1`), and the
+//! B=1 oracle `cell::lstm_cell`:
+//!
+//! - **scalar** — [`lstm_tail_scalar`]: the original libm tail,
+//!   verbatim. This is the parity oracle, and under
+//!   `MOBIRNN_FORCE_SCALAR`/`--force-scalar` it is what the whole
+//!   process runs — including the int8 tier, which previously used the
+//!   scalar Padé tail unconditionally.
+//! - **AVX2 / NEON** — `simd::lstm_tail_avx2` / `simd::lstm_tail_neon`:
+//!   the full gate update per 8/4-lane block on a clamped Padé (5,4)
+//!   vector `tanh` (σ derived as `0.5 + 0.5·tanh(x/2)`), i.e. the int8
+//!   tier's [`fast_tanh`]/[`fast_sigmoid`] vectorized.
+//!
+//! # Bit-parity by construction (why no FMA)
+//!
+//! The vector kernels use only `mul`/`add`/`div`/`min`/`max` — **no
+//! fused multiply-add anywhere** — in exactly the operation order of the
+//! scalar [`fast_tanh`]/[`fast_sigmoid`] chain and of the
+//! [`gate_update`] expression. Every IEEE-754 op then rounds identically
+//! lane-by-lane, so:
+//!
+//! - vector lanes ≡ the scalar Padé helpers bit-for-bit, which makes the
+//!   `hid % 8` (resp. `% 4`) remainder — handled one element at a time
+//!   on the scalar helpers — indistinguishable from the vector lanes;
+//! - the int8 tier's numerics on SIMD hosts are **unchanged** by this
+//!   refactor: its old scalar Padé loop and the new vector tail produce
+//!   the same bits;
+//! - the batched/pooled/streaming bit-for-bit parity contracts survive
+//!   untouched: the tail is per-element with a fixed per-row layout, so
+//!   any row partitioning or chunking visits the identical chain.
+//!
+//! The tail costs ~5 rational evaluations per element; the FMA we give
+//! up is a few percent of that — determinism is worth more here than
+//! one fused rounding.
+//!
+//! # Error bound (why Padé is safe for argmax parity)
+//!
+//! Component bounds (dense-sweep-asserted in `rust/tests/quant.rs`):
+//! `|fast_tanh − tanh| < 1.5e-3`, `|fast_sigmoid − σ| < 8e-4` on
+//! [-10, 10]. Propagating through one fused update with `|c| ≤ C`:
+//!
+//! ```text
+//! |Δc'| ≤ Δσ·C + (Δσ·1 + 1·Δtanh)        ≤ 8e-4·C + 2.3e-3
+//! |Δh'| ≤ Δσ·1 + 1·(Δtanh + |Δc'|)       (|tanh'| ≤ 1, σ ≤ 1)
+//! ```
+//!
+//! giving [`TAIL_C_MAX_ABS_ERR`] = 5e-3 and [`TAIL_H_MAX_ABS_ERR`] =
+//! 8e-3 for `|c| ≤ 2` — the regime trained classifiers inhabit (the
+//! forget gate is < 1, so c is a geometric sum of tanh outputs). The
+//! per-step h error does not compound: the recurrence is contractive on
+//! the parity fixtures (see `rust/tests/quant.rs` module docs), and the
+//! classifier head's logit margins are orders of magnitude above 8e-3,
+//! which is why ≥ 99% argmax parity vs the libm oracle holds end to end
+//! (`rust/tests/tail.rs`). The same argument already carried the int8
+//! tier, whose perturbation (quantization + this tail) is strictly
+//! larger.
+
+use crate::lstm::cell::{sigmoid, FORGET_BIAS};
+
+/// Documented bound: `|fast_tanh(x) - tanh(x)| < 1.5e-3` on [-10, 10].
+/// The true maximum is ≈ 1.07e-3, at the ±3.5 clamp boundary.
+pub const TANH_MAX_ABS_ERR: f32 = 1.5e-3;
+
+/// Documented bound: `|fast_sigmoid(x) - σ(x)| < 8e-4` on [-10, 10]
+/// (half the tanh bound, since σ(x) = (1 + tanh(x/2)) / 2).
+pub const SIGMOID_MAX_ABS_ERR: f32 = 8.0e-4;
+
+/// Fused-tail bound on the cell state: `|c'_pade − c'_libm| ≤ 5e-3` for
+/// gate pre-activations in [-10, 10] and `|c| ≤ 2` (module docs have the
+/// derivation). Dense-sweep-asserted in `rust/tests/tail.rs`.
+pub const TAIL_C_MAX_ABS_ERR: f32 = 5.0e-3;
+
+/// Fused-tail bound on the hidden state under the same conditions:
+/// `|h'_pade − h'_libm| ≤ 8e-3`.
+pub const TAIL_H_MAX_ABS_ERR: f32 = 8.0e-3;
+
+/// Fast `tanh`: the Padé (5,4) truncation of the continued fraction
+/// `x/(1+x²/(3+x²/(5+x²/(7+x²/9))))`, input-clamped to ±3.5 where the
+/// rational part reads 0.999239 (true tanh: 0.998178). Branch-free and
+/// division-for-exp, so the point-wise tail vectorizes; max abs error
+/// ≈ 1.07e-3 at the clamp (see [`TANH_MAX_ABS_ERR`]), monotone
+/// non-decreasing, saturating at ±0.999239. The vector kernels in
+/// [`simd`] replay this exact op chain 8/4 lanes at a time.
+#[inline(always)]
+pub fn fast_tanh(x: f32) -> f32 {
+    let x = x.clamp(-3.5, 3.5);
+    let x2 = x * x;
+    let p = x * (945.0 + x2 * (105.0 + x2));
+    let q = 945.0 + x2 * (420.0 + 15.0 * x2);
+    p / q
+}
+
+/// Fast logistic via [`fast_tanh`]: `σ(x) = (1 + tanh(x/2)) / 2`.
+/// Max abs error ≈ 5.4e-4 (see [`SIGMOID_MAX_ABS_ERR`]); monotone
+/// non-decreasing; saturates at 3.8e-4 / 0.99962 beyond |x| = 7.
+#[inline(always)]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    0.5 + 0.5 * fast_tanh(0.5 * x)
+}
+
+/// THE gate-update expression — `c' = σ(f + bias)·c + σ(i)·tanh(g)`,
+/// `h' = σ(o)·tanh(c')` — written exactly once, parameterized over the
+/// σ/tanh pair. Every scalar tail (libm oracle, Padé, the vector
+/// kernels' remainder lanes) instantiates this one expression, so the
+/// oracle cannot drift from itself across its call sites (plan, quant,
+/// stream, cell all route here through [`lstm_tail`]).
+#[inline(always)]
+pub(crate) fn gate_update<S, T>(i: f32, g: f32, f: f32, o: f32, c: f32, sig: S, th: T) -> (f32, f32)
+where
+    S: Fn(f32) -> f32,
+    T: Fn(f32) -> f32,
+{
+    let c_next = sig(f + FORGET_BIAS) * c + sig(i) * th(g);
+    let h_next = sig(o) * th(c_next);
+    (c_next, h_next)
+}
+
+/// [`gate_update`] on the libm pair — one element of the exact oracle.
+#[inline(always)]
+fn libm_update(i: f32, g: f32, f: f32, o: f32, c: f32) -> (f32, f32) {
+    gate_update(i, g, f, o, c, sigmoid, f32::tanh)
+}
+
+/// [`gate_update`] on the Padé pair — one element of the approximate
+/// tail; the vector kernels' remainder path (bit-equal to their lanes).
+#[inline(always)]
+pub(crate) fn pade_update(i: f32, g: f32, f: f32, o: f32, c: f32) -> (f32, f32) {
+    gate_update(i, g, f, o, c, fast_sigmoid, fast_tanh)
+}
+
+/// Shared row walk: apply `update` to every `(gates row, h row, c row)`
+/// triple. `gates` is `[rows, 4H]` in (i, g, f, o) quarter layout;
+/// `h`/`c` are `[rows, H]`, overwritten in place.
+#[inline(always)]
+fn tail_rows(
+    gates: &[f32],
+    h: &mut [f32],
+    c: &mut [f32],
+    rows: usize,
+    hid: usize,
+    update: fn(f32, f32, f32, f32, f32) -> (f32, f32),
+) {
+    debug_assert!(gates.len() >= rows * 4 * hid);
+    debug_assert_eq!(h.len(), rows * hid);
+    debug_assert_eq!(c.len(), rows * hid);
+    for ((grow, hrow), crow) in gates[..rows * 4 * hid]
+        .chunks_exact(4 * hid)
+        .zip(h.chunks_exact_mut(hid))
+        .zip(c.chunks_exact_mut(hid))
+    {
+        let (ig, rest) = grow.split_at(hid);
+        let (gg, rest) = rest.split_at(hid);
+        let (fg, og) = rest.split_at(hid);
+        for k in 0..hid {
+            let (cn, hn) = update(ig[k], gg[k], fg[k], og[k], crow[k]);
+            crow[k] = cn;
+            hrow[k] = hn;
+        }
+    }
+}
+
+/// The libm scalar tail — the parity oracle, verbatim the tail every
+/// consumer ran before the dispatch table grew this entry. Selected by
+/// the scalar ISA (`MOBIRNN_FORCE_SCALAR` / `--force-scalar`).
+pub fn lstm_tail_scalar(gates: &[f32], h: &mut [f32], c: &mut [f32], rows: usize, hid: usize) {
+    tail_rows(gates, h, c, rows, hid, libm_update);
+}
+
+/// The scalar Padé tail — [`lstm_tail_scalar`]'s shape on
+/// [`fast_sigmoid`]/[`fast_tanh`]. Bit-identical to the vector kernels
+/// (module docs); exposed for the tail microbench and the parity tests.
+pub fn lstm_tail_pade_scalar(gates: &[f32], h: &mut [f32], c: &mut [f32], rows: usize, hid: usize) {
+    tail_rows(gates, h, c, rows, hid, pade_update);
+}
+
+/// The process-wide fused tail: one relaxed load + indirect call through
+/// [`crate::kernel::dispatch`]. This is the ONLY tail entry the LSTM
+/// consumers (plan/quant/stream/cell) call.
+#[inline]
+pub fn lstm_tail(gates: &[f32], h: &mut [f32], c: &mut [f32], rows: usize, hid: usize) {
+    (crate::kernel::dispatch().lstm_tail_f32)(gates, h, c, rows, hid)
+}
+
+/// AVX2 fused tail (x86_64). Structure mirrors `tensor::simd`: a safe
+/// shape-checked wrapper over a `#[target_feature]` body; 8-lane blocks
+/// over each row's H, scalar-Padé remainder (bit-equal to the lanes —
+/// module docs).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod simd {
+    use std::arch::x86_64::*;
+
+    use crate::lstm::cell::FORGET_BIAS;
+
+    pub(crate) fn lstm_tail_avx2(
+        gates: &[f32],
+        h: &mut [f32],
+        c: &mut [f32],
+        rows: usize,
+        hid: usize,
+    ) {
+        debug_assert!(gates.len() >= rows * 4 * hid);
+        debug_assert_eq!(h.len(), rows * hid);
+        debug_assert_eq!(c.len(), rows * hid);
+        // SAFETY: only reachable through the dispatch table after AVX2
+        // was detected; the shape asserts bound every pointer offset.
+        unsafe { tail_avx2(gates.as_ptr(), h.as_mut_ptr(), c.as_mut_ptr(), rows, hid) }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `gates` valid for `rows*4*hid` f32 reads, `h`/`c`
+    /// for `rows*hid` f32 reads and writes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tail_avx2(gates: *const f32, h: *mut f32, c: *mut f32, rows: usize, hid: usize) {
+        unsafe {
+            for r in 0..rows {
+                let g0 = gates.add(r * 4 * hid);
+                let (ig, gg) = (g0, g0.add(hid));
+                let (fg, og) = (g0.add(2 * hid), g0.add(3 * hid));
+                let hrow = h.add(r * hid);
+                let crow = c.add(r * hid);
+                let mut k = 0;
+                while k + 8 <= hid {
+                    let i = sigmoid8(_mm256_loadu_ps(ig.add(k)));
+                    let g = tanh8(_mm256_loadu_ps(gg.add(k)));
+                    let f = sigmoid8(_mm256_add_ps(
+                        _mm256_loadu_ps(fg.add(k)),
+                        _mm256_set1_ps(FORGET_BIAS),
+                    ));
+                    let o = sigmoid8(_mm256_loadu_ps(og.add(k)));
+                    // mul + add, NOT fmadd: each lane's chain must equal
+                    // the scalar Padé helpers bit for bit (module docs).
+                    let fc = _mm256_mul_ps(f, _mm256_loadu_ps(crow.add(k)));
+                    let c_next = _mm256_add_ps(fc, _mm256_mul_ps(i, g));
+                    _mm256_storeu_ps(crow.add(k), c_next);
+                    _mm256_storeu_ps(hrow.add(k), _mm256_mul_ps(o, tanh8(c_next)));
+                    k += 8;
+                }
+                while k < hid {
+                    let (cn, hn) = super::pade_update(
+                        *ig.add(k),
+                        *gg.add(k),
+                        *fg.add(k),
+                        *og.add(k),
+                        *crow.add(k),
+                    );
+                    *crow.add(k) = cn;
+                    *hrow.add(k) = hn;
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Vector Padé (5,4) tanh — `fast_tanh`'s exact op chain, 8 lanes.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn tanh8(x: __m256) -> __m256 {
+        unsafe {
+            let x = _mm256_min_ps(_mm256_max_ps(x, _mm256_set1_ps(-3.5)), _mm256_set1_ps(3.5));
+            let x2 = _mm256_mul_ps(x, x);
+            // p = x·(945 + x2·(105 + x2)); q = 945 + x2·(420 + 15·x2) —
+            // the scalar chain's exact ops, one named temp per factor.
+            let p_in = _mm256_mul_ps(x2, _mm256_add_ps(_mm256_set1_ps(105.0), x2));
+            let p = _mm256_mul_ps(x, _mm256_add_ps(_mm256_set1_ps(945.0), p_in));
+            let t15 = _mm256_mul_ps(_mm256_set1_ps(15.0), x2);
+            let q_in = _mm256_mul_ps(x2, _mm256_add_ps(_mm256_set1_ps(420.0), t15));
+            let q = _mm256_add_ps(_mm256_set1_ps(945.0), q_in);
+            _mm256_div_ps(p, q)
+        }
+    }
+
+    /// Vector logistic — `fast_sigmoid`'s exact op chain, 8 lanes.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn sigmoid8(x: __m256) -> __m256 {
+        unsafe {
+            let half = _mm256_set1_ps(0.5);
+            _mm256_add_ps(half, _mm256_mul_ps(half, tanh8(_mm256_mul_ps(half, x))))
+        }
+    }
+}
+
+/// NEON fused tail (aarch64 baseline) — the AVX2 kernel's structure at
+/// 4 lanes, same no-FMA discipline, same scalar-Padé remainder.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod simd {
+    use std::arch::aarch64::*;
+
+    use crate::lstm::cell::FORGET_BIAS;
+
+    pub(crate) fn lstm_tail_neon(
+        gates: &[f32],
+        h: &mut [f32],
+        c: &mut [f32],
+        rows: usize,
+        hid: usize,
+    ) {
+        debug_assert!(gates.len() >= rows * 4 * hid);
+        debug_assert_eq!(h.len(), rows * hid);
+        debug_assert_eq!(c.len(), rows * hid);
+        // SAFETY: NEON is architecturally guaranteed on aarch64; the
+        // shape asserts bound every pointer offset used inside.
+        unsafe { tail_neon(gates.as_ptr(), h.as_mut_ptr(), c.as_mut_ptr(), rows, hid) }
+    }
+
+    /// # Safety
+    /// `gates` valid for `rows*4*hid` f32 reads, `h`/`c` for `rows*hid`
+    /// f32 reads and writes.
+    #[target_feature(enable = "neon")]
+    unsafe fn tail_neon(gates: *const f32, h: *mut f32, c: *mut f32, rows: usize, hid: usize) {
+        unsafe {
+            for r in 0..rows {
+                let g0 = gates.add(r * 4 * hid);
+                let (ig, gg) = (g0, g0.add(hid));
+                let (fg, og) = (g0.add(2 * hid), g0.add(3 * hid));
+                let hrow = h.add(r * hid);
+                let crow = c.add(r * hid);
+                let mut k = 0;
+                while k + 4 <= hid {
+                    let i = sigmoid4(vld1q_f32(ig.add(k)));
+                    let g = tanh4(vld1q_f32(gg.add(k)));
+                    let f = sigmoid4(vaddq_f32(vld1q_f32(fg.add(k)), vdupq_n_f32(FORGET_BIAS)));
+                    let o = sigmoid4(vld1q_f32(og.add(k)));
+                    // mul + add, NOT vfmaq: lane chain ≡ scalar Padé.
+                    let fc = vmulq_f32(f, vld1q_f32(crow.add(k)));
+                    let c_next = vaddq_f32(fc, vmulq_f32(i, g));
+                    vst1q_f32(crow.add(k), c_next);
+                    vst1q_f32(hrow.add(k), vmulq_f32(o, tanh4(c_next)));
+                    k += 4;
+                }
+                while k < hid {
+                    let (cn, hn) = super::pade_update(
+                        *ig.add(k),
+                        *gg.add(k),
+                        *fg.add(k),
+                        *og.add(k),
+                        *crow.add(k),
+                    );
+                    *crow.add(k) = cn;
+                    *hrow.add(k) = hn;
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Vector Padé (5,4) tanh — `fast_tanh`'s exact op chain, 4 lanes.
+    ///
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn tanh4(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let x = vminq_f32(vmaxq_f32(x, vdupq_n_f32(-3.5)), vdupq_n_f32(3.5));
+            let x2 = vmulq_f32(x, x);
+            // Same factor naming as `tanh8` — the scalar chain's exact ops.
+            let p_in = vmulq_f32(x2, vaddq_f32(vdupq_n_f32(105.0), x2));
+            let p = vmulq_f32(x, vaddq_f32(vdupq_n_f32(945.0), p_in));
+            let t15 = vmulq_f32(vdupq_n_f32(15.0), x2);
+            let q_in = vmulq_f32(x2, vaddq_f32(vdupq_n_f32(420.0), t15));
+            let q = vaddq_f32(vdupq_n_f32(945.0), q_in);
+            vdivq_f32(p, q)
+        }
+    }
+
+    /// Vector logistic — `fast_sigmoid`'s exact op chain, 4 lanes.
+    ///
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn sigmoid4(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let half = vdupq_n_f32(0.5);
+            vaddq_f32(half, vmulq_f32(half, tanh4(vmulq_f32(half, x))))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_tail_case(rng: &mut Rng, rows: usize, hid: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let gates: Vec<f32> = (0..rows * 4 * hid).map(|_| rng.uniform(-6.0, 6.0)).collect();
+        let h: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let c: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-1.5, 1.5)).collect();
+        (gates, h, c)
+    }
+
+    #[test]
+    fn scalar_tails_instantiate_the_shared_gate_update() {
+        // Both scalar kernels must equal a hand-unrolled gate_update walk
+        // exactly — the satellite contract that the oracle expression
+        // exists once.
+        let mut rng = Rng::new(5);
+        for &(rows, hid) in &[(1usize, 7usize), (3, 8), (2, 33)] {
+            let (gates, h0, c0) = random_tail_case(&mut rng, rows, hid);
+            for (tail, upd) in [
+                (
+                    lstm_tail_scalar as fn(&[f32], &mut [f32], &mut [f32], usize, usize),
+                    libm_update as fn(f32, f32, f32, f32, f32) -> (f32, f32),
+                ),
+                (lstm_tail_pade_scalar, pade_update),
+            ] {
+                let (mut h, mut c) = (h0.clone(), c0.clone());
+                tail(&gates, &mut h, &mut c, rows, hid);
+                for r in 0..rows {
+                    for k in 0..hid {
+                        let g0 = r * 4 * hid;
+                        let (cn, hn) = upd(
+                            gates[g0 + k],
+                            gates[g0 + hid + k],
+                            gates[g0 + 2 * hid + k],
+                            gates[g0 + 3 * hid + k],
+                            c0[r * hid + k],
+                        );
+                        assert_eq!(c[r * hid + k].to_bits(), cn.to_bits(), "c[{r},{k}]");
+                        assert_eq!(h[r * hid + k].to_bits(), hn.to_bits(), "h[{r},{k}]");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_tail_bit_equal_to_its_scalar_reference() {
+        // The no-FMA construction makes the dispatched tail bit-identical
+        // to a scalar reference on EVERY host: the libm oracle under the
+        // scalar ISA, the scalar Padé chain under AVX2/NEON (lanes AND
+        // the hid % lane-width remainder).
+        let reference: fn(&[f32], &mut [f32], &mut [f32], usize, usize) =
+            if crate::kernel::active() == crate::kernel::KernelIsa::Scalar {
+                lstm_tail_scalar
+            } else {
+                lstm_tail_pade_scalar
+            };
+        let mut rng = Rng::new(17);
+        for &(rows, hid) in &[(1usize, 1usize), (1, 5), (3, 8), (2, 13), (4, 32), (1, 37)] {
+            let (gates, h0, c0) = random_tail_case(&mut rng, rows, hid);
+            let (mut h, mut c) = (h0.clone(), c0.clone());
+            let (mut h_ref, mut c_ref) = (h0.clone(), c0.clone());
+            lstm_tail(&gates, &mut h, &mut c, rows, hid);
+            reference(&gates, &mut h_ref, &mut c_ref, rows, hid);
+            for (a, b) in h.iter().zip(&h_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "h rows={rows} hid={hid}");
+            }
+            for (a, b) in c.iter().zip(&c_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "c rows={rows} hid={hid}");
+            }
+        }
+    }
+
+    #[test]
+    fn pade_tail_within_fused_bounds_of_libm() {
+        // The fused-output bounds hold for the scalar Padé tail (hence,
+        // by the bit-parity test above, for the vector kernels too).
+        let mut rng = Rng::new(23);
+        let (rows, hid) = (4usize, 64usize);
+        let gates: Vec<f32> = (0..rows * 4 * hid).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        // c stays in the bound's |c| ≤ 2 regime.
+        let c0: Vec<f32> = (0..rows * hid).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let (mut hp, mut cp) = (vec![0.0; rows * hid], c0.clone());
+        let (mut hl, mut cl) = (vec![0.0; rows * hid], c0.clone());
+        lstm_tail_pade_scalar(&gates, &mut hp, &mut cp, rows, hid);
+        lstm_tail_scalar(&gates, &mut hl, &mut cl, rows, hid);
+        for k in 0..rows * hid {
+            let dc = (cp[k] - cl[k]).abs();
+            let dh = (hp[k] - hl[k]).abs();
+            assert!(dc <= TAIL_C_MAX_ABS_ERR, "c[{k}]: {dc}");
+            assert!(dh <= TAIL_H_MAX_ABS_ERR, "h[{k}]: {dh}");
+        }
+    }
+}

@@ -206,7 +206,11 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
     if args.get("force-scalar").is_some() {
         mobirnn::kernel::force_scalar();
     }
-    println!("kernels: {} (see --force-scalar / MOBIRNN_FORCE_SCALAR)", mobirnn::kernel::active().as_str());
+    println!(
+        "kernels: {} tail={} (see --force-scalar / MOBIRNN_FORCE_SCALAR)",
+        mobirnn::kernel::active().as_str(),
+        mobirnn::kernel::active().tail_label()
+    );
     let manifest = Manifest::load_default()?;
     let device_name = args.get_or("device", "nexus5");
     let profile = DeviceProfile::by_name(&device_name)

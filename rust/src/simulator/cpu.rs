@@ -44,15 +44,31 @@ fn load_retention(cores: usize, threads: usize, util: f64) -> f64 {
     free_cores.min(want).max(FOREGROUND_FLOOR) / want
 }
 
+/// f32 arithmetic throughput in the CALIBRATION FRAME. The simulator's
+/// `cpu_flops_per_ns` constants were fitted so that the f32 path at
+/// gain 1.0 reproduces the paper's absolute anchors (142 ms
+/// single-thread 2l/32h, the 3.93×/2.83× speedups, the fig7 crossover —
+/// `rust/tests/calibration.rs` asserts all of them against THIS unit).
+/// Real-host kernel work (SIMD GEMMs in DESIGN.md §13, the vectorized
+/// gate tail in §14) therefore recalibrates the model by renormalizing:
+/// f32 stays the frame's unit and the OTHER tiers' gains are re-fit as
+/// ratios against it from the measured hot-path benches. Making the
+/// frame explicit keeps every paper anchor valid by construction while
+/// the relative pricing tracks the hardware.
+pub const F32_COMPUTE_GAIN: f64 = 1.0;
+
 /// Arithmetic-throughput advantage of the int8 quantized path over the
-/// f32 path on the same core (DESIGN.md §10, §13): with the vectorized
-/// kernels, the widening i8×i8→i16→i32 dot product moves twice the
-/// channels per vector op of the 8-lane f32 FMA, plus the rational
-/// point-wise tail replacing `exp`/`tanh`. Calibrated against the
-/// measured `native_quant_b*` vs `native_batched_b*` hot-path ratios,
-/// ~2.2× across B ∈ {1..8} on the AVX2 kernels (was 1.89–2.00× scalar;
-/// EXPERIMENTS.md §Perf / `BENCH_hotpath.json`).
-pub const INT8_COMPUTE_GAIN: f64 = 2.2;
+/// f32 path on the same core (DESIGN.md §10, §13, §14), as a ratio
+/// against [`F32_COMPUTE_GAIN`]. With the vectorized kernels the
+/// widening i8×i8→i16→i32 dot product moves twice the channels per
+/// vector op of the 8-lane f32 FMA — which priced int8 at ~2.2× while
+/// the f32 tail still paid scalar libm `exp`/`tanh` prices. The §14
+/// vectorized Padé tail removed that asymmetry (both tiers now run the
+/// SAME tail kernel), collapsing the measured `native_batched_b*` vs
+/// `native_quant_b*` ratio to ~1.2× across B ∈ {1..8}
+/// (EXPERIMENTS.md §Perf / `BENCH_hotpath.json`): what remains is the
+/// int8 GEMM's density edge minus its quantize/requantize overhead.
+pub const INT8_COMPUTE_GAIN: f64 = 1.2;
 
 /// The shared roofline body: `time = max(flops / throughput, bytes /
 /// bandwidth) (+ spawn)`. Precision tiers differ ONLY in arithmetic
@@ -104,7 +120,7 @@ pub fn cpu_run(
     threads: usize,
     util: f64,
 ) -> CpuRunResult {
-    cpu_roofline(profile, shape, batch, threads, util, 1.0, 4)
+    cpu_roofline(profile, shape, batch, threads, util, F32_COMPUTE_GAIN, 4)
 }
 
 /// Simulate one inference on the int8 quantized CPU path (DESIGN.md
@@ -211,7 +227,10 @@ mod tests {
                 );
                 // The gain is a throughput constant: the ratio tracks it.
                 let ratio = f32_ns as f64 / int8_ns as f64;
-                assert!((ratio - INT8_COMPUTE_GAIN).abs() < 0.3, "ratio {ratio}");
+                assert!(
+                    (ratio - INT8_COMPUTE_GAIN / F32_COMPUTE_GAIN).abs() < 0.15,
+                    "ratio {ratio}"
+                );
             }
         }
     }

@@ -28,7 +28,7 @@ pub mod workunit;
 
 use crate::config::ModelShape;
 
-pub use cpu::{cpu_run, cpu_run_int8, CpuRunResult, INT8_COMPUTE_GAIN};
+pub use cpu::{cpu_run, cpu_run_int8, CpuRunResult, F32_COMPUTE_GAIN, INT8_COMPUTE_GAIN};
 pub use des::{Clock, EventHeap};
 pub use device::DeviceProfile;
 pub use gpu::{gpu_run, GpuRunResult};

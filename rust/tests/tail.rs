@@ -1,0 +1,285 @@
+//! Accuracy and parity gates of the dispatched fused LSTM gate tail
+//! (DESIGN.md §14).
+//!
+//! Four layers of guarantee, from kernel to serving:
+//!
+//! 1. the FUSED tail output — not just the σ/tanh helpers — stays within
+//!    its documented bounds of the libm oracle over a dense sweep of
+//!    gate pre-activations in [-10, 10] (and is exactly the oracle under
+//!    the forced-scalar ISA);
+//! 2. the tail is monotone along each gate axis and hard-saturates at
+//!    the Padé clamp edges, so approximation error can shrink margins
+//!    but never invert an ordering along a gate;
+//! 3. batched, `PlanPool`-partitioned (any thread count) and streaming
+//!    execution stay bit-for-bit equal, both precisions — the §11/§13
+//!    parity contracts survive the tail going through the dispatch
+//!    table;
+//! 4. end to end through a live router, argmax agrees with a libm-tail
+//!    oracle forward on ≥ 99% of HAR windows (exactly 100% when the
+//!    scalar ISA is active, where the engine IS the oracle).
+//!
+//! The fixture follows `tests/quant.rs`: contractive recurrence dynamics
+//! (the regime trained classifiers inhabit) plus a class-spread honesty
+//! guard so the parity bar cannot be met by a degenerate predictor.
+
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::{CpuSingleEngine, OffloadPolicy, Router};
+use mobirnn::har;
+use mobirnn::lstm::{
+    lstm_tail, lstm_tail_scalar, BatchArena, LstmCellWeights, LstmModel, PlanPool, StreamState,
+    FORGET_BIAS, TAIL_C_MAX_ABS_ERR, TAIL_H_MAX_ABS_ERR,
+};
+use mobirnn::simulator::Target;
+use mobirnn::tensor::{argmax_slice, gemv_into, Tensor};
+use mobirnn::util::Rng;
+
+use std::sync::Arc;
+
+fn scalar_active() -> bool {
+    mobirnn::kernel::active() == mobirnn::kernel::KernelIsa::Scalar
+}
+
+#[test]
+fn tail_error_bound_vs_libm_on_dense_sweep() {
+    // One giant row (odd hid — the vector kernels' remainder path runs
+    // too): gate k gets pre-activations i=x, g=x, f=x-1 (so f+bias
+    // sweeps [-10,10] as well), o=x, with x dense over [-10, 10].
+    let hid = 20_001usize;
+    let xs: Vec<f32> = (0..hid).map(|k| -10.0 + k as f32 * 1e-3).collect();
+    let mut gates = vec![0.0f32; 4 * hid];
+    for k in 0..hid {
+        gates[k] = xs[k];
+        gates[hid + k] = xs[k];
+        gates[2 * hid + k] = xs[k] - FORGET_BIAS;
+        gates[3 * hid + k] = xs[k];
+    }
+    for c0 in [-2.0f32, -0.7, 0.0, 1.3, 2.0] {
+        let (mut h, mut c) = (vec![0.0f32; hid], vec![c0; hid]);
+        let (mut h_ref, mut c_ref) = (vec![0.0f32; hid], vec![c0; hid]);
+        lstm_tail(&gates, &mut h, &mut c, 1, hid);
+        lstm_tail_scalar(&gates, &mut h_ref, &mut c_ref, 1, hid);
+        for k in 0..hid {
+            let dc = (c[k] - c_ref[k]).abs();
+            let dh = (h[k] - h_ref[k]).abs();
+            assert!(
+                dc <= TAIL_C_MAX_ABS_ERR,
+                "x={} c0={c0}: |Δc| {dc} > {TAIL_C_MAX_ABS_ERR}",
+                xs[k]
+            );
+            assert!(
+                dh <= TAIL_H_MAX_ABS_ERR,
+                "x={} c0={c0}: |Δh| {dh} > {TAIL_H_MAX_ABS_ERR}",
+                xs[k]
+            );
+            if scalar_active() {
+                assert_eq!(c[k].to_bits(), c_ref[k].to_bits(), "scalar ISA must BE the oracle");
+                assert_eq!(h[k].to_bits(), h_ref[k].to_bits(), "scalar ISA must BE the oracle");
+            }
+        }
+    }
+}
+
+/// One dispatched tail update at hid = 1.
+fn tail1(i: f32, g: f32, f: f32, o: f32, c0: f32) -> (f32, f32) {
+    let gates = [i, g, f, o];
+    let (mut h, mut c) = ([0.0f32], [c0]);
+    lstm_tail(&gates, &mut h, &mut c, 1, 1);
+    (c[0], h[0])
+}
+
+#[test]
+fn tail_monotone_and_saturating_at_clamp_edges() {
+    // Each probe pins the other gates where BOTH implementations are
+    // exact (tanh(0) = 0 and σ(0) = 0.5 hold bit-for-bit in libm and in
+    // the Padé rational), so the swept axis is isolated.
+    let sweep: Vec<f32> = (0..=400).map(|k| -10.0 + k as f32 * 0.05).collect();
+
+    // (a) forget-gate axis: g = 0 kills the input term exactly, so
+    // c' = σ(f + bias) · 0.8 must be nondecreasing in f.
+    let mut prev = f32::NEG_INFINITY;
+    for &f in &sweep {
+        let (c1, _) = tail1(0.0, 0.0, f, 0.0, 0.8);
+        assert!(c1 >= prev - 1e-6, "c' dipped at f={f}: {c1} < {prev}");
+        prev = c1;
+    }
+    // Hard saturation beyond the σ clamp (|f + bias| ≥ 7): the Padé tail
+    // is exactly constant there; both tails preserve ~all of the cell.
+    if !scalar_active() {
+        let (c_edge, _) = tail1(0.0, 0.0, 6.01, 0.0, 0.8);
+        for f in [7.0f32, 50.0, 1e9] {
+            let (c1, _) = tail1(0.0, 0.0, f, 0.0, 0.8);
+            assert_eq!(c1.to_bits(), c_edge.to_bits(), "not constant beyond clamp at f={f}");
+        }
+    }
+    let (c_sat, _) = tail1(0.0, 0.0, 1e9, 0.0, 0.8);
+    assert!((c_sat - 0.8).abs() < 1e-3, "saturated forget leaked cell: {c_sat}");
+
+    // (b) candidate-gate axis: i = 0 makes the input term 0.5 · tanh(g)
+    // exactly; c0 = 0 kills the forget term. Monotone in g, saturating
+    // beyond the tanh clamp (|g| ≥ 3.5).
+    let mut prev = f32::NEG_INFINITY;
+    for &g in &sweep {
+        let (c1, _) = tail1(0.0, g, 0.0, 0.0, 0.0);
+        assert!(c1 >= prev - 1e-6, "c' dipped at g={g}: {c1} < {prev}");
+        prev = c1;
+    }
+    if !scalar_active() {
+        let (c_edge, _) = tail1(0.0, 3.5, 0.0, 0.0, 0.0);
+        for g in [4.0f32, 100.0, 1e9] {
+            let (c1, _) = tail1(0.0, g, 0.0, 0.0, 0.0);
+            assert_eq!(c1.to_bits(), c_edge.to_bits(), "not constant beyond clamp at g={g}");
+        }
+    }
+    let (c_sat, _) = tail1(0.0, 1e9, 0.0, 0.0, 0.0);
+    assert!((c_sat - 0.5).abs() < 1e-3, "saturated candidate off target: {c_sat}");
+
+    // (c) output-gate axis: i = g = 0 and f = 0 fix c' = σ(bias) · 0.8,
+    // so h' = σ(o) · tanh(c') must be nondecreasing in o.
+    let mut prev = f32::NEG_INFINITY;
+    for &o in &sweep {
+        let (_, h1) = tail1(0.0, 0.0, 0.0, o, 0.8);
+        assert!(h1 >= prev - 1e-6, "h' dipped at o={o}: {h1} < {prev}");
+        prev = h1;
+    }
+}
+
+/// The contractive parity fixture, returning the raw weight parts so the
+/// oracle test below can run its own libm-tail forward over them.
+fn decisive_parts(shape: ModelShape, seed: u64) -> (Vec<LstmCellWeights>, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut in_dim = shape.input_dim;
+    for _ in 0..shape.num_layers {
+        let wn = (in_dim + shape.hidden) * 4 * shape.hidden;
+        let w: Vec<f32> = (0..wn).map(|_| rng.uniform(-0.3, 0.3)).collect();
+        let b: Vec<f32> = (0..4 * shape.hidden).map(|_| rng.uniform(-0.2, 0.2)).collect();
+        layers.push(LstmCellWeights::new(
+            Tensor::new(vec![in_dim + shape.hidden, 4 * shape.hidden], w),
+            Tensor::new(vec![4 * shape.hidden], b),
+            in_dim,
+            shape.hidden,
+        ));
+        in_dim = shape.hidden;
+    }
+    let w_out: Vec<f32> =
+        (0..shape.hidden * shape.num_classes).map(|_| rng.uniform(-0.5, 0.5)).collect();
+    (
+        layers,
+        Tensor::new(vec![shape.hidden, shape.num_classes], w_out),
+        Tensor::new(vec![shape.num_classes], vec![0.0; shape.num_classes]),
+    )
+}
+
+fn decisive_model(shape: ModelShape, seed: u64) -> LstmModel {
+    let (layers, w_out, b_out) = decisive_parts(shape, seed);
+    LstmModel::new(shape, layers, w_out, b_out)
+}
+
+#[test]
+fn tail_preserves_batched_streaming_pooled_parity() {
+    // The §11/§13 bit-parity contracts, re-asserted with the tail going
+    // through the dispatch table: inline batched, pool-partitioned at
+    // every thread count, and streamed-one-window must all agree
+    // bit-for-bit, f32 AND int8.
+    let shape = ModelShape::default();
+    let model = decisive_model(shape, 42);
+    let qmodel = model.quantize();
+    let ds = har::generate(7, 51);
+
+    let mut inline = BatchArena::new(shape);
+    let batched = model.forward_batch(&ds.x, &mut inline);
+    let batched_q = qmodel.forward_batch_quant(&ds.x, &mut inline);
+
+    for threads in [1usize, 2, 3, 5, 8] {
+        let mut pooled = BatchArena::with_pool(shape, Arc::new(PlanPool::new(threads)));
+        let p = model.forward_batch(&ds.x, &mut pooled);
+        assert_eq!(batched.data(), p.data(), "f32 pooled parity broke at {threads} threads");
+        let pq = qmodel.forward_batch_quant(&ds.x, &mut pooled);
+        assert_eq!(batched_q.data(), pq.data(), "int8 pooled parity broke at {threads} threads");
+    }
+
+    let (t, c) = (shape.seq_len, shape.num_classes);
+    for i in 0..ds.len() {
+        let mut st = StreamState::new(shape);
+        let logits = model.stream_chunk(ds.window(i), t, &mut st);
+        assert_eq!(batched.row(i), &logits[(t - 1) * c..], "f32 stream parity, window {i}");
+        let mut st = StreamState::new(shape);
+        let logits_q = qmodel.stream_chunk_quant(ds.window(i), t, &mut st);
+        assert_eq!(batched_q.row(i), &logits_q[(t - 1) * c..], "int8 stream parity, window {i}");
+    }
+}
+
+/// Libm-tail oracle forward: the engine's exact GEMMs (dispatched — the
+/// GEMM half is common-moded out) with `lstm_tail_scalar` as the tail
+/// and the head accumulated in `head_into`'s exact order. The ONLY
+/// difference vs the live engine is the tail kernel.
+fn oracle_predict(
+    layers: &[LstmCellWeights],
+    w_out: &Tensor,
+    b_out: &Tensor,
+    shape: ModelShape,
+    window: &[f32],
+) -> usize {
+    let hid = shape.hidden;
+    let mut h = vec![vec![0.0f32; hid]; shape.num_layers];
+    let mut c = vec![vec![0.0f32; hid]; shape.num_layers];
+    let mut gates = vec![0.0f32; 4 * hid];
+    for t in 0..shape.seq_len {
+        let x = &window[t * shape.input_dim..(t + 1) * shape.input_dim];
+        for li in 0..shape.num_layers {
+            let lw = &layers[li];
+            gates.copy_from_slice(lw.b.data());
+            let input: Vec<f32> = if li == 0 { x.to_vec() } else { h[li - 1].clone() };
+            gemv_into(&mut gates, lw.w.data(), &input);
+            gemv_into(&mut gates, &lw.w.data()[lw.input_dim * 4 * hid..], &h[li]);
+            let (hs, cs) = (&mut h[li], &mut c[li]);
+            lstm_tail_scalar(&gates, hs, cs, 1, hid);
+        }
+    }
+    let mut logits = b_out.data().to_vec();
+    for (r, &hv) in h[shape.num_layers - 1].iter().enumerate() {
+        for (l, wv) in logits.iter_mut().zip(w_out.row(r)) {
+            *l += hv * wv;
+        }
+    }
+    argmax_slice(&logits)
+}
+
+#[test]
+fn argmax_parity_vs_libm_oracle_through_router() {
+    // The serving-level gate: a live router (real engine, dispatched
+    // tail) must agree with the libm-tail oracle on ≥ 99% of windows —
+    // and exactly 100% under the forced-scalar ISA, where the dispatched
+    // tail IS libm.
+    let shape = ModelShape::default();
+    let (layers, w_out, b_out) = decisive_parts(shape, 26);
+    let model = Arc::new(LstmModel::new(shape, layers.clone(), w_out.clone(), b_out.clone()));
+    let router = Router::builder()
+        .shape(shape)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(std::time::Duration::from_millis(1))
+        .engine(Box::new(CpuSingleEngine::new(model)))
+        .build()
+        .unwrap();
+    let ds = har::generate(300, 17);
+    let mut agree = 0usize;
+    let mut oracle_class_seen = [false; har::NUM_CLASSES];
+    for i in 0..ds.len() {
+        let oracle = oracle_predict(&layers, &w_out, &b_out, shape, ds.window(i));
+        oracle_class_seen[oracle] = true;
+        let live = router.classify(ds.window(i).to_vec()).unwrap();
+        assert_eq!(live.target, "cpu");
+        if live.class == oracle {
+            agree += 1;
+        }
+    }
+    let rate = agree as f64 / ds.len() as f64;
+    assert!(rate >= 0.99, "oracle agreement {rate:.4} < 0.99 ({agree}/{})", ds.len());
+    if scalar_active() {
+        assert_eq!(agree, ds.len(), "scalar ISA runs the oracle tail: agreement must be exact");
+    }
+    assert!(
+        oracle_class_seen.iter().filter(|&&s| s).count() >= 2,
+        "fixture degenerate: oracle predictions collapse to one class"
+    );
+}
