@@ -280,6 +280,7 @@ fn main() {
             target: None,
             precision: None,
             deadline_ms: None,
+            allow_degraded: false,
         }
         .to_value()
         .to_json()

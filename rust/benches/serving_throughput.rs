@@ -25,6 +25,13 @@
 //! frame: reported p50/p99 are per-STEP latencies, directly comparable
 //! to the per-window numbers of the other scenarios.
 //!
+//! A `chaos` scenario (DESIGN.md §15) injects a seeded fault plan —
+//! 20% failures plus latency spikes on the primary pool — under
+//! per-request deadlines: every request must resolve (success or a
+//! typed error), successful p99 must respect deadline + watchdog
+//! grace, and the in-flight gauges must read zero afterwards (no
+//! watchdog leak). In `--smoke` mode those are hard CI assertions.
+//!
 //! A fifth scenario, `binary_vs_json` (DESIGN.md §12), measures the
 //! wire subsystem: the decode cost of one classify request as a JSON
 //! line vs a binary frame, and end-to-end throughput over the
@@ -48,6 +55,7 @@ use mobirnn::config::ModelShape;
 use mobirnn::coordinator::{
     CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, OffloadPolicy, Router,
 };
+use mobirnn::faults::FaultPlan;
 use mobirnn::json::{ToValue, Value};
 use mobirnn::server::{frame, protocol, Client, EventServer, Request, Response, Server};
 use mobirnn::simulator::Target;
@@ -112,6 +120,7 @@ fn run_scenario(
                         target: targets.get(i % targets.len().max(1)).copied(),
                         precision: None,
                         deadline_ms: None,
+                        allow_degraded: false,
                     };
                     let c0 = Instant::now();
                     match client.call(&req).expect("call") {
@@ -267,6 +276,126 @@ fn start_event_server(shape: ModelShape, max_connections: usize) -> EventServer 
         .expect("bind event")
 }
 
+/// The fault-injected stack (DESIGN.md §15): primary pool fails 20% of
+/// calls and spikes 5 ms latency on half of them; the multi-thread pool
+/// is clean failover capacity. Breaker and watchdog knobs are tight so
+/// a smoke run still exercises open/half-open transitions.
+fn start_chaos_server(shape: ModelShape) -> Server {
+    let model = Arc::new(random_model(shape, 42));
+    let router = Router::builder()
+        .shape(shape)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(2))
+        .breaker(3, Duration::from_millis(100))
+        .watchdog(Duration::from_millis(500))
+        .fault_plan(
+            FaultPlan::parse("cpu:fail_rate=0.2,latency_ms=5@p50,seed=17").expect("fault plan"),
+        )
+        .engine(Box::new(CpuSingleEngine::new(Arc::clone(&model))))
+        .engine(Box::new(CpuMultiEngine::new(model, 4)))
+        .build()
+        .expect("router");
+    Server::bind("127.0.0.1:0", router).expect("bind")
+}
+
+/// Drive deadline-budgeted classifies into the fault-injected server.
+/// Unlike [`run_scenario`], typed failures are part of the contract
+/// being measured: every request must RESOLVE — success, `overloaded`,
+/// `retries_exhausted`, `deadline`, or `engine` — and nothing may hang.
+/// Returns the scenario stats plus (typed_errors, watchdog_fired,
+/// inflight_leaked, server_retries).
+fn run_chaos_scenario(
+    addr: std::net::SocketAddr,
+    shape: ModelShape,
+    n_clients: usize,
+    total: usize,
+    deadline: Duration,
+) -> (ScenarioResult, usize, usize, usize, usize) {
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|_| {
+            let next = Arc::clone(&next);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut served = 0usize;
+                let mut typed = 0usize;
+                let mut walls = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let req = Request::Classify {
+                        id: Some(i as u64),
+                        window: window(shape, i),
+                        target: None,
+                        precision: None,
+                        deadline_ms: Some(deadline.as_millis() as u64),
+                        allow_degraded: false,
+                    };
+                    let c0 = Instant::now();
+                    match client.call(&req).expect("call") {
+                        Response::Result { outcome, .. } => {
+                            assert!(outcome.class < shape.num_classes, "bad class");
+                            served += 1;
+                            walls.push(c0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        Response::Error { code, .. } => {
+                            assert!(
+                                matches!(
+                                    code.as_str(),
+                                    "overloaded" | "retries_exhausted" | "deadline" | "engine"
+                                ),
+                                "untyped failure under chaos: {}",
+                                code.as_str()
+                            );
+                            typed += 1;
+                        }
+                        other => panic!("unexpected response {other:?}"),
+                    }
+                }
+                (served, typed, walls)
+            })
+        })
+        .collect();
+    let mut requests = 0;
+    let mut typed = 0;
+    let mut wall_ms = Stats::new();
+    for h in handles {
+        let (s, t, walls) = h.join().expect("chaos client thread");
+        requests += s;
+        typed += t;
+        for w in walls {
+            wall_ms.push(w);
+        }
+    }
+    let wall = t0.elapsed();
+
+    let mut client = Client::connect(addr).expect("stats connect");
+    let (_, _, metrics) = client.stats().expect("stats");
+    let expired = metrics.get("expired").as_usize().unwrap_or(0);
+    let mean_batch = metrics.get("mean_batch_size").as_f64().unwrap_or(0.0);
+    let shed = metrics.get("shed").as_usize().unwrap_or(0);
+    let watchdog_fired = metrics.get("watchdog_fired").as_usize().unwrap_or(0);
+    let retries = metrics.get("retries").as_usize().unwrap_or(0);
+    let inflight = metrics.get("inflight");
+    let leaked = ["gpu", "cpu", "cpu_multi", "cpu_quant"]
+        .iter()
+        .map(|k| inflight.get(k).as_usize().unwrap_or(0))
+        .sum::<usize>();
+    let result = ScenarioResult {
+        name: "chaos",
+        requests,
+        wall,
+        wall_ms,
+        shed,
+        expired,
+        mean_batch,
+    };
+    (result, typed, watchdog_fired, leaked, retries)
+}
+
 /// Decode cost of ONE classify request, JSON line vs binary frame —
 /// the per-request serialization tax the wire subsystem exists to cut.
 /// Returns (json_ns_per_op, binary_ns_per_op).
@@ -277,6 +406,7 @@ fn decode_costs(shape: ModelShape, iters: usize) -> (f64, f64) {
         target: None,
         precision: None,
         deadline_ms: None,
+        allow_degraded: false,
     };
     let line = req.to_value().to_json();
     let encoded = frame::encode_request(&req);
@@ -356,6 +486,19 @@ fn main() {
     print_scenario(&streaming);
     drop(stream_srv);
 
+    // Chaos scenario (DESIGN.md §15): seeded failure storm under
+    // per-request deadlines — resolution, bounded latency, no leaks.
+    let chaos_deadline = Duration::from_millis(1000);
+    let chaos_srv = start_chaos_server(shape);
+    let (chaos, chaos_typed, chaos_watchdog, chaos_leaked, chaos_retries) =
+        run_chaos_scenario(chaos_srv.addr(), shape, n_clients, total, chaos_deadline);
+    print_scenario(&chaos);
+    println!(
+        "serving/chaos: typed_errors {chaos_typed}  retries {chaos_retries}  \
+         watchdog_fired {chaos_watchdog}  inflight_leaked {chaos_leaked}"
+    );
+    drop(chaos_srv);
+
     // Scenario 5 (DESIGN.md §12): binary_vs_json — the event-driven
     // server first driven over JSON lines, then over binary frames,
     // while ~1k idle connections stay open on the same two I/O threads.
@@ -429,6 +572,23 @@ fn main() {
             accepted >= idle_conns as u64,
             "smoke: event server must sustain >=1k concurrent connections (accepted {accepted})"
         );
+        // Chaos gate: nothing hangs, nothing leaks, successes stay
+        // inside deadline + watchdog grace.
+        assert_eq!(
+            chaos.requests + chaos_typed,
+            total,
+            "chaos: every request must resolve (success or typed error)"
+        );
+        assert!(chaos.requests > 0, "chaos: some requests must survive a 20% storm");
+        if chaos.requests > 0 {
+            let p99 = chaos.wall_ms.percentile(99.0);
+            let bound = (chaos_deadline + Duration::from_millis(500)).as_secs_f64() * 1e3;
+            assert!(
+                p99 <= bound,
+                "chaos: successful p99 {p99:.1} ms exceeds deadline + watchdog grace {bound:.0} ms"
+            );
+        }
+        assert_eq!(chaos_leaked, 0, "chaos: in-flight gauges must drain to zero");
         assert!(
             decode_ratio >= 5.0,
             "smoke: binary classify decode must be >=5x cheaper than JSON \
@@ -443,6 +603,17 @@ fn main() {
     cases.insert("serving/dual_pool".to_string(), scenario_json(&dual));
     cases.insert("serving/quant_pool".to_string(), scenario_json(&quant));
     cases.insert("serving/streaming".to_string(), scenario_json(&streaming));
+    let mut chaos_entry = match scenario_json(&chaos) {
+        Value::Obj(map) => map,
+        _ => unreachable!("scenario_json returns an object"),
+    };
+    chaos_entry.insert("typed_errors".to_string(), Value::Num(chaos_typed as f64));
+    chaos_entry.insert("retries".to_string(), Value::Num(chaos_retries as f64));
+    chaos_entry.insert("watchdog_fired".to_string(), Value::Num(chaos_watchdog as f64));
+    chaos_entry.insert("inflight_leaked".to_string(), Value::Num(chaos_leaked as f64));
+    chaos_entry
+        .insert("deadline_ms".to_string(), Value::Num(chaos_deadline.as_millis() as f64));
+    cases.insert("serving/chaos".to_string(), Value::Obj(chaos_entry));
     cases.insert("serving/json_over_event".to_string(), scenario_json(&json_over));
     cases.insert("serving/binary_over_event".to_string(), scenario_json(&binary_over));
     let mut wire = BTreeMap::new();

@@ -20,14 +20,15 @@
 //! Workers send [`ServeReply`]s directly; a pool-level failure
 //! re-enqueues the batch on the next pool in failover order.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Manifest, ModelShape};
 use crate::coordinator::device::DeviceState;
+use crate::coordinator::health::{Admit, HealthRegistry};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::target_label;
 use crate::coordinator::router::{ServeError, ServeReply, ServeRequest};
@@ -459,6 +460,15 @@ pub(crate) struct BatchJob {
     pub target: Target,
     pub padded_to: usize,
     pub tried: u32,
+    /// Earliest member deadline — the retry budget every failover hop
+    /// spends from (DESIGN.md §15). `None` = retry rounds stop after the
+    /// first full sweep, preserving the legacy single-round semantics.
+    pub deadline: Option<Instant>,
+    /// Completed retry rounds; drives the capped exponential backoff.
+    pub attempt: u32,
+    /// `Some("int8")` when the scheduler brownout-downgraded this f32
+    /// batch to the quant tier; stamped into every member reply.
+    pub degraded: Option<&'static str>,
 }
 
 /// One streaming chunk handed from the scheduler to the pool a session
@@ -531,7 +541,28 @@ impl EnginePool {
 pub(crate) struct EnginePools {
     pools: Vec<EnginePool>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    health: Arc<HealthRegistry>,
+    watchdog_stop: Arc<AtomicBool>,
+    watchdog: Option<std::thread::JoinHandle<()>>,
 }
+
+/// What a pool worker is executing right now. The slot (one per worker)
+/// is the watchdog protocol: the worker parks the job here for the
+/// duration of the engine call, and whoever `take()`s it owns the job,
+/// its replies, and the pool's in-flight gauge decrement. A worker that
+/// finds its slot empty after the engine returns knows the watchdog
+/// reclaimed the dispatch and discards the late result.
+pub(crate) enum Active {
+    Batch(BatchJob),
+    Stream(StreamJob),
+}
+
+pub(crate) struct ActiveEntry {
+    started: Instant,
+    job: Active,
+}
+
+type ActiveSlot = Arc<Mutex<Option<ActiveEntry>>>;
 
 /// Pool indices in dispatch order for `target`: the pool of the same
 /// kind first (if any), then the rest in registration order — skipping
@@ -548,6 +579,7 @@ impl EnginePools {
     /// Spawn one executor worker per registered engine. `depth` bounds
     /// each pool's work queue (in batches); the scheduler's `try_send`
     /// fails instead of blocking when a pool is saturated.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn start(
         registry: EngineRegistry,
         device: DeviceState,
@@ -555,19 +587,24 @@ impl EnginePools {
         sessions: Arc<SessionStore>,
         shape: ModelShape,
         depth: usize,
+        health: Arc<HealthRegistry>,
+        watchdog: Option<Duration>,
     ) -> Result<Self> {
         let engines = registry.into_engines();
         if engines.is_empty() {
             return Err(anyhow!("engine pools need at least one engine"));
         }
         debug_assert!(engines.len() <= 32, "tried-mask is a u32");
+        debug_assert_eq!(health.len(), engines.len(), "health registry built for these pools");
         let depth = depth.max(1);
         let mut pools = Vec::with_capacity(engines.len());
         let mut rxs = Vec::with_capacity(engines.len());
+        let mut slots: Vec<ActiveSlot> = Vec::with_capacity(engines.len());
         for engine in &engines {
             let (tx, rx) = mpsc::sync_channel(depth);
             pools.push(EnginePool { target: engine.target(), tx });
             rxs.push(rx);
+            slots.push(Arc::new(Mutex::new(None)));
         }
         let mut handles = Vec::with_capacity(engines.len());
         for (index, (engine, rx)) in engines.into_iter().zip(rxs).enumerate() {
@@ -581,6 +618,8 @@ impl EnginePools {
                 metrics: Arc::clone(&metrics),
                 sessions: Arc::clone(&sessions),
                 shape,
+                active: Arc::clone(&slots[index]),
+                health: Arc::clone(&health),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -589,7 +628,46 @@ impl EnginePools {
                     .context("spawning engine pool worker")?,
             );
         }
-        Ok(Self { pools, handles })
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        let watchdog = match watchdog.filter(|t| !t.is_zero()) {
+            Some(timeout) => {
+                let stop = Arc::clone(&watchdog_stop);
+                let pools = pools.clone();
+                let metrics = Arc::clone(&metrics);
+                let health = Arc::clone(&health);
+                Some(
+                    std::thread::Builder::new()
+                        .name("mobirnn-watchdog".to_string())
+                        .spawn(move || run_watchdog(slots, pools, metrics, health, timeout, stop))
+                        .context("spawning dispatch watchdog")?,
+                )
+            }
+            None => None,
+        };
+        Ok(Self { pools, handles, health, watchdog_stop, watchdog })
+    }
+
+    /// The health registry these pools report into.
+    pub(crate) fn health(&self) -> &Arc<HealthRegistry> {
+        &self.health
+    }
+
+    /// True when no pool eligible to serve `target` (same kind first,
+    /// then failover order) could currently accept work — every breaker
+    /// in the order is open inside its cooldown. The scheduler's
+    /// brownout-or-shed gate (DESIGN.md §15).
+    pub(crate) fn no_pool_available(&self, target: Target) -> bool {
+        pool_order(&self.pools, target).all(|i| !self.health.dispatchable(i))
+    }
+
+    /// Is some pool of `t`'s kind admitting traffic? Used by the cost
+    /// model to price breaker-open pools as infinite cost (they simply
+    /// drop out of the candidate set).
+    pub(crate) fn kind_dispatchable(&self, t: Target) -> bool {
+        self.pools
+            .iter()
+            .enumerate()
+            .any(|(i, p)| same_kind(p.target, t) && self.health.dispatchable(i))
     }
 
     /// Offer `job` to the pool serving its target's kind, then to every
@@ -598,9 +676,15 @@ impl EnginePools {
     /// requests queued — admission control sheds overflow, not this).
     pub(crate) fn dispatch(&self, mut job: BatchJob, metrics: &Metrics) -> Result<(), BatchJob> {
         for i in pool_order(&self.pools, job.target) {
+            let Some(admit) = self.health.try_admit(i) else { continue };
             match self.pools[i].offer(job, metrics) {
                 Ok(()) => return Ok(()),
-                Err(j) => job = j,
+                Err(j) => {
+                    job = j;
+                    if admit == Admit::Probe {
+                        self.health.release_probe(i);
+                    }
+                }
             }
         }
         Err(job)
@@ -615,9 +699,15 @@ impl EnginePools {
         metrics: &Metrics,
     ) -> Result<(), StreamJob> {
         for i in pool_order(&self.pools, job.target) {
+            let Some(admit) = self.health.try_admit(i) else { continue };
             match self.pools[i].offer_stream(job, metrics) {
                 Ok(()) => return Ok(()),
-                Err(j) => job = j,
+                Err(j) => {
+                    job = j;
+                    if admit == Admit::Probe {
+                        self.health.release_probe(i);
+                    }
+                }
             }
         }
         Err(job)
@@ -635,12 +725,121 @@ impl EnginePools {
         for handle in self.handles.drain(..) {
             let _ = handle.join();
         }
+        self.watchdog_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.watchdog.take() {
+            let _ = handle.join();
+        }
     }
 }
 
 impl Drop for EnginePools {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Per-dispatch watchdog (DESIGN.md §15): scans every worker's active
+/// slot and reclaims dispatches that have exceeded `timeout`. Reclaiming
+/// takes the job out of the slot — from that point the watchdog owns the
+/// replies and the gauge decrement, and the wedged worker's eventual
+/// return is discarded. The pool's breaker is forced open (a wedged
+/// worker is worse than an erroring one: its queue cannot drain), so new
+/// traffic stays away until the cooldown probe.
+///
+/// Batches get one non-blocking handoff round to untried, admitted
+/// pools; streams resolve to a typed error immediately — the wedged
+/// worker may still hold the session's shard lock, so re-dispatching the
+/// chunk could double-advance the state once the worker revives.
+fn run_watchdog(
+    slots: Vec<ActiveSlot>,
+    pools: Vec<EnginePool>,
+    metrics: Arc<Metrics>,
+    health: Arc<HealthRegistry>,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let tick = (timeout / 4).clamp(Duration::from_millis(1), Duration::from_millis(50));
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        for (i, slot) in slots.iter().enumerate() {
+            let stolen = {
+                let mut s = slot.lock().unwrap();
+                match s.as_ref() {
+                    Some(entry) if entry.started.elapsed() >= timeout => s.take(),
+                    _ => None,
+                }
+            };
+            let Some(entry) = stolen else { continue };
+            let overdue = entry.started.elapsed();
+            metrics.watchdog_fired.fetch_add(1, Ordering::Relaxed);
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            metrics.inflight.slot(pools[i].target).fetch_sub(1, Ordering::Relaxed);
+            health.force_open(i);
+            eprintln!(
+                "[watchdog] pool {i} exceeded {timeout:?} (running {overdue:?}); reclaiming",
+            );
+            match entry.job {
+                Active::Batch(mut job) => {
+                    job.tried |= 1 << i;
+                    let err = anyhow!("watchdog: engine exceeded its {timeout:?} dispatch budget");
+                    if let Err(job) = handoff_once(&pools, &health, &metrics, job) {
+                        fail_batch_terminal(job, &metrics, err);
+                    }
+                }
+                Active::Stream(job) => {
+                    let _ = job.req.reply.send(Err(ServeError::EngineFailure(format!(
+                        "watchdog: engine exceeded its {timeout:?} dispatch budget"
+                    ))));
+                }
+            }
+        }
+    }
+}
+
+/// One non-blocking failover round: offer `job` to every untried,
+/// breaker-admitted pool in failover order. `Ok(())` when a queue took
+/// it (counted as a retry); `Err(job)` hands the batch back.
+fn handoff_once(
+    pools: &[EnginePool],
+    health: &HealthRegistry,
+    metrics: &Metrics,
+    mut job: BatchJob,
+) -> Result<(), BatchJob> {
+    for i in pool_order(pools, job.target) {
+        if job.tried & (1 << i) != 0 {
+            continue;
+        }
+        let Some(admit) = health.try_admit(i) else { continue };
+        match pools[i].offer(job, metrics) {
+            Ok(()) => {
+                metrics.retries.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            Err(j) => {
+                job = j;
+                if admit == Admit::Probe {
+                    health.release_probe(i);
+                }
+            }
+        }
+    }
+    Err(job)
+}
+
+/// Terminal failure for a batch whose retry options ran out: typed
+/// `RetriesExhausted` when a deadline budget was being spent, the legacy
+/// `EngineFailure` otherwise. Every member gets exactly one reply.
+fn fail_batch_terminal(job: BatchJob, metrics: &Metrics, err: anyhow::Error) {
+    if job.deadline.is_some() {
+        metrics.retries_exhausted.fetch_add(job.reqs.len() as u64, Ordering::Relaxed);
+        for req in job.reqs {
+            let _ = req.reply.send(Err(ServeError::RetriesExhausted));
+        }
+    } else {
+        let msg = format!("all engine pools failed or were saturated (last: {err:#})");
+        for req in job.reqs {
+            let _ = req.reply.send(Err(ServeError::EngineFailure(msg.clone())));
+        }
     }
 }
 
@@ -657,7 +856,15 @@ struct PoolWorker {
     metrics: Arc<Metrics>,
     sessions: Arc<SessionStore>,
     shape: ModelShape,
+    /// This worker's watchdog slot (see [`Active`]).
+    active: ActiveSlot,
+    health: Arc<HealthRegistry>,
 }
+
+/// Base backoff for deadline-budgeted retries; doubles per attempt.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(1);
+/// Backoff growth cap — retries never sleep longer than this per round.
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(50);
 
 impl PoolWorker {
     fn run(mut self) {
@@ -700,13 +907,25 @@ impl PoolWorker {
         }
     }
 
-    fn execute(&mut self, mut job: BatchJob) {
+    fn execute(&mut self, job: BatchJob) {
         let kind = self.engine.target();
         let t0 = Instant::now();
-        let outcome = self.engine.infer(&job.x);
+        // Park the job in the watchdog slot for the duration of the
+        // engine call: whoever takes it back owns replies + gauge.
+        let x = job.x.clone();
+        *self.active.lock().unwrap() =
+            Some(ActiveEntry { started: t0, job: Active::Batch(job) });
+        let outcome = self.engine.infer(&x);
+        let entry = self.active.lock().unwrap().take();
+        let Some(ActiveEntry { job: Active::Batch(mut job), .. }) = entry else {
+            // The watchdog reclaimed this dispatch while the engine ran;
+            // the result is late and no longer ours to report.
+            return;
+        };
         self.metrics.inflight.slot(kind).fetch_sub(1, Ordering::Relaxed);
         match outcome {
             Ok(logits) => {
+                self.health.on_success(self.index, t0.elapsed().as_nanos() as u64);
                 // Same-kind execution preserves the REQUESTED payload
                 // (factorization / simulated thread count are policy
                 // attributes); cross-kind failover reports the engine's
@@ -725,6 +944,7 @@ impl PoolWorker {
             }
             Err(e) => {
                 self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                self.health.on_failure(self.index);
                 eprintln!(
                     "[pool] {} failed, re-enqueueing on next pool: {e:#}",
                     self.engine.label()
@@ -739,20 +959,34 @@ impl PoolWorker {
     /// shard lock, reply with per-step logits. Session lookup happens
     /// HERE, not at dispatch — TTL applies for the whole queued wait,
     /// and the worker that actually executes owns the expiry metrics.
-    fn execute_stream(&mut self, mut job: StreamJob) {
+    fn execute_stream(&mut self, job: StreamJob) {
         let kind = self.engine.target();
         let t0 = Instant::now();
         let now_ns = self.sessions.now_ns();
+        // Copy what the engine call needs, then park the job (with its
+        // reply sink) in the watchdog slot — same protocol as `execute`.
+        let session_id = job.req.session;
+        let frames = job.req.frames.clone();
+        let steps = job.req.steps;
+        *self.active.lock().unwrap() =
+            Some(ActiveEntry { started: t0, job: Active::Stream(job) });
         let engine = &self.engine;
-        let outcome = self.sessions.with(job.req.session, now_ns, |sess| {
-            let r = engine.infer_stream(&job.req.frames, job.req.steps, &mut sess.state);
+        let outcome = self.sessions.with(session_id, now_ns, |sess| {
+            let r = engine.infer_stream(&frames, steps, &mut sess.state);
             if r.is_ok() {
                 // Session-layer step tally: holds for any engine
                 // implementation, echoed to the client on close.
-                sess.steps += job.req.steps as u64;
+                sess.steps += steps as u64;
             }
             r
         });
+        let entry = self.active.lock().unwrap().take();
+        let Some(ActiveEntry { job: Active::Stream(mut job), .. }) = entry else {
+            // Watchdog reclaimed the chunk; it already replied with a
+            // typed error. Note the state advance (if the engine
+            // eventually succeeded) still happened under the shard lock.
+            return;
+        };
         self.metrics.inflight.slot(kind).fetch_sub(1, Ordering::Relaxed);
         match outcome {
             Err(SessionError::NotFound(id)) => {
@@ -765,6 +999,7 @@ impl PoolWorker {
             }
             Ok(Err(e)) => {
                 self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                self.health.on_failure(self.index);
                 eprintln!(
                     "[pool] {} stream failed, re-enqueueing on next pool: {e:#}",
                     self.engine.label()
@@ -773,6 +1008,7 @@ impl PoolWorker {
                 self.fail_over_stream(job, e);
             }
             Ok(Ok(logits)) => {
+                self.health.on_success(self.index, t0.elapsed().as_nanos() as u64);
                 // Cross-kind failover served this chunk: the state (f32,
                 // engine-agnostic, already advanced under the shard
                 // lock) migrates by re-pinning the session here.
@@ -792,28 +1028,52 @@ impl PoolWorker {
             if job.tried & (1 << i) != 0 {
                 continue;
             }
+            let Some(admit) = self.health.try_admit(i) else { continue };
             match self.peers[i].offer_stream(job, &self.metrics) {
-                Ok(()) => return,
-                Err(j) => job = j,
+                Ok(()) => {
+                    self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(j) => {
+                    job = j;
+                    if admit == Admit::Probe {
+                        self.health.release_probe(i);
+                    }
+                }
             }
         }
         let msg = format!("all engine pools failed or were saturated (last: {err:#})");
         let _ = job.req.reply.send(Err(ServeError::EngineFailure(msg)));
     }
 
+    /// Deadline-budgeted retry (DESIGN.md §15). Each round offers the
+    /// batch to every untried, breaker-admitted pool; a round that lands
+    /// nowhere either terminates (no deadline: legacy single-round
+    /// semantics; budget spent: typed `retries_exhausted`) or sleeps a
+    /// capped exponential backoff, clears the tried mask, and sweeps
+    /// again. The budget check charges the backoff BEFORE sleeping, so a
+    /// request can never oversleep its own deadline here — the watchdog
+    /// grace is the only slack on top.
     fn fail_over(&self, mut job: BatchJob, err: anyhow::Error) {
-        for i in pool_order(&self.peers, job.target) {
-            if job.tried & (1 << i) != 0 {
-                continue;
-            }
-            match self.peers[i].offer(job, &self.metrics) {
+        loop {
+            match handoff_once(&self.peers, &self.health, &self.metrics, job) {
                 Ok(()) => return,
                 Err(j) => job = j,
             }
-        }
-        let msg = format!("all engine pools failed or were saturated (last: {err:#})");
-        for req in job.reqs {
-            let _ = req.reply.send(Err(ServeError::EngineFailure(msg.clone())));
+            let Some(deadline) = job.deadline else {
+                return fail_batch_terminal(job, &self.metrics, err);
+            };
+            job.attempt = job.attempt.saturating_add(1);
+            let backoff = RETRY_BACKOFF_BASE
+                .saturating_mul(1u32 << (job.attempt - 1).min(16))
+                .min(RETRY_BACKOFF_CAP);
+            if Instant::now() + backoff >= deadline {
+                return fail_batch_terminal(job, &self.metrics, err);
+            }
+            std::thread::sleep(backoff);
+            // A fresh round may retry pools that failed earlier — the
+            // breaker, not the tried mask, now decides who is touchable.
+            job.tried = 0;
         }
     }
 }
@@ -895,6 +1155,9 @@ fn complete_batch(
 
     let done = Instant::now();
     let batch_size = job.padded_to;
+    if job.degraded.is_some() {
+        metrics.degraded.fetch_add(job.reqs.len() as u64, Ordering::Relaxed);
+    }
     for (i, req) in job.reqs.into_iter().enumerate() {
         let wall_ns = done.duration_since(req.enqueued).as_nanos() as u64;
         metrics.wall_latency.record(wall_ns);
@@ -911,6 +1174,7 @@ fn complete_batch(
             sim_ns,
             target: target_label(used),
             batch_size,
+            degraded: job.degraded,
         }));
     }
 }

@@ -1,0 +1,337 @@
+//! Per-engine health tracking and circuit breaking (DESIGN.md §15).
+//!
+//! Every engine pool gets a [`PoolHealth`] record: an EWMA of observed
+//! compute latency plus a consecutive-failure counter driving a
+//! three-state circuit breaker:
+//!
+//! ```text
+//!            failures >= threshold                cooldown elapsed
+//!  Closed ───────────────────────────▶ Open ───────────────────────▶ HalfOpen
+//!    ▲                                  ▲                               │
+//!    │ probe succeeds                   │ probe fails                   │
+//!    └──────────────────────────────────┴───────────────◀──────────────┘
+//! ```
+//!
+//! The scheduler consults [`HealthRegistry::dispatchable`] before
+//! dispatch (an open pool prices as infinite cost — it is simply removed
+//! from the candidate set), and [`EnginePools`](super::engine::EnginePools)
+//! calls [`HealthRegistry::try_admit`] per offer: a half-open breaker
+//! admits exactly one probe batch at a time, whose outcome decides
+//! whether the breaker closes or snaps back open. Every transition
+//! increments a metrics counter (`breaker_open` / `breaker_half_open` /
+//! `breaker_closed`) and is logged to stderr, so chaos tests can assert
+//! the exact transition schedule a seeded fault plan produces.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+/// Breaker tuning knobs (see `RouterBuilder::breaker`).
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip a closed breaker open.
+    pub failure_threshold: u32,
+    /// How long an open breaker blocks traffic before granting a probe.
+    pub cooldown: Duration,
+    /// EWMA smoothing factor for observed compute latency, in `(0, 1]`.
+    pub ewma_alpha: f64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            failure_threshold: 5,
+            cooldown: Duration::from_secs(1),
+            ewma_alpha: 0.2,
+        }
+    }
+}
+
+/// Circuit-breaker state for one engine pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: all traffic admitted.
+    Closed,
+    /// Tripped: no traffic until `cooldown` elapses.
+    Open,
+    /// Recovering: exactly one probe batch in flight at a time.
+    HalfOpen,
+}
+
+/// What [`HealthRegistry::try_admit`] granted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Closed breaker: normal dispatch.
+    Normal,
+    /// Half-open breaker: this dispatch is the probe. If it never
+    /// reaches the engine (queue refusal), release it with
+    /// [`HealthRegistry::release_probe`].
+    Probe,
+}
+
+#[derive(Debug)]
+struct PoolHealth {
+    state: BreakerState,
+    consecutive_failures: u32,
+    /// EWMA of observed per-batch compute latency; 0 until first sample.
+    ewma_ns: f64,
+    /// When the breaker last opened (drives the cooldown).
+    opened_at: Option<Instant>,
+    probe_inflight: bool,
+}
+
+impl PoolHealth {
+    fn new() -> Self {
+        PoolHealth {
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            ewma_ns: 0.0,
+            opened_at: None,
+            probe_inflight: false,
+        }
+    }
+}
+
+/// Health records for every registered engine pool, indexed in pool
+/// registration order (the same indices as the `tried` bitmask).
+pub struct HealthRegistry {
+    config: BreakerConfig,
+    labels: Vec<&'static str>,
+    pools: Vec<Mutex<PoolHealth>>,
+    metrics: Arc<Metrics>,
+}
+
+impl HealthRegistry {
+    pub fn new(labels: Vec<&'static str>, config: BreakerConfig, metrics: Arc<Metrics>) -> Self {
+        let pools = labels.iter().map(|_| Mutex::new(PoolHealth::new())).collect();
+        HealthRegistry { config, labels, pools, metrics }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pools.is_empty()
+    }
+
+    pub fn state(&self, i: usize) -> BreakerState {
+        self.pools[i].lock().unwrap().state
+    }
+
+    /// EWMA compute latency for pool `i`; 0 until the first success.
+    pub fn ewma_ns(&self, i: usize) -> u64 {
+        self.pools[i].lock().unwrap().ewma_ns as u64
+    }
+
+    /// True when any breaker is not closed — the scheduler uses this to
+    /// bypass the decision cache (breaker state is not in its key).
+    pub fn any_non_closed(&self) -> bool {
+        self.pools.iter().any(|p| p.lock().unwrap().state != BreakerState::Closed)
+    }
+
+    /// Could pool `i` plausibly accept work now? Side-effect free: an
+    /// open breaker inside its cooldown is the only "no". Half-open with
+    /// a probe already in flight still counts as available — the batch
+    /// will requeue and retry, not shed.
+    pub fn dispatchable(&self, i: usize) -> bool {
+        let h = self.pools[i].lock().unwrap();
+        match h.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                h.opened_at.map_or(true, |at| at.elapsed() >= self.config.cooldown)
+            }
+        }
+    }
+
+    /// Gate one dispatch to pool `i`. `None` means the breaker refuses;
+    /// `Some(Admit::Probe)` means the caller holds the half-open probe
+    /// slot and must resolve it via the engine outcome (or
+    /// [`Self::release_probe`] if the offer never reached the queue).
+    pub fn try_admit(&self, i: usize) -> Option<Admit> {
+        let mut h = self.pools[i].lock().unwrap();
+        match h.state {
+            BreakerState::Closed => Some(Admit::Normal),
+            BreakerState::Open => {
+                let cooled = h.opened_at.map_or(true, |at| at.elapsed() >= self.config.cooldown);
+                if !cooled {
+                    return None;
+                }
+                self.transition(&mut h, i, BreakerState::HalfOpen);
+                h.probe_inflight = true;
+                Some(Admit::Probe)
+            }
+            BreakerState::HalfOpen => {
+                if h.probe_inflight {
+                    return None;
+                }
+                h.probe_inflight = true;
+                Some(Admit::Probe)
+            }
+        }
+    }
+
+    /// Return an unused probe slot (the offer was refused before the
+    /// engine saw it, so the probe proved nothing).
+    pub fn release_probe(&self, i: usize) {
+        self.pools[i].lock().unwrap().probe_inflight = false;
+    }
+
+    /// Record a successful dispatch and its compute latency.
+    pub fn on_success(&self, i: usize, compute_ns: u64) {
+        let mut h = self.pools[i].lock().unwrap();
+        h.consecutive_failures = 0;
+        h.probe_inflight = false;
+        let a = self.config.ewma_alpha;
+        h.ewma_ns = if h.ewma_ns == 0.0 {
+            compute_ns as f64
+        } else {
+            a * compute_ns as f64 + (1.0 - a) * h.ewma_ns
+        };
+        if h.state != BreakerState::Closed {
+            self.transition(&mut h, i, BreakerState::Closed);
+            h.opened_at = None;
+        }
+    }
+
+    /// Record a failed dispatch; may trip the breaker open.
+    pub fn on_failure(&self, i: usize) {
+        let mut h = self.pools[i].lock().unwrap();
+        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+        h.probe_inflight = false;
+        let trip = match h.state {
+            // A failed probe snaps straight back open.
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => h.consecutive_failures >= self.config.failure_threshold,
+            BreakerState::Open => false,
+        };
+        if trip {
+            self.transition(&mut h, i, BreakerState::Open);
+            h.opened_at = Some(Instant::now());
+        }
+    }
+
+    /// Trip the breaker open immediately (watchdog reclaim: the pool's
+    /// worker is known to be wedged, not merely erroring).
+    pub fn force_open(&self, i: usize) {
+        let mut h = self.pools[i].lock().unwrap();
+        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+        h.probe_inflight = false;
+        if h.state != BreakerState::Open {
+            self.transition(&mut h, i, BreakerState::Open);
+        }
+        h.opened_at = Some(Instant::now());
+    }
+
+    fn transition(&self, h: &mut PoolHealth, i: usize, to: BreakerState) {
+        let counter = match to {
+            BreakerState::Open => &self.metrics.breaker_open,
+            BreakerState::HalfOpen => &self.metrics.breaker_half_open,
+            BreakerState::Closed => &self.metrics.breaker_closed,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "[health] {} breaker {:?} -> {:?} (consecutive_failures={}, ewma={}us)",
+            self.labels[i],
+            h.state,
+            to,
+            h.consecutive_failures,
+            (h.ewma_ns / 1_000.0) as u64,
+        );
+        h.state = to;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(threshold: u32, cooldown: Duration) -> HealthRegistry {
+        let config = BreakerConfig {
+            failure_threshold: threshold,
+            cooldown,
+            ..BreakerConfig::default()
+        };
+        HealthRegistry::new(vec!["cpu", "cpu-multi"], config, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_only() {
+        let reg = registry(3, Duration::from_secs(60));
+        reg.on_failure(0);
+        reg.on_failure(0);
+        reg.on_success(0, 1_000);
+        reg.on_failure(0);
+        reg.on_failure(0);
+        assert_eq!(reg.state(0), BreakerState::Closed, "success resets the streak");
+        reg.on_failure(0);
+        assert_eq!(reg.state(0), BreakerState::Open);
+        assert!(!reg.dispatchable(0));
+        assert!(reg.try_admit(0).is_none(), "open + cold: no traffic");
+        assert_eq!(reg.state(1), BreakerState::Closed, "per-pool isolation");
+        assert!(reg.any_non_closed());
+    }
+
+    #[test]
+    fn half_open_admits_one_probe_then_closes_on_success() {
+        let reg = registry(1, Duration::from_millis(0));
+        reg.on_failure(0);
+        assert_eq!(reg.state(0), BreakerState::Open);
+        // Cooldown of zero: the next admit becomes the probe.
+        assert_eq!(reg.try_admit(0), Some(Admit::Probe));
+        assert_eq!(reg.state(0), BreakerState::HalfOpen);
+        assert!(reg.try_admit(0).is_none(), "one probe at a time");
+        assert!(reg.dispatchable(0), "half-open batches requeue, not shed");
+        reg.on_success(0, 2_000);
+        assert_eq!(reg.state(0), BreakerState::Closed);
+        assert_eq!(reg.try_admit(0), Some(Admit::Normal));
+    }
+
+    #[test]
+    fn failed_probe_snaps_back_open_and_released_probe_frees_the_slot() {
+        let reg = registry(1, Duration::from_millis(0));
+        reg.on_failure(0);
+        assert_eq!(reg.try_admit(0), Some(Admit::Probe));
+        reg.on_failure(0);
+        assert_eq!(reg.state(0), BreakerState::Open);
+
+        // A probe that never reached the engine must free the slot.
+        assert_eq!(reg.try_admit(0), Some(Admit::Probe));
+        assert!(reg.try_admit(0).is_none());
+        reg.release_probe(0);
+        assert_eq!(reg.try_admit(0), Some(Admit::Probe));
+    }
+
+    #[test]
+    fn transition_counters_count_every_edge() {
+        let metrics = Arc::new(Metrics::new());
+        let config = BreakerConfig {
+            failure_threshold: 1,
+            cooldown: Duration::from_millis(0),
+            ..BreakerConfig::default()
+        };
+        let reg = HealthRegistry::new(vec!["cpu"], config, Arc::clone(&metrics));
+        reg.on_failure(0); // closed -> open
+        let _ = reg.try_admit(0); // open -> half-open (probe)
+        reg.on_failure(0); // half-open -> open
+        let _ = reg.try_admit(0); // open -> half-open (probe)
+        reg.on_success(0, 1_000); // half-open -> closed
+        assert_eq!(metrics.breaker_open.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.breaker_half_open.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.breaker_closed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn force_open_trips_immediately_and_ewma_tracks_latency() {
+        let reg = registry(100, Duration::from_secs(60));
+        reg.on_success(0, 1_000);
+        assert_eq!(reg.ewma_ns(0), 1_000);
+        reg.on_success(0, 2_000);
+        assert_eq!(reg.ewma_ns(0), 1_200, "alpha 0.2 blend");
+        reg.force_open(0);
+        assert_eq!(reg.state(0), BreakerState::Open);
+        assert!(!reg.dispatchable(0));
+    }
+}

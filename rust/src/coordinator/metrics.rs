@@ -180,6 +180,27 @@ pub struct Metrics {
     /// Reply/refusal writes that failed; each one also kills its
     /// connection rather than silently dropping the bytes.
     pub write_failed: AtomicU64,
+    /// Batches re-offered to another pool after an engine failure or a
+    /// watchdog reclaim (each failover hop counts once).
+    pub retries: AtomicU64,
+    /// Requests whose deadline budget ran out across failover — resolved
+    /// with a typed `retries_exhausted`, never a hang (DESIGN.md §15).
+    pub retries_exhausted: AtomicU64,
+    /// Circuit-breaker transitions into Open.
+    pub breaker_open: AtomicU64,
+    /// Circuit-breaker transitions into HalfOpen (probe granted).
+    pub breaker_half_open: AtomicU64,
+    /// Circuit-breaker transitions into Closed (recovery).
+    pub breaker_closed: AtomicU64,
+    /// Requests served on the int8 tier under brownout — opted in via
+    /// `allow_degraded` and marked `degraded:"int8"` in the reply.
+    pub degraded: AtomicU64,
+    /// Dispatches reclaimed by the per-dispatch watchdog because the
+    /// engine exceeded its timeout.
+    pub watchdog_fired: AtomicU64,
+    /// Connections closed because their write backlog stalled past the
+    /// event server's stall deadline.
+    pub conns_stalled: AtomicU64,
 }
 
 impl Metrics {
@@ -225,6 +246,14 @@ impl Metrics {
             ("frames_tx", Value::from(self.frames_tx.load(Ordering::Relaxed))),
             ("proto_v3_negotiated", Value::from(self.proto_v3_negotiated.load(Ordering::Relaxed))),
             ("write_failed", Value::from(self.write_failed.load(Ordering::Relaxed))),
+            ("retries", Value::from(self.retries.load(Ordering::Relaxed))),
+            ("retries_exhausted", Value::from(self.retries_exhausted.load(Ordering::Relaxed))),
+            ("breaker_open", Value::from(self.breaker_open.load(Ordering::Relaxed))),
+            ("breaker_half_open", Value::from(self.breaker_half_open.load(Ordering::Relaxed))),
+            ("breaker_closed", Value::from(self.breaker_closed.load(Ordering::Relaxed))),
+            ("degraded", Value::from(self.degraded.load(Ordering::Relaxed))),
+            ("watchdog_fired", Value::from(self.watchdog_fired.load(Ordering::Relaxed))),
+            ("conns_stalled", Value::from(self.conns_stalled.load(Ordering::Relaxed))),
             ("inflight", self.inflight.to_json()),
             ("wall_latency", self.wall_latency.to_json()),
             ("sim_latency", self.sim_latency.to_json()),
@@ -333,6 +362,75 @@ mod tests {
         assert_eq!(j.get("frames_tx").as_usize(), Some(41));
         assert_eq!(j.get("proto_v3_negotiated").as_usize(), Some(3));
         assert_eq!(j.get("write_failed").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn chaos_metrics_in_json() {
+        let m = Metrics::new();
+        m.retries.fetch_add(4, Ordering::Relaxed);
+        m.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+        m.breaker_open.fetch_add(2, Ordering::Relaxed);
+        m.breaker_half_open.fetch_add(2, Ordering::Relaxed);
+        m.breaker_closed.fetch_add(1, Ordering::Relaxed);
+        m.degraded.fetch_add(5, Ordering::Relaxed);
+        m.watchdog_fired.fetch_add(1, Ordering::Relaxed);
+        m.conns_stalled.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("retries").as_usize(), Some(4));
+        assert_eq!(j.get("retries_exhausted").as_usize(), Some(1));
+        assert_eq!(j.get("breaker_open").as_usize(), Some(2));
+        assert_eq!(j.get("breaker_half_open").as_usize(), Some(2));
+        assert_eq!(j.get("breaker_closed").as_usize(), Some(1));
+        assert_eq!(j.get("degraded").as_usize(), Some(5));
+        assert_eq!(j.get("watchdog_fired").as_usize(), Some(1));
+        assert_eq!(j.get("conns_stalled").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn snapshot_schema_keys_are_pinned() {
+        // The snapshot is the wire contract for `stats` consumers —
+        // adding a counter must update this list deliberately. Keys are
+        // sorted because `obj` stores a BTreeMap.
+        let j = Metrics::new().to_json();
+        let keys: Vec<&str> =
+            j.as_obj().expect("snapshot is an object").keys().map(String::as_str).collect();
+        assert_eq!(
+            keys,
+            [
+                "batches",
+                "breaker_closed",
+                "breaker_half_open",
+                "breaker_open",
+                "compute_latency",
+                "conns_open",
+                "conns_stalled",
+                "cpu_dispatches",
+                "degraded",
+                "errors",
+                "expired",
+                "frames_rx",
+                "frames_tx",
+                "gpu_dispatches",
+                "inflight",
+                "kernel_isa",
+                "kernel_tail",
+                "mean_batch_size",
+                "padded_slots",
+                "proto_v3_negotiated",
+                "queue_depth",
+                "requests",
+                "retries",
+                "retries_exhausted",
+                "sessions_expired",
+                "sessions_migrated",
+                "sessions_open",
+                "shed",
+                "sim_latency",
+                "wall_latency",
+                "watchdog_fired",
+                "write_failed",
+            ]
+        );
     }
 
     #[test]

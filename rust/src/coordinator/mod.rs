@@ -21,6 +21,9 @@
 //!   (the paper's conclusion that offloading must be utilization-aware)
 //! - [`engine`]   — the [`Engine`] trait + registry + the per-engine
 //!   executor pools, with generic failover (DESIGN.md §3, §9)
+//! - [`health`]   — per-engine EWMA latency + consecutive-failure counts
+//!   driving a three-state circuit breaker the scheduler consults before
+//!   dispatch (DESIGN.md §15)
 //! - [`device`]   — shared simulated-device state (background load knobs)
 //! - [`router`]   — the scheduler tying it all together, built via
 //!   [`RouterBuilder`]
@@ -37,6 +40,7 @@
 pub mod batcher;
 pub mod device;
 pub mod engine;
+pub mod health;
 pub mod metrics;
 pub mod policy;
 pub mod router;
@@ -46,6 +50,7 @@ pub use device::DeviceState;
 pub use engine::{
     CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, Engine, EngineRegistry, PjrtEngine,
 };
+pub use health::{Admit, BreakerConfig, BreakerState, HealthRegistry};
 pub use metrics::{Histogram, Metrics, PerTarget};
 pub use policy::{
     inflight_pressure, parse_target, target_label, DecisionCache, LoadSnapshot, OffloadPolicy,

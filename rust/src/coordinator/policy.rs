@@ -58,7 +58,11 @@ pub enum OffloadPolicy {
     Static(Target),
     /// GPU while `gpu_util < gpu_threshold`, else multithreaded CPU.
     Threshold { gpu_threshold: f64 },
-    /// Argmin of simulated latency over candidate targets.
+    /// Argmin of simulated latency over candidate targets. When any
+    /// circuit breaker is not closed, the scheduler prices health into
+    /// this policy directly (DESIGN.md §15): a pool whose breaker is
+    /// open inside its cooldown costs infinity — it drops out of the
+    /// candidate set until a half-open probe succeeds.
     CostModel,
 }
 

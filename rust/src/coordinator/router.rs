@@ -47,12 +47,13 @@ use crate::coordinator::engine::{
     BatchJob, CpuMultiEngine, CpuQuantEngine, CpuSingleEngine, Engine, EnginePools,
     EngineRegistry, PjrtEngine, StreamJob,
 };
+use crate::coordinator::health::HealthRegistry;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{DecisionCache, LoadSnapshot, OffloadPolicy, Precision};
 use crate::lstm::{LstmModel, WeightFile};
 use crate::runtime::Runtime;
 use crate::session::{SessionError, SessionStore};
-use crate::simulator::{DeviceProfile, Target};
+use crate::simulator::{simulate_inference, DeviceProfile, Target};
 use crate::tensor::Tensor;
 
 /// How long the scheduler backs off when every engine pool's queue is
@@ -79,8 +80,15 @@ pub struct ClassifyOptions {
     pub precision: Option<Precision>,
     /// Upper bound on how long the caller waits for the reply in
     /// [`Router::classify_with`]; exceeding it yields
-    /// [`ServeError::DeadlineExceeded`].
+    /// [`ServeError::DeadlineExceeded`]. The deadline also bounds the
+    /// retry budget failover spends on the batch (DESIGN.md §15).
     pub deadline: Option<Duration>,
+    /// Opt in to brownout degradation: when every f32 pool's breaker is
+    /// open, the scheduler may serve this request on the int8 tier
+    /// instead of shedding it, marking the reply `degraded:"int8"`
+    /// (DESIGN.md §15). Never applies to requests with an explicit
+    /// `target` override or int8 precision.
+    pub allow_degraded: bool,
 }
 
 /// Where a finished request's outcome goes. The blocking API wraps an
@@ -149,6 +157,9 @@ pub struct ServeReply {
     pub sim_ns: u64,
     pub target: &'static str,
     pub batch_size: usize,
+    /// `Some("int8")` when brownout served this f32 request on the
+    /// quant tier (the caller opted in via `allow_degraded`).
+    pub degraded: Option<&'static str>,
 }
 
 /// Serving-side failure delivered on the reply channel.
@@ -169,6 +180,11 @@ pub enum ServeError {
     SessionNotFound(u64),
     /// The session existed but its TTL lapsed; this lookup evicted it.
     SessionExpired(u64),
+    /// Failover retries consumed the request's whole deadline budget
+    /// without any pool accepting the batch (DESIGN.md §15). Typed so
+    /// callers can tell "engines are broken" from "engines were too
+    /// busy/broken for too long" — and so exhaustion is never a hang.
+    RetriesExhausted,
 }
 
 impl fmt::Display for ServeError {
@@ -179,6 +195,9 @@ impl fmt::Display for ServeError {
             ServeError::Overloaded => write!(f, "overloaded: scheduler queue full"),
             ServeError::SessionNotFound(id) => write!(f, "session {id} not found"),
             ServeError::SessionExpired(id) => write!(f, "session {id} expired"),
+            ServeError::RetriesExhausted => {
+                write!(f, "retries exhausted: deadline budget consumed across failover")
+            }
         }
     }
 }
@@ -491,6 +510,9 @@ pub struct RouterBuilder {
     session_shards: usize,
     device: Option<DeviceState>,
     registry: EngineRegistry,
+    fault_plan: Option<crate::faults::FaultPlan>,
+    breaker: crate::coordinator::health::BreakerConfig,
+    watchdog: Option<Duration>,
 }
 
 impl Default for RouterBuilder {
@@ -512,7 +534,36 @@ impl RouterBuilder {
             session_shards: 16,
             device: None,
             registry: EngineRegistry::new(),
+            fault_plan: None,
+            breaker: crate::coordinator::health::BreakerConfig::default(),
+            watchdog: Some(Duration::from_secs(2)),
         }
+    }
+
+    /// Wrap registered engines in [`crate::faults::FaultyEngine`]s per
+    /// this plan at build time (chaos testing / `--fault-plan`). Engines
+    /// the plan does not mention run untouched.
+    pub fn fault_plan(mut self, plan: crate::faults::FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Circuit-breaker tuning (DESIGN.md §15): consecutive failures that
+    /// trip a pool's breaker open, and how long it stays open before a
+    /// half-open probe is allowed. Defaults: 5 failures, 1 s cooldown.
+    pub fn breaker(mut self, failure_threshold: u32, cooldown: Duration) -> Self {
+        self.breaker.failure_threshold = failure_threshold.max(1);
+        self.breaker.cooldown = cooldown;
+        self
+    }
+
+    /// Per-dispatch watchdog timeout (default 2 s): an engine call
+    /// running longer is reclaimed — its batch fails over, its stream
+    /// gets a typed error, and the pool's breaker opens. Zero disables
+    /// the watchdog.
+    pub fn watchdog(mut self, timeout: Duration) -> Self {
+        self.watchdog = if timeout.is_zero() { None } else { Some(timeout) };
+        self
     }
 
     /// Idle TTL for streaming sessions (default 30 s): a session
@@ -622,12 +673,24 @@ impl RouterBuilder {
         }
         let device =
             self.device.unwrap_or_else(|| DeviceState::new(DeviceProfile::nexus5()));
+        // Chaos wrapping happens LAST, at the registry boundary, so the
+        // scheduler, pools, and health tracking see an injected fault
+        // exactly as they would a real engine failure (DESIGN.md §15).
+        let registry = match &self.fault_plan {
+            Some(plan) if !plan.is_empty() => {
+                let mut wrapped = EngineRegistry::new();
+                for e in self.registry.into_engines() {
+                    wrapped.register(plan.wrap(e));
+                }
+                wrapped
+            }
+            _ => self.registry,
+        };
         // Batch sizes the collector may form: the union of what the
         // engines can execute. Engines that accept any batch contribute
         // nothing; if only such engines are registered, use a dyadic
         // ladder so burst traffic still batches.
-        let mut batches: Vec<usize> = self
-            .registry
+        let mut batches: Vec<usize> = registry
             .iter()
             .flat_map(|e| e.supported_batches().iter().copied())
             .collect();
@@ -642,19 +705,22 @@ impl RouterBuilder {
             Arc::new(SessionStore::with_shards(self.session_ttl, self.session_shards));
         // Which pools can serve streams is fixed at build: captured here,
         // consulted at every open_session to pick the affinity pin.
-        let stream_targets: Vec<Target> = self
-            .registry
+        let stream_targets: Vec<Target> = registry
             .iter()
             .filter(|e| e.supports_streaming())
             .map(|e| e.target())
             .collect();
+        let labels: Vec<&'static str> = registry.iter().map(|e| e.label()).collect();
+        let health = Arc::new(HealthRegistry::new(labels, self.breaker, Arc::clone(&metrics)));
         let pools = EnginePools::start(
-            self.registry,
+            registry,
             device.clone(),
             Arc::clone(&metrics),
             Arc::clone(&sessions),
             self.shape,
             self.pool_depth,
+            Arc::clone(&health),
+            self.watchdog,
         )?;
         let (tx, rx) = mpsc::channel::<SchedMsg>();
         // Sweep cadence: a fraction of the TTL so an abandoned session
@@ -678,6 +744,7 @@ impl RouterBuilder {
             max_wait: self.max_wait,
             max_queue: self.max_queue,
             decisions: DecisionCache::new(),
+            health,
         };
         let handle = std::thread::Builder::new()
             .name("mobirnn-scheduler".into())
@@ -724,6 +791,10 @@ struct Scheduler {
     max_wait: Duration,
     max_queue: usize,
     decisions: DecisionCache,
+    /// Shared with the pool workers (success/failure accounting) and the
+    /// watchdog (force-open); the scheduler reads breaker state before
+    /// dispatch and for brownout / health-aware pricing (DESIGN.md §15).
+    health: Arc<HealthRegistry>,
 }
 
 impl Scheduler {
@@ -938,7 +1009,8 @@ impl Scheduler {
         // — background knobs plus the REAL per-pool in-flight depth,
         // so the cost model steers away from an engine that is already
         // saturated.
-        let target = match live.iter().find_map(|r| r.opts.target) {
+        let override_target = live.iter().find_map(|r| r.opts.target);
+        let mut target = match override_target {
             Some(t) => t,
             None if head_int8 => Target::CpuQuant,
             None => {
@@ -950,17 +1022,75 @@ impl Scheduler {
                         + self.metrics.inflight.cpu_multi.load(Ordering::Relaxed)
                         + self.metrics.inflight.cpu_quant.load(Ordering::Relaxed),
                 };
-                self.decisions.decide(
-                    &self.policy,
-                    self.device.profile(),
-                    shape,
-                    padded_to,
-                    load,
-                )
+                let profile = self.device.profile();
+                if matches!(self.policy, OffloadPolicy::CostModel)
+                    && self.health.any_non_closed()
+                {
+                    // Health-aware pricing (DESIGN.md §15): a pool whose
+                    // breaker is open inside its cooldown is infinite
+                    // cost — it simply drops out of the candidate set.
+                    // Bypasses the DecisionCache because breaker state
+                    // is not part of its key.
+                    OffloadPolicy::candidates(profile)
+                        .into_iter()
+                        .filter(|&t| self.pools.kind_dispatchable(t))
+                        .min_by_key(|&t| {
+                            simulate_inference(
+                                profile,
+                                shape,
+                                padded_to,
+                                t,
+                                load.effective_util(t),
+                            )
+                        })
+                        .unwrap_or(Target::CpuSingle)
+                } else {
+                    self.decisions.decide(&self.policy, profile, shape, padded_to, load)
+                }
             }
         };
 
-        let job = BatchJob { x, reqs: live, target, padded_to, tried: 0 };
+        // Brownout-or-shed gate (DESIGN.md §15): when every pool in the
+        // decided target's failover order has its breaker open, either
+        // degrade the batch to the int8 tier — only if every member
+        // opted in via `allow_degraded`, the batch is f32 with no
+        // explicit target override, and a quant pool is admitting — or
+        // shed it NOW with a typed error. Never queue it to die.
+        let mut degraded = None;
+        if self.pools.no_pool_available(target) {
+            let all_opted = live.iter().all(|r| r.opts.allow_degraded);
+            if !head_int8
+                && override_target.is_none()
+                && all_opted
+                && self.pools.kind_dispatchable(Target::CpuQuant)
+            {
+                target = Target::CpuQuant;
+                degraded = Some("int8");
+            } else {
+                self.metrics.shed.fetch_add(live.len() as u64, Ordering::Relaxed);
+                for req in live {
+                    let _ = req.reply.send(Err(ServeError::Overloaded));
+                }
+                return true;
+            }
+        }
+
+        // The batch's retry/deadline budget is the EARLIEST member
+        // deadline: failover stops retrying once any member would be
+        // served a dead answer (DESIGN.md §15).
+        let deadline =
+            live.iter().filter_map(|r| r.opts.deadline.map(|d| r.enqueued + d)).min();
+
+        let job = BatchJob {
+            x,
+            reqs: live,
+            target,
+            padded_to,
+            tried: 0,
+            deadline,
+            attempt: 0,
+            degraded,
+        };
         match self.pools.dispatch(job, &self.metrics) {
             Ok(()) => true,
             Err(job) => {

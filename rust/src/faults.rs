@@ -1,0 +1,506 @@
+//! Deterministic fault injection for engines (DESIGN.md §15).
+//!
+//! A [`FaultPlan`] is a seedable schedule of engine misbehaviour parsed
+//! from a compact grammar (CLI `--fault-plan` / env `MOBIRNN_FAULT_PLAN`):
+//!
+//! ```text
+//! plan    := entry (';' entry)*
+//! entry   := label ':' setting (',' setting)*
+//! setting := key '=' value
+//! ```
+//!
+//! `label` matches [`Engine::label`] (`gpu`, `cpu`, `cpu-multi`,
+//! `cpu-quant`); `all` / `*` match every engine, and `pjrt` is accepted
+//! as an alias for `gpu`. Supported keys:
+//!
+//! | key           | meaning                                                |
+//! |---------------|--------------------------------------------------------|
+//! | `fail_rate`   | probability in `[0,1]` that a call returns an error    |
+//! | `fail_first`  | the first N calls fail, later calls are healthy        |
+//! | `fail_after`  | calls beyond the first N fail forever (pool death)     |
+//! | `latency_ms`  | injected sleep; `200@p25` sleeps on 25% of calls       |
+//! | `hang_after`  | calls beyond the first N hang (bounded by `hang_ms`)   |
+//! | `hang_ms`     | how long an injected hang sleeps before erroring       |
+//! | `corrupt_rate`| probability that outputs are NaN-poisoned              |
+//! | `seed`        | RNG seed (mixed with the engine label)                 |
+//!
+//! Example: `pjrt:fail_rate=0.3,latency_ms=200@p50,hang_after=100`.
+//!
+//! Faults are injected by [`FaultyEngine`], a transparent [`Engine`]
+//! wrapper. Randomness comes from a per-engine seeded [`Rng`], and each
+//! pool runs a single worker thread, so a given (plan, traffic order)
+//! replays the same fault schedule — chaos tests assert exact breaker
+//! transitions against it. Injected hangs sleep `hang_ms` and then
+//! return an error, so they are bounded even without the dispatch
+//! watchdog; the watchdog exists for engines that wedge for real.
+//!
+//! [`StubEngine`] is a tiny deterministic engine (always predicts class
+//! 1) exported for integration tests and benches, which cannot reach the
+//! crate's `#[cfg(test)]` fixtures.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::engine::Engine;
+use crate::lstm::StreamState;
+use crate::simulator::Target;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Fault settings for one engine, parsed from one plan entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Probability in `[0, 1]` that a call fails with a typed error.
+    pub fail_rate: f64,
+    /// The first `fail_first` calls fail; later calls are healthy.
+    pub fail_first: u64,
+    /// Calls after the first `fail_after` fail forever (permanent death).
+    pub fail_after: Option<u64>,
+    /// Injected latency per affected call.
+    pub latency_ms: u64,
+    /// Probability in `[0, 1]` that `latency_ms` applies to a call.
+    pub latency_prob: f64,
+    /// Calls after the first `hang_after` hang for `hang_ms`, then fail.
+    pub hang_after: Option<u64>,
+    /// Duration of an injected hang before it resolves into an error.
+    pub hang_ms: u64,
+    /// Probability in `[0, 1]` that outputs are NaN-poisoned.
+    pub corrupt_rate: f64,
+    /// Seed for the per-engine fault RNG.
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            fail_rate: 0.0,
+            fail_first: 0,
+            fail_after: None,
+            latency_ms: 0,
+            latency_prob: 1.0,
+            hang_after: None,
+            hang_ms: 5_000,
+            corrupt_rate: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    fn parse_settings(settings: &str) -> Result<Self> {
+        let mut spec = FaultSpec::default();
+        for setting in settings.split(',') {
+            let setting = setting.trim();
+            if setting.is_empty() {
+                continue;
+            }
+            let (key, value) = setting
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault setting {setting:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "fail_rate" => spec.fail_rate = parse_rate(key, value)?,
+                "fail_first" => spec.fail_first = parse_count(key, value)?,
+                "fail_after" => spec.fail_after = Some(parse_count(key, value)?),
+                "latency_ms" => {
+                    // `200@p25` = 200ms on 25% of calls; bare `200` = every call.
+                    let (ms, prob) = match value.split_once('@') {
+                        Some((ms, pct)) => {
+                            let pct = pct
+                                .strip_prefix('p')
+                                .ok_or_else(|| anyhow!("latency percentile {pct:?} must be pNN"))?;
+                            let pct: f64 = pct
+                                .parse()
+                                .with_context(|| format!("latency percentile {pct:?}"))?;
+                            if !(0.0..=100.0).contains(&pct) {
+                                bail!("latency percentile {pct} out of [0, 100]");
+                            }
+                            (ms, pct / 100.0)
+                        }
+                        None => (value, 1.0),
+                    };
+                    spec.latency_ms = parse_count(key, ms)?;
+                    spec.latency_prob = prob;
+                }
+                "hang_after" => spec.hang_after = Some(parse_count(key, value)?),
+                "hang_ms" => spec.hang_ms = parse_count(key, value)?,
+                "corrupt_rate" => spec.corrupt_rate = parse_rate(key, value)?,
+                "seed" => spec.seed = parse_count(key, value)?,
+                _ => bail!("unknown fault key {key:?}"),
+            }
+        }
+        Ok(spec)
+    }
+
+    fn is_noop(&self) -> bool {
+        *self == FaultSpec { seed: self.seed, ..FaultSpec::default() }
+    }
+}
+
+fn parse_rate(key: &str, value: &str) -> Result<f64> {
+    let rate: f64 = value.parse().with_context(|| format!("fault {key}={value:?}"))?;
+    if !(0.0..=1.0).contains(&rate) {
+        bail!("fault {key}={rate} out of [0, 1]");
+    }
+    Ok(rate)
+}
+
+fn parse_count(key: &str, value: &str) -> Result<u64> {
+    value.parse().with_context(|| format!("fault {key}={value:?}"))
+}
+
+/// A parsed fault plan: per-engine-label [`FaultSpec`]s.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    entries: Vec<(String, FaultSpec)>,
+}
+
+impl FaultPlan {
+    /// Parse the plan grammar (see module docs). Empty input is an empty plan.
+    pub fn parse(plan: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for entry in plan.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (label, settings) = entry
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault entry {entry:?} is not label:settings"))?;
+            let label = label.trim();
+            if label.is_empty() {
+                bail!("fault entry {entry:?} has an empty engine label");
+            }
+            entries.push((label.to_string(), FaultSpec::parse_settings(settings)?));
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The spec applying to an engine label (first matching entry wins).
+    pub fn spec_for(&self, label: &str) -> Option<FaultSpec> {
+        self.entries
+            .iter()
+            .find(|(pat, _)| {
+                pat == label
+                    || pat == "all"
+                    || pat == "*"
+                    || (pat == "pjrt" && label == "gpu")
+            })
+            .map(|(_, spec)| *spec)
+    }
+
+    /// Wrap an engine in a [`FaultyEngine`] when the plan targets it;
+    /// engines the plan does not mention pass through untouched.
+    pub fn wrap(&self, engine: Box<dyn Engine>) -> Box<dyn Engine> {
+        match self.spec_for(engine.label()) {
+            Some(spec) if !spec.is_noop() => Box::new(FaultyEngine::new(engine, spec)),
+            _ => engine,
+        }
+    }
+}
+
+/// Mixes the engine label into the seed so two engines covered by one
+/// `all:` entry still draw independent fault sequences.
+fn label_seed(seed: u64, label: &str) -> u64 {
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    for b in label.bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// An [`Engine`] wrapper injecting the faults described by a [`FaultSpec`].
+///
+/// Call accounting is shared between `infer` and `infer_stream`: the
+/// N-th call to either is call N of the schedule.
+pub struct FaultyEngine {
+    inner: Box<dyn Engine>,
+    spec: FaultSpec,
+    calls: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+enum Injected {
+    /// Run the wrapped engine; optionally NaN-poison its output.
+    Pass { corrupt: bool },
+    /// Fail without touching the wrapped engine (state stays clean).
+    Fail(anyhow::Error),
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn Engine>, spec: FaultSpec) -> Self {
+        let seed = label_seed(spec.seed, inner.label());
+        FaultyEngine { inner, spec, calls: AtomicU64::new(0), rng: Mutex::new(Rng::new(seed)) }
+    }
+
+    /// Decide this call's fate. Draw order is fixed (latency, failure,
+    /// corruption) so schedules replay deterministically.
+    fn inject(&self) -> Injected {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        let spec = &self.spec;
+        let label = self.inner.label();
+        let (latency_roll, fail_roll, corrupt_roll) = {
+            let mut rng = self.rng.lock().unwrap();
+            (rng.next_f64(), rng.next_f64(), rng.next_f64())
+        };
+        if spec.latency_ms > 0 && latency_roll < spec.latency_prob {
+            std::thread::sleep(Duration::from_millis(spec.latency_ms));
+        }
+        if let Some(after) = spec.hang_after {
+            if call > after {
+                // A bounded stand-in for a wedged engine: sleep long enough
+                // for the dispatch watchdog to fire, then surface an error
+                // so the worker thread is reclaimed.
+                std::thread::sleep(Duration::from_millis(spec.hang_ms));
+                return Injected::Fail(anyhow!("injected hang on {label} call {call}"));
+            }
+        }
+        if call <= spec.fail_first {
+            return Injected::Fail(anyhow!("injected failure on {label} call {call} (fail_first)"));
+        }
+        if let Some(after) = spec.fail_after {
+            if call > after {
+                return Injected::Fail(anyhow!(
+                    "injected failure on {label} call {call} (fail_after)"
+                ));
+            }
+        }
+        if fail_roll < spec.fail_rate {
+            return Injected::Fail(anyhow!("injected failure on {label} call {call}"));
+        }
+        Injected::Pass { corrupt: corrupt_roll < spec.corrupt_rate }
+    }
+}
+
+impl Engine for FaultyEngine {
+    fn target(&self) -> Target {
+        self.inner.target()
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        self.inner.supported_batches()
+    }
+
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        match self.inject() {
+            Injected::Fail(err) => Err(err),
+            Injected::Pass { corrupt } => {
+                let mut y = self.inner.infer(x)?;
+                if corrupt {
+                    for v in y.data_mut().iter_mut() {
+                        *v = f32::NAN;
+                    }
+                }
+                Ok(y)
+            }
+        }
+    }
+
+    fn infer_stream(
+        &self,
+        frames: &[f32],
+        steps: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        match self.inject() {
+            Injected::Fail(err) => Err(err),
+            Injected::Pass { corrupt } => {
+                let mut y = self.inner.infer_stream(frames, steps, state)?;
+                if corrupt {
+                    for v in y.iter_mut() {
+                        *v = f32::NAN;
+                    }
+                }
+                Ok(y)
+            }
+        }
+    }
+
+    fn supports_streaming(&self) -> bool {
+        self.inner.supports_streaming()
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+}
+
+/// A deterministic engine for integration tests and benches: every row
+/// scores class 1. Streams are supported and count calls like `infer`.
+///
+/// The crate's richer `#[cfg(test)]` fixtures are not visible to
+/// `tests/*.rs` or benches, so chaos tooling uses this instead.
+pub struct StubEngine {
+    /// Target reported to the scheduler.
+    pub target: Target,
+    /// Logit width; must match the served `ModelShape::num_classes`.
+    pub num_classes: usize,
+    /// Calls observed (either entry point).
+    pub calls: AtomicU64,
+}
+
+impl StubEngine {
+    pub fn new(target: Target, num_classes: usize) -> Self {
+        StubEngine { target, num_classes, calls: AtomicU64::new(0) }
+    }
+
+    fn row(&self) -> Vec<f32> {
+        let mut row = vec![0.0; self.num_classes];
+        if self.num_classes > 1 {
+            row[1] = 1.0;
+        }
+        row
+    }
+}
+
+impl Engine for StubEngine {
+    fn target(&self) -> Target {
+        self.target
+    }
+
+    fn supported_batches(&self) -> &[usize] {
+        &[1, 2, 4, 8]
+    }
+
+    fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let batch = x.shape()[0];
+        let mut out = Vec::with_capacity(batch * self.num_classes);
+        for _ in 0..batch {
+            out.extend_from_slice(&self.row());
+        }
+        Ok(Tensor::new(vec![batch, self.num_classes], out))
+    }
+
+    fn infer_stream(
+        &self,
+        _frames: &[f32],
+        steps: usize,
+        _state: &mut StreamState,
+    ) -> Result<Vec<f32>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::with_capacity(steps * self.num_classes);
+        for _ in 0..steps {
+            out.extend_from_slice(&self.row());
+        }
+        Ok(out)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_round_trips_the_issue_example() {
+        let plan = FaultPlan::parse("pjrt:fail_rate=0.3,latency_ms=200@p50,hang_after=100")
+            .expect("plan parses");
+        let spec = plan.spec_for("gpu").expect("pjrt aliases gpu");
+        assert_eq!(spec.fail_rate, 0.3);
+        assert_eq!(spec.latency_ms, 200);
+        assert_eq!(spec.latency_prob, 0.5);
+        assert_eq!(spec.hang_after, Some(100));
+        assert!(plan.spec_for("cpu").is_none());
+    }
+
+    #[test]
+    fn wildcard_and_multi_entry_plans_parse() {
+        let plan = FaultPlan::parse("all:seed=7,fail_rate=0.1;cpu:fail_after=3,hang_ms=250")
+            .expect("plan parses");
+        // First matching entry wins: `all` shadows the later `cpu` entry.
+        assert_eq!(plan.spec_for("cpu").unwrap().fail_rate, 0.1);
+        assert_eq!(plan.spec_for("gpu").unwrap().seed, 7);
+
+        let plan = FaultPlan::parse("cpu:fail_after=3;*:latency_ms=5").expect("plan parses");
+        assert_eq!(plan.spec_for("cpu").unwrap().fail_after, Some(3));
+        assert_eq!(plan.spec_for("cpu-multi").unwrap().latency_ms, 5);
+        assert!(FaultPlan::parse("").expect("empty plan").is_empty());
+    }
+
+    #[test]
+    fn malformed_plans_are_typed_errors() {
+        for bad in [
+            "cpu",                    // no settings
+            "cpu:fail_rate",          // no value
+            "cpu:fail_rate=2.0",      // out of range
+            "cpu:latency_ms=5@x50",   // bad percentile tag
+            "cpu:latency_ms=5@p150",  // percentile out of range
+            "cpu:bogus_key=1",        // unknown key
+            ":fail_rate=0.5",         // empty label
+            "cpu:fail_first=-1",      // negative count
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn fail_first_and_fail_after_follow_call_count() {
+        let spec = FaultSpec { fail_first: 2, ..FaultSpec::default() };
+        let engine = FaultyEngine::new(Box::new(StubEngine::new(Target::CpuSingle, 6)), spec);
+        let x = Tensor::new(vec![1, 10, 3], vec![0.0; 30]);
+        assert!(engine.infer(&x).is_err());
+        assert!(engine.infer(&x).is_err());
+        assert!(engine.infer(&x).is_ok());
+
+        let spec = FaultSpec { fail_after: Some(2), ..FaultSpec::default() };
+        let engine = FaultyEngine::new(Box::new(StubEngine::new(Target::CpuSingle, 6)), spec);
+        assert!(engine.infer(&x).is_ok());
+        assert!(engine.infer(&x).is_ok());
+        assert!(engine.infer(&x).is_err());
+        assert!(engine.infer(&x).is_err());
+    }
+
+    #[test]
+    fn fail_rate_schedule_is_deterministic_for_a_seed() {
+        let x = Tensor::new(vec![1, 10, 3], vec![0.0; 30]);
+        let outcomes = |seed: u64| -> Vec<bool> {
+            let spec = FaultSpec { fail_rate: 0.5, seed, ..FaultSpec::default() };
+            let engine =
+                FaultyEngine::new(Box::new(StubEngine::new(Target::CpuSingle, 6)), spec);
+            (0..64).map(|_| engine.infer(&x).is_ok()).collect()
+        };
+        assert_eq!(outcomes(42), outcomes(42), "same seed must replay");
+        assert_ne!(outcomes(42), outcomes(43), "different seeds must diverge");
+        let oks = outcomes(42).iter().filter(|ok| **ok).count();
+        assert!((16..=48).contains(&oks), "rate 0.5 of 64 draws, got {oks} ok");
+    }
+
+    #[test]
+    fn corrupt_mode_poisons_outputs_with_nan() {
+        let spec = FaultSpec { corrupt_rate: 1.0, ..FaultSpec::default() };
+        let engine = FaultyEngine::new(Box::new(StubEngine::new(Target::CpuSingle, 6)), spec);
+        let x = Tensor::new(vec![1, 10, 3], vec![0.0; 30]);
+        let y = engine.infer(&x).expect("corruption is not failure");
+        assert!(y.data().iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn hang_mode_is_bounded_and_surfaces_an_error() {
+        let spec = FaultSpec { hang_after: Some(0), hang_ms: 20, ..FaultSpec::default() };
+        let engine = FaultyEngine::new(Box::new(StubEngine::new(Target::CpuSingle, 6)), spec);
+        let x = Tensor::new(vec![1, 10, 3], vec![0.0; 30]);
+        let t0 = std::time::Instant::now();
+        let err = engine.infer(&x).expect_err("hang resolves into an error");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert!(format!("{err:#}").contains("injected hang"));
+    }
+
+    #[test]
+    fn unmentioned_engines_pass_through_unwrapped() {
+        let plan = FaultPlan::parse("gpu:fail_rate=1.0").unwrap();
+        let wrapped = plan.wrap(Box::new(StubEngine::new(Target::CpuSingle, 6)));
+        let x = Tensor::new(vec![1, 10, 3], vec![0.0; 30]);
+        assert!(wrapped.infer(&x).is_ok(), "cpu engine is not in the plan");
+    }
+}

@@ -21,7 +21,10 @@
 //!   shared bandwidth, background load; Fine vs Coarse factorization)
 //! - [`runtime`]    — PJRT runtime: HLO-text artifacts -> compile -> execute
 //! - [`coordinator`]— `RouterBuilder`/router, dynamic batcher, the `Engine`
-//!   registry over all execution backends, utilization-aware offload policy
+//!   registry over all execution backends, utilization-aware offload policy,
+//!   per-engine health tracking + circuit breakers (DESIGN.md §15)
+//! - [`faults`]     — deterministic, seedable fault-injection plans that
+//!   wrap any `Engine` for chaos testing (`--fault-plan`)
 //! - [`server`]     — std::net TCP front-end speaking the typed JSON-lines
 //!   protocol v2 (`Request`/`Response` enums)
 //! - [`session`]    — sharded session store for streaming stateful
@@ -32,6 +35,7 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod figures;
 pub mod har;
 pub mod json;

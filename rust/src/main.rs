@@ -49,6 +49,7 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "session-ttl-ms",
                 "proto",
                 "io-threads",
+                "fault-plan",
             ],
             &["force-scalar"],
         ),
@@ -64,6 +65,7 @@ fn flag_spec(cmd: &str) -> (&'static [&'static str], &'static [&'static str]) {
                 "target",
                 "precision",
                 "max-queue",
+                "fault-plan",
             ],
             &["force-scalar"],
         ),
@@ -173,11 +175,13 @@ fn print_help() {
          \x20                                      [--idle-timeout-ms 0 (never)]\n\
          \x20                                      [--session-ttl-ms 30000]\n\
          \x20                                      [--io-threads 0 (thread-per-conn)] [--proto 2|3]\n\
+         \x20                                      [--fault-plan \"cpu:fail_rate=0.2,...\"]\n\
          \x20                                      [--force-scalar]\n\
          \x20 classify  run N windows through the local router\n\
          \x20                                      [--n 10] [--policy P] [--gpu-load 0.x]\n\
          \x20                                      [--target gpu|cpu|cpu-multi|cpu-quant]\n\
          \x20                                      [--precision f32|int8] [--force-scalar]\n\
+         \x20                                      [--fault-plan PLAN (or MOBIRNN_FAULT_PLAN)]\n\
          \x20 info      print the artifact manifest summary\n\
          \n\
          POLICIES: gpu | fine | cpu | cpu-multi | threshold:<0..1> | cost-model"
@@ -241,6 +245,19 @@ fn build_router(args: &Args) -> Result<(Router, Manifest)> {
             return Err(anyhow!("--session-ttl-ms must be positive"));
         }
         builder = builder.session_ttl(Duration::from_millis(ttl));
+    }
+    // Chaos knob (DESIGN.md §15): a fault plan wraps every matching
+    // engine at build time, so the LIVE stack can be driven under
+    // injected failure storms — same grammar as tests and benches.
+    if let Some(plan) = args
+        .get("fault-plan")
+        .map(str::to_string)
+        .or_else(|| std::env::var("MOBIRNN_FAULT_PLAN").ok())
+    {
+        let parsed = mobirnn::faults::FaultPlan::parse(&plan)
+            .context("--fault-plan / MOBIRNN_FAULT_PLAN")?;
+        eprintln!("fault injection ACTIVE: {plan}");
+        builder = builder.fault_plan(parsed);
     }
     let router = builder.manifest(&manifest, runtime)?.build()?;
     Ok((router, manifest))
@@ -473,6 +490,18 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn fault_plan_flag_parses_on_serve_and_classify() {
+        let plan = "cpu:fail_rate=0.3,latency_ms=200@p50;pjrt:hang_after=100";
+        let a = Args::from_parts("serve", &argv(&["--fault-plan", plan])).unwrap();
+        assert_eq!(a.get("fault-plan"), Some(plan));
+        let a = Args::from_parts("classify", &argv(&["--fault-plan", plan])).unwrap();
+        assert_eq!(a.get("fault-plan"), Some(plan));
+        // The value must parse as a real plan, not just as a string.
+        assert!(mobirnn::faults::FaultPlan::parse(plan).is_ok());
+        assert!(mobirnn::faults::FaultPlan::parse("cpu:bogus=1").is_err());
     }
 
     #[test]

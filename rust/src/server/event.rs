@@ -102,6 +102,7 @@ pub struct EventServerBuilder {
     io_threads: usize,
     max_connections: usize,
     idle_timeout: Option<Duration>,
+    stall_timeout: Option<Duration>,
     max_proto: u64,
 }
 
@@ -111,6 +112,7 @@ impl EventServerBuilder {
             io_threads: 2,
             max_connections: 1024,
             idle_timeout: None,
+            stall_timeout: Some(Duration::from_secs(5)),
             max_proto: protocol::PROTO_V3_BINARY,
         }
     }
@@ -146,6 +148,17 @@ impl EventServerBuilder {
         self
     }
 
+    /// Close a connection whose write backlog stays at or above the
+    /// high-water mark for this long (default 5 s) — a peer that stops
+    /// reading while replies pile up would otherwise park its reads
+    /// forever. The forfeited backlog is replaced by one typed
+    /// `overloaded` error line, `conns_stalled` is counted, and the
+    /// socket closes. Zero disables.
+    pub fn stall_timeout(mut self, d: Duration) -> Self {
+        self.stall_timeout = (!d.is_zero()).then_some(d);
+        self
+    }
+
     /// Bind `addr` and serve `router` until stopped.
     pub fn bind(self, addr: &str, router: Router) -> Result<EventServer> {
         EventServer::start(
@@ -154,6 +167,7 @@ impl EventServerBuilder {
             self.io_threads,
             self.max_connections,
             self.idle_timeout,
+            self.stall_timeout,
             self.max_proto,
         )
     }
@@ -193,6 +207,7 @@ impl EventServer {
         io_threads: usize,
         max_connections: usize,
         idle_timeout: Option<Duration>,
+        stall_timeout: Option<Duration>,
         max_proto: u64,
     ) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
@@ -226,7 +241,18 @@ impl EventServer {
             let intake2 = Arc::clone(&intake);
             let handle = std::thread::Builder::new()
                 .name(format!("mobirnn-io-{i}"))
-                .spawn(move || io_loop(ctx, stop2, live2, intake2, waker_rx, done_rx, idle_timeout))
+                .spawn(move || {
+                    io_loop(
+                        ctx,
+                        stop2,
+                        live2,
+                        intake2,
+                        waker_rx,
+                        done_rx,
+                        idle_timeout,
+                        stall_timeout,
+                    )
+                })
                 .context("spawning io loop")?;
             wakers.push(waker);
             intakes.push(intake);
@@ -348,6 +374,10 @@ struct Conn {
     /// `bye` (or idle expiry) happened: flush, then close.
     closing: bool,
     last_active: Instant,
+    /// When the write backlog first reached [`WRITE_HIGH_WATER`] and
+    /// stayed there; cleared the moment it drains below. The stall
+    /// deadline measures from here.
+    stalled_since: Option<Instant>,
 }
 
 impl Conn {
@@ -362,6 +392,7 @@ impl Conn {
             inflight: false,
             closing: false,
             last_active: Instant::now(),
+            stalled_since: None,
         }
     }
 
@@ -384,6 +415,7 @@ fn drain_waker(waker: &UnixStream) {
     while matches!(r.read(&mut sink), Ok(n) if n > 0) {}
 }
 
+#[allow(clippy::too_many_arguments)]
 fn io_loop(
     ctx: DispatchCtx,
     stop: Arc<AtomicBool>,
@@ -392,6 +424,7 @@ fn io_loop(
     waker_rx: UnixStream,
     done_rx: mpsc::Receiver<Completion>,
     idle_timeout: Option<Duration>,
+    stall_timeout: Option<Duration>,
 ) {
     let mut conns: Vec<Option<Conn>> = Vec::new();
     let mut next_generation: u64 = 0;
@@ -491,7 +524,7 @@ fn io_loop(
             }
         }
 
-        // 6. Idle expiry and drained-close sweep.
+        // 6. Idle expiry, write-stall expiry, and drained-close sweep.
         let now = Instant::now();
         for slot in 0..conns.len() {
             let mut kill = false;
@@ -506,6 +539,33 @@ fn io_loop(
                         if !flush(conn, &ctx.metrics) {
                             kill = true;
                         }
+                    }
+                }
+                // Write-stall deadline (DESIGN.md §15): past the
+                // high-water mark this connection's reads are parked;
+                // a peer that never drains would hold them parked
+                // forever. After the deadline the unread backlog is
+                // forfeit — replaced by one typed `overloaded` line —
+                // and the connection closes.
+                if let Some(d) = stall_timeout {
+                    if conn.backlog() >= WRITE_HIGH_WATER {
+                        let since = *conn.stalled_since.get_or_insert(now);
+                        if now.duration_since(since) >= d {
+                            ctx.metrics.conns_stalled.fetch_add(1, Ordering::Relaxed);
+                            conn.wbuf.clear();
+                            conn.wpos = 0;
+                            let resp = Response::Error {
+                                id: None,
+                                code: ErrorCode::Overloaded,
+                                message: "write backlog stalled past deadline".into(),
+                            };
+                            enqueue_response(conn, &resp, &ctx.metrics);
+                            conn.closing = true;
+                            let _ = flush(conn, &ctx.metrics);
+                            kill = true;
+                        }
+                    } else {
+                        conn.stalled_since = None;
                     }
                 }
                 if conn.closing && !conn.inflight && conn.backlog() == 0 {
@@ -890,6 +950,64 @@ mod tests {
         assert_eq!(v.get("type").as_str(), Some("bye"), "{line}");
         line.clear();
         assert_eq!(client.reader.read_line(&mut line).unwrap(), 0, "closed after bye");
+    }
+
+    #[test]
+    fn write_stall_deadline_closes_and_counts() {
+        // A peer that pipelines huge-response requests and then never
+        // reads jams the write backlog above the high-water mark, which
+        // parks its reads. The stall deadline must reclaim the
+        // connection (typed `overloaded` close is attempted best-effort
+        // — with the peer's receive window full it rarely delivers)
+        // instead of parking it forever.
+        let shape =
+            ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 };
+        let fat = FixedEngine { num_classes: 256, ..FixedEngine::new(Target::CpuSingle) };
+        let router = Router::builder()
+            .shape(shape)
+            .policy(OffloadPolicy::Static(Target::CpuSingle))
+            .max_wait(Duration::from_millis(1))
+            .engine(Box::new(fat))
+            .build()
+            .unwrap();
+        let metrics = Arc::clone(&router.metrics);
+        let srv = EventServer::builder()
+            .stall_timeout(Duration::from_millis(200))
+            .bind("127.0.0.1:0", router)
+            .unwrap();
+        let mut client = Client::connect(srv.addr()).unwrap();
+        let session = client.open_session(None).unwrap();
+        // Each chunk advances 8000 steps × 256 classes: a multi-megabyte
+        // stream_result line. The writes may die mid-stream once the
+        // stall fires and the server closes — that is the point.
+        let frames = vec!["0.25"; 24_000].join(",");
+        for i in 0..3 {
+            let line = format!(
+                "{{\"type\":\"classify_stream\",\"id\":{i},\"session\":{session},\"frames\":[{frames}]}}\n"
+            );
+            let _ = client.writer.write_all(line.as_bytes());
+            let _ = client.writer.flush();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while metrics.conns_stalled.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "stall deadline never fired");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(metrics.conns_stalled.load(Ordering::Relaxed), 1);
+        // The connection was closed server-side: draining what the
+        // kernel already buffered must reach EOF, not block forever.
+        let mut sink = vec![0u8; 1 << 16];
+        loop {
+            match client.reader.read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+        // The server shrugged the stalled peer off; new clients work.
+        let mut fresh = Client::connect(srv.addr()).unwrap();
+        fresh.ping().unwrap();
     }
 
     #[test]

@@ -466,11 +466,12 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             put_opt_f64(&mut b, *cpu);
             (OP_SET_LOAD, *id)
         }
-        Request::Classify { id, window, target, precision, deadline_ms } => {
+        Request::Classify { id, window, target, precision, deadline_ms, allow_degraded } => {
             put_f32s(&mut b, window);
             put_opt_str(&mut b, target.map(target_label));
             put_opt_str(&mut b, precision.map(Precision::as_str));
             put_opt_u64(&mut b, *deadline_ms);
+            put_u8(&mut b, *allow_degraded as u8);
             (OP_CLASSIFY, *id)
         }
         Request::ClassifyBatch { id, windows } => {
@@ -537,7 +538,12 @@ pub fn decode_request_body(h: &Header, payload: &[u8]) -> Result<Request, FrameE
                 ),
             };
             let deadline_ms = c.opt_u64()?;
-            Request::Classify { id, window, target, precision, deadline_ms }
+            let allow_degraded = match c.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(FrameError::Malformed("bad allow_degraded byte")),
+            };
+            Request::Classify { id, window, target, precision, deadline_ms, allow_degraded }
         }
         OP_CLASSIFY_BATCH => {
             let n = c.u32()? as usize;
@@ -604,6 +610,7 @@ fn put_outcome(b: &mut Vec<u8>, o: &ClassifyOutcome) {
     put_f64(b, o.wall_latency_us);
     put_str(b, &o.target);
     put_u32(b, o.batch_size as u32);
+    put_opt_str(b, o.degraded.as_deref());
 }
 
 fn get_outcome(c: &mut Cursor<'_>) -> Result<ClassifyOutcome, FrameError> {
@@ -614,6 +621,7 @@ fn get_outcome(c: &mut Cursor<'_>) -> Result<ClassifyOutcome, FrameError> {
         wall_latency_us: c.f64()?,
         target: c.str()?,
         batch_size: c.u32()? as usize,
+        degraded: c.opt_str()?,
     })
 }
 
@@ -780,6 +788,7 @@ mod tests {
                 target: Some(Target::CpuMulti(4)),
                 precision: None,
                 deadline_ms: Some(250),
+                allow_degraded: false,
             },
             Request::Classify {
                 id: Some(8),
@@ -787,6 +796,7 @@ mod tests {
                 target: None,
                 precision: Some(Precision::Int8),
                 deadline_ms: None,
+                allow_degraded: false,
             },
             Request::Classify {
                 id: None,
@@ -794,6 +804,7 @@ mod tests {
                 target: None,
                 precision: None,
                 deadline_ms: None,
+                allow_degraded: true,
             },
             Request::ClassifyBatch { id: Some(1), windows: vec![vec![1.0, 2.0], vec![3.0, 4.0]] },
             Request::ClassifyBatch { id: None, windows: vec![] },
@@ -813,6 +824,7 @@ mod tests {
             wall_latency_us: 88.25,
             target: "gpu".into(),
             batch_size: 4,
+            degraded: None,
         };
         vec![
             Response::Pong,
@@ -901,6 +913,7 @@ mod tests {
             target: None,
             precision: None,
             deadline_ms: None,
+            allow_degraded: false,
         });
         for k in 0..frame.len() {
             let err = decode_request(&frame[..k]).unwrap_err();
@@ -965,6 +978,7 @@ mod tests {
             target: Some(Target::CpuSingle),
             precision: Some(Precision::F32),
             deadline_ms: Some(9),
+            allow_degraded: true,
         });
         for i in 0..frame.len() {
             for delta in [1u8, 0x7F, 0xFF] {
@@ -980,6 +994,7 @@ mod tests {
             target: Some(Target::CpuSingle),
             precision: None,
             deadline_ms: None,
+            allow_degraded: false,
         });
         let text: &[u8] = b"cpu";
         // Corrupt the target label in place ("cpu" -> "cpx").
@@ -998,6 +1013,7 @@ mod tests {
             target: None,
             precision: None,
             deadline_ms: None,
+            allow_degraded: false,
         });
         let view = classify_window(&frame).unwrap();
         assert_eq!(view.len(), window.len());

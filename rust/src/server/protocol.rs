@@ -61,6 +61,10 @@ pub enum ErrorCode {
     /// The session existed but idled past its TTL and was evicted; the
     /// client must `open_session` again (state is gone).
     SessionExpired,
+    /// The request's deadline budget was consumed by failover retries
+    /// before any engine answered (DESIGN.md §15) — a typed terminal
+    /// outcome, never a hang or a silent drop.
+    RetriesExhausted,
 }
 
 impl ErrorCode {
@@ -75,6 +79,7 @@ impl ErrorCode {
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::SessionNotFound => "session_not_found",
             ErrorCode::SessionExpired => "session_expired",
+            ErrorCode::RetriesExhausted => "retries_exhausted",
         }
     }
 
@@ -89,6 +94,7 @@ impl ErrorCode {
             "overloaded" => Some(ErrorCode::Overloaded),
             "session_not_found" => Some(ErrorCode::SessionNotFound),
             "session_expired" => Some(ErrorCode::SessionExpired),
+            "retries_exhausted" => Some(ErrorCode::RetriesExhausted),
             _ => None,
         }
     }
@@ -112,6 +118,7 @@ pub(crate) fn serve_error_code(e: &ServeError) -> ErrorCode {
         ServeError::EngineFailure(_) => ErrorCode::Engine,
         ServeError::SessionNotFound(_) => ErrorCode::SessionNotFound,
         ServeError::SessionExpired(_) => ErrorCode::SessionExpired,
+        ServeError::RetriesExhausted => ErrorCode::RetriesExhausted,
     }
 }
 
@@ -136,6 +143,11 @@ pub enum Request {
         precision: Option<Precision>,
         /// Reply deadline in milliseconds.
         deadline_ms: Option<u64>,
+        /// Opt into brownout degradation (DESIGN.md §15): when every f32
+        /// pool's breaker is open the scheduler may serve this request
+        /// from the int8 tier, marking the result `degraded: "int8"`.
+        /// Absent means false — never degrade without consent.
+        allow_degraded: bool,
     },
     /// Classify several windows in one round trip; they enter the
     /// batcher together.
@@ -198,6 +210,9 @@ pub struct ClassifyOutcome {
     pub wall_latency_us: f64,
     pub target: String,
     pub batch_size: usize,
+    /// `Some("int8")` when the scheduler served this request from the
+    /// quantized tier under brownout (DESIGN.md §15); absent otherwise.
+    pub degraded: Option<String>,
 }
 
 impl ClassifyOutcome {
@@ -209,18 +224,23 @@ impl ClassifyOutcome {
             wall_latency_us: r.wall_ns as f64 / 1e3,
             target: r.target.to_string(),
             batch_size: r.batch_size,
+            degraded: r.degraded.map(str::to_string),
         }
     }
 
     fn fields(&self) -> Vec<(&'static str, Value)> {
-        vec![
+        let mut fields = vec![
             ("class", Value::from(self.class)),
             ("label", Value::from(self.label.clone())),
             ("sim_latency_us", Value::Num(self.sim_latency_us)),
             ("wall_latency_us", Value::Num(self.wall_latency_us)),
             ("target", Value::from(self.target.clone())),
             ("batch_size", Value::from(self.batch_size)),
-        ]
+        ];
+        if let Some(d) = &self.degraded {
+            fields.push(("degraded", Value::from(d.clone())));
+        }
+        fields
     }
 }
 
@@ -239,6 +259,7 @@ impl FromValue for ClassifyOutcome {
             wall_latency_us: field(v, "wall_latency_us")?,
             target: field(v, "target")?,
             batch_size: field(v, "batch_size")?,
+            degraded: field(v, "degraded")?,
         })
     }
 }
@@ -284,7 +305,7 @@ impl ToValue for Request {
                 }
                 obj(fields)
             }
-            Request::Classify { id, window, target, precision, deadline_ms } => {
+            Request::Classify { id, window, target, precision, deadline_ms, allow_degraded } => {
                 let mut fields = envelope("classify", *id);
                 fields.push(("window", window.to_value()));
                 if let Some(t) = target {
@@ -295,6 +316,9 @@ impl ToValue for Request {
                 }
                 if let Some(d) = deadline_ms {
                     fields.push(("deadline_ms", Value::from(*d)));
+                }
+                if *allow_degraded {
+                    fields.push(("allow_degraded", Value::Bool(true)));
                 }
                 obj(fields)
             }
@@ -377,6 +401,8 @@ impl FromValue for Request {
                     target,
                     precision,
                     deadline_ms: field(v, "deadline_ms")?,
+                    allow_degraded: field::<Option<bool>>(v, "allow_degraded")?
+                        .unwrap_or(false),
                 })
             }
             "classify_batch" => Ok(Request::ClassifyBatch {
@@ -629,7 +655,7 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
                 cpu: router.device.cpu_util(),
             }
         }
-        Request::Classify { id, window, target, precision, deadline_ms } => {
+        Request::Classify { id, window, target, precision, deadline_ms, allow_degraded } => {
             let expect = router.window_len();
             if window.len() != expect {
                 return Response::Error {
@@ -643,6 +669,7 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
                 target,
                 precision,
                 deadline: deadline_ms.map(Duration::from_millis),
+                allow_degraded,
             };
             match router.classify_with(window, opts) {
                 Ok(reply) => {
@@ -786,7 +813,7 @@ pub fn handle_request(router: &Router, req: Request) -> Response {
 /// waiting thread — there is none.
 pub fn handle_request_async(router: &Router, req: Request, done: Box<dyn FnOnce(Response) + Send>) {
     match req {
-        Request::Classify { id, window, target, precision, deadline_ms } => {
+        Request::Classify { id, window, target, precision, deadline_ms, allow_degraded } => {
             let expect = router.window_len();
             if window.len() != expect {
                 done(Response::Error {
@@ -801,6 +828,7 @@ pub fn handle_request_async(router: &Router, req: Request, done: Box<dyn FnOnce(
                 target,
                 precision,
                 deadline: deadline_ms.map(Duration::from_millis),
+                allow_degraded,
             };
             let sink = ReplySink::callback(move |outcome: Result<ServeReply, ServeError>| {
                 done(match outcome {
@@ -979,6 +1007,7 @@ mod tests {
                 target: Some(crate::simulator::Target::CpuMulti(4)),
                 precision: None,
                 deadline_ms: Some(250),
+                allow_degraded: false,
             },
             Request::Classify {
                 id: Some(8),
@@ -986,6 +1015,7 @@ mod tests {
                 target: None,
                 precision: Some(Precision::Int8),
                 deadline_ms: None,
+                allow_degraded: false,
             },
             Request::Classify {
                 id: None,
@@ -993,6 +1023,7 @@ mod tests {
                 target: None,
                 precision: Some(Precision::F32),
                 deadline_ms: None,
+                allow_degraded: true,
             },
             Request::Classify {
                 id: None,
@@ -1000,6 +1031,7 @@ mod tests {
                 target: None,
                 precision: None,
                 deadline_ms: None,
+                allow_degraded: false,
             },
             Request::ClassifyBatch {
                 id: Some(1),
@@ -1031,6 +1063,7 @@ mod tests {
             wall_latency_us: 88.25,
             target: "gpu".into(),
             batch_size: 4,
+            degraded: None,
         };
         let cases = vec![
             Response::Pong,
@@ -1098,6 +1131,12 @@ mod tests {
         assert_eq!(serve_error_code(&ServeError::SessionExpired(4)), ErrorCode::SessionExpired);
         assert_eq!(ErrorCode::parse("session_not_found"), Some(ErrorCode::SessionNotFound));
         assert_eq!(ErrorCode::parse("session_expired"), Some(ErrorCode::SessionExpired));
+        assert_eq!(
+            serve_error_code(&ServeError::RetriesExhausted),
+            ErrorCode::RetriesExhausted
+        );
+        assert_eq!(ErrorCode::RetriesExhausted.as_str(), "retries_exhausted");
+        assert_eq!(ErrorCode::parse("retries_exhausted"), Some(ErrorCode::RetriesExhausted));
     }
 
     #[test]
@@ -1149,6 +1188,7 @@ mod tests {
                 target: None,
                 precision: None,
                 deadline_ms: None,
+                allow_degraded: false,
             },
             Box::new(move |resp| t.send(resp).unwrap()),
         );
@@ -1169,6 +1209,7 @@ mod tests {
                 target: None,
                 precision: None,
                 deadline_ms: None,
+                allow_degraded: false,
             },
             Box::new(move |resp| t.send(resp).unwrap()),
         );

@@ -498,6 +498,7 @@ impl Client {
             target: None,
             precision: None,
             deadline_ms: None,
+            allow_degraded: false,
         };
         match self.call(&req)? {
             Response::Result { outcome, .. } => Ok(outcome),

@@ -1,0 +1,420 @@
+//! Chaos integration (DESIGN.md §15): live routers and servers under
+//! seeded fault storms. The contract being defended: every request
+//! resolves — success, typed shed, typed `retries_exhausted`, or a
+//! `degraded:"int8"` brownout answer — within its deadline plus the
+//! watchdog grace. Zero hangs, zero silent drops, and breaker
+//! transition arithmetic that matches the fault plan exactly.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mobirnn::bench::random_model;
+use mobirnn::config::ModelShape;
+use mobirnn::coordinator::{
+    CpuMultiEngine, CpuSingleEngine, OffloadPolicy, Precision, Router, ServeError,
+};
+use mobirnn::faults::{FaultPlan, StubEngine};
+use mobirnn::lstm::StreamState;
+use mobirnn::server::{Client, EventServer, Request, Response, Server};
+use mobirnn::simulator::{Factorization, Target};
+
+fn shape() -> ModelShape {
+    ModelShape { num_layers: 1, hidden: 4, input_dim: 3, seq_len: 10, num_classes: 6 }
+}
+
+fn window(shape: ModelShape, seed: usize) -> Vec<f32> {
+    let n = shape.seq_len * shape.input_dim;
+    (0..n).map(|j| ((seed * 131 + j * 17) % 101) as f32 / 101.0 - 0.5).collect()
+}
+
+/// Poll until every in-flight gauge reads zero — a watchdog or failover
+/// that leaks a gauge would park this forever, so bound it and fail.
+fn assert_inflight_drains(router: &Router) {
+    let metrics = &router.metrics;
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        let total = metrics.inflight.gpu.load(Ordering::Relaxed)
+            + metrics.inflight.cpu.load(Ordering::Relaxed)
+            + metrics.inflight.cpu_multi.load(Ordering::Relaxed)
+            + metrics.inflight.cpu_quant.load(Ordering::Relaxed);
+        if total == 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "inflight gauges leaked: {total} still up");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---- seeded failure storm (the acceptance scenario) ------------------
+
+/// ≥20% injected failure on both failover pools, latency spikes, and a
+/// permanent primary-pool death, under a 2 s deadline budget: every one
+/// of 80 requests resolves typed within deadline + watchdog grace.
+#[test]
+fn seeded_storm_every_request_resolves_typed_within_deadline() {
+    let s = shape();
+    let plan = FaultPlan::parse(
+        "cpu:fail_after=10;\
+         cpu-multi:fail_rate=0.25,latency_ms=5@p50,seed=11;\
+         pjrt:fail_rate=0.25,latency_ms=5@p50,seed=13",
+    )
+    .unwrap();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .breaker(3, Duration::from_millis(200))
+        .watchdog(Duration::from_millis(500))
+        .fault_plan(plan)
+        .engine(Box::new(StubEngine::new(Target::CpuSingle, s.num_classes)))
+        .engine(Box::new(StubEngine::new(Target::CpuMulti(2), s.num_classes)))
+        .engine(Box::new(StubEngine::new(Target::Gpu(Factorization::Coarse), s.num_classes)))
+        .build()
+        .unwrap();
+
+    let n = 80;
+    let deadline = Duration::from_secs(2);
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let opts = mobirnn::coordinator::ClassifyOptions {
+                deadline: Some(deadline),
+                ..Default::default()
+            };
+            router.submit_with(window(s, i), opts).unwrap()
+        })
+        .collect();
+
+    // Deadline (2 s) + watchdog grace (500 ms) + scheduling slack.
+    let bound = deadline + Duration::from_millis(500) + Duration::from_secs(1);
+    let (mut ok, mut typed) = (0u32, 0u32);
+    for rx in receivers {
+        let wait = bound.saturating_sub(t0.elapsed()).max(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(Ok(reply)) => {
+                assert_eq!(reply.class, 1, "StubEngine always scores class 1");
+                ok += 1;
+            }
+            Ok(Err(
+                ServeError::RetriesExhausted
+                | ServeError::DeadlineExceeded
+                | ServeError::Overloaded
+                | ServeError::EngineFailure(_),
+            )) => typed += 1,
+            Ok(Err(other)) => panic!("unexpected error kind in storm: {other}"),
+            Err(_) => panic!("request outlived deadline + watchdog grace: silent drop"),
+        }
+    }
+    assert_eq!(ok + typed, n as u32);
+    assert!(ok > 0, "some requests must survive the storm");
+
+    let m = &router.metrics;
+    assert!(m.retries.load(Ordering::Relaxed) > 0, "primary death must force failover");
+    assert!(
+        m.breaker_open.load(Ordering::Relaxed) >= 1,
+        "a permanently dead pool must trip its breaker"
+    );
+    assert_inflight_drains(&router);
+}
+
+// ---- breaker state machine, deterministically ------------------------
+
+/// `fail_first=3` against threshold 3: exactly one open, one half-open
+/// probe, one close — and the open window sheds typed, not queued.
+#[test]
+fn breaker_opens_sheds_probes_and_recovers() {
+    let s = shape();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .breaker(3, Duration::from_millis(250))
+        .fault_plan(FaultPlan::parse("cpu:fail_first=3").unwrap())
+        .engine(Box::new(StubEngine::new(Target::CpuSingle, s.num_classes)))
+        .build()
+        .unwrap();
+    let m = Arc::clone(&router.metrics);
+
+    // Three failures trip the breaker (single pool, no deadline: the
+    // legacy typed EngineFailure terminal).
+    for i in 0..3 {
+        let err = router.classify(window(s, i)).unwrap_err();
+        let serve = err.downcast_ref::<ServeError>().expect("typed serve error");
+        assert!(matches!(serve, ServeError::EngineFailure(_)), "got {serve}");
+    }
+    assert_eq!(m.breaker_open.load(Ordering::Relaxed), 1);
+
+    // Open + inside cooldown: the scheduler sheds instead of queueing
+    // work against a pool known to be down.
+    let err = router.classify(window(s, 3)).unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Overloaded)),
+        "open breaker must shed typed, got {err:#}"
+    );
+    assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+
+    // Cooldown elapses: the next request is the half-open probe; it
+    // succeeds (fail_first spent) and closes the breaker.
+    std::thread::sleep(Duration::from_millis(400));
+    let reply = router.classify(window(s, 4)).unwrap();
+    assert_eq!(reply.class, 1);
+    assert_eq!(m.breaker_half_open.load(Ordering::Relaxed), 1);
+    assert_eq!(m.breaker_closed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.breaker_open.load(Ordering::Relaxed), 1, "no second trip");
+}
+
+// ---- all pools down: termination, typed, exactly once ----------------
+
+/// With every pool failing and no deadline, each request terminates in
+/// ONE typed EngineFailure — no hang, no duplicate reply (the seed bug:
+/// a fully-tried batch could requeue onto the same dead pool forever).
+#[test]
+fn all_pools_down_terminates_typed_without_duplicates() {
+    let s = shape();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .breaker(1000, Duration::from_secs(1))
+        .fault_plan(FaultPlan::parse("*:fail_rate=1").unwrap())
+        .engine(Box::new(StubEngine::new(Target::CpuSingle, s.num_classes)))
+        .engine(Box::new(StubEngine::new(Target::CpuMulti(2), s.num_classes)))
+        .build()
+        .unwrap();
+
+    for i in 0..4 {
+        let rx = router.submit(window(s, i)).unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(Err(ServeError::EngineFailure(msg))) => {
+                assert!(msg.contains("all engine pools"), "unexpected msg: {msg}")
+            }
+            other => panic!("expected one typed EngineFailure, got {other:?}"),
+        }
+        // Exactly one reply: the sink is spent, the channel closes.
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err(), "duplicate reply");
+    }
+    assert_inflight_drains(&router);
+}
+
+/// The same dead cluster under a deadline budget: capped exponential
+/// backoff consumes the budget, then the typed `retries_exhausted`
+/// terminal fires — before the caller's own deadline would.
+#[test]
+fn dead_cluster_with_deadline_returns_retries_exhausted() {
+    let s = shape();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .breaker(1000, Duration::from_secs(1))
+        .fault_plan(FaultPlan::parse("*:fail_rate=1").unwrap())
+        .engine(Box::new(StubEngine::new(Target::CpuSingle, s.num_classes)))
+        .engine(Box::new(StubEngine::new(Target::CpuMulti(2), s.num_classes)))
+        .build()
+        .unwrap();
+
+    let n = 3;
+    for i in 0..n {
+        let opts = mobirnn::coordinator::ClassifyOptions {
+            deadline: Some(Duration::from_millis(300)),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let rx = router.submit_with(window(s, i), opts).unwrap();
+        match rx.recv_timeout(Duration::from_secs(2)) {
+            Ok(Err(ServeError::RetriesExhausted)) => {}
+            other => panic!("expected retries_exhausted, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(900),
+            "budget exhaustion must not overshoot the deadline"
+        );
+    }
+    let m = &router.metrics;
+    assert_eq!(m.retries_exhausted.load(Ordering::Relaxed), n as u64);
+    assert!(m.retries.load(Ordering::Relaxed) > 0, "the budget must buy real retries");
+    assert_inflight_drains(&router);
+}
+
+// ---- session failover under concurrent stream steps ------------------
+
+/// Real weights on both pools; the pinned pool dies mid-stream while a
+/// second thread keeps classifying. The session migrates exactly once
+/// and every served chunk's logits stay bit-for-bit equal to a local
+/// single-model oracle — the fault layer fails BEFORE touching state,
+/// so a failed chunk never half-advances h/c.
+#[test]
+fn stream_migrates_once_with_bit_exact_logits_under_concurrent_load() {
+    let s = ModelShape { num_layers: 2, hidden: 8, input_dim: 3, seq_len: 12, num_classes: 4 };
+    let model = Arc::new(random_model(s, 42));
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .fault_plan(FaultPlan::parse("cpu:fail_after=3").unwrap())
+        .engine(Box::new(CpuSingleEngine::new(Arc::clone(&model))))
+        .engine(Box::new(CpuMultiEngine::new(Arc::clone(&model), 2)))
+        .build()
+        .unwrap();
+
+    let info = router.open_session(Precision::F32).unwrap();
+    assert_eq!(info.target, "cpu", "session pins to the first f32 stream pool");
+
+    // Concurrent batched traffic against the same (dying) primary: it
+    // must keep resolving via failover while the stream migrates.
+    let bg = {
+        let router = router.clone();
+        let w = window(s, 9);
+        std::thread::spawn(move || {
+            for _ in 0..6 {
+                router.classify(w.clone()).expect("classify must fail over, not die");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    let mut oracle = StreamState::new(s);
+    let steps_per_chunk = 2;
+    for chunk in 0..8 {
+        let frames: Vec<f32> = (0..steps_per_chunk * s.input_dim)
+            .map(|j| ((chunk * 31 + j * 7) % 97) as f32 / 97.0 - 0.5)
+            .collect();
+        let reply = router.classify_stream(info.id, frames.clone(), None).unwrap();
+        let expect = model.stream_chunk(&frames, steps_per_chunk, &mut oracle);
+        assert_eq!(reply.logits, expect, "chunk {chunk} logits drifted across migration");
+    }
+    bg.join().unwrap();
+
+    let m = &router.metrics;
+    assert_eq!(
+        m.sessions_migrated.load(Ordering::Relaxed),
+        1,
+        "exactly one migration per pool death"
+    );
+    assert_eq!(router.close_session(info.id).unwrap(), 16);
+}
+
+// ---- watchdog: hung dispatch is reclaimed, not waited out ------------
+
+/// A hang on the primary is bounded by the watchdog: the batch fails
+/// over mid-hang, the breaker force-opens, and the stolen dispatch's
+/// gauges drain when the sleeper wakes.
+#[test]
+fn watchdog_reclaims_hung_dispatch_and_fails_over() {
+    let s = shape();
+    let router = Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .watchdog(Duration::from_millis(100))
+        .fault_plan(FaultPlan::parse("cpu:hang_after=0,hang_ms=1000").unwrap())
+        .engine(Box::new(StubEngine::new(Target::CpuSingle, s.num_classes)))
+        .engine(Box::new(StubEngine::new(Target::CpuMulti(2), s.num_classes)))
+        .build()
+        .unwrap();
+
+    let t0 = Instant::now();
+    let reply = router.classify(window(s, 0)).unwrap();
+    assert_eq!(reply.target, "cpu-multi", "reclaimed batch must land on the healthy pool");
+    assert!(
+        t0.elapsed() < Duration::from_millis(900),
+        "the reply must beat the 1 s hang — watchdog, not patience"
+    );
+
+    let m = &router.metrics;
+    assert_eq!(m.watchdog_fired.load(Ordering::Relaxed), 1);
+    assert!(m.breaker_open.load(Ordering::Relaxed) >= 1, "wedged pool force-opens");
+    // The hung worker wakes at 300 ms and finds its slot already stolen.
+    assert_inflight_drains(&router);
+}
+
+// ---- brownout: degraded int8 service over both live servers ----------
+
+fn brownout_router() -> Router {
+    let s = shape();
+    Router::builder()
+        .shape(s)
+        .policy(OffloadPolicy::Static(Target::CpuSingle))
+        .max_wait(Duration::from_millis(1))
+        .breaker(2, Duration::from_secs(30))
+        .fault_plan(FaultPlan::parse("cpu:fail_rate=1").unwrap())
+        .engine(Box::new(StubEngine::new(Target::CpuSingle, s.num_classes)))
+        .engine(Box::new(StubEngine::new(Target::CpuQuant, s.num_classes)))
+        .build()
+        .unwrap()
+}
+
+fn classify_req(id: u64, s: ModelShape, allow_degraded: bool) -> Request {
+    Request::Classify {
+        id: Some(id),
+        window: window(s, id as usize),
+        target: None,
+        precision: None,
+        deadline_ms: None,
+        allow_degraded,
+    }
+}
+
+/// JSON transport: once the only f32 pool's breaker opens, an opted-in
+/// request is served from the int8 tier and marked `degraded:"int8"`;
+/// a non-opted request sheds typed.
+#[test]
+fn brownout_degrades_opted_requests_over_tcp_json() {
+    let s = shape();
+    let srv = Server::bind("127.0.0.1:0", brownout_router()).unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+
+    // Two injected failures trip the f32 breaker open.
+    for i in 0..2 {
+        match client.call(&classify_req(i, s, false)).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code.as_str(), "engine"),
+            other => panic!("expected injected failure, got {other:?}"),
+        }
+    }
+
+    // Opted in: degraded int8 service instead of shed.
+    match client.call(&classify_req(2, s, true)).unwrap() {
+        Response::Result { outcome, .. } => {
+            assert_eq!(outcome.degraded.as_deref(), Some("int8"));
+            assert_eq!(outcome.target, "cpu-quant");
+            assert_eq!(outcome.class, 1);
+        }
+        other => panic!("expected degraded result, got {other:?}"),
+    }
+
+    // Not opted in: typed shed, never a silent int8 answer.
+    match client.call(&classify_req(3, s, false)).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code.as_str(), "overloaded"),
+        other => panic!("expected typed shed, got {other:?}"),
+    }
+}
+
+/// The same brownout contract over the event-driven server and the v3
+/// binary frame codec — `allow_degraded` and `degraded` both survive
+/// the binary round trip.
+#[test]
+fn brownout_degrades_opted_requests_over_event_binary() {
+    let s = shape();
+    let router = brownout_router();
+    let metrics = Arc::clone(&router.metrics);
+    let srv = EventServer::bind("127.0.0.1:0", router).unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+    client.negotiate_binary().unwrap();
+
+    for i in 0..2 {
+        match client.call(&classify_req(i, s, false)).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code.as_str(), "engine"),
+            other => panic!("expected injected failure, got {other:?}"),
+        }
+    }
+    match client.call(&classify_req(2, s, true)).unwrap() {
+        Response::Result { outcome, .. } => {
+            assert_eq!(outcome.degraded.as_deref(), Some("int8"));
+            assert_eq!(outcome.target, "cpu-quant");
+        }
+        other => panic!("expected degraded result, got {other:?}"),
+    }
+    assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.breaker_open.load(Ordering::Relaxed), 1);
+}

@@ -149,6 +149,7 @@ fn per_request_override_over_the_wire() {
         target: Some(mobirnn::simulator::Target::CpuSingle),
         precision: None,
         deadline_ms: None,
+        allow_degraded: false,
     };
     match client.call(&req).unwrap() {
         Response::Result { id, outcome } => {

@@ -109,6 +109,7 @@ fn parity_against(addr: SocketAddr) {
         target: None,
         precision: None,
         deadline_ms: None,
+        allow_degraded: false,
     };
     let (a, b) = (json.call(&bad).unwrap(), bin.call(&bad).unwrap());
     match (a, b) {
